@@ -1,0 +1,67 @@
+//! Bench: collective vs serial PIC reuse (paper Fig 11's compute side).
+//! One reuse pass over an N-agent group, collective (one grouped ropediff)
+//! vs serial (N single-request passes) — identical work, different
+//! grouping. Run with `cargo bench --bench bench_collective_reuse`;
+//! BENCH_MOCK=1 for the logic-only mock runtime.
+
+include!("harness.rs");
+
+use tokendance::collector::{run_reuse, CollectorConfig, ReuseTask};
+use tokendance::runtime::{KvBuf, ModelRuntime};
+
+fn mk_tasks(
+    rt: &dyn ModelRuntime,
+    model: &str,
+    n: usize,
+    prompt_len: usize,
+) -> Vec<ReuseTask> {
+    let spec = rt.spec(model).unwrap().clone();
+    let s = spec.max_seq;
+    let toks: Vec<u32> =
+        (0..prompt_len as u32).map(|i| 4 + (i * 7) % 200).collect();
+    let pre = rt.prefill(model, &toks, prompt_len).unwrap();
+    let mut donor = KvBuf::for_spec(&spec);
+    donor.copy_rows_from(&pre.kv, 0, 0, prompt_len);
+    (0..n as u64)
+        .map(|id| {
+            let mut tokens = toks.clone();
+            tokens.resize(s, 0);
+            let mut valid = vec![0u8; s];
+            valid[..prompt_len].iter_mut().for_each(|x| *x = 1);
+            ReuseTask {
+                id,
+                tokens,
+                valid_len: prompt_len,
+                old_pos: (0..s as i32).collect(),
+                valid,
+                kv: donor.clone(),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let (rt, real) = bench_runtime();
+    let iters = if real { 5 } else { 50 };
+    println!("== bench_collective_reuse (Fig 11) ==");
+    for model in ["sim-7b", "sim-14b"] {
+        for n in [2usize, 4, 8, 16] {
+            for collective in [false, true] {
+                let cfg = CollectorConfig {
+                    collective,
+                    ..Default::default()
+                };
+                let label = format!(
+                    "{model} agents={n} {}",
+                    if collective { "collective" } else { "serial" }
+                );
+                let b = Bencher::run(&label, iters, 1, || {
+                    let tasks = mk_tasks(rt.as_ref(), model, n, 256);
+                    let _ =
+                        run_reuse(rt.as_ref(), model, &tasks, &cfg).unwrap();
+                });
+                b.report();
+            }
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Bench: end-to-end round latency per policy (paper Fig 10's left
+//! panels): one full All-Gather round — prefill (policy path) + decode —
+//! after a warm first round.
+
+include!("harness.rs");
+
+
+
+use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::workload::{Session, WorkloadConfig};
+
+fn main() {
+    let (rt, real) = bench_runtime();
+    let iters = if real { 3 } else { 20 };
+    println!("== bench_e2e_round (Fig 10 left panels) ==");
+    for model in ["sim-7b", "sim-14b"] {
+        for policy in Policy::all() {
+            for agents in [2usize, 5, 8] {
+                let spec = rt.spec(model).unwrap().clone();
+                let label = format!(
+                    "{model} {} agents={agents}",
+                    policy.label()
+                );
+                let b = Bencher::run(&label, iters, 0, || {
+                    let mut eng = Engine::new(
+                        rt.clone(),
+                        EngineConfig::for_policy(
+                            model,
+                            policy,
+                            2 * agents * spec.n_blocks(),
+                        ),
+                    )
+                    .unwrap();
+                    let mut session = Session::new(
+                        WorkloadConfig::generative_agents(1, agents, 2),
+                        0,
+                    );
+                    // warm round + measured round (both timed; dominated
+                    // by the measured reuse round at round 1)
+                    while !session.done() {
+                        let now = Instant::now();
+                        for r in session.next_round() {
+                            eng.submit(r, now).unwrap();
+                        }
+                        let done = eng.drain().unwrap();
+                        let outs: Vec<(usize, Vec<u32>)> = done
+                            .iter()
+                            .map(|c| (c.agent, c.generated.clone()))
+                            .collect();
+                        session.absorb(&outs);
+                    }
+                });
+                b.report();
+            }
+        }
+    }
+}

@@ -1,0 +1,41 @@
+include!("harness.rs");
+use tokendance::runtime::{DecodeSeq, KvBuf, ModelRuntime, RopeDiffSeq, SelectiveIn, SparseDiff};
+fn main() {
+    let (rt, _) = bench_runtime();
+    let model = "sim-7b";
+    let spec = rt.spec(model).unwrap().clone();
+    let s = spec.max_seq;
+    let toks: Vec<u32> = (0..448u32).map(|i| 4 + (i * 7) % 200).collect();
+    Bencher::run("prefill_512", 5, 1, || { rt.prefill(model, &toks, 448).unwrap(); }).report();
+    let pre = rt.prefill(model, &toks, 448).unwrap();
+    let mut kv = KvBuf::for_spec(&spec);
+    kv.copy_rows_from(&pre.kv, 0, 0, 448);
+    let mut padded = toks.clone(); padded.resize(s, 0);
+    let old: Vec<i32> = (0..s as i32).collect();
+    let valid = vec![1u8; 448].into_iter().chain(vec![0u8; s-448]).collect::<Vec<_>>();
+    let mk = || RopeDiffSeq { tokens: &padded, old_pos: &old, valid: &valid, kv: &kv };
+    Bencher::run("ropediff G=1", 5, 1, || { rt.ropediff(model, &[mk()]).unwrap(); }).report();
+    Bencher::run("ropediff G=4", 5, 1, || { rt.ropediff(model, &[mk(), mk(), mk(), mk()]).unwrap(); }).report();
+    Bencher::run("ropediff G=8", 3, 1, || { rt.ropediff(model, &[mk(),mk(),mk(),mk(),mk(),mk(),mk(),mk()]).unwrap(); }).report();
+    let sel: Vec<i32> = (0..64).collect();
+    Bencher::run("selective R=64", 5, 1, || {
+        rt.selective(model, &SelectiveIn { tokens: &padded, sel: &sel, kv: &kv, len: 448 }).unwrap();
+    }).report();
+    let sel2: Vec<i32> = (0..128).collect();
+    Bencher::run("selective R=128", 5, 1, || {
+        rt.selective(model, &SelectiveIn { tokens: &padded, sel: &sel2, kv: &kv, len: 448 }).unwrap();
+    }).report();
+    let ids: Vec<i32> = (0..8).collect();
+    let blk = spec.n_layers * spec.block_tokens * spec.d_model;
+    let dk = vec![0.5f32; 8 * blk];
+    let old2: Vec<i32> = (5..(s as i32+5)).collect();
+    Bencher::run("fused_restore NB=8 (rotated)", 5, 1, || {
+        rt.fused_restore(model, &kv, &SparseDiff { block_ids: &ids, diff_k: &dk }, &old2, &old).unwrap();
+    }).report();
+    let mut kk = kv.clone();
+    Bencher::run("rope_recover", 5, 1, || { rt.rope_recover(model, &mut kk, &old2, &old).unwrap(); }).report();
+    let seqs = vec![DecodeSeq { token: 9, len: 448, kv: &kv }];
+    Bencher::run("decode B=1", 5, 1, || { rt.decode(model, &seqs).unwrap(); }).report();
+    let seqs8: Vec<DecodeSeq> = (0..8).map(|_| DecodeSeq { token: 9, len: 448, kv: &kv }).collect();
+    Bencher::run("decode B=8", 5, 1, || { rt.decode(model, &seqs8).unwrap(); }).report();
+}

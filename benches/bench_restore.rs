@@ -1,0 +1,77 @@
+//! Bench: fused vs dense Mirror restore (paper Fig 13). Restores the same
+//! Mirror through both paths at varying diff sizes.
+
+include!("harness.rs");
+
+use tokendance::kvcache::KvPool;
+use tokendance::restore::{restore_mirror, RestoreMode};
+use tokendance::store::{
+    diff_blocks, identity_aligned, CacheStore, DenseEntry, Fetched,
+    MirrorEntry, Role, StoreKey,
+};
+
+fn main() {
+    let (rt, real) = bench_runtime();
+    let iters = if real { 10 } else { 100 };
+    println!("== bench_restore (Fig 13) ==");
+    for model in ["sim-7b", "sim-14b"] {
+        let spec = rt.spec(model).unwrap().clone();
+        let len = 448usize;
+        let toks: Vec<u32> =
+            (0..len as u32).map(|i| 4 + (i * 3) % 200).collect();
+        let pre = rt.prefill(model, &toks, len).unwrap();
+        let master_kv = pre.kv.extract_rows(0, len);
+        for n_diff in [2usize, 8, 16] {
+            let mut mirror_kv = master_kv.clone();
+            for b in 0..n_diff {
+                let o = mirror_kv.off(0, b * (len / n_diff).max(16));
+                mirror_kv.k[o] += 0.5;
+            }
+            let d = diff_blocks(&master_kv, &mirror_kv, len,
+                                spec.block_tokens);
+            let nb = d.block_ids.len();
+            let d = identity_aligned(d, len / spec.block_tokens, len);
+            let mut store = CacheStore::new(&spec, 1 << 30);
+            let mk =
+                StoreKey { content: 1, role: Role::AgentCache { agent: 0 } };
+            let sk =
+                StoreKey { content: 2, role: Role::AgentCache { agent: 1 } };
+            store.put_dense(
+                mk,
+                DenseEntry {
+                    tokens: toks.clone(),
+                    positions: (0..len as i32).collect(),
+                    kv: master_kv.clone(),
+                },
+            );
+            store
+                .put_mirror(
+                    sk,
+                    MirrorEntry {
+                        master: mk,
+                        tokens: toks.clone(),
+                        positions: (0..len as i32).collect(),
+                        diff: d,
+                    },
+                )
+                .unwrap();
+            for mode in [RestoreMode::Dense, RestoreMode::Fused] {
+                let label = format!("{model} diff_blocks={nb} {mode:?}");
+                let b = Bencher::run(&label, iters, 2, || {
+                    let mut pool = KvPool::for_seqs(&spec, 1);
+                    let mut table = pool.allocate(len).unwrap();
+                    let handle = match store.get(&sk) {
+                        Some(Fetched::Mirror(h)) => h,
+                        _ => unreachable!(),
+                    };
+                    restore_mirror(
+                        rt.as_ref(), model, &handle, mode, &mut pool,
+                        &mut table,
+                    )
+                    .unwrap();
+                });
+                b.report();
+            }
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench: the Fig-2 probe — multi-agent session vs the same number of
+//! independent requests through the engine, measuring wall time and peak
+//! pool usage.
+
+include!("harness.rs");
+
+use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::workload::driver::{drive_independent, drive_sessions};
+use tokendance::workload::{IndependentWorkload, WorkloadConfig};
+
+fn main() {
+    let (rt, real) = bench_runtime();
+    let iters = if real { 2 } else { 10 };
+    println!("== bench_scaling_gap (Fig 2) ==");
+    let model = "sim-7b";
+    let spec = rt.spec(model).unwrap().clone();
+    let agents = 5;
+    let rounds = 2;
+    let pool = agents * spec.n_blocks();
+
+    let b = Bencher::run("multi-agent session (vLLM+prefix)", iters, 0, || {
+        let mut eng = Engine::new(
+            rt.clone(),
+            EngineConfig::for_policy(model, Policy::VllmPrefix, pool),
+        )
+        .unwrap();
+        let cfg = WorkloadConfig::generative_agents(1, agents, rounds);
+        let _ = drive_sessions(&mut eng, &cfg, 1, 1e6, 1).unwrap();
+    });
+    b.report();
+
+    let b2 = Bencher::run("independent requests (same count)", iters, 0, || {
+        let mut eng = Engine::new(
+            rt.clone(),
+            EngineConfig::for_policy(model, Policy::VllmPrefix, pool),
+        )
+        .unwrap();
+        let mut w = IndependentWorkload::new(agents * rounds, 300, 32, 1);
+        let _ = drive_independent(&mut eng, &mut w, 1e6, 1).unwrap();
+    });
+    b2.report();
+}

@@ -1,0 +1,71 @@
+//! Bench: Master-Mirror encode/decode throughput and compression (paper
+//! Fig 12's mechanism): content matching, diff computation, store insert,
+//! and the resulting sizes.
+
+include!("harness.rs");
+
+
+use tokendance::store::{
+    diff_blocks_tol, gather_permuted_master, match_blocks_by_content,
+};
+
+fn main() {
+    let (rt, real) = bench_runtime();
+    let iters = if real { 20 } else { 200 };
+    println!("== bench_storage (Fig 12 mechanism) ==");
+    for model in ["sim-7b", "sim-14b"] {
+        let spec = rt.spec(model).unwrap().clone();
+        let len = 448usize;
+        let toks: Vec<u32> =
+            (0..len as u32).map(|i| 4 + (i * 5) % 200).collect();
+        let pre = rt.prefill(model, &toks, len).unwrap();
+        let master = pre.kv.extract_rows(0, len);
+        let mut mirror = master.clone();
+        // perturb ~15% of blocks
+        for b in (0..len / spec.block_tokens).step_by(7) {
+            let o = mirror.off(0, b * spec.block_tokens);
+            mirror.k[o] += 0.25;
+        }
+        let positions: Vec<i32> = (0..len as i32).collect();
+
+        let b1 = Bencher::run(
+            &format!("{model} content match + gather"),
+            iters,
+            2,
+            || {
+                let map =
+                    match_blocks_by_content(&toks, &toks, spec.block_tokens);
+                let _ = gather_permuted_master(
+                    &master,
+                    &positions,
+                    &map,
+                    len,
+                    spec.block_tokens,
+                    spec.max_seq,
+                );
+            },
+        );
+        b1.report();
+        let b2 = Bencher::run(
+            &format!("{model} block-sparse diff"),
+            iters,
+            2,
+            || {
+                let _ = diff_blocks_tol(
+                    &master, &mirror, len, spec.block_tokens, 5e-4,
+                );
+            },
+        );
+        b2.report();
+        let d = diff_blocks_tol(&master, &mirror, len, spec.block_tokens,
+                                5e-4);
+        let dense_bytes = master.bytes();
+        println!(
+            "{model}: {} diff blocks, diff {}B vs dense {}B ({:.1}x)",
+            d.n_blocks(),
+            d.bytes(),
+            dense_bytes,
+            dense_bytes as f64 / d.bytes().max(1) as f64
+        );
+    }
+}

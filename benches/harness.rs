@@ -1,0 +1,80 @@
+// Minimal criterion-style bench harness (offline environment stand-in):
+// warmup + timed iterations, mean/p50/p99 reporting, simple group API.
+// Shared by every bench target via `include!`.
+
+use std::time::Instant;
+
+pub struct Bencher {
+    pub name: String,
+    samples: Vec<f64>,
+}
+
+impl Bencher {
+    pub fn run<F: FnMut()>(name: &str, iters: usize, warmup: usize,
+                           mut f: F) -> Bencher {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Bencher { name: name.to_string(), samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn percentile(&self, q: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return f64::NAN;
+        }
+        let idx = ((q / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx]
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} mean {:>10} p50 {:>10} p99 {:>10} ({} iters)",
+            self.name,
+            fmt(self.mean()),
+            fmt(self.percentile(50.0)),
+            fmt(self.percentile(99.0)),
+            self.samples.len()
+        );
+    }
+}
+
+pub fn fmt(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".into()
+    } else if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Runtime selection for benches: real artifacts when present unless
+/// BENCH_MOCK=1; iterations scale down on the real runtime.
+pub fn bench_runtime() -> (std::rc::Rc<dyn tokendance::runtime::ModelRuntime>, bool) {
+    use std::rc::Rc;
+    let force_mock = std::env::var("BENCH_MOCK").is_ok();
+    let dir = std::path::PathBuf::from("artifacts");
+    if !force_mock && dir.join("manifest.json").exists() {
+        match tokendance::runtime::PjrtRuntime::load(&dir) {
+            Ok(rt) => return (Rc::new(rt), true),
+            Err(e) => eprintln!("falling back to mock runtime: {e:#}"),
+        }
+    }
+    (Rc::new(tokendance::runtime::MockRuntime::new()), false)
+}

@@ -1,0 +1,70 @@
+//! Accuracy probe (the Fig-14 methodology on one scenario): run the same
+//! greedy-decoded simulation under vLLM prefix caching (exact) and
+//! TokenDance (PIC-approximate), count rounds until the first divergence,
+//! and verify TokenDance matches per-request CacheBlend exactly.
+//!
+//! ```sh
+//! cargo run --release --example accuracy_divergence
+//! ```
+
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::runtime::PjrtRuntime;
+use tokendance::workload::{Session, WorkloadConfig};
+
+fn run(rt: Rc<PjrtRuntime>, policy: Policy, rounds: usize)
+    -> anyhow::Result<Vec<Vec<(usize, Vec<u32>)>>>
+{
+    let mut eng = Engine::new(
+        rt,
+        EngineConfig::for_policy("sim-7b", policy, 512),
+    )?;
+    let mut session =
+        Session::new(WorkloadConfig::generative_agents(3, 4, rounds), 0);
+    let mut out = Vec::new();
+    while !session.done() {
+        let now = Instant::now();
+        for r in session.next_round() {
+            eng.submit(r, now)?;
+        }
+        let done = eng.drain()?;
+        let mut outs: Vec<(usize, Vec<u32>)> = done
+            .iter()
+            .map(|c| (c.agent, c.generated.clone()))
+            .collect();
+        outs.sort_by_key(|(a, _)| *a);
+        out.push(outs.clone());
+        session.absorb(&outs);
+    }
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Rc::new(PjrtRuntime::load(Path::new("artifacts"))?);
+    let rounds = 6;
+    println!("# accuracy probe: Election Discussions, 4 agents, {rounds} rounds\n");
+    let exact = run(rt.clone(), Policy::VllmPrefix, rounds)?;
+    let td = run(rt.clone(), Policy::TokenDance, rounds)?;
+    let cb = run(rt.clone(), Policy::CacheBlendFull, rounds)?;
+
+    let first_div = |a: &[Vec<(usize, Vec<u32>)>],
+                     b: &[Vec<(usize, Vec<u32>)>]| {
+        a.iter().zip(b).position(|(x, y)| x != y).unwrap_or(rounds)
+    };
+    let d_exact = first_div(&exact, &td);
+    let d_cb = first_div(&cb, &td);
+    println!("rounds before TokenDance diverges from exact: {d_exact}/{rounds}");
+    println!("rounds before TokenDance diverges from CacheBlend: {d_cb}/{rounds}");
+    assert_eq!(
+        d_cb, rounds,
+        "TokenDance must equal CacheBlend bit-for-bit (paper §6.6)"
+    );
+    println!(
+        "\nTokenDance == CacheBlend everywhere; any drift vs the exact \
+         path is the PIC method's approximation, not TokenDance's."
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Capacity probe on the AgentSociety workload (long private histories):
+//! how many concurrent agents stay under the latency SLO for each policy —
+//! a single-configuration version of the paper's headline Fig-10 question.
+//!
+//! ```sh
+//! cargo run --release --example agent_society_capacity
+//! ```
+
+use std::path::Path;
+use std::rc::Rc;
+
+use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::runtime::{ModelRuntime, PjrtRuntime};
+use tokendance::util::stats::Samples;
+use tokendance::workload::driver::drive_sessions;
+use tokendance::workload::WorkloadConfig;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Rc::new(PjrtRuntime::load(Path::new("artifacts"))?);
+    let model = "sim-7b";
+    let slo = 1.5; // seconds, as in the paper
+    let qps = 8.0;
+    let spec = rt.spec(model)?.clone();
+
+    println!("# AgentSociety capacity probe (SLO {slo}s @ QPS {qps})\n");
+    println!("{:<16} {}", "policy", "round p50 by agent count");
+    for policy in Policy::all() {
+        let mut caps: Vec<String> = Vec::new();
+        let mut supported = 0usize;
+        for agents in [2usize, 4, 6, 8] {
+            let pool = (agents * spec.n_blocks() * 6) / 10 + spec.n_blocks();
+            let mut eng = Engine::new(
+                rt.clone(),
+                EngineConfig::for_policy(model, policy, pool),
+            )?;
+            let cfg = WorkloadConfig::agent_society(5, agents, 3);
+            let report = drive_sessions(&mut eng, &cfg, 1, qps, 7)?;
+            let mut s = Samples::new();
+            report.round_latencies().iter().for_each(|&l| s.push(l));
+            let p50 = s.p50();
+            if p50 <= slo {
+                supported = agents;
+            }
+            caps.push(format!("{agents}:{:.2}s", p50));
+        }
+        println!(
+            "{:<16} {}  -> max {} agents under SLO",
+            policy.label(),
+            caps.join("  "),
+            supported
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: load the AOT artifacts, build a TokenDance engine, run one
+//! 4-agent All-Gather round, and print what happened.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use tokendance::engine::{AgentRequest, Engine, EngineConfig, Policy};
+use tokendance::runtime::PjrtRuntime;
+use tokendance::tokenizer::{decode, encode, BlockKind, RoundAwarePrompt};
+
+fn main() -> anyhow::Result<()> {
+    // 1. the runtime: AOT-compiled XLA artifacts through PJRT (python is
+    //    never on this path — `make artifacts` already ran it once)
+    let rt = Rc::new(PjrtRuntime::load(Path::new("artifacts"))?);
+
+    // 2. a TokenDance engine: paged KV pool + diff-aware store + collector
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig::for_policy("sim-7b", Policy::TokenDance, 256),
+    )?;
+
+    // 3. one All-Gather round: every agent gets a private history plus the
+    //    same shared output blocks (here: synthetic round-0 outputs)
+    let shared: Vec<Vec<u32>> = (0..4)
+        .map(|i| encode(&format!("agent {i} reported sector {i} clear. ")))
+        .collect();
+    let t0 = Instant::now();
+    for agent in 0..4usize {
+        let mut prompt = RoundAwarePrompt::new();
+        prompt.push(
+            BlockKind::PrivateHistory,
+            encode(&format!("You are agent {agent}, a scout.")),
+        );
+        for i in 0..shared.len() {
+            // per-agent block order, as All-Gather schedulers do
+            let producer = (i + agent) % shared.len();
+            prompt.push(
+                BlockKind::SharedOutput { producer, round: 0 },
+                shared[producer].clone(),
+            );
+        }
+        prompt.push(BlockKind::RoundTask, encode("Report your next move."));
+        prompt.pad_blocks(16, encode(" ")[0]);
+        engine.submit(
+            AgentRequest {
+                agent,
+                round: 0,
+                prompt,
+                max_new_tokens: 16,
+                retain: true,
+            },
+            t0,
+        )?;
+    }
+
+    // 4. drain the round and inspect
+    let done = engine.drain()?;
+    println!("round completed in {:?}\n", t0.elapsed());
+    for c in &done {
+        println!(
+            "agent {}: {:?}",
+            c.agent,
+            decode(&c.generated).chars().take(48).collect::<String>()
+        );
+    }
+    println!(
+        "\nreuse: {:.0}% of prompt tokens served from cache",
+        100.0 * engine.metrics.reuse_fraction()
+    );
+    println!(
+        "store: {} entries, {} runtime calls",
+        engine.store().len(),
+        engine.rt.calls()
+    );
+    Ok(())
+}

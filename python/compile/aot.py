@@ -1,0 +1,178 @@
+"""AOT step: lower every (entry point x shape bucket x model) to HLO text.
+
+Run once by `make artifacts`; never on the request path. Produces:
+
+  artifacts/<kind>_<model>_<bucket>.hlo.txt   — HLO text per executable
+  artifacts/weights_<model>.bin               — flat little-endian f32 blob
+  artifacts/manifest.json                     — machine-readable catalogue
+                                                (params, shapes, dtypes,
+                                                weight layout, buckets)
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the rust `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import (DECODE_B, DIFF_NB, GROUP_G, MODELS, PREFILL_T, SELECT_R)
+from .weights import WEIGHT_LAYOUT, make_weights, save_weights, weight_manifest
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_entries(spec, names):
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+        for n, s in zip(names, spec)
+    ]
+
+
+def lower_one(fn, spec, path):
+    # keep_unused: entry points take the full weight set for a uniform
+    # rust-side calling convention even when a weight is unused (e.g.
+    # ropediff never touches lnf) — without this jax DCEs the parameter
+    # and the artifact's arity no longer matches the manifest.
+    lowered = jax.jit(fn, keep_unused=True).lower(*spec)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# (kind, make_fn, buckets, weight_params, extra input names)
+CATALOGUE = [
+    ("prefill", M.make_prefill, PREFILL_T, M.WEIGHT_NAMES,
+     ["tokens", "length"]),
+    ("decode", M.make_decode, DECODE_B, M.WEIGHT_NAMES,
+     ["tokens", "lengths", "kcache", "vcache"]),
+    ("ropediff", M.make_ropediff, GROUP_G, M.WEIGHT_NAMES,
+     ["tokens", "old_pos", "valid", "kcache"]),
+    ("selective", M.make_selective, SELECT_R, M.WEIGHT_NAMES,
+     ["tokens", "sel", "kcache", "vcache", "length"]),
+    ("restore", M.make_restore, DIFF_NB, [],
+     ["master_k", "diff_idx", "diff_k", "old_pos", "new_pos"]),
+    ("rope_recover", M.make_rope_recover, [None], [],
+     ["k", "old_pos", "new_pos"]),
+]
+
+OUTPUTS = {
+    "prefill": ["logits", "k", "v"],
+    "decode": ["logits", "knew", "vnew"],
+    "ropediff": ["k_rot", "scores"],
+    "selective": ["logits", "k", "v"],
+    "restore": ["k"],
+    "rope_recover": ["k"],
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(MODELS))
+    ap.add_argument("--kinds", nargs="*", default=[c[0] for c in CATALOGUE])
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"models": {}, "artifacts": [], "buckets": {
+        "prefill": PREFILL_T, "decode": DECODE_B, "ropediff": GROUP_G,
+        "selective": SELECT_R, "restore": DIFF_NB,
+    }}
+
+    for mname in args.models:
+        cfg = MODELS[mname]
+        w = make_weights(cfg)
+        wfile = f"weights_{mname}.bin"
+        save_weights(os.path.join(args.out_dir, wfile), w, cfg)
+        manifest["models"][mname] = {
+            "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq, "block_tokens": cfg.block_tokens,
+            "check_layer": cfg.check_layer, "rope_theta": cfg.rope_theta,
+            "weights_file": wfile,
+            "weights": [
+                {"name": n, "shape": s, "offset_elems": o, "size_elems": z}
+                for n, s, o, z in weight_manifest(cfg)
+            ],
+        }
+
+        for kind, make_fn, buckets, wparams, inames in CATALOGUE:
+            if kind not in args.kinds:
+                continue
+            for bucket in buckets:
+                t0 = time.time()
+                if bucket is None:
+                    fn, spec = make_fn(cfg)
+                    name = f"{kind}_{mname}"
+                else:
+                    fn, spec = make_fn(cfg, bucket)
+                    name = f"{kind}_{mname}_{bucket}"
+                fname = f"{name}.hlo.txt"
+                n = lower_one(fn, spec, os.path.join(args.out_dir, fname))
+                manifest["artifacts"].append({
+                    "name": name, "kind": kind, "model": mname,
+                    "bucket": bucket, "file": fname,
+                    "params": _param_entries(spec, list(wparams) + inames),
+                    "weight_params": list(wparams),
+                    "outputs": OUTPUTS[kind],
+                })
+                print(f"  {name}: {n} chars in {time.time()-t0:.1f}s",
+                      flush=True)
+
+    golden = make_golden()
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to "
+          f"{args.out_dir}")
+
+
+def make_golden() -> dict:
+    """Reference inputs/outputs anchoring the rust runtime's numerics to the
+    python oracle: a fixed 24-token prefill per model, with the expected
+    logits prefix, K/V checksums, and the greedy next token."""
+    import jax.numpy as jnp
+    from .kernels import ref
+    from .weights import make_weights
+
+    out = {}
+    for mname, cfg in MODELS.items():
+        w = make_weights(cfg)
+        tokens = [(7 + 13 * i) % 256 + 4 for i in range(24)]
+        logits, k, v = ref.ref_prefill(
+            w, cfg, jnp.array(np.array(tokens, np.int32)),
+            jnp.array(np.array([24], np.int32)))
+        logits = np.asarray(logits)
+        out[mname] = {
+            "tokens": tokens,
+            "len": 24,
+            "logits_prefix": [float(x) for x in logits[:8]],
+            "argmax": int(np.argmax(logits)),
+            "k_sum": float(np.abs(np.asarray(k)[:, :24]).sum()),
+            "v_sum": float(np.abs(np.asarray(v)[:, :24]).sum()),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Model and artifact-bucket configuration shared by L1/L2 and the AOT step.
+
+Two simulated model scales mirror the paper's Qwen2.5-7B / Qwen2.5-14B pair.
+The property the paper's evaluation isolates when moving 7B -> 14B is that
+the per-agent KV-cache footprint doubles; `sim-14b` has exactly 2x the KV
+bytes per token of `sim-7b` (8 layers vs 4, same width), so the storage- and
+capacity-scaling experiments reproduce the same mechanism at CPU scale.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    max_seq: int        # S: padded cache length every artifact works over
+    block_tokens: int   # storage/diff block granularity (tokens)
+    # PIC important-position check layer. Must be >= 1: layer-0 K is
+    # context-free (embedding -> wk -> RoPE), so deviations between cached
+    # and fresh K only appear from layer 1 on. CacheBlend likewise computes
+    # the first layer(s) fully and checks there.
+    check_layer: int
+    rope_theta: float = 10000.0
+    seed: int = 0x70CD
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        # f32 K and V across all layers
+        return self.n_layers * 2 * self.d_model * 4
+
+    @property
+    def n_blocks(self) -> int:
+        return self.max_seq // self.block_tokens
+
+
+# Reserved token ids for the byte-level tokenizer (mirrored in rust/src/tokenizer).
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+TTSEP_ID = 3          # the paper's <TTSEP> round-aware separator
+BYTE_OFFSET = 4       # byte b -> token id 4 + b
+
+MODELS = {
+    "sim-7b": ModelConfig(
+        name="sim-7b", n_layers=4, d_model=128, n_heads=8, d_ff=256,
+        vocab=512, max_seq=512, block_tokens=16, check_layer=1, seed=0x7B7B,
+    ),
+    "sim-14b": ModelConfig(
+        name="sim-14b", n_layers=8, d_model=128, n_heads=8, d_ff=256,
+        vocab=512, max_seq=512, block_tokens=16, check_layer=1, seed=0x14B14B,
+    ),
+}
+
+# Static shape buckets (XLA executables are fixed-shape; rust pads inputs to
+# the nearest bucket). Kept in sync with rust/src/model/buckets.rs.
+PREFILL_T = [64, 128, 256, 512]
+DECODE_B = [1, 2, 4, 8, 16]
+GROUP_G = [1, 2, 4, 8, 16]     # collective rope+diff group sizes; G=1 == serial PIC
+SELECT_R = [32, 64, 128]       # selective-recompute row counts
+DIFF_NB = [2, 4, 8, 16, 32]    # block-sparse diff block counts for fused restore

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret=True) + the pure-jnp oracle (ref)."""
+
+from . import attention, diff_select, ref, restore, rope, selective  # noqa: F401

@@ -1,0 +1,85 @@
+"""Pallas kernel: tiled causal prefill attention (flash-style).
+
+Not the paper's contribution (TokenDance reuses FlashAttention for dense
+attention), but included so the full prefill path can run on the Pallas
+stack. Online-softmax accumulation over K tiles; grid = (head, q-tile).
+Q/K/V tiles of (128, hd=16) f32 keep the working set ~ tens of KiB, and the
+q-tile x k-tile panels are MXU-shaped.
+
+Enabled in model.py via USE_PALLAS_ATTENTION; the default prefill uses the
+XLA-fused jnp path (identical numerics, tested in test_kernels.py) because
+interpret-mode grid loops lower to sequential HLO control flow that is much
+slower on the CPU PJRT backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, *, block_q, block_k,
+                  n_k_tiles):
+    qi = pl.program_id(1)
+    q = q_ref[...]                    # [block_q, hd]
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    m = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q, 1), jnp.float32)
+    acc = jnp.zeros((block_q, hd), jnp.float32)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    def body(kt, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kt * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kt * block_k, block_k), slice(None)))
+        kvalid = pl.load(valid_ref, (pl.dslice(kt * block_k, block_k),))
+        k_pos = kt * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        s = jnp.dot(q, k.T) * scale                     # [bq, bk]
+        mask = (k_pos <= q_pos) & (kvalid[None, :] > 0)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_k_tiles, body, (m, l, acc))
+    o_ref[...] = acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention(q, k, v, kvalid, *, block_q=128, block_k=128):
+    """Causal prefill attention. q/k/v: [T, h, hd] (q RoPE'd, k post-RoPE),
+    kvalid: [T]. Query at slot i attends keys j <= i with kvalid[j].
+    Returns [T, h, hd]."""
+    T, h, hd = q.shape
+    block_q = min(block_q, T)
+    block_k = min(block_k, T)
+    n_k_tiles = T // block_k
+    qh = jnp.transpose(q, (1, 0, 2))
+    kh = jnp.transpose(k, (1, 0, 2))
+    vh = jnp.transpose(v, (1, 0, 2))
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, n_k_tiles=n_k_tiles)
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, T // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, T, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, T, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((T,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, T, hd), q.dtype),
+        interpret=True,
+    )(qh, kh, vh, kvalid.astype(jnp.int32))
+    return jnp.transpose(out, (1, 0, 2))

@@ -1,0 +1,46 @@
+"""Pallas kernel: check-layer key-difference scoring.
+
+The important-position selection of PIC methods (CacheBlend/EPIC): compare
+rotated cached keys against freshly computed keys on the check layer and
+produce a per-position deviation score. TokenDance batches the whole
+All-Gather group through one call (grid over requests) — the collective
+"diff analysis" pass of paper §4.2 / Figure 7 (T3).
+
+Each grid step reduces one [S, d] pair to [S] scores; the tile fits in VMEM
+(2 x 256 KiB in + 2 KiB out) and the reduction is a single VPU pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INVALID_SCORE = 1e9
+
+
+def _diff_score_kernel(kf_ref, kr_ref, valid_ref, out_ref):
+    kf = kf_ref[...]                    # [N, S, d]
+    kr = kr_ref[...]
+    valid = valid_ref[...]              # [N, S]
+    score = jnp.mean(jnp.abs(kf - kr), axis=-1)
+    out_ref[...] = jnp.where(valid > 0, score, jnp.float32(INVALID_SCORE))
+
+
+@jax.jit
+def diff_scores(k_fresh, k_rot, valid):
+    """Per-position deviation scores for a group.
+
+    k_fresh/k_rot: [N, S, d]; valid: [N, S] (1 = position holds a reused
+    cached token). Returns [N, S]; invalid positions score INVALID_SCORE so
+    top-k selection always recomputes them first.
+
+    Single whole-batch kernel step on CPU interpret (see rope.py note);
+    the TPU BlockSpec would stream (request) slices.
+    """
+    N, S, d = k_fresh.shape
+    return pl.pallas_call(
+        _diff_score_kernel,
+        out_shape=jax.ShapeDtypeStruct((N, S), jnp.float32),
+        interpret=True,
+    )(k_fresh, k_rot, valid.astype(jnp.int32))

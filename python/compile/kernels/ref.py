@@ -1,0 +1,280 @@
+"""Pure-jnp oracle for every L1 kernel and L2 model function.
+
+This module is the single source of truth for the model math. The Pallas
+kernels (rope.py / diff_select.py / selective.py / restore.py / attention.py)
+and the composed model entry points (model.py) are tested against these
+functions in python/tests/, and the rust engine's numerics are transitively
+anchored to them through the AOT artifacts.
+
+Conventions
+-----------
+* KV caches store K and V *post-RoPE*, per layer, with heads flattened:
+  shape [L, S, d] where d = n_heads * head_dim.
+* Cache slot index == token position. Restore paths RoPE-recover cached K to
+  the target positions before caches are written, so the engine never holds
+  a cache whose slots and positions disagree.
+* Padding uses PAD_ID tokens and `length` masks; all shapes are static.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Primitive math
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + EPS) * scale
+
+
+def rope_angles(positions, head_dim, theta=10000.0):
+    """Rotary angles [*, head_dim//2] for integer positions [*]."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def rope_apply(x, positions, theta=10000.0):
+    """Apply RoPE. x: [..., T, h, hd], positions: [..., T] (broadcast over h).
+
+    Half-split convention: (x1, x2) -> (x1*cos - x2*sin, x2*cos + x1*sin).
+    Rotations are additive in position, so re-rotating by (new - old) moves
+    a cached K from its stored position to a new one exactly.
+    """
+    hd = x.shape[-1]
+    ang = rope_angles(positions, hd, theta)          # [..., T, hd//2]
+    cos = jnp.cos(ang)[..., None, :]                 # [..., T, 1, hd//2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def split_heads(x, n_heads):
+    """[..., T, d] -> [..., T, h, hd]"""
+    t = x.shape[:-1]
+    return x.reshape(*t, n_heads, x.shape[-1] // n_heads)
+
+
+def merge_heads(x):
+    """[..., T, h, hd] -> [..., T, d]"""
+    t = x.shape[:-2]
+    return x.reshape(*t, x.shape[-2] * x.shape[-1])
+
+
+def ref_rotate_k(k, old_pos, new_pos, n_heads, theta=10000.0):
+    """Re-rotate post-RoPE cached K [S, d] from old to new positions [S]."""
+    delta = (new_pos - old_pos).astype(jnp.int32)
+    kh = split_heads(k, n_heads)
+    return merge_heads(rope_apply(kh, delta, theta))
+
+
+def ref_diff_scores(k_fresh, k_rot, valid_mask):
+    """Per-position deviation between fresh and rotated-cached check-layer K.
+
+    k_fresh, k_rot: [S, d]; valid_mask: [S] (1 where the position holds a
+    reused cached token). Returns [S] mean-|diff| scores; invalid positions
+    get a huge score so the engine always recomputes them.
+    """
+    d = jnp.mean(jnp.abs(k_fresh - k_rot), axis=-1)
+    return jnp.where(valid_mask > 0, d, jnp.float32(1e9))
+
+
+# ---------------------------------------------------------------------------
+# Attention primitives
+# ---------------------------------------------------------------------------
+
+def causal_attention(q, k, v, q_pos, k_pos, k_valid):
+    """Masked attention. q: [Tq, h, hd], k/v: [Tk, h, hd],
+    q_pos: [Tq], k_pos: [Tk], k_valid: [Tk] boolean-ish.
+
+    Key j visible to query i iff k_pos[j] <= q_pos[i] and k_valid[j].
+    Returns [Tq, h, hd].
+    """
+    hd = q.shape[-1]
+    logits = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = (k_pos[None, :] <= q_pos[:, None]) & (k_valid[None, :] > 0)
+    logits = jnp.where(mask[None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Model reference (layer loop; weights = dict from weights.make_weights)
+# ---------------------------------------------------------------------------
+
+def _layer(w, l, x, k_lhd, v_lhd, q_pos, k_pos, k_valid, n_heads, theta):
+    """One transformer layer. x: [Tq, d]; k_lhd/v_lhd: [Tk, h, hd] already
+    include this layer's keys/values for every visible position (post-RoPE).
+    Returns the layer output [Tq, d]."""
+    xn = rmsnorm(x, w["ln1"][l])
+    q = split_heads(xn @ w["wq"][l], n_heads)
+    q = rope_apply(q, q_pos, theta)
+    o = causal_attention(q, k_lhd, v_lhd, q_pos, k_pos, k_valid)
+    x = x + merge_heads(o) @ w["wo"][l]
+    xn = rmsnorm(x, w["ln2"][l])
+    x = x + jnp.maximum(xn @ w["w1"][l], 0.0) @ w["w2"][l]
+    return x
+
+
+def ref_prefill(w, cfg, tokens, length):
+    """Full prefill. tokens: [T] i32, length: [1] i32 (valid token count).
+
+    Returns (logits [vocab] at position length-1, k [L,T,d], v [L,T,d]).
+    Padded positions (>= length) produce garbage K/V that the caller masks.
+    """
+    T = tokens.shape[0]
+    h, theta = cfg.n_heads, cfg.rope_theta
+    pos = jnp.arange(T, dtype=jnp.int32)
+    valid = (pos < length[0]).astype(jnp.int32)
+    x = w["embed"][tokens]
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, w["ln1"][l])
+        k = rope_apply(split_heads(xn @ w["wk"][l], h), pos, theta)
+        v = split_heads(xn @ w["wv"][l], h)
+        ks.append(merge_heads(k))
+        vs.append(merge_heads(v))
+        x = _layer(w, l, x, k, v, pos, pos, valid, h, theta)
+    xf = rmsnorm(x, w["lnf"])
+    logits_all = xf @ w["embed"].T                     # [T, vocab]
+    last = jnp.clip(length[0] - 1, 0, T - 1)
+    return logits_all[last], jnp.stack(ks), jnp.stack(vs)
+
+
+def ref_decode(w, cfg, token, length, kcache, vcache):
+    """Single-sequence decode step.
+
+    token: [1] i32; length: [1] i32 current cache length (new token position
+    = length). kcache/vcache: [L, S, d] post-RoPE. Returns (logits [vocab],
+    knew [L, d], vnew [L, d]).
+    """
+    S = kcache.shape[1]
+    h, theta = cfg.n_heads, cfg.rope_theta
+    pos = length.astype(jnp.int32)                     # [1] new token position
+    slot = jnp.arange(S, dtype=jnp.int32)
+    x = w["embed"][token]                              # [1, d]
+    knew, vnew = [], []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, w["ln1"][l])
+        k1 = rope_apply(split_heads(xn @ w["wk"][l], h), pos, theta)  # [1,h,hd]
+        v1 = split_heads(xn @ w["wv"][l], h)
+        knew.append(merge_heads(k1)[0])
+        vnew.append(merge_heads(v1)[0])
+        # keys = cached slots (< length) plus the new token itself
+        kfull = jnp.concatenate([split_heads(kcache[l], h), k1], axis=0)
+        vfull = jnp.concatenate([split_heads(vcache[l], h), v1], axis=0)
+        kpos = jnp.concatenate([slot, pos])
+        kvalid = jnp.concatenate(
+            [(slot < length[0]).astype(jnp.int32), jnp.ones((1,), jnp.int32)])
+        x = _layer(w, l, x, kfull, vfull, pos, kpos, kvalid, h, theta)
+    xf = rmsnorm(x, w["lnf"])
+    return (xf @ w["embed"].T)[0], jnp.stack(knew), jnp.stack(vnew)
+
+
+def ref_collective_ropediff(cfg, kcache, old_pos, new_pos, k_fresh, valid):
+    """Collective RoPE re-rotation + check-layer diff scoring for a group.
+
+    kcache: [G, L, S, d] cached post-RoPE K; old_pos/new_pos: [G, S];
+    k_fresh: [G, S, d] fresh check-layer K at the *new* positions;
+    valid: [G, S] 1 where a cached token is present.
+    Returns (k_rot [G, L, S, d], scores [G, S]).
+    """
+    h, theta = cfg.n_heads, cfg.rope_theta
+    delta = (new_pos - old_pos).astype(jnp.int32)          # [G, S]
+    kh = split_heads(kcache, h)                             # [G, L, S, h, hd]
+    k_rot = merge_heads(rope_apply(kh, delta[:, None, :], theta))
+    kc = k_rot[:, cfg.check_layer]                          # [G, S, d]
+    scores = jnp.mean(jnp.abs(k_fresh - kc), axis=-1)
+    scores = jnp.where(valid > 0, scores, jnp.float32(1e9))
+    return k_rot, scores
+
+
+def ref_check_fresh_k(w, cfg, tokens, positions, valid):
+    """Fresh check-layer K for a full prompt at the given positions.
+
+    Runs layers [0, check_layer) *fully* (the CacheBlend recipe: compute the
+    first layer(s) from scratch — cost 1/L of a prefill — then check where
+    cached and fresh keys diverge), and produces the check layer's fresh K.
+    tokens: [T] i32, positions: [T] i32, valid: [T]. Returns [T, d].
+    """
+    h, theta = cfg.n_heads, cfg.rope_theta
+    x = w["embed"][tokens]
+    for l in range(cfg.check_layer):
+        xn = rmsnorm(x, w["ln1"][l])
+        k = rope_apply(split_heads(xn @ w["wk"][l], h), positions, theta)
+        v = split_heads(xn @ w["wv"][l], h)
+        x = _layer(w, l, x, k, v, positions, positions, valid, h, theta)
+    xn = rmsnorm(x, w["ln1"][cfg.check_layer])
+    k = split_heads(xn @ w["wk"][cfg.check_layer], h)
+    return merge_heads(rope_apply(k, positions, theta))
+
+
+def ref_selective(w, cfg, tokens, sel, kcache, vcache, length):
+    """CacheBlend-style selective recomputation.
+
+    tokens: [S] i32 full (padded) prompt; sel: [R] i32 positions to
+    recompute (padded by repeating length-1; MUST include length-1);
+    kcache/vcache: [L, S, d] the rotated/blended reused cache (slots ==
+    positions); length: [1] i32.
+
+    Recomputes Q/K/V only at `sel` rows layer by layer, scattering corrected
+    K/V into the cache before attention so later selected rows see earlier
+    corrections (CacheBlend's layerwise update order). Returns
+    (logits [vocab] at position length-1, corrected kcache, vcache).
+    """
+    S = tokens.shape[0]
+    h, theta = cfg.n_heads, cfg.rope_theta
+    slot = jnp.arange(S, dtype=jnp.int32)
+    qpos = sel.astype(jnp.int32)                         # [R]
+    x = w["embed"][tokens[sel]]                          # [R, d]
+    kvalid = (slot < length[0]).astype(jnp.int32)
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, w["ln1"][l])
+        kr = rope_apply(split_heads(xn @ w["wk"][l], h), qpos, theta)
+        vr = split_heads(xn @ w["wv"][l], h)
+        kcache = kcache.at[l, qpos].set(merge_heads(kr))
+        vcache = vcache.at[l, qpos].set(merge_heads(vr))
+        klh = split_heads(kcache[l], h)
+        vlh = split_heads(vcache[l], h)
+        x = _layer(w, l, x, klh, vlh, qpos, slot, kvalid, h, theta)
+    xf = rmsnorm(x, w["lnf"])
+    logits_all = xf @ w["embed"].T                       # [R, vocab]
+    # row whose position is length-1 (guaranteed present by the caller)
+    is_last = (qpos == (length[0] - 1)).astype(jnp.float32)
+    idx = jnp.argmax(is_last)
+    return logits_all[idx], kcache, vcache
+
+
+def ref_fused_restore_k(cfg, master_k, diff_idx, diff_k, old_pos, new_pos):
+    """Master K + block-sparse K diff -> restored, RoPE-recovered K.
+
+    master_k: [L, S, d]; diff_idx: [NB] i32 token-block ids (-1 = padding /
+    no-op); diff_k: [NB, L, B, d] correction values (the mirror's values
+    for that block, in the master's position frame); old_pos/new_pos: [S].
+    Returns k [L, S, d]. V has no positional component and is restored by
+    the host transfer pass.
+
+    Matches paper Algorithm 1: diff apply (line 7) then RoPERecover (line
+    9) — corrections live in the source frame, so the single rotation after
+    scatter is uniform.
+    """
+    L, S, d = master_k.shape
+    B = cfg.block_tokens
+    h, theta = cfg.n_heads, cfg.rope_theta
+
+    k = master_k
+    for i in range(diff_idx.shape[0]):
+        bid = diff_idx[i]
+        start = jnp.clip(bid, 0, S // B - 1) * B
+        ksl = jax.lax.dynamic_slice(k, (0, start, 0), (L, B, d))
+        newk = jnp.where(bid >= 0, diff_k[i], ksl)
+        k = jax.lax.dynamic_update_slice(k, newk, (0, start, 0))
+    delta = (new_pos - old_pos).astype(jnp.int32)
+    kh = split_heads(k, h)                                # [L, S, h, hd]
+    return merge_heads(rope_apply(kh, delta[None, :], theta))

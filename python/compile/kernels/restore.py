@@ -1,0 +1,83 @@
+"""Pallas kernel: fused block-sparse diff restore (paper §4.4 / Algorithm 1).
+
+This is the paper's custom CUDA kernel rethought for the Pallas model: the
+Mirror is never materialized densely. Each grid step owns one (layer,
+token-block) tile of the Master's K/V planes; the tile is corrected in
+scratch (VMEM) — blocks on the diff list take the Mirror's values, others
+pass through — and RoPE recovery for the K plane happens on the same
+resident tile. One HBM read + one HBM write per element, with the
+skip-or-correct decision made per block exactly as in paper Figure 9.
+
+The CUDA original staged master chunks in SM shared memory; BlockSpec tiles
+of (block_tokens=16, d=128) f32 = 8 KiB per plane express the same staging
+for the TPU memory hierarchy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _restore_kernel(mk_ref, idx_ref, dk_ref, delta_ref, ok_ref, *,
+                    n_heads, theta, block_tokens):
+    """Whole-cache K-plane restore in one kernel step (CPU interpret; the
+    TPU BlockSpec tiles (layer, token-block) pairs into VMEM — DESIGN.md
+    §8). V needs no positional recovery, so it rides the host transfer
+    pass and never crosses into the kernel (§Perf L1-2: halves the
+    restore's device traffic).
+
+    The skip-or-correct dispatch of paper Figure 9 becomes a static unroll
+    over the NB diff slots: each listed block is scattered into the master
+    copy, then RoPE recovery runs over the resident buffer.
+    """
+    mk = mk_ref[...]          # [L, S, d]
+    idx = idx_ref[...]        # [NB]
+    dk = dk_ref[...]          # [NB, L, B, d]
+    delta = delta_ref[...].astype(jnp.float32)   # [S]
+    L, S, d = mk.shape
+    B = block_tokens
+    NB = idx.shape[0]
+
+    k = mk
+    for i in range(NB):       # static unroll: NB is a shape constant
+        bid = idx[i]
+        start = jnp.clip(bid, 0, S // B - 1) * B
+        ksl = jax.lax.dynamic_slice(k, (0, start, 0), (L, B, d))
+        newk = jnp.where(bid >= 0, dk[i], ksl)
+        k = jax.lax.dynamic_update_slice(k, newk, (0, start, 0))
+
+    # RoPE recovery on the resident K planes
+    hd = d // n_heads
+    half = hd // 2
+    kh = k.reshape(L, S, n_heads, hd)
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = delta[:, None] * inv_freq[None, :]              # [S, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = kh[..., :half], kh[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    ok_ref[...] = rot.reshape(L, S, d)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "theta", "block_tokens"))
+def fused_restore(master_k, diff_idx, diff_k, old_pos, new_pos, *,
+                  n_heads, theta=10000.0, block_tokens=16):
+    """Fused Mirror K-restore.
+
+    master_k: [L, S, d]; diff_idx: [NB] i32 token-block ids (-1 = padding);
+    diff_k: [NB, L, B, d]; old_pos/new_pos: [S].
+    Returns k: [L, S, d] corrected + RoPE-recovered.
+    """
+    L, S, d = master_k.shape
+    delta = (new_pos - old_pos).astype(jnp.int32)
+    kernel = functools.partial(_restore_kernel, n_heads=n_heads,
+                               theta=float(theta),
+                               block_tokens=block_tokens)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((L, S, d), master_k.dtype),
+        interpret=True,
+    )(master_k, diff_idx.astype(jnp.int32), diff_k, delta)

@@ -1,0 +1,83 @@
+"""Pallas kernel: batched RoPE re-rotation of cached keys.
+
+This is the collective half of the paper's §4.2: one batched rotation pass
+moves every request's cached K from its stored (donor) positions to the
+target positions in the new prompt. The grid iterates over (request, layer)
+so each kernel step rotates one [S, d] cache plane held entirely in
+VMEM-scale scratch (S=512, d=128 f32 -> 256 KiB per plane).
+
+TPU adaptation note (DESIGN.md §8): the CUDA original assigns one threadblock
+per (request, layer) slice; here BlockSpec expresses the same schedule — one
+grid step owns one slice, and the rotation is a pure VPU elementwise op on
+the resident tile, so the HBM traffic is exactly one read + one write per
+element.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_rotate_kernel(k_ref, delta_ref, out_ref, *, n_heads, theta):
+    """Rotate one [S, d] plane by per-position deltas [S]."""
+    k = k_ref[...]                                   # [S, d]
+    delta = delta_ref[...].astype(jnp.float32)       # [S]
+    S, d = k.shape
+    hd = d // n_heads
+    half = hd // 2
+    kh = k.reshape(S, n_heads, hd)
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = delta[:, None] * inv_freq[None, :]         # [S, half]
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = kh[..., :half], kh[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out_ref[...] = rot.reshape(S, d)
+
+
+def _rope_rotate_batch_kernel(k_ref, delta_ref, out_ref, *, n_heads,
+                              theta):
+    """Whole-batch rotation in one kernel step: [N, L, S, d] by [N, S]."""
+    k = k_ref[...]
+    delta = delta_ref[...].astype(jnp.float32)          # [N, S]
+    N, L, S, d = k.shape
+    hd = d // n_heads
+    half = hd // 2
+    kh = k.reshape(N, L, S, n_heads, hd)
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = delta[:, None, :, None] * inv_freq                # [N,1,S,half]
+    cos = jnp.cos(ang)[..., None, :]                        # [N,1,S,1,half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = kh[..., :half], kh[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    out_ref[...] = rot.reshape(N, L, S, d)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "theta"))
+def rope_rotate(kcache, old_pos, new_pos, *, n_heads, theta=10000.0):
+    """Rotate cached K planes old->new positions.
+
+    kcache: [N, L, S, d] (N = group size); old_pos/new_pos: [N, S].
+    Returns [N, L, S, d].
+
+    CPU-interpret note: a single whole-batch kernel step. interpret-mode
+    grids lower to sequential scans whose per-step buffer copies dominate
+    on the CPU backend, so the CPU artifact uses one step; on real TPU the
+    BlockSpec would tile (request, layer) slices into VMEM as described in
+    DESIGN.md §8 (§Perf iteration L1-1).
+    """
+    N, L, S, d = kcache.shape
+    delta = (new_pos - old_pos).astype(jnp.int32)
+    kernel = functools.partial(_rope_rotate_batch_kernel, n_heads=n_heads,
+                               theta=float(theta))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((N, L, S, d), kcache.dtype),
+        interpret=True,
+    )(kcache, delta)

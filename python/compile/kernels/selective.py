@@ -1,0 +1,58 @@
+"""Pallas kernel: selective-recompute attention (R query rows vs S cached keys).
+
+The compute core of CacheBlend-style selective recomputation: only the R
+important positions issue queries, attending over the full blended cache.
+Cost is O(R*S*d) instead of the O(S^2*d) of a full prefill — this asymmetry
+is where PIC's prefill speedup comes from, and the kernel is shared by the
+per-request baseline and TokenDance's per-position refresh.
+
+Grid iterates over heads; each step holds q [R, hd], k/v [S, hd] in VMEM
+(R<=128, S=512, hd=16 -> < 100 KiB) and runs one MXU-shaped [R,hd]x[hd,S]
+panel plus a masked softmax.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _selective_attn_kernel(q_ref, k_ref, v_ref, qpos_ref, kvalid_ref,
+                           out_ref):
+    """All heads in one kernel step (CPU interpret; the TPU BlockSpec
+    would assign one grid step per head — DESIGN.md §8)."""
+    q = q_ref[...]            # [h, R, hd]
+    k = k_ref[...]            # [h, S, hd]
+    v = v_ref[...]            # [h, S, hd]
+    qpos = qpos_ref[...]      # [R]
+    kvalid = kvalid_ref[...]  # [S]
+    hd = q.shape[-1]
+    S = k.shape[1]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, 1, S), 2)
+    logits = jnp.einsum("hrd,hsd->hrs", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = (slot <= qpos[None, :, None]) & (kvalid[None, None, :] > 0)
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    out_ref[...] = jnp.einsum("hrs,hsd->hrd", probs, v)
+
+
+@jax.jit
+def selective_attention(q, k, v, qpos, kvalid):
+    """q: [R, h, hd] (RoPE'd), k/v: [S, h, hd] (cache incl. scattered
+    corrections, slots == positions), qpos: [R] query positions,
+    kvalid: [S]. Returns [R, h, hd]."""
+    R, h, hd = q.shape
+    qh = jnp.transpose(q, (1, 0, 2))   # [h, R, hd]
+    kh = jnp.transpose(k, (1, 0, 2))   # [h, S, hd]
+    vh = jnp.transpose(v, (1, 0, 2))
+    out = pl.pallas_call(
+        _selective_attn_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, R, hd), q.dtype),
+        interpret=True,
+    )(qh, kh, vh, qpos.astype(jnp.int32), kvalid.astype(jnp.int32))
+    return jnp.transpose(out, (1, 0, 2))

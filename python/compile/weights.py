@@ -1,0 +1,75 @@
+"""Deterministic model weights.
+
+Weights are generated from the model seed with numpy's PCG64 so that the
+Python oracle, the AOT artifacts, and the rust runtime all agree on the exact
+parameter values. The AOT step serializes them to a flat little-endian f32
+blob (`artifacts/weights_<model>.bin`) whose layout is described by the
+manifest; the rust runtime uploads each tensor once as a device-resident
+PjRtBuffer and reuses it across calls (weights never travel per request).
+"""
+
+import numpy as np
+
+from .config import ModelConfig
+
+# Tensor order in the flat blob; each entry is (name, shape_fn).
+WEIGHT_LAYOUT = [
+    ("embed", lambda c: (c.vocab, c.d_model)),
+    ("wq", lambda c: (c.n_layers, c.d_model, c.d_model)),
+    ("wk", lambda c: (c.n_layers, c.d_model, c.d_model)),
+    ("wv", lambda c: (c.n_layers, c.d_model, c.d_model)),
+    ("wo", lambda c: (c.n_layers, c.d_model, c.d_model)),
+    ("w1", lambda c: (c.n_layers, c.d_model, c.d_ff)),
+    ("w2", lambda c: (c.n_layers, c.d_ff, c.d_model)),
+    ("ln1", lambda c: (c.n_layers, c.d_model)),
+    ("ln2", lambda c: (c.n_layers, c.d_model)),
+    ("lnf", lambda c: (c.d_model,)),
+]
+
+
+def make_weights(cfg: ModelConfig) -> dict:
+    """Generate the deterministic weight dict for a model config."""
+    rng = np.random.default_rng(cfg.seed)
+    w = {}
+    for name, shape_fn in WEIGHT_LAYOUT:
+        shape = shape_fn(cfg)
+        if name.startswith("ln"):
+            # norm scales start at 1 with small jitter
+            t = 1.0 + 0.1 * rng.standard_normal(shape)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            t = rng.standard_normal(shape) / np.sqrt(fan_in)
+        w[name] = t.astype(np.float32)
+    return w
+
+
+def flatten_weights(w: dict, cfg: ModelConfig) -> np.ndarray:
+    """Concatenate all tensors (layout order) into one flat f32 vector."""
+    return np.concatenate(
+        [w[name].reshape(-1) for name, _ in WEIGHT_LAYOUT]
+    ).astype(np.float32)
+
+
+def weight_manifest(cfg: ModelConfig) -> list:
+    """[(name, shape, offset_elems, size_elems)] for the flat blob."""
+    out, off = [], 0
+    for name, shape_fn in WEIGHT_LAYOUT:
+        shape = shape_fn(cfg)
+        n = int(np.prod(shape))
+        out.append((name, list(shape), off, n))
+        off += n
+    return out
+
+
+def save_weights(path: str, w: dict, cfg: ModelConfig) -> None:
+    flatten_weights(w, cfg).tofile(path)
+
+
+def load_weights(path: str, cfg: ModelConfig) -> dict:
+    flat = np.fromfile(path, dtype=np.float32)
+    out, off = {}, 0
+    for name, shape, offset, n in weight_manifest(cfg):
+        out[name] = flat[offset:offset + n].reshape(shape)
+        off = offset + n
+    assert off == flat.size, "weight blob size mismatch"
+    return out

@@ -1,0 +1,30 @@
+import numpy as np
+import pytest
+
+from compile.config import MODELS
+from compile.weights import make_weights
+
+
+@pytest.fixture(scope="session")
+def cfg7b():
+    return MODELS["sim-7b"]
+
+
+@pytest.fixture(scope="session")
+def cfg14b():
+    return MODELS["sim-14b"]
+
+
+@pytest.fixture(scope="session")
+def w7b(cfg7b):
+    return make_weights(cfg7b)
+
+
+@pytest.fixture(scope="session")
+def w14b(cfg14b):
+    return make_weights(cfg14b)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0xD0)

@@ -1,0 +1,247 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/sizes/valid-masks; every kernel must match ref
+within f32 tolerance. This is the CORE correctness signal for the compute
+the rust engine executes through the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import MODELS
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention
+from compile.kernels.diff_select import diff_scores, INVALID_SCORE
+from compile.kernels.restore import fused_restore
+from compile.kernels.rope import rope_rotate
+from compile.kernels.selective import selective_attention
+
+CFG = MODELS["sim-7b"]
+H, HD, D = CFG.n_heads, CFG.head_dim, CFG.d_model
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# rope_rotate
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    n_layers=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([16, 48, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_rope_rotate_matches_ref(n, n_layers, s, seed):
+    rng = _rng(seed)
+    k = rng.standard_normal((n, n_layers, s, D)).astype(np.float32)
+    old = rng.integers(0, 300, (n, s)).astype(np.int32)
+    new = rng.integers(0, 300, (n, s)).astype(np.int32)
+    out = np.asarray(rope_rotate(jnp.array(k), jnp.array(old), jnp.array(new),
+                                 n_heads=H))
+    for g in range(n):
+        for l in range(n_layers):
+            want = np.asarray(ref.ref_rotate_k(
+                jnp.array(k[g, l]), jnp.array(old[g]), jnp.array(new[g]), H))
+            np.testing.assert_allclose(out[g, l], want, **TOL)
+
+
+def test_rope_rotate_identity():
+    """Rotating by zero delta is the identity."""
+    rng = _rng(7)
+    k = rng.standard_normal((2, 2, 32, D)).astype(np.float32)
+    pos = rng.integers(0, 100, (2, 32)).astype(np.int32)
+    out = np.asarray(rope_rotate(jnp.array(k), jnp.array(pos),
+                                 jnp.array(pos), n_heads=H))
+    np.testing.assert_allclose(out, k, **TOL)
+
+
+def test_rope_rotate_roundtrip():
+    """old->new then new->old returns the original values."""
+    rng = _rng(8)
+    k = rng.standard_normal((1, 2, 32, D)).astype(np.float32)
+    old = rng.integers(0, 200, (1, 32)).astype(np.int32)
+    new = rng.integers(0, 200, (1, 32)).astype(np.int32)
+    fwd = rope_rotate(jnp.array(k), jnp.array(old), jnp.array(new), n_heads=H)
+    back = np.asarray(rope_rotate(fwd, jnp.array(new), jnp.array(old),
+                                  n_heads=H))
+    np.testing.assert_allclose(back, k, rtol=1e-4, atol=1e-4)
+
+
+def test_rope_rotate_additivity():
+    """Rotation by (a then b) equals rotation by (a + b)."""
+    rng = _rng(9)
+    k = rng.standard_normal((1, 1, 16, D)).astype(np.float32)
+    zero = np.zeros((1, 16), np.int32)
+    a = rng.integers(0, 50, (1, 16)).astype(np.int32)
+    b = rng.integers(0, 50, (1, 16)).astype(np.int32)
+    two_step = rope_rotate(
+        rope_rotate(jnp.array(k), jnp.array(zero), jnp.array(a), n_heads=H),
+        jnp.array(zero), jnp.array(b), n_heads=H)
+    one_step = rope_rotate(jnp.array(k), jnp.array(zero), jnp.array(a + b),
+                           n_heads=H)
+    np.testing.assert_allclose(np.asarray(two_step), np.asarray(one_step),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# diff_scores
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    s=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_diff_scores_matches_ref(n, s, seed):
+    rng = _rng(seed)
+    kf = rng.standard_normal((n, s, D)).astype(np.float32)
+    kr = rng.standard_normal((n, s, D)).astype(np.float32)
+    valid = (rng.random((n, s)) > 0.4).astype(np.int32)
+    got = np.asarray(diff_scores(jnp.array(kf), jnp.array(kr),
+                                 jnp.array(valid)))
+    for g in range(n):
+        want = np.asarray(ref.ref_diff_scores(
+            jnp.array(kf[g]), jnp.array(kr[g]), jnp.array(valid[g])))
+        np.testing.assert_allclose(got[g], want, **TOL)
+
+
+def test_diff_scores_zero_for_identical():
+    rng = _rng(10)
+    k = rng.standard_normal((1, 32, D)).astype(np.float32)
+    valid = np.ones((1, 32), np.int32)
+    got = np.asarray(diff_scores(jnp.array(k), jnp.array(k),
+                                 jnp.array(valid)))
+    assert np.all(got == 0.0)
+
+
+def test_diff_scores_invalid_positions_flagged():
+    rng = _rng(11)
+    k = rng.standard_normal((1, 32, D)).astype(np.float32)
+    valid = np.zeros((1, 32), np.int32)
+    got = np.asarray(diff_scores(jnp.array(k), jnp.array(k),
+                                 jnp.array(valid)))
+    assert np.all(got == INVALID_SCORE)
+
+
+# ---------------------------------------------------------------------------
+# selective_attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    r=st.sampled_from([4, 16, 32]),
+    s=st.sampled_from([64, 128]),
+    vlen=st.integers(8, 64),
+    seed=st.integers(0, 2**16),
+)
+def test_selective_attention_matches_ref(r, s, vlen, seed):
+    rng = _rng(seed)
+    q = rng.standard_normal((r, H, HD)).astype(np.float32)
+    k = rng.standard_normal((s, H, HD)).astype(np.float32)
+    v = rng.standard_normal((s, H, HD)).astype(np.float32)
+    qpos = np.sort(rng.choice(vlen, size=min(r, vlen), replace=False))
+    qpos = np.resize(qpos, r).astype(np.int32)
+    kvalid = (np.arange(s) < vlen).astype(np.int32)
+    got = np.asarray(selective_attention(
+        jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(qpos),
+        jnp.array(kvalid)))
+    slot = jnp.arange(s, dtype=jnp.int32)
+    want = np.asarray(ref.causal_attention(
+        jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(qpos), slot,
+        jnp.array(kvalid)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.sampled_from([64, 128, 256]),
+    vfrac=st.floats(0.3, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_attention_matches_ref(t, vfrac, seed):
+    rng = _rng(seed)
+    q = rng.standard_normal((t, H, HD)).astype(np.float32)
+    k = rng.standard_normal((t, H, HD)).astype(np.float32)
+    v = rng.standard_normal((t, H, HD)).astype(np.float32)
+    valid = (np.arange(t) < int(t * vfrac) + 1).astype(np.int32)
+    got = np.asarray(flash_attention(jnp.array(q), jnp.array(k),
+                                     jnp.array(v), jnp.array(valid),
+                                     block_q=64, block_k=64))
+    pos = jnp.arange(t, dtype=jnp.int32)
+    want = np.asarray(ref.causal_attention(
+        jnp.array(q), jnp.array(k), jnp.array(v), pos, pos,
+        jnp.array(valid)))
+    # padded (invalid) query rows attend to nothing meaningful; compare valid
+    n = int(valid.sum())
+    np.testing.assert_allclose(got[:n], want[:n], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused_restore
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([64, 128]),
+    nb=st.sampled_from([2, 4, 8]),
+    n_layers=st.sampled_from([2, 4]),
+    shift=st.integers(0, 64),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_restore_matches_ref(s, nb, n_layers, shift, seed):
+    rng = _rng(seed)
+    B = CFG.block_tokens
+    mk = rng.standard_normal((n_layers, s, D)).astype(np.float32)
+    n_blocks = s // B
+    n_real = rng.integers(0, min(nb, n_blocks) + 1)
+    ids = rng.choice(n_blocks, size=n_real, replace=False).astype(np.int32)
+    idx = np.full(nb, -1, np.int32)
+    idx[:n_real] = ids
+    dk = rng.standard_normal((nb, n_layers, B, D)).astype(np.float32)
+    old = (np.arange(s) + shift).astype(np.int32)
+    new = np.arange(s, dtype=np.int32)
+
+    class _C:
+        block_tokens = B
+        n_heads = H
+        rope_theta = CFG.rope_theta
+
+    ok = fused_restore(jnp.array(mk), jnp.array(idx), jnp.array(dk),
+                       jnp.array(old), jnp.array(new), n_heads=H,
+                       block_tokens=B)
+    rk = ref.ref_fused_restore_k(_C, jnp.array(mk), jnp.array(idx),
+                                 jnp.array(dk), jnp.array(old),
+                                 jnp.array(new))
+    np.testing.assert_allclose(np.asarray(ok), np.asarray(rk), **TOL)
+
+
+def test_fused_restore_no_diff_is_rope_only():
+    """With an empty diff list, restore == pure RoPE recovery of the master."""
+    rng = _rng(12)
+    B = CFG.block_tokens
+    s, L = 64, 2
+    mk = rng.standard_normal((L, s, D)).astype(np.float32)
+    idx = np.full(4, -1, np.int32)
+    dk = np.zeros((4, L, B, D), np.float32)
+    old = (np.arange(s) + 5).astype(np.int32)
+    new = np.arange(s, dtype=np.int32)
+    ok = fused_restore(jnp.array(mk), jnp.array(idx), jnp.array(dk),
+                       jnp.array(old), jnp.array(new), n_heads=H,
+                       block_tokens=B)
+    for l in range(L):
+        want = np.asarray(ref.ref_rotate_k(jnp.array(mk[l]), jnp.array(old),
+                                           jnp.array(new), H))
+        np.testing.assert_allclose(np.asarray(ok)[l], want, **TOL)

@@ -1,0 +1,269 @@
+"""L2 model invariants — the properties the rust engine's correctness
+depends on, checked at the oracle level and across the pallas/jnp paths.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.config import MODELS, PAD_ID
+from compile.kernels import ref
+from compile.weights import make_weights
+
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+def _tokens(rng, n):
+    return rng.integers(4, 260, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode consistency
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["sim-7b", "sim-14b"])
+def test_decode_matches_prefill(model, rng):
+    """Prefilling T tokens == decoding them one at a time."""
+    cfg = MODELS[model]
+    w = make_weights(cfg)
+    T, S = 24, 64
+    tokens = _tokens(rng, T)
+    logits_p, kp, vp = ref.ref_prefill(w, cfg, jnp.array(tokens),
+                                       jnp.array([T], np.int32))
+    kc = np.zeros((cfg.n_layers, S, cfg.d_model), np.float32)
+    vc = np.zeros_like(kc)
+    lg = None
+    for t in range(T):
+        lg, kn, vn = ref.ref_decode(w, cfg, jnp.array([tokens[t]]),
+                                    jnp.array([t], np.int32),
+                                    jnp.array(kc), jnp.array(vc))
+        kc[:, t] = np.asarray(kn)
+        vc[:, t] = np.asarray(vn)
+    np.testing.assert_allclose(kc[:, :T], np.asarray(kp), **TOL)
+    np.testing.assert_allclose(vc[:, :T], np.asarray(vp), **TOL)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_p), **TOL)
+
+
+def test_prefill_ignores_padding(cfg7b, w7b, rng):
+    """Tokens past `length` must not affect logits or valid K/V."""
+    T, n = 32, 20
+    tokens = _tokens(rng, T)
+    a = tokens.copy()
+    b = tokens.copy()
+    b[n:] = PAD_ID
+    la, ka, va = ref.ref_prefill(w7b, cfg7b, jnp.array(a),
+                                 jnp.array([n], np.int32))
+    lb, kb, vb = ref.ref_prefill(w7b, cfg7b, jnp.array(b),
+                                 jnp.array([n], np.int32))
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), **TOL)
+    np.testing.assert_allclose(np.asarray(ka)[:, :n], np.asarray(kb)[:, :n],
+                               **TOL)
+
+
+# ---------------------------------------------------------------------------
+# selective recompute
+# ---------------------------------------------------------------------------
+
+def test_selective_full_recompute_equals_prefill(cfg7b, w7b, rng):
+    """sel = all valid positions, zero cache -> identical to prefill."""
+    cfg, w = cfg7b, w7b
+    T, S = 32, 64
+    tokens = _tokens(rng, T)
+    tok_pad = np.zeros(S, np.int32)
+    tok_pad[:T] = tokens
+    sel = np.arange(T, dtype=np.int32)
+    zero = jnp.zeros((cfg.n_layers, S, cfg.d_model), jnp.float32)
+    lg_s, ks, vs = ref.ref_selective(w, cfg, jnp.array(tok_pad),
+                                     jnp.array(sel), zero, zero,
+                                     jnp.array([T], np.int32))
+    lg_p, kp, vp = ref.ref_prefill(w, cfg, jnp.array(tokens),
+                                   jnp.array([T], np.int32))
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_p), **TOL)
+    np.testing.assert_allclose(np.asarray(ks)[:, :T], np.asarray(kp), **TOL)
+    np.testing.assert_allclose(np.asarray(vs)[:, :T], np.asarray(vp), **TOL)
+
+
+def test_selective_with_exact_cache_is_noop_on_unselected(cfg7b, w7b, rng):
+    """With the exact prefill cache and any selection, unselected rows
+    keep their cached values and logits match the prefill."""
+    cfg, w = cfg7b, w7b
+    T, S, R = 32, 64, 8
+    tokens = _tokens(rng, T)
+    tok_pad = np.zeros(S, np.int32)
+    tok_pad[:T] = tokens
+    _, kp, vp = ref.ref_prefill(w, cfg, jnp.array(tokens),
+                                jnp.array([T], np.int32))
+    kc = np.zeros((cfg.n_layers, S, cfg.d_model), np.float32)
+    vc = np.zeros_like(kc)
+    kc[:, :T] = np.asarray(kp)
+    vc[:, :T] = np.asarray(vp)
+    sel = np.concatenate([
+        np.sort(rng.choice(T - 1, R - 1, replace=False)),
+        [T - 1],
+    ]).astype(np.int32)
+    lg, ks, vs = ref.ref_selective(w, cfg, jnp.array(tok_pad),
+                                   jnp.array(sel), jnp.array(kc),
+                                   jnp.array(vc), jnp.array([T], np.int32))
+    lg_p, _, _ = ref.ref_prefill(w, cfg, jnp.array(tokens),
+                                 jnp.array([T], np.int32))
+    # recomputing rows of an already-exact cache reproduces the same values
+    np.testing.assert_allclose(np.asarray(ks)[:, :T], np.asarray(kp),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_p),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_selective_pallas_matches_ref(cfg7b, w7b, rng):
+    """The pallas-kernel selective path == the oracle selective path."""
+    cfg, w = cfg7b, w7b
+    S, R, T = cfg.max_seq, 32, 48
+    tokens = np.zeros(S, np.int32)
+    tokens[:T] = _tokens(rng, T)
+    sel = np.concatenate([
+        np.sort(rng.choice(T - 1, R - 1, replace=False)), [T - 1],
+    ]).astype(np.int32)
+    kc = rng.standard_normal((cfg.n_layers, S, cfg.d_model)).astype(
+        np.float32)
+    vc = rng.standard_normal((cfg.n_layers, S, cfg.d_model)).astype(
+        np.float32)
+    fn, _ = M.make_selective(cfg, R)
+    args = [jnp.array(w[n]) for n in M.WEIGHT_NAMES] + [
+        jnp.array(tokens), jnp.array(sel), jnp.array(kc), jnp.array(vc),
+        jnp.array([T], np.int32)]
+    lg_k, kk, vk = fn(*args)
+    lg_r, kr, vr = ref.ref_selective(w, cfg, jnp.array(tokens),
+                                     jnp.array(sel), jnp.array(kc),
+                                     jnp.array(vc), jnp.array([T], np.int32))
+    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_r), **TOL)
+    np.testing.assert_allclose(np.asarray(kk), np.asarray(kr), **TOL)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# collective ropediff
+# ---------------------------------------------------------------------------
+
+def _ropediff_args(w, tokens, old, valid, kcache):
+    return [jnp.array(w[n]) for n in M.WEIGHT_NAMES] + [
+        jnp.array(tokens), jnp.array(old), jnp.array(valid),
+        jnp.array(kcache)]
+
+
+def test_ropediff_prefix_reuse_scores_zero(cfg7b, w7b, rng):
+    """An agent reusing its own history at unchanged positions (delta=0,
+    identical content and context) must score ~0 at every reused position."""
+    cfg, w = cfg7b, w7b
+    S, T = cfg.max_seq, 40
+    tokens = np.zeros((1, S), np.int32)
+    tokens[0, :T] = _tokens(rng, T)
+    # donor cache = true prefill K of the same tokens at the same positions
+    _, kp, _ = ref.ref_prefill(w, cfg, jnp.array(tokens[0, :64]),
+                               jnp.array([T], np.int32))
+    kcache = np.zeros((1, cfg.n_layers, S, cfg.d_model), np.float32)
+    kcache[0, :, :64] = np.asarray(kp)
+    old = np.tile(np.arange(S, dtype=np.int32), (1, 1))
+    valid = np.zeros((1, S), np.int32)
+    valid[0, :T] = 1
+    fn, _ = M.make_ropediff(cfg, 1)
+    k_rot, scores = fn(*_ropediff_args(w, tokens, old, valid, kcache))
+    s = np.asarray(scores)[0]
+    assert np.all(s[:T] < 1e-3), f"prefix positions scored {s[:T].max()}"
+    assert np.all(s[T:] >= 1e8), "invalid positions must score huge"
+    # rotation by delta=0 must leave the cached K untouched
+    np.testing.assert_allclose(np.asarray(k_rot)[0, :, :64],
+                               np.asarray(kp), rtol=1e-4, atol=1e-4)
+
+
+def test_ropediff_context_change_scores_positive(cfg7b, w7b, rng):
+    """A shared block reused under a *different* preceding context must get
+    positive check-layer scores (context flows through layer-0 attention),
+    and a same-context reuse must score lower — the signal importance
+    selection relies on."""
+    cfg, w = cfg7b, w7b
+    S, T = cfg.max_seq, 48
+    shared = _tokens(rng, 32)
+    # donor prompt: [prefixA(16) | shared(32)]
+    prefA = _tokens(rng, 16)
+    donor = np.concatenate([prefA, shared])
+    _, kp, _ = ref.ref_prefill(w, cfg, jnp.array(donor),
+                               jnp.array([T], np.int32))
+    # consumer prompt: [prefixB(16) | shared(32)] at the same offsets
+    prefB = _tokens(np.random.default_rng(4242), 16)
+    consumer = np.concatenate([prefB, shared])
+    tokens = np.zeros((1, S), np.int32)
+    tokens[0, :T] = consumer
+    kcache = np.zeros((1, cfg.n_layers, S, cfg.d_model), np.float32)
+    kcache[0, :, :T] = np.asarray(kp)      # reuse donor KV for whole span
+    old = np.tile(np.arange(S, dtype=np.int32), (1, 1))
+    valid = np.zeros((1, S), np.int32)
+    valid[0, 16:T] = 1                      # only the shared block is reused
+    fn, _ = M.make_ropediff(cfg, 1)
+    _, scores = fn(*_ropediff_args(w, tokens, old, valid, kcache))
+    s = np.asarray(scores)[0]
+    assert np.all(s[16:T] > 0.0), "context change must produce deviation"
+    assert np.all(s[16:T] < 1e8), "reused positions are not invalid"
+
+    # same-context control: consumer == donor -> scores ~0
+    tokens2 = np.zeros((1, S), np.int32)
+    tokens2[0, :T] = donor
+    _, scores2 = fn(*_ropediff_args(w, tokens2, old, valid, kcache))
+    s2 = np.asarray(scores2)[0]
+    assert s2[16:T].mean() < s[16:T].mean(), (
+        "same-context reuse must score lower than changed-context reuse")
+    assert np.all(s2[16:T] < 1e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(g=st.sampled_from([2, 4]), seed=st.integers(0, 2**16))
+def test_ropediff_group_equals_per_request(g, seed):
+    """Collective G-request pass == G serial single-request passes
+    (the paper's numerical-equivalence claim in §6.6)."""
+    cfg = MODELS["sim-7b"]
+    w = make_weights(cfg)
+    rng = np.random.default_rng(seed)
+    S = cfg.max_seq
+    tokens = np.zeros((g, S), np.int32)
+    tokens[:, :60] = rng.integers(4, 260, (g, 60))
+    old = rng.integers(0, 200, (g, S)).astype(np.int32)
+    valid = (rng.random((g, S)) > 0.5).astype(np.int32)
+    kcache = rng.standard_normal(
+        (g, cfg.n_layers, S, cfg.d_model)).astype(np.float32)
+
+    fn_g, _ = M.make_ropediff(cfg, g)
+    fn_1, _ = M.make_ropediff(cfg, 1)
+    kg, sg = fn_g(*_ropediff_args(w, tokens, old, valid, kcache))
+    for i in range(g):
+        k1, s1 = fn_1(*_ropediff_args(w, tokens[i:i+1], old[i:i+1],
+                                      valid[i:i+1], kcache[i:i+1]))
+        np.testing.assert_allclose(np.asarray(kg)[i], np.asarray(k1)[0],
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(sg)[i], np.asarray(s1)[0],
+                                   **TOL)
+
+
+# ---------------------------------------------------------------------------
+# batched decode
+# ---------------------------------------------------------------------------
+
+def test_batched_decode_matches_single(cfg7b, w7b, rng):
+    cfg, w = cfg7b, w7b
+    B, S = 4, cfg.max_seq
+    lens = rng.integers(4, 40, B).astype(np.int32)
+    toks = _tokens(rng, B)
+    kc = rng.standard_normal((B, cfg.n_layers, S, cfg.d_model)).astype(
+        np.float32)
+    vc = rng.standard_normal((B, cfg.n_layers, S, cfg.d_model)).astype(
+        np.float32)
+    fn, _ = M.make_decode(cfg, B)
+    args = [jnp.array(w[n]) for n in M.WEIGHT_NAMES] + [
+        jnp.array(toks), jnp.array(lens), jnp.array(kc), jnp.array(vc)]
+    lg, kn, vn = fn(*args)
+    for i in range(B):
+        lg1, kn1, vn1 = ref.ref_decode(w, cfg, jnp.array(toks[i:i+1]),
+                                       jnp.array(lens[i:i+1]),
+                                       jnp.array(kc[i]), jnp.array(vc[i]))
+        np.testing.assert_allclose(np.asarray(lg)[i], np.asarray(lg1), **TOL)
+        np.testing.assert_allclose(np.asarray(kn)[i], np.asarray(kn1), **TOL)
+        np.testing.assert_allclose(np.asarray(vn)[i], np.asarray(vn1), **TOL)

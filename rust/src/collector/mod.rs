@@ -1,0 +1,379 @@
+//! The KV Collector — collective KV cache reuse (paper §4.2, Figure 7).
+//!
+//! Given the reuse tasks of one All-Gather round (each: a padded prompt +
+//! a composite donor cache gathered by the engine, with donor positions and
+//! a reuse mask), the collector:
+//!
+//! 1. groups compatible requests (same model, same active-length bucket) up
+//!    to the largest `ropediff` group bucket;
+//! 2. runs **one** batched RoPE-rotation + important-position-selection
+//!    pass per group (`ModelRuntime::ropediff` with G > 1) — the paper's
+//!    T3 path. The serial baseline (`collective = false`, the paper's T2 /
+//!    CacheBlend path) runs the identical pass per request with G = 1;
+//! 3. refreshes each request's important positions with selective
+//!    recomputation (chunked to the R buckets);
+//! 4. emits the recovered caches plus the [`ReusePlan`] (deviations +
+//!    Master election) that Diff-Aware Storage consumes.
+
+use anyhow::Result;
+
+use crate::pic::{
+    select_important_blocks, total_deviation, ImportanceConfig, ReusePlan,
+};
+use crate::runtime::{KvBuf, ModelRuntime, RopeDiffSeq, SelectiveIn};
+
+/// One request's reuse input, prepared by the engine.
+pub struct ReuseTask {
+    pub id: u64,
+    /// Prompt tokens padded to S (PAD = 0 beyond `valid_len`).
+    pub tokens: Vec<u32>,
+    pub valid_len: usize,
+    /// Donor positions per slot [S] (meaningful where `valid[slot] == 1`).
+    pub old_pos: Vec<i32>,
+    /// 1 where the slot holds a reused cached token.
+    pub valid: Vec<u8>,
+    /// Composite donor cache [L, S, d]: K at donor positions, V as stored.
+    pub kv: KvBuf,
+}
+
+/// One request's recovered state.
+pub struct ReuseResult {
+    pub id: u64,
+    /// Next-token logits at `valid_len - 1`.
+    pub logits: Vec<f32>,
+    /// Recovered cache, slots == positions, exact at recomputed rows.
+    pub kv: KvBuf,
+    /// Total check-layer deviation (Master election input).
+    pub deviation: f64,
+    /// Number of recomputed positions.
+    pub recomputed: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct CollectorConfig {
+    pub importance: ImportanceConfig,
+    /// true = collective grouping (TokenDance); false = per-request serial
+    /// passes (the CacheBlend baseline path).
+    pub collective: bool,
+}
+
+impl Default for CollectorConfig {
+    fn default() -> Self {
+        CollectorConfig {
+            importance: ImportanceConfig::default(),
+            collective: true,
+        }
+    }
+}
+
+/// Group task indices by compatibility: requests must resolve to the same
+/// active-length bucket ("same active prompt length" in the paper; slot
+/// maps are disjoint by construction since each task owns its buffer).
+/// Groups are capped at the largest ropediff bucket.
+pub fn group_compatible(
+    rt: &dyn ModelRuntime,
+    tasks: &[ReuseTask],
+) -> Vec<Vec<usize>> {
+    let buckets = rt.buckets();
+    let max_g = buckets.max_group();
+    let mut by_bucket: std::collections::BTreeMap<usize, Vec<usize>> =
+        Default::default();
+    for (i, t) in tasks.iter().enumerate() {
+        let b = buckets
+            .fit_prefill(t.valid_len)
+            .unwrap_or(usize::MAX);
+        by_bucket.entry(b).or_default().push(i);
+    }
+    let mut out = Vec::new();
+    for (_, idxs) in by_bucket {
+        // split into bucket-exact chunks (e.g. 6 -> 4 + 2) so the batched
+        // ropediff call carries no padding lanes — padding waste would
+        // otherwise eat the collective amortization (§Perf)
+        let mut rest: &[usize] = &idxs;
+        while !rest.is_empty() {
+            let take = buckets
+                .group_g
+                .iter()
+                .rev()
+                .copied()
+                .find(|&g| g <= rest.len())
+                .unwrap_or(1)
+                .min(max_g);
+            out.push(rest[..take].to_vec());
+            rest = &rest[take..];
+        }
+    }
+    out
+}
+
+/// Run collective (or serial) reuse over one round's tasks.
+pub fn run_reuse(
+    rt: &dyn ModelRuntime,
+    model: &str,
+    tasks: &[ReuseTask],
+    cfg: &CollectorConfig,
+) -> Result<(Vec<ReuseResult>, ReusePlan)> {
+    let groups: Vec<Vec<usize>> = if cfg.collective {
+        group_compatible(rt, tasks)
+    } else {
+        // serial path: every request is its own "group" of one
+        (0..tasks.len()).map(|i| vec![i]).collect()
+    };
+
+    let mut results: Vec<Option<ReuseResult>> =
+        (0..tasks.len()).map(|_| None).collect();
+
+    for group in &groups {
+        let seqs: Vec<RopeDiffSeq> = group
+            .iter()
+            .map(|&i| {
+                let t = &tasks[i];
+                RopeDiffSeq {
+                    tokens: &t.tokens,
+                    old_pos: &t.old_pos,
+                    valid: &t.valid,
+                    kv: &t.kv,
+                }
+            })
+            .collect();
+        // the one shared RoPE + diff-analysis pass for the whole group
+        let outs = rt.ropediff(model, &seqs)?;
+
+        let block_tokens = rt.spec(model)?.block_tokens;
+        for (gi, &ti) in group.iter().enumerate() {
+            let task = &tasks[ti];
+            let rd = &outs[gi];
+            // block-clustered selection keeps the recompute set (and hence
+            // the Master-Mirror diffs) block-sparse — see pic::
+            // select_important_blocks
+            let sel = select_important_blocks(
+                &rd.scores,
+                task.valid_len,
+                block_tokens,
+                &cfg.importance,
+            );
+            let deviation = total_deviation(&rd.scores, task.valid_len);
+
+            // blended cache: rotated K + donor V
+            let mut blended = rd.k_rot.clone();
+            blended.v.copy_from_slice(&task.kv.v);
+
+            // per-position refresh (request-specific, as in the paper)
+            let (logits, kv, recomputed) = selective_chunked(
+                rt, model, &task.tokens, &sel, blended, task.valid_len,
+            )?;
+            results[ti] = Some(ReuseResult {
+                id: task.id,
+                logits,
+                kv,
+                deviation,
+                recomputed,
+            });
+        }
+    }
+
+    let results: Vec<ReuseResult> =
+        results.into_iter().map(Option::unwrap).collect();
+    let plan = ReusePlan::elect(
+        results.iter().map(|r| r.id).collect(),
+        results.iter().map(|r| r.deviation).collect(),
+    );
+    Ok((results, plan))
+}
+
+/// Selective recomputation of `sel` rows, chunked to the R buckets. Each
+/// chunk updates the cache the next chunk attends against (CacheBlend's
+/// layerwise-progressive order at chunk granularity). The final chunk
+/// always contains `valid_len - 1`, so the returned logits are valid.
+pub fn selective_chunked(
+    rt: &dyn ModelRuntime,
+    model: &str,
+    tokens: &[u32],
+    sel: &[i32],
+    mut kv: KvBuf,
+    valid_len: usize,
+) -> Result<(Vec<f32>, KvBuf, usize)> {
+    let max_r = rt.buckets().max_select();
+    let recomputed = sel.len();
+    let mut logits = Vec::new();
+    let last = (valid_len - 1) as i32;
+
+    let mut chunks: Vec<Vec<i32>> =
+        sel.chunks(max_r).map(|c| c.to_vec()).collect();
+    if chunks.is_empty() {
+        chunks.push(vec![last]);
+    }
+    // ensure the final chunk carries the last position
+    if !chunks.last().unwrap().contains(&last) {
+        let lc = chunks.last_mut().unwrap();
+        if lc.len() == max_r {
+            chunks.push(vec![last]);
+        } else {
+            lc.push(last);
+        }
+    }
+    for chunk in &chunks {
+        let out = rt.selective(
+            model,
+            &SelectiveIn { tokens, sel: chunk, kv: &kv, len: valid_len },
+        )?;
+        kv = out.kv;
+        logits = out.logits;
+    }
+    Ok((logits, kv, recomputed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockRuntime;
+
+    fn mk_task(rt: &MockRuntime, id: u64, toks: &[u32], cached: bool)
+        -> ReuseTask
+    {
+        let spec = rt.spec("sim-7b").unwrap().clone();
+        let s = spec.max_seq;
+        let mut tokens = toks.to_vec();
+        tokens.resize(s, 0);
+        let mut valid = vec![0u8; s];
+        let mut kv = KvBuf::for_spec(&spec);
+        if cached {
+            // donor cache = the true prefill of the same tokens
+            let pre = rt.prefill("sim-7b", toks, toks.len()).unwrap();
+            kv.copy_rows_from(&pre.kv, 0, 0, toks.len());
+            valid[..toks.len()].iter_mut().for_each(|x| *x = 1);
+        }
+        ReuseTask {
+            id,
+            tokens,
+            valid_len: toks.len(),
+            old_pos: (0..s as i32).collect(),
+            valid,
+            kv,
+        }
+    }
+
+    #[test]
+    fn collective_and_serial_agree() {
+        let rt = MockRuntime::new();
+        let toks: Vec<u32> = (0..48u32).map(|i| 4 + (i * 3) % 200).collect();
+        let mk = |id| mk_task(&rt, id, &toks, true);
+
+        let (res_c, plan_c) = run_reuse(
+            &rt,
+            "sim-7b",
+            &[mk(0), mk(1), mk(2)],
+            &CollectorConfig { collective: true, ..Default::default() },
+        )
+        .unwrap();
+        let (res_s, plan_s) = run_reuse(
+            &rt,
+            "sim-7b",
+            &[mk(0), mk(1), mk(2)],
+            &CollectorConfig { collective: false, ..Default::default() },
+        )
+        .unwrap();
+        for (a, b) in res_c.iter().zip(&res_s) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.kv, b.kv, "paths must be numerically identical");
+            assert_eq!(a.logits, b.logits);
+        }
+        assert_eq!(plan_c.master(), plan_s.master());
+    }
+
+    #[test]
+    fn collective_uses_fewer_runtime_calls() {
+        let rt = MockRuntime::new();
+        let toks: Vec<u32> = (0..48u32).map(|i| 4 + i).collect();
+        let tasks: Vec<ReuseTask> =
+            (0..8).map(|i| mk_task(&rt, i, &toks, true)).collect();
+        let c0 = rt.calls();
+        let _ = run_reuse(&rt, "sim-7b", &tasks, &CollectorConfig::default())
+            .unwrap();
+        let collective_calls = rt.calls() - c0;
+
+        let tasks: Vec<ReuseTask> =
+            (0..8).map(|i| mk_task(&rt, i, &toks, true)).collect();
+        let c1 = rt.calls();
+        let _ = run_reuse(
+            &rt,
+            "sim-7b",
+            &tasks,
+            &CollectorConfig { collective: false, ..Default::default() },
+        )
+        .unwrap();
+        let serial_calls = rt.calls() - c1;
+        assert!(
+            collective_calls < serial_calls,
+            "collective {collective_calls} !< serial {serial_calls}"
+        );
+    }
+
+    #[test]
+    fn fully_cached_prefix_recomputes_little() {
+        let rt = MockRuntime::new();
+        let toks: Vec<u32> = (0..64u32).map(|i| 4 + (i * 5) % 250).collect();
+        let tasks = vec![mk_task(&rt, 0, &toks, true)];
+        let (res, _) = run_reuse(
+            &rt,
+            "sim-7b",
+            &tasks,
+            &CollectorConfig::default(),
+        )
+        .unwrap();
+        // identical context: the top-r% block floor still applies
+        // (CacheBlend always refreshes its fraction) — selection is
+        // block-clustered, so ceil(4 blocks * 0.15) = 1 block + the last
+        // block = 32 positions at most
+        assert!(res[0].recomputed <= 32, "got {}", res[0].recomputed);
+        assert!(res[0].deviation < 1e-3);
+    }
+
+    #[test]
+    fn uncached_task_recomputes_everything() {
+        let rt = MockRuntime::new();
+        let toks: Vec<u32> = (0..40u32).map(|i| 4 + i).collect();
+        let tasks = vec![mk_task(&rt, 0, &toks, false)];
+        let (res, _) = run_reuse(
+            &rt,
+            "sim-7b",
+            &tasks,
+            &CollectorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(res[0].recomputed, 40);
+        // recovered rows equal a fresh prefill (mock semantics)
+        let pre = rt.prefill("sim-7b", &toks, 40).unwrap();
+        for l in 0..4 {
+            for s in 0..40 {
+                assert_eq!(res[0].kv.k_row(l, s), pre.kv.k_row(l, s));
+            }
+        }
+    }
+
+    #[test]
+    fn grouping_respects_bucket_cap() {
+        let rt = MockRuntime::new();
+        let toks: Vec<u32> = (0..30u32).map(|i| 4 + i).collect();
+        let tasks: Vec<ReuseTask> =
+            (0..20).map(|i| mk_task(&rt, i, &toks, true)).collect();
+        let groups = group_compatible(&rt, &tasks);
+        assert!(groups.iter().all(|g| g.len() <= 16));
+        let total: usize = groups.iter().map(Vec::len).sum();
+        assert_eq!(total, 20);
+    }
+
+    #[test]
+    fn mixed_lengths_split_groups() {
+        let rt = MockRuntime::new();
+        let short: Vec<u32> = (0..30u32).map(|i| 4 + i).collect();
+        let long: Vec<u32> = (0..100u32).map(|i| 4 + (i % 200)).collect();
+        let tasks = vec![
+            mk_task(&rt, 0, &short, true),
+            mk_task(&rt, 1, &long, true),
+            mk_task(&rt, 2, &short, true),
+        ];
+        let groups = group_compatible(&rt, &tasks);
+        assert_eq!(groups.len(), 2);
+    }
+}

@@ -1,0 +1,430 @@
+//! The serving engine: the Layer-3 coordinator tying together the paged
+//! pool, the diff-aware store, the round detector, the KV Collector, and
+//! the restore paths, under one of four reuse policies:
+//!
+//! | policy | reuse | retention | restore |
+//! |---|---|---|---|
+//! | `VllmPrefix` | exact prefix (block-aligned, GPU-shared) | GPU pool | — |
+//! | `CacheBlendOrdinary` | exact prefix from CPU pool | CPU store, dense | dense |
+//! | `CacheBlendFull` | per-request PIC (serial ropediff) | CPU store, dense | dense |
+//! | `TokenDance` | collective PIC (grouped ropediff) | CPU store, Master-Mirror | fused |
+//!
+//! The engine is single-threaded — one simulated accelerator — with an
+//! admission queue and continuous batching: `tick()` admits + prefills
+//! waiting requests, then advances every running sequence one decode step.
+
+mod prefill;
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::collector::CollectorConfig;
+use crate::kvcache::{BlockTable, KvPool};
+use crate::metrics::{RequestTrace, RunMetrics, UsageSample};
+use crate::model::ModelSpec;
+use crate::restore::RestoreMode;
+use crate::rounds::{segment_blocks, DetectorConfig, SegmentedPrompt};
+use crate::runtime::{argmax, DecodeSeq, KvBuf, ModelRuntime};
+use crate::scheduler::{decode_batches, AdmissionQueue, QueuedRequest};
+use crate::store::{CacheStore, Role, StoreKey};
+use crate::tokenizer::{RoundAwarePrompt, EOS_ID};
+use crate::util::fnv1a_tokens;
+
+/// Reuse policy — the four systems of the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    VllmPrefix,
+    CacheBlendOrdinary,
+    CacheBlendFull,
+    TokenDance,
+}
+
+impl Policy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::VllmPrefix => "vLLM+prefix",
+            Policy::CacheBlendOrdinary => "CacheBlend-ord",
+            Policy::CacheBlendFull => "CacheBlend",
+            Policy::TokenDance => "TokenDance",
+        }
+    }
+
+    pub fn all() -> [Policy; 4] {
+        [
+            Policy::VllmPrefix,
+            Policy::CacheBlendOrdinary,
+            Policy::CacheBlendFull,
+            Policy::TokenDance,
+        ]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub model: String,
+    pub policy: Policy,
+    /// Paged-pool capacity in blocks (the "GPU memory budget").
+    pub pool_blocks: usize,
+    /// CPU-side store capacity in bytes.
+    pub store_bytes: usize,
+    pub collector: CollectorConfig,
+    pub detector: DetectorConfig,
+    /// Override the restore path (default: fused for TokenDance, dense
+    /// otherwise) — the Fig-13 ablation knob.
+    pub restore_mode: Option<RestoreMode>,
+}
+
+impl EngineConfig {
+    pub fn for_policy(model: &str, policy: Policy, pool_blocks: usize)
+        -> Self
+    {
+        EngineConfig {
+            model: model.to_string(),
+            policy,
+            pool_blocks,
+            store_bytes: 512 << 20,
+            collector: CollectorConfig {
+                collective: policy == Policy::TokenDance,
+                ..Default::default()
+            },
+            detector: DetectorConfig::default(),
+            restore_mode: None,
+        }
+    }
+
+    pub fn restore_mode(&self) -> RestoreMode {
+        self.restore_mode.unwrap_or(match self.policy {
+            Policy::TokenDance => RestoreMode::Fused,
+            _ => RestoreMode::Dense,
+        })
+    }
+}
+
+/// One agent subrequest submitted to the engine.
+#[derive(Clone, Debug)]
+pub struct AgentRequest {
+    pub agent: usize,
+    pub round: usize,
+    pub prompt: RoundAwarePrompt,
+    pub max_new_tokens: usize,
+    /// Retain the cache after completion (All-Gather agents persist across
+    /// rounds; independent one-shot requests free immediately — the Fig-2
+    /// distinction).
+    pub retain: bool,
+}
+
+/// A finished subrequest.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub agent: usize,
+    pub round: usize,
+    pub generated: Vec<u32>,
+}
+
+/// A sequence in the decode phase.
+struct Running {
+    id: u64,
+    agent: usize,
+    round: usize,
+    tokens: Vec<u32>,
+    prompt_len: usize,
+    max_new: usize,
+    table: BlockTable,
+    /// Working copy of the cache (the contiguous view the decode
+    /// executable consumes; kept in sync with the paged blocks).
+    kv: KvBuf,
+    /// Number of blocks at the front of `table` shared with a retained
+    /// donor table (vLLM prefix sharing) — these must not be scattered to.
+    #[allow(dead_code)] // diagnostic field; scatter_range enforces the rule
+    shared_prefix_blocks: usize,
+    next_token: u32,
+    generated: Vec<u32>,
+    seg: SegmentedPrompt,
+    /// Check-layer deviation from reuse (f64::MAX when not on a PIC path)
+    /// — Master election input for round-end Mirror encoding.
+    deviation: f64,
+    retain: bool,
+}
+
+/// Per-agent retention state.
+#[derive(Default)]
+struct AgentState {
+    /// vLLM policy: retained GPU table + its token stream.
+    gpu: Option<(BlockTable, Vec<u32>)>,
+    /// CPU-store retention key of the latest full-context cache.
+    store_key: Option<StoreKey>,
+    last_round: usize,
+}
+
+/// A completed cache staged for round-end Master-Mirror encoding
+/// (TokenDance policy only).
+struct StagedCache {
+    agent: usize,
+    tokens: Vec<u32>,
+    /// Prompt segments (for segment-identity block alignment at encode).
+    segments: Vec<crate::rounds::Segment>,
+    /// Compact [L, len, d] planes.
+    kv: KvBuf,
+    deviation: f64,
+}
+
+/// A request waiting for admission (prompt already segmented).
+struct Pending {
+    id: u64,
+    req: AgentRequest,
+    tokens: Vec<u32>,
+    seg: SegmentedPrompt,
+}
+
+pub struct Engine {
+    pub rt: Rc<dyn ModelRuntime>,
+    pub cfg: EngineConfig,
+    spec: ModelSpec,
+    pool: KvPool,
+    store: CacheStore,
+    queue: AdmissionQueue,
+    pending: HashMap<u64, Pending>,
+    running: Vec<Running>,
+    agents: HashMap<usize, AgentState>,
+    finished: Vec<Completion>,
+    /// Outstanding (not yet finalized) subrequests per round id.
+    round_outstanding: HashMap<usize, usize>,
+    /// Completed caches awaiting round-end Mirror encoding (TokenDance).
+    round_staging: HashMap<usize, Vec<StagedCache>>,
+    pub metrics: RunMetrics,
+    next_id: u64,
+    started: Instant,
+}
+
+impl Engine {
+    pub fn new(rt: Rc<dyn ModelRuntime>, cfg: EngineConfig) -> Result<Self> {
+        let spec = rt.spec(&cfg.model)?.clone();
+        let pool = KvPool::new(&spec, cfg.pool_blocks);
+        let store = CacheStore::new(&spec, cfg.store_bytes);
+        Ok(Engine {
+            rt,
+            cfg,
+            spec,
+            pool,
+            store,
+            queue: AdmissionQueue::new(),
+            pending: HashMap::new(),
+            running: Vec::new(),
+            agents: HashMap::new(),
+            finished: Vec::new(),
+            round_outstanding: HashMap::new(),
+            round_staging: HashMap::new(),
+            metrics: RunMetrics::default(),
+            next_id: 0,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    pub fn store(&self) -> &CacheStore {
+        &self.store
+    }
+
+    pub fn store_mut(&mut self) -> &mut CacheStore {
+        &mut self.store
+    }
+
+    /// Submit a subrequest; `arrived` is its workload arrival timestamp
+    /// (may predate the call if the engine was busy).
+    pub fn submit(&mut self, req: AgentRequest, arrived: Instant)
+        -> Result<u64>
+    {
+        // out-of-band block structure: no separator tokens in the stream
+        let seg = segment_blocks(&req.prompt);
+        let tokens = seg.tokens.clone();
+        if tokens.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        let total = tokens.len() + req.max_new_tokens;
+        if total > self.spec.max_seq {
+            return Err(anyhow!(
+                "prompt+generation of {total} exceeds max_seq {}",
+                self.spec.max_seq
+            ));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        *self.round_outstanding.entry(req.round).or_insert(0) += 1;
+        let mut trace = RequestTrace::new(id, req.agent, req.round, arrived);
+        trace.prompt_tokens = tokens.len();
+        self.metrics.requests.push(trace);
+        self.queue.push(QueuedRequest {
+            id,
+            arrived,
+            blocks_needed: self.pool.blocks_for(total),
+        });
+        self.pending.insert(id, Pending { id, req, tokens, seg });
+        Ok(id)
+    }
+
+    /// Free retained GPU caches (oldest round first) until `deficit` blocks
+    /// are available — the preempt-and-swap behavior under pool pressure.
+    fn evict_retained(&mut self, deficit: usize) {
+        let mut owners: Vec<(usize, usize)> = self
+            .agents
+            .iter()
+            .filter_map(|(a, st)| st.gpu.as_ref().map(|_| (st.last_round, *a)))
+            .collect();
+        owners.sort_unstable();
+        for (_, agent) in owners {
+            // free_blocks reflects earlier releases in this loop; note that
+            // releasing a table whose blocks are shared with a running
+            // sequence only drops refcounts, so re-reading the pool is the
+            // only correct accounting.
+            if self.pool.stats().free_blocks >= deficit {
+                break;
+            }
+            if let Some((table, _)) =
+                self.agents.get_mut(&agent).and_then(|s| s.gpu.take())
+            {
+                self.pool.release(&table);
+            }
+        }
+    }
+
+    /// One engine step. Returns true if any work was done.
+    pub fn tick(&mut self) -> Result<bool> {
+        let mut worked = false;
+
+        // 1. admission (with retained-cache eviction when the head stalls)
+        if let Some(demand) = self.queue.head_demand() {
+            if demand > self.pool.stats().free_blocks {
+                self.evict_retained(demand);
+            }
+        }
+        let admitted = self.queue.admit(self.pool.stats().free_blocks);
+        if !admitted.is_empty() {
+            worked = true;
+            let now = Instant::now();
+            let batch: Vec<Pending> = admitted
+                .iter()
+                .map(|q| self.pending.remove(&q.id).unwrap())
+                .collect();
+            for p in &batch {
+                if let Some(t) =
+                    self.metrics.requests.iter_mut().find(|t| t.id == p.id)
+                {
+                    t.admitted = Some(now);
+                }
+            }
+            self.prefill_batch(batch)?;
+            self.sample_usage();
+        }
+
+        // 2. one decode step for everything running
+        if !self.running.is_empty() {
+            worked = true;
+            self.decode_step()?;
+            self.finalize_finished()?;
+        }
+
+        Ok(worked)
+    }
+
+    /// Run until queue and running set are empty; returns completions in
+    /// finish order.
+    pub fn drain(&mut self) -> Result<Vec<Completion>> {
+        while self.tick()? {}
+        Ok(std::mem::take(&mut self.finished))
+    }
+
+    /// Completions finished so far (drained incrementally).
+    pub fn take_finished(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.finished)
+    }
+
+    fn decode_step(&mut self) -> Result<()> {
+        let max_b = *self.rt.buckets().decode_b.last().unwrap();
+        let model = self.cfg.model.clone();
+        for (start, end) in decode_batches(self.running.len(), max_b) {
+            let seqs: Vec<DecodeSeq> = self.running[start..end]
+                .iter()
+                .map(|r| DecodeSeq {
+                    token: r.next_token,
+                    len: r.table.len,
+                    kv: &r.kv,
+                })
+                .collect();
+            let outs = self.rt.decode(&model, &seqs)?;
+            for (i, out) in outs.into_iter().enumerate() {
+                let r = &mut self.running[start + i];
+                // write the new row into the paged pool + working copy
+                let slot = r.table.len;
+                self.pool.append_row(&mut r.table, &out.k_new, &out.v_new)?;
+                for l in 0..r.kv.layers {
+                    let d = r.kv.d;
+                    let o = r.kv.off(l, slot);
+                    r.kv.k[o..o + d]
+                        .copy_from_slice(&out.k_new[l * d..(l + 1) * d]);
+                    r.kv.v[o..o + d]
+                        .copy_from_slice(&out.v_new[l * d..(l + 1) * d]);
+                }
+                r.tokens.push(r.next_token);
+                r.generated.push(r.next_token);
+                r.next_token = argmax(&out.logits);
+            }
+        }
+        Ok(())
+    }
+
+    fn finalize_finished(&mut self) -> Result<()> {
+        let mut keep = Vec::new();
+        let mut done = Vec::new();
+        for r in self.running.drain(..) {
+            let eos = r.generated.last() == Some(&EOS_ID);
+            if r.generated.len() >= r.max_new || eos {
+                done.push(r);
+            } else {
+                keep.push(r);
+            }
+        }
+        self.running = keep;
+        for r in done {
+            self.finalize_one(r)?;
+        }
+        if !self.finished.is_empty() {
+            self.sample_usage();
+        }
+        Ok(())
+    }
+
+    fn sample_usage(&mut self) {
+        let st = self.pool.stats();
+        self.metrics.usage.push(UsageSample {
+            at_secs: self.started.elapsed().as_secs_f64(),
+            pool_used_blocks: st.used_blocks,
+            pool_total_blocks: st.total_blocks,
+            store_bytes: self.store.bytes(),
+        });
+        self.metrics.runtime_calls = self.rt.calls();
+        self.metrics.store_evictions = self.store.evictions;
+    }
+
+    /// Key for a donor segment entry.
+    pub(crate) fn segment_key(tokens: &[u32]) -> StoreKey {
+        StoreKey { content: fnv1a_tokens(tokens), role: Role::Segment }
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.queue.len() + self.running.len()
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,788 @@
+//! Policy-specific prefill paths and round finalization.
+//!
+//! * `VllmPrefix` — block-aligned GPU prefix sharing + exact suffix
+//!   recomputation; caches retained in the paged pool.
+//! * `CacheBlendOrdinary` — exact prefix reuse from the CPU store (dense
+//!   restore of the agent's retained cache) + exact suffix recomputation.
+//! * `CacheBlendFull` — per-request PIC: composite donor assembly, serial
+//!   ropediff (G = 1), selective recomputation; dense retention.
+//! * `TokenDance` — collective PIC over the detected All-Gather round,
+//!   fused Mirror restore of retained caches, Master-Mirror retention.
+//!
+//! Exactness note: suffix recomputation through the `selective` artifact is
+//! *exact* (not approximate) as long as the recomputed slot sets ascend —
+//! causal masking means earlier queries never attend to later garbage
+//! slots. PIC paths are approximate only at reused-but-unselected
+//! positions, exactly as CacheBlend is.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{Completion, Engine, Pending, Policy, Running, StagedCache};
+use crate::collector::{run_reuse, selective_chunked, CollectorConfig, ReuseTask};
+use crate::restore::materialize_mirror;
+use crate::rounds::{detect_pattern, PatternVerdict};
+use crate::runtime::{argmax, KvBuf};
+use crate::store::{
+    diff_blocks_tol, extract_blocks, gather_permuted_master,
+    match_blocks_by_segments, AlignedDiff, DenseEntry, Fetched, MirrorEntry,
+};
+
+/// Per-element tolerance when comparing a mirror against its rotated
+/// master source: composed f32 RoPE rotations differ from direct ones by
+/// roundoff (~1e-6); genuinely recomputed rows differ by orders of
+/// magnitude more. Restored mirrors match the original within this bound
+/// at unchanged blocks — the same class of perturbation PIC reuse already
+/// accepts (paper §6.6).
+const DIFF_TOL: f32 = 5e-4;
+
+/// Longest common prefix of two token streams.
+fn common_prefix(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl Engine {
+    pub(super) fn prefill_batch(&mut self, batch: Vec<Pending>) -> Result<()> {
+        match self.cfg.policy {
+            Policy::VllmPrefix => {
+                for p in batch {
+                    let r = self.vllm_prefix_path(p)?;
+                    self.running.push(r);
+                }
+            }
+            Policy::CacheBlendOrdinary => {
+                for p in batch {
+                    let r = self.cpu_prefix_path(p)?;
+                    self.running.push(r);
+                }
+            }
+            Policy::CacheBlendFull => {
+                for p in batch {
+                    let r = self.pic_path(vec![p], false)?;
+                    self.running.extend(r);
+                }
+            }
+            Policy::TokenDance => {
+                // round detection gates the collective path; independent
+                // traffic falls back to per-request processing
+                let segs: Vec<&crate::rounds::SegmentedPrompt> =
+                    batch.iter().map(|p| &p.seg).collect();
+                let collective = matches!(
+                    detect_pattern(&segs, &self.cfg.detector),
+                    PatternVerdict::AllGather { .. }
+                ) && self.cfg.collector.collective;
+                let r = self.pic_path(batch, collective)?;
+                self.running.extend(r);
+            }
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // vLLM: GPU-retained prefix sharing
+    // -----------------------------------------------------------------
+
+    fn vllm_prefix_path(&mut self, p: Pending) -> Result<Running> {
+        let bt = self.spec.block_tokens;
+        let total = p.tokens.len() + p.req.max_new_tokens;
+
+        // block-aligned common prefix with the agent's retained table
+        let mut shared_blocks = 0usize;
+        let mut prefix_kv: Option<KvBuf> = None;
+        let mut shared_ids: Vec<crate::kvcache::BlockId> = Vec::new();
+        if let Some(st) = self.agents.get(&p.req.agent) {
+            if let Some((table, toks)) = &st.gpu {
+                let lcp = common_prefix(&p.tokens, toks);
+                // never share the *entire* prompt (the last position must
+                // be recomputed for fresh logits)
+                let lcp = lcp.min(p.tokens.len().saturating_sub(1));
+                shared_blocks = lcp / bt;
+                if shared_blocks > 0 {
+                    shared_ids =
+                        table.blocks[..shared_blocks].to_vec();
+                    // working copy of the shared prefix rows
+                    let mut tmp = table.clone();
+                    tmp.len = shared_blocks * bt;
+                    prefix_kv = Some(self.pool.gather(&tmp));
+                }
+            }
+        }
+        let prefix_len = shared_blocks * bt;
+
+        // table: shared prefix blocks (refcounted) + fresh blocks
+        let fresh_tokens = total - prefix_len;
+        let mut table = self.pool.allocate(fresh_tokens)?;
+        if !shared_ids.is_empty() {
+            self.pool.retain_ids(&shared_ids);
+            let mut blocks = shared_ids;
+            blocks.extend_from_slice(&table.blocks);
+            table.blocks = blocks;
+        }
+        table.len = p.tokens.len();
+
+        let (kv, logits, reused) = self.exact_suffix_fill(
+            &p, prefix_kv, prefix_len,
+        )?;
+        // scatter only the non-shared region into the pool
+        self.pool
+            .scatter_range(&table, &kv, prefix_len, p.tokens.len());
+        self.mark_prefill_done(p.id, reused, p.tokens.len() - reused);
+        self.metrics.prefill_reused += (reused > 0) as u64;
+        self.metrics.prefill_full += (reused == 0) as u64;
+        Ok(Running {
+            id: p.id,
+            agent: p.req.agent,
+            round: p.req.round,
+            prompt_len: p.tokens.len(),
+            max_new: p.req.max_new_tokens,
+            tokens: p.tokens,
+            table,
+            kv,
+            shared_prefix_blocks: shared_blocks,
+            next_token: argmax(&logits),
+            generated: Vec::new(),
+            seg: p.seg,
+            deviation: f64::MAX,
+            retain: p.req.retain,
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // CacheBlend ordinary: CPU-pool prefix reuse (dense restore)
+    // -----------------------------------------------------------------
+
+    fn cpu_prefix_path(&mut self, p: Pending) -> Result<Running> {
+        let total = p.tokens.len() + p.req.max_new_tokens;
+        let key = self
+            .agents
+            .get(&p.req.agent)
+            .and_then(|st| st.store_key);
+
+        // dense restore of the retained cache, then exact token-level
+        // prefix reuse (no rotation — the prefix sits at the same offsets)
+        let mut prefix_kv: Option<KvBuf> = None;
+        let mut prefix_len = 0usize;
+        if let Some(key) = key {
+            let spec = self.spec.clone();
+            if let Some(Fetched::Dense(e)) = self.store.get(&key) {
+                let lcp = common_prefix(&p.tokens, &e.tokens)
+                    .min(p.tokens.len().saturating_sub(1));
+                if lcp > 0 {
+                    let t0 = Instant::now();
+                    let mut buf = KvBuf::for_spec(&spec);
+                    buf.copy_rows_from(&e.kv, 0, 0, lcp);
+                    prefix_kv = Some(buf);
+                    prefix_len = lcp;
+                    self.metrics.restores += 1;
+                    self.metrics
+                        .restore_secs
+                        .push(t0.elapsed().as_secs_f64());
+                }
+            }
+        }
+
+        let mut table = self.pool.allocate(total)?;
+        table.len = p.tokens.len();
+        let (kv, logits, reused) =
+            self.exact_suffix_fill(&p, prefix_kv, prefix_len)?;
+        self.pool.scatter(&table, &kv, p.tokens.len());
+        self.mark_prefill_done(p.id, reused, p.tokens.len() - reused);
+        self.metrics.prefill_reused += (reused > 0) as u64;
+        self.metrics.prefill_full += (reused == 0) as u64;
+        Ok(Running {
+            id: p.id,
+            agent: p.req.agent,
+            round: p.req.round,
+            prompt_len: p.tokens.len(),
+            max_new: p.req.max_new_tokens,
+            tokens: p.tokens,
+            table,
+            kv,
+            shared_prefix_blocks: 0,
+            next_token: argmax(&logits),
+            generated: Vec::new(),
+            seg: p.seg,
+            deviation: f64::MAX,
+            retain: p.req.retain,
+        })
+    }
+
+    /// Exact computation of everything past `prefix_len` (full prefill when
+    /// no prefix). Returns (padded working cache, last logits, reused).
+    fn exact_suffix_fill(
+        &mut self,
+        p: &Pending,
+        prefix_kv: Option<KvBuf>,
+        prefix_len: usize,
+    ) -> Result<(KvBuf, Vec<f32>, usize)> {
+        let model = self.cfg.model.clone();
+        let len = p.tokens.len();
+        if prefix_len == 0 || prefix_kv.is_none() {
+            let out = self.rt.prefill(&model, &p.tokens, len)?;
+            let mut kv = KvBuf::for_spec(&self.spec);
+            kv.copy_rows_from(&out.kv, 0, 0, len.min(out.kv.seq));
+            return Ok((kv, out.logits, 0));
+        }
+        let kv = prefix_kv.unwrap();
+        let mut padded = p.tokens.clone();
+        padded.resize(self.spec.max_seq, 0);
+        let sel: Vec<i32> = (prefix_len..len).map(|i| i as i32).collect();
+        let (logits, kv, _n) = selective_chunked(
+            self.rt.as_ref(), &model, &padded, &sel, kv, len,
+        )?;
+        Ok((kv, logits, prefix_len))
+    }
+
+    // -----------------------------------------------------------------
+    // PIC paths (CacheBlend full + TokenDance)
+    // -----------------------------------------------------------------
+
+    fn pic_path(&mut self, batch: Vec<Pending>, collective: bool)
+        -> Result<Vec<Running>>
+    {
+        let model = self.cfg.model.clone();
+        let mut tasks: Vec<ReuseTask> = Vec::new();
+        let mut reuse_idx: Vec<usize> = Vec::new();
+        let mut cold: Vec<usize> = Vec::new();
+        let mut reused_tokens: Vec<usize> = vec![0; batch.len()];
+
+        for (i, p) in batch.iter().enumerate() {
+            let (task, reused) = self.assemble_composite(p)?;
+            reused_tokens[i] = reused;
+            if reused == 0 {
+                cold.push(i);
+            } else {
+                reuse_idx.push(i);
+                tasks.push(task);
+            }
+        }
+
+        let mut outputs: Vec<Option<(KvBuf, Vec<f32>, f64)>> =
+            (0..batch.len()).map(|_| None).collect();
+
+        if !tasks.is_empty() {
+            let t0 = Instant::now();
+            let cfg = CollectorConfig {
+                collective,
+                importance: self.cfg.collector.importance.clone(),
+            };
+            let (results, _plan) =
+                run_reuse(self.rt.as_ref(), &model, &tasks, &cfg)?;
+            self.metrics.reuse_secs.push(t0.elapsed().as_secs_f64());
+            for (ri, res) in reuse_idx.iter().zip(results) {
+                let mut tr = self
+                    .metrics
+                    .requests
+                    .iter_mut()
+                    .find(|t| t.id == batch[*ri].id);
+                if let Some(t) = tr.as_deref_mut() {
+                    t.recomputed_tokens = res.recomputed;
+                }
+                outputs[*ri] = Some((res.kv, res.logits, res.deviation));
+            }
+        }
+        for ci in cold {
+            let p = &batch[ci];
+            let out = self.rt.prefill(&model, &p.tokens, p.tokens.len())?;
+            let mut kv = KvBuf::for_spec(&self.spec);
+            kv.copy_rows_from(&out.kv, 0, 0, p.tokens.len().min(out.kv.seq));
+            outputs[ci] = Some((kv, out.logits, f64::MAX));
+        }
+
+        let mut running = Vec::new();
+        for (i, p) in batch.into_iter().enumerate() {
+            let (kv, logits, deviation) = outputs[i].take().unwrap();
+            let total = p.tokens.len() + p.req.max_new_tokens;
+            let mut table = self.pool.allocate(total)?;
+            table.len = p.tokens.len();
+            self.pool.scatter(&table, &kv, p.tokens.len());
+            self.mark_prefill_done(
+                p.id,
+                reused_tokens[i],
+                p.tokens.len() - reused_tokens[i],
+            );
+            self.metrics.prefill_reused += (reused_tokens[i] > 0) as u64;
+            self.metrics.prefill_full += (reused_tokens[i] == 0) as u64;
+            running.push(Running {
+                id: p.id,
+                agent: p.req.agent,
+                round: p.req.round,
+                prompt_len: p.tokens.len(),
+                max_new: p.req.max_new_tokens,
+                tokens: p.tokens,
+                table,
+                kv,
+                shared_prefix_blocks: 0,
+                next_token: argmax(&logits),
+                generated: Vec::new(),
+                seg: p.seg,
+                deviation,
+                retain: p.req.retain,
+            });
+        }
+        Ok(running)
+    }
+
+    /// Build the composite donor cache for one request: the agent's
+    /// retained cache covers the prompt prefix (restored fused for
+    /// TokenDance, dense otherwise), and segment donors cover shared
+    /// blocks at arbitrary offsets. Returns the ReuseTask + reused tokens.
+    fn assemble_composite(&mut self, p: &Pending)
+        -> Result<(ReuseTask, usize)>
+    {
+        let spec = self.spec.clone();
+        let s = spec.max_seq;
+        let mut kv = KvBuf::for_spec(&spec);
+        let mut old_pos: Vec<i32> = (0..s as i32).collect();
+        let mut valid = vec![0u8; s];
+        let mut reused = 0usize;
+
+        // (1) retained-cache prefix donor
+        let key = self
+            .agents
+            .get(&p.req.agent)
+            .and_then(|st| st.store_key);
+        let mut covered_upto = 0usize;
+        if let Some(key) = key {
+            let mode = self.cfg.restore_mode();
+            let model = self.cfg.model.clone();
+            let restored: Option<(KvBuf, Vec<u32>)> =
+                match self.store.get(&key) {
+                    Some(Fetched::Dense(e)) => {
+                        Some((e.kv.clone(), e.tokens.clone()))
+                    }
+                    Some(Fetched::Mirror(h)) => {
+                        let t0 = Instant::now();
+                        let out = materialize_mirror(
+                            self.rt.as_ref(), &model, &h, mode,
+                        )?;
+                        self.metrics.restores += 1;
+                        self.metrics
+                            .restore_secs
+                            .push(t0.elapsed().as_secs_f64());
+                        Some((out.0, h.mirror.tokens.clone()))
+                    }
+                    None => None,
+                };
+            if let Some((donor_kv, donor_tokens)) = restored {
+                let lcp = common_prefix(&p.tokens, &donor_tokens)
+                    .min(p.tokens.len().saturating_sub(1));
+                if lcp > 0 {
+                    kv.copy_rows_from(&donor_kv, 0, 0, lcp);
+                    for slot in 0..lcp {
+                        valid[slot] = 1;
+                        old_pos[slot] = slot as i32;
+                    }
+                    reused += lcp;
+                    covered_upto = lcp;
+                }
+            }
+        }
+
+        // (2) segment donors (shared output blocks at arbitrary offsets)
+        for seg in &p.seg.segments {
+            if seg.is_empty() || seg.start < covered_upto {
+                continue;
+            }
+            if seg.end > p.tokens.len() {
+                continue;
+            }
+            let seg_tokens = &p.tokens[seg.start..seg.end];
+            let skey = Engine::segment_key(seg_tokens);
+            let spec_d = spec.d_model;
+            if let Some(Fetched::Dense(e)) = self.store.get(&skey) {
+                if e.tokens.len() != seg.len() {
+                    continue;
+                }
+                let n = seg.len();
+                for l in 0..spec.n_layers {
+                    let so = e.kv.off(l, 0);
+                    let dst = kv.off(l, seg.start);
+                    kv.k[dst..dst + n * spec_d]
+                        .copy_from_slice(&e.kv.k[so..so + n * spec_d]);
+                    kv.v[dst..dst + n * spec_d]
+                        .copy_from_slice(&e.kv.v[so..so + n * spec_d]);
+                }
+                for i in 0..n {
+                    valid[seg.start + i] = 1;
+                    old_pos[seg.start + i] = e.positions[i];
+                }
+                reused += n;
+            }
+        }
+
+        // never reuse the last position: fresh logits required
+        let last = p.tokens.len() - 1;
+        valid[last] = 0;
+        if valid[..p.tokens.len()].iter().all(|&v| v == 0) {
+            reused = 0;
+        }
+
+        let mut tokens = p.tokens.clone();
+        tokens.resize(s, 0);
+        Ok((
+            ReuseTask {
+                id: p.id,
+                tokens,
+                valid_len: p.tokens.len(),
+                old_pos,
+                valid,
+                kv,
+            },
+            reused,
+        ))
+    }
+
+    fn mark_prefill_done(&mut self, id: u64, reused: usize, _fresh: usize) {
+        let now = Instant::now();
+        if let Some(t) =
+            self.metrics.requests.iter_mut().find(|t| t.id == id)
+        {
+            t.prefill_done = Some(now);
+            t.reused_tokens = reused;
+        }
+    }
+
+    /// Retention key of an agent's latest full-context cache (analysis
+    /// helper for the experiments).
+    pub fn agent_store_key(
+        &self,
+        agent: usize,
+    ) -> Option<crate::store::StoreKey> {
+        self.agents.get(&agent).and_then(|s| s.store_key)
+    }
+
+    /// Materialize a retained agent cache (dense or mirror) to a padded
+    /// working buffer, with its token stream. Used by the Fig-3 similarity
+    /// analysis and by diagnostics; mirrors go through the fused path.
+    pub fn materialize_agent_cache(
+        &mut self,
+        key: &crate::store::StoreKey,
+    ) -> Result<(Vec<u32>, KvBuf)> {
+        let rt = self.rt.clone();
+        let model = self.cfg.model.clone();
+        let spec = self.spec.clone();
+        match self.store.get(key) {
+            Some(Fetched::Dense(e)) => {
+                let mut kv = KvBuf::for_spec(&spec);
+                kv.copy_rows_from(&e.kv, 0, 0, e.kv.seq);
+                Ok((e.tokens.clone(), kv))
+            }
+            Some(Fetched::Mirror(h)) => {
+                let tokens = h.mirror.tokens.clone();
+                let (kv, _) = materialize_mirror(
+                    rt.as_ref(),
+                    &model,
+                    &h,
+                    crate::restore::RestoreMode::Fused,
+                )?;
+                Ok((tokens, kv))
+            }
+            None => anyhow::bail!("no cache at {key:?}"),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // finalization + round-end Master-Mirror encoding
+    // -----------------------------------------------------------------
+
+    pub(super) fn finalize_one(&mut self, r: Running) -> Result<()> {
+        let now = Instant::now();
+        if let Some(t) =
+            self.metrics.requests.iter_mut().find(|t| t.id == r.id)
+        {
+            t.completed = Some(now);
+            t.generated_tokens = r.generated.len();
+        }
+
+        // donor extraction: the agent's generated output block (next
+        // round's shared block for every other agent) + prompt segments
+        let full_len = r.table.len;
+        if !r.generated.is_empty() {
+            let out_kv = r.kv.extract_rows(r.prompt_len, r.generated.len());
+            let positions: Vec<i32> = (r.prompt_len as i32
+                ..(r.prompt_len + r.generated.len()) as i32)
+                .collect();
+            self.store.put_dense(
+                Engine::segment_key(&r.generated),
+                DenseEntry {
+                    tokens: r.generated.clone(),
+                    positions,
+                    kv: out_kv,
+                },
+            );
+        }
+        if matches!(
+            self.cfg.policy,
+            Policy::CacheBlendFull | Policy::TokenDance
+        ) {
+            for seg in &r.seg.segments {
+                if seg.is_empty() || seg.end > r.prompt_len {
+                    continue;
+                }
+                let seg_tokens = &r.tokens[seg.start..seg.end];
+                let skey = Engine::segment_key(seg_tokens);
+                if !self.store.contains(&skey) {
+                    self.store.put_dense(
+                        skey,
+                        DenseEntry {
+                            tokens: seg_tokens.to_vec(),
+                            positions: (seg.start as i32..seg.end as i32)
+                                .collect(),
+                            kv: r.kv.extract_rows(seg.start, seg.len()),
+                        },
+                    );
+                }
+            }
+        }
+
+        // retention: one-shot requests free their cache immediately
+        if !r.retain {
+            self.pool.release(&r.table);
+            self.complete_bookkeeping(r)?;
+            return Ok(());
+        }
+        let agent = self.agents.entry(r.agent).or_default();
+        agent.last_round = r.round;
+        match self.cfg.policy {
+            Policy::VllmPrefix => {
+                // keep the table resident in the pool; drop the previous one
+                if let Some((old, _)) = agent.gpu.take() {
+                    self.pool.release(&old);
+                }
+                agent.gpu = Some((r.table.clone(), r.tokens.clone()));
+            }
+            Policy::CacheBlendOrdinary | Policy::CacheBlendFull => {
+                let key = crate::store::StoreKey {
+                    content: crate::util::fnv1a_tokens(&r.tokens),
+                    role: crate::store::Role::AgentCache { agent: r.agent },
+                };
+                self.store.put_dense(
+                    key,
+                    DenseEntry {
+                        tokens: r.tokens.clone(),
+                        positions: (0..full_len as i32).collect(),
+                        kv: r.kv.extract_rows(0, full_len),
+                    },
+                );
+                agent.store_key = Some(key);
+                self.pool.release(&r.table);
+            }
+            Policy::TokenDance => {
+                // stage for round-end Master-Mirror encoding
+                self.round_staging.entry(r.round).or_default().push(
+                    StagedCache {
+                        agent: r.agent,
+                        tokens: r.tokens.clone(),
+                        segments: r.seg.segments.clone(),
+                        kv: r.kv.extract_rows(0, full_len),
+                        deviation: r.deviation,
+                    },
+                );
+                self.pool.release(&r.table);
+            }
+        }
+
+        self.complete_bookkeeping(r)
+    }
+
+    fn complete_bookkeeping(&mut self, r: Running) -> Result<()> {
+        self.finished.push(Completion {
+            id: r.id,
+            agent: r.agent,
+            round: r.round,
+            generated: r.generated,
+        });
+
+        // round bookkeeping
+        if let Some(c) = self.round_outstanding.get_mut(&r.round) {
+            *c -= 1;
+            if *c == 0 {
+                self.round_outstanding.remove(&r.round);
+                if self.cfg.policy == Policy::TokenDance {
+                    let t0 = Instant::now();
+                    self.encode_round(r.round)?;
+                    self.metrics
+                        .encode_secs
+                        .push(t0.elapsed().as_secs_f64());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Round-end Master-Mirror encoding (paper §4.3): elect the Master
+    /// (lowest reuse deviation; ties broken by longest context), store it
+    /// dense, and encode every sibling as a block-sparse diff against it.
+    fn encode_round(&mut self, round: usize) -> Result<()> {
+        let Some(mut staged) = self.round_staging.remove(&round) else {
+            return Ok(());
+        };
+        if staged.is_empty() {
+            return Ok(());
+        }
+        let spec = self.spec.clone();
+        // elect: min deviation, tie-break longer context
+        let mut master_i = 0usize;
+        for (i, s) in staged.iter().enumerate() {
+            let better = s.deviation < staged[master_i].deviation
+                || (s.deviation == staged[master_i].deviation
+                    && s.tokens.len() > staged[master_i].tokens.len());
+            if better {
+                master_i = i;
+            }
+        }
+        let master = staged.swap_remove(master_i);
+        let master_key = crate::store::StoreKey {
+            content: crate::util::fnv1a_tokens(&master.tokens)
+                ^ (round as u64),
+            role: crate::store::Role::AgentCache { agent: master.agent },
+        };
+        // padded master for diffing
+        let mut master_padded = KvBuf::for_spec(&spec);
+        master_padded.copy_rows_from(&master.kv, 0, 0, master.kv.seq);
+        self.store.put_dense(
+            master_key,
+            DenseEntry {
+                positions: (0..master.kv.seq as i32).collect(),
+                tokens: master.tokens.clone(),
+                kv: master.kv,
+            },
+        );
+        self.agents.entry(master.agent).or_default().store_key =
+            Some(master_key);
+
+        let max_nb = self.rt.buckets().max_diff();
+        let model = self.cfg.model.clone();
+        let bt = spec.block_tokens;
+        let slots: Vec<i32> = (0..spec.max_seq as i32).collect();
+        let master_tokens = master.tokens.clone();
+        let master_segments = master.segments.clone();
+        let master_positions: Vec<i32> =
+            (0..master_tokens.len() as i32).collect();
+
+        for s in staged {
+            let len = s.kv.seq;
+            let mut padded = KvBuf::for_spec(&spec);
+            padded.copy_rows_from(&s.kv, 0, 0, len);
+
+            // align mirror blocks to master blocks by segment identity
+            // (chunk-content matching collides on repetitive outputs —
+            // see match_blocks_by_segments), then find the blocks the
+            // source + RoPE delta cannot reproduce
+            let src_block = match_blocks_by_segments(
+                &master_segments, &s.segments, len, bt,
+            );
+            // short-circuit: nothing aligned (e.g. a cold round) — the
+            // whole cache would be one big correction; store dense without
+            // paying two rope passes (§Perf)
+            if src_block.iter().all(|&b| b < 0) {
+                let key = crate::store::StoreKey {
+                    content: crate::util::fnv1a_tokens(&s.tokens)
+                        ^ (round as u64),
+                    role: crate::store::Role::AgentCache { agent: s.agent },
+                };
+                self.store.put_dense(
+                    key,
+                    DenseEntry {
+                        positions: (0..len as i32).collect(),
+                        tokens: s.tokens.clone(),
+                        kv: s.kv,
+                    },
+                );
+                self.agents.entry(s.agent).or_default().store_key =
+                    Some(key);
+                continue;
+            }
+            let (permuted, src_pos) = gather_permuted_master(
+                &master_padded,
+                &master_positions,
+                &src_block,
+                len,
+                bt,
+                spec.max_seq,
+            );
+            // expected mirror = rotate(permuted, src -> slot); when the
+            // source positions already equal the slots (aligned offsets,
+            // the common All-Gather case) the rotation is the identity and
+            // the rope pass is skipped (§Perf)
+            let identity = src_pos
+                .iter()
+                .enumerate()
+                .all(|(i, &p)| p == i as i32);
+            let expected = if identity {
+                permuted
+            } else {
+                let mut e = permuted;
+                self.rt
+                    .rope_recover(&model, &mut e, &src_pos, &slots)?;
+                e
+            };
+            let changed =
+                diff_blocks_tol(&expected, &padded, len, bt, DIFF_TOL);
+
+            let key = crate::store::StoreKey {
+                content: crate::util::fnv1a_tokens(&s.tokens)
+                    ^ (round as u64),
+                role: crate::store::Role::AgentCache { agent: s.agent },
+            };
+            let used_blocks = len.div_ceil(bt);
+            // mirror only pays when the diff is well under the dense cost:
+            // cap at the fused-restore buckets and at ~62% of the blocks
+            if changed.n_blocks() > max_nb
+                || changed.n_blocks() * 8 > used_blocks * 5
+            {
+                // diff too large for the fused-restore buckets, or the
+                // sibling diverges in more than half its blocks: the
+                // compression would not pay off — store dense (paper:
+                // "if requests diverge more strongly ... the storage
+                // benefit diminishes")
+                self.store.put_dense(
+                    key,
+                    DenseEntry {
+                        positions: (0..len as i32).collect(),
+                        tokens: s.tokens.clone(),
+                        kv: s.kv,
+                    },
+                );
+            } else {
+                // correction values must live in the *source* frame so the
+                // restore path can scatter before its single RoPE pass:
+                // un-rotate the mirror (slot -> src) and extract blocks —
+                // skipped entirely when the rotation is the identity
+                let unrot = if identity {
+                    padded
+                } else {
+                    let mut u = padded;
+                    self.rt
+                        .rope_recover(&model, &mut u, &slots, &src_pos)?;
+                    u
+                };
+                let corrections = extract_blocks(
+                    &unrot, &changed.block_ids, len, bt,
+                );
+                self.store.put_mirror(
+                    key,
+                    MirrorEntry {
+                        master: master_key,
+                        tokens: s.tokens.clone(),
+                        positions: (0..len as i32).collect(),
+                        diff: AlignedDiff {
+                            src_block,
+                            src_pos: src_pos[..len].to_vec(),
+                            corrections,
+                        },
+                    },
+                )?;
+            }
+            self.agents.entry(s.agent).or_default().store_key = Some(key);
+        }
+        Ok(())
+    }
+}
+
+fn _assert_engine_send() {
+    // engine is intentionally single-threaded (Rc<dyn ModelRuntime>);
+    // the server module owns it on a dedicated thread.
+}

@@ -1,0 +1,150 @@
+//! Fig 10 — the main capacity result: round latency vs agent count at a
+//! fixed QPS (left panels, with the SLO line), and the maximum number of
+//! agents sustained below the SLO at each QPS level (right panels), across
+//! two workloads x two models x four systems.
+//!
+//! Full sweep is expensive on one CPU core; `--quick` trims the grid. The
+//! paper's grid: agents 1–10, QPS 1–16.
+
+use anyhow::Result;
+
+use super::common::{max_agents_under_slo, policies, ExpContext, DEFAULT_SLO};
+use crate::engine::Policy;
+use crate::metrics::render_table;
+use crate::util::cli::Args;
+use crate::util::stats::Samples;
+use crate::workload::driver::drive_sessions;
+use crate::workload::{Family, WorkloadConfig};
+
+fn round_latency_at(
+    ctx: &ExpContext,
+    model: &str,
+    family: Family,
+    policy: Policy,
+    agents: usize,
+    qps: f64,
+    rounds: usize,
+    sessions: usize,
+) -> Result<f64> {
+    let spec = ctx.rt.spec(model)?.clone();
+    // fixed memory budget: enough pool for ~60% of full retention — the
+    // capacity pressure regime of the paper
+    let pool = (sessions * agents * spec.n_blocks() * 6) / 10 + spec.n_blocks();
+    let mut eng = ctx.engine(model, policy, pool)?;
+    let cfg = WorkloadConfig::for_family(family, 1, agents, rounds);
+    let report = drive_sessions(&mut eng, &cfg, sessions, qps, 0xF16)?;
+    let mut s = Samples::new();
+    report.round_latencies().iter().for_each(|&l| s.push(l));
+    Ok(s.p50())
+}
+
+pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
+    let slo = args.f64_or("slo", DEFAULT_SLO);
+    let (agent_grid, qps_grid, rounds, sessions) = if ctx.quick {
+        (vec![2, 4, 8], vec![2.0, 8.0], 2, 1)
+    } else {
+        (
+            args.usize_list_or("agents", &[1, 2, 4, 6, 8, 10]),
+            args.get("qps")
+                .map(|v| {
+                    v.split(',')
+                        .filter_map(|x| x.trim().parse().ok())
+                        .collect()
+                })
+                .unwrap_or(vec![1.0, 2.0, 4.0, 8.0, 12.0, 16.0]),
+            3,
+            2,
+        )
+    };
+    let models: Vec<String> = args
+        .get("model")
+        .map(|m| vec![m.to_string()])
+        .unwrap_or(vec!["sim-7b".into(), "sim-14b".into()]);
+    let families = [Family::GenerativeAgents, Family::AgentSociety];
+
+    println!("== Fig 10: scaling capacity overview ==");
+    println!(
+        "SLO={slo}s agents={agent_grid:?} qps={qps_grid:?} rounds={rounds} \
+         sessions={sessions}"
+    );
+
+    let mut out = String::from("# Fig 10: capacity overview\n");
+    for model in &models {
+        for family in families {
+            println!("\n--- {} / {model} ---", family.label());
+            out.push_str(&format!("\n## {} / {model}\n", family.label()));
+
+            // left panel: round latency vs agents at QPS=10 (or mid grid)
+            let probe_qps =
+                if ctx.quick { *qps_grid.last().unwrap() } else { 10.0 };
+            let mut rows = Vec::new();
+            let mut per_policy: Vec<(Policy, Vec<(usize, f64)>)> =
+                Vec::new();
+            for policy in policies() {
+                let mut pts = Vec::new();
+                for &a in &agent_grid {
+                    let l = round_latency_at(
+                        ctx, model, family, policy, a, probe_qps, rounds,
+                        sessions,
+                    )?;
+                    pts.push((a, l));
+                }
+                per_policy.push((policy, pts));
+            }
+            for (i, &a) in agent_grid.iter().enumerate() {
+                let mut row = vec![format!("{a}")];
+                for (_, pts) in &per_policy {
+                    row.push(format!("{:.3}", pts[i].1));
+                }
+                rows.push(row);
+            }
+            let headers: Vec<String> = std::iter::once("agents".to_string())
+                .chain(policies().iter().map(|p| p.label().to_string()))
+                .collect();
+            let hrefs: Vec<&str> =
+                headers.iter().map(String::as_str).collect();
+            let left =
+                render_table(&hrefs, &rows);
+            println!(
+                "round latency (s, p50) vs agents @QPS={probe_qps} \
+                 [SLO {slo}s]\n{left}"
+            );
+            out.push_str(&format!(
+                "\nround latency vs agents @QPS={probe_qps}\n\n{left}"
+            ));
+
+            // right panel: max agents under SLO at each QPS
+            let mut rows2 = Vec::new();
+            for &q in &qps_grid {
+                let mut row = vec![format!("{q}")];
+                for policy in policies() {
+                    let mut pts = Vec::new();
+                    for &a in &agent_grid {
+                        let l = round_latency_at(
+                            ctx, model, family, policy, a, q, rounds,
+                            sessions,
+                        )?;
+                        pts.push((a, l));
+                    }
+                    row.push(format!(
+                        "{:.1}",
+                        max_agents_under_slo(&pts, slo)
+                    ));
+                }
+                rows2.push(row);
+            }
+            let headers2: Vec<String> = std::iter::once("QPS".to_string())
+                .chain(policies().iter().map(|p| p.label().to_string()))
+                .collect();
+            let hrefs2: Vec<&str> =
+                headers2.iter().map(String::as_str).collect();
+            let right = render_table(&hrefs2, &rows2);
+            println!("max agents under SLO vs QPS\n{right}");
+            out.push_str(&format!(
+                "\nmax agents under SLO vs QPS\n\n{right}"
+            ));
+        }
+    }
+    ctx.save("fig10.md", &out)?;
+    Ok(())
+}

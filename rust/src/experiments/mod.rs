@@ -1,0 +1,23 @@
+//! One driver per paper figure. Each prints the same rows/series the paper
+//! reports (paper-vs-measured comparisons live in EXPERIMENTS.md).
+//!
+//! | fn | paper exhibit |
+//! |---|---|
+//! | [`fig2`]  | scaling gap: multi-agent vs independent workloads |
+//! | [`fig3`]  | pairwise block similarity after PIC reuse |
+//! | [`fig10`] | capacity: latency vs agents; max agents vs QPS |
+//! | [`fig11`] | collective-reuse speedup vs serial PIC |
+//! | [`fig12`] | Master-Mirror compression + changed blocks |
+//! | [`fig13`] | dense vs fused restore latency |
+//! | [`fig14`] | rounds before greedy divergence (8 scenarios) |
+
+pub mod common;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig2;
+pub mod fig3;
+
+pub use common::ExpContext;

@@ -1,0 +1,388 @@
+//! Paged KV cache pool — the GPU-memory analog (vLLM-style PagedAttention
+//! block manager). One logical block holds `block_tokens` token rows across
+//! all layers, K and V. Sequences own ordered block lists (block tables);
+//! blocks are refcounted so prefix sharing / copy-on-write is possible, and
+//! the pool reports usage for the Fig-2 / Fig-10 memory accounting.
+//!
+//! The actual tensor data lives in an arena indexed by block id; the engine
+//! gathers a sequence's blocks into the contiguous [L, S, d] layout the AOT
+//! executables consume (the analog of a device-side gather before a kernel
+//! launch) and scatters results back.
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelSpec;
+use crate::runtime::KvBuf;
+
+/// Identifier of a physical block in the pool arena.
+pub type BlockId = u32;
+
+/// A sequence's block table: ordered physical blocks + its token length.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    pub len: usize,
+}
+
+/// Pool statistics sampled by the metrics layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    pub total_blocks: usize,
+    pub free_blocks: usize,
+    pub used_blocks: usize,
+    pub peak_used_blocks: usize,
+}
+
+/// The paged pool: block arena + free list + refcounts.
+pub struct KvPool {
+    spec: ModelSpec,
+    /// Per-block K arena slice: [L, block_tokens, d] per block.
+    arena_k: Vec<f32>,
+    arena_v: Vec<f32>,
+    refcount: Vec<u32>,
+    free: Vec<BlockId>,
+    peak_used: usize,
+}
+
+impl KvPool {
+    /// Elements of one block in one plane.
+    fn block_elems(&self) -> usize {
+        self.spec.n_layers * self.spec.block_tokens * self.spec.d_model
+    }
+
+    pub fn new(spec: &ModelSpec, total_blocks: usize) -> Self {
+        let be =
+            spec.n_layers * spec.block_tokens * spec.d_model * total_blocks;
+        KvPool {
+            spec: spec.clone(),
+            arena_k: vec![0.0; be],
+            arena_v: vec![0.0; be],
+            refcount: vec![0; total_blocks],
+            free: (0..total_blocks as BlockId).rev().collect(),
+            peak_used: 0,
+        }
+    }
+
+    /// Pool sized to hold `n_seqs` full-length sequences.
+    pub fn for_seqs(spec: &ModelSpec, n_seqs: usize) -> Self {
+        Self::new(spec, n_seqs * spec.n_blocks())
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let total = self.refcount.len();
+        let free = self.free.len();
+        PoolStats {
+            total_blocks: total,
+            free_blocks: free,
+            used_blocks: total - free,
+            peak_used_blocks: self.peak_used,
+        }
+    }
+
+    /// Bytes currently pinned in the pool (used blocks, K+V).
+    pub fn used_bytes(&self) -> usize {
+        self.stats().used_blocks * self.block_elems() * 4 * 2
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.refcount.len() * self.block_elems() * 4 * 2
+    }
+
+    /// Blocks needed for a sequence of `tokens` length.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.spec.block_tokens)
+    }
+
+    pub fn can_allocate(&self, n_blocks: usize) -> bool {
+        self.free.len() >= n_blocks
+    }
+
+    /// Allocate a block table for `tokens` tokens (len set by caller as it
+    /// fills). Fails if the pool is exhausted — the scheduler's admission
+    /// and preemption logic reacts to this.
+    pub fn allocate(&mut self, tokens: usize) -> Result<BlockTable> {
+        let need = self.blocks_for(tokens);
+        if self.free.len() < need {
+            bail!(
+                "KV pool exhausted: need {need} blocks, {} free",
+                self.free.len()
+            );
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            self.refcount[b as usize] = 1;
+            blocks.push(b);
+        }
+        self.bump_peak();
+        Ok(BlockTable { blocks, len: 0 })
+    }
+
+    /// Extend a table to cover `new_tokens` total tokens.
+    pub fn extend(&mut self, table: &mut BlockTable, new_tokens: usize)
+        -> Result<()>
+    {
+        let need = self.blocks_for(new_tokens);
+        if need > table.blocks.len() {
+            let extra = need - table.blocks.len();
+            if self.free.len() < extra {
+                bail!("KV pool exhausted on extend");
+            }
+            for _ in 0..extra {
+                let b = self.free.pop().unwrap();
+                self.refcount[b as usize] = 1;
+                table.blocks.push(b);
+            }
+            self.bump_peak();
+        }
+        Ok(())
+    }
+
+    fn bump_peak(&mut self) {
+        let used = self.refcount.len() - self.free.len();
+        if used > self.peak_used {
+            self.peak_used = used;
+        }
+    }
+
+    /// Add a reference to every block of a table (prefix sharing).
+    pub fn retain(&mut self, table: &BlockTable) {
+        self.retain_ids(&table.blocks);
+    }
+
+    /// Add a reference to specific blocks (vLLM-style prefix sharing: a new
+    /// table adopts the donor's leading blocks by id).
+    pub fn retain_ids(&mut self, ids: &[BlockId]) {
+        for &b in ids {
+            debug_assert!(self.refcount[b as usize] > 0);
+            self.refcount[b as usize] += 1;
+        }
+    }
+
+    /// Release a table's blocks (decrement refcounts, freeing at zero).
+    pub fn release(&mut self, table: &BlockTable) {
+        for &b in &table.blocks {
+            let rc = &mut self.refcount[b as usize];
+            debug_assert!(*rc > 0, "double free of block {b}");
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(b);
+            }
+        }
+    }
+
+    /// Write `len` token rows from a contiguous KvBuf (slots 0..len) into
+    /// the table's blocks.
+    pub fn scatter(&mut self, table: &BlockTable, src: &KvBuf, len: usize) {
+        self.scatter_range(table, src, 0, len);
+    }
+
+    /// Write token rows [from_tok, to_tok) from `src` into the table's
+    /// blocks, leaving other blocks untouched. Used by prefix sharing: the
+    /// shared leading blocks (refcounted from a donor) must not be written.
+    /// Partial first/last blocks are written at row granularity.
+    pub fn scatter_range(
+        &mut self,
+        table: &BlockTable,
+        src: &KvBuf,
+        from_tok: usize,
+        to_tok: usize,
+    ) {
+        let bt = self.spec.block_tokens;
+        let d = self.spec.d_model;
+        let l_total = self.spec.n_layers;
+        for (bi, &b) in table.blocks.iter().enumerate() {
+            let blk_start = bi * bt;
+            let blk_end = blk_start + bt;
+            if blk_end <= from_tok {
+                continue;
+            }
+            if blk_start >= to_tok {
+                break;
+            }
+            let lo = blk_start.max(from_tok);
+            let hi = blk_end.min(to_tok);
+            let base = b as usize * self.block_elems();
+            for l in 0..l_total {
+                let so = src.off(l, lo);
+                let dst = base + l * bt * d + (lo - blk_start) * d;
+                let n = (hi - lo) * d;
+                self.arena_k[dst..dst + n]
+                    .copy_from_slice(&src.k[so..so + n]);
+                self.arena_v[dst..dst + n]
+                    .copy_from_slice(&src.v[so..so + n]);
+            }
+        }
+    }
+
+    /// Gather a table's blocks into a contiguous KvBuf (padded to max_seq).
+    pub fn gather(&self, table: &BlockTable) -> KvBuf {
+        let mut out = KvBuf::for_spec(&self.spec);
+        self.gather_into(table, &mut out);
+        out
+    }
+
+    /// Gather into an existing buffer (hot-path variant, no allocation).
+    pub fn gather_into(&self, table: &BlockTable, out: &mut KvBuf) {
+        let bt = self.spec.block_tokens;
+        let d = self.spec.d_model;
+        let l_total = self.spec.n_layers;
+        for (bi, &b) in table.blocks.iter().enumerate() {
+            let tok0 = bi * bt;
+            if tok0 >= table.len {
+                break;
+            }
+            let ntok = bt.min(table.len - tok0);
+            let base = b as usize * self.block_elems();
+            for l in 0..l_total {
+                let src = base + l * bt * d;
+                let o = out.off(l, tok0);
+                out.k[o..o + ntok * d]
+                    .copy_from_slice(&self.arena_k[src..src + ntok * d]);
+                out.v[o..o + ntok * d]
+                    .copy_from_slice(&self.arena_v[src..src + ntok * d]);
+            }
+        }
+    }
+
+    /// Append one token's K/V rows ([L, d] each) at slot `table.len`,
+    /// extending the table if a new block is needed.
+    pub fn append_row(
+        &mut self,
+        table: &mut BlockTable,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<()> {
+        let slot = table.len;
+        self.extend(table, slot + 1)?;
+        let bt = self.spec.block_tokens;
+        let d = self.spec.d_model;
+        let b = table.blocks[slot / bt] as usize;
+        let tok = slot % bt;
+        let base = b * self.block_elems();
+        for l in 0..self.spec.n_layers {
+            let dst = base + l * bt * d + tok * d;
+            self.arena_k[dst..dst + d]
+                .copy_from_slice(&k_row[l * d..(l + 1) * d]);
+            self.arena_v[dst..dst + d]
+                .copy_from_slice(&v_row[l * d..(l + 1) * d]);
+        }
+        table.len = slot + 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            vocab: 512,
+            max_seq: 64,
+            block_tokens: 16,
+            check_layer: 1,
+            rope_theta: 10000.0,
+        }
+    }
+
+    fn filled(spec: &ModelSpec, len: usize) -> KvBuf {
+        let mut kv = KvBuf::for_spec(spec);
+        for l in 0..spec.n_layers {
+            for s in 0..len {
+                let k: Vec<f32> = (0..spec.d_model)
+                    .map(|i| (l * 1000 + s * 10 + i) as f32)
+                    .collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                kv.set_row(l, s, &k, &v);
+            }
+        }
+        kv
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let sp = spec();
+        let mut pool = KvPool::for_seqs(&sp, 2);
+        let src = filled(&sp, 40);
+        let mut t = pool.allocate(40).unwrap();
+        t.len = 40;
+        pool.scatter(&t, &src, 40);
+        let got = pool.gather(&t);
+        for l in 0..sp.n_layers {
+            for s in 0..40 {
+                assert_eq!(got.k_row(l, s), src.k_row(l, s));
+                assert_eq!(got.v_row(l, s), src.v_row(l, s));
+            }
+        }
+    }
+
+    #[test]
+    fn allocation_exhaustion_and_release() {
+        let sp = spec();
+        let mut pool = KvPool::new(&sp, 4); // 4 blocks = 64 tokens
+        let t1 = pool.allocate(40).unwrap(); // 3 blocks
+        assert!(pool.allocate(32).is_err()); // needs 2, only 1 free
+        assert_eq!(pool.stats().used_blocks, 3);
+        pool.release(&t1);
+        assert_eq!(pool.stats().used_blocks, 0);
+        assert!(pool.allocate(64).is_ok());
+        assert_eq!(pool.stats().peak_used_blocks, 4);
+    }
+
+    #[test]
+    fn refcount_sharing() {
+        let sp = spec();
+        let mut pool = KvPool::new(&sp, 4);
+        let t = pool.allocate(32).unwrap();
+        pool.retain(&t);
+        pool.release(&t);
+        assert_eq!(pool.stats().used_blocks, 2, "still referenced");
+        pool.release(&t);
+        assert_eq!(pool.stats().used_blocks, 0);
+    }
+
+    #[test]
+    fn append_rows_match_scatter() {
+        let sp = spec();
+        let mut pool = KvPool::for_seqs(&sp, 1);
+        let src = filled(&sp, 20);
+        let mut t = pool.allocate(1).unwrap();
+        for s in 0..20 {
+            let mut k_row = Vec::new();
+            let mut v_row = Vec::new();
+            for l in 0..sp.n_layers {
+                k_row.extend_from_slice(src.k_row(l, s));
+                v_row.extend_from_slice(src.v_row(l, s));
+            }
+            pool.append_row(&mut t, &k_row, &v_row).unwrap();
+        }
+        assert_eq!(t.len, 20);
+        let got = pool.gather(&t);
+        for l in 0..sp.n_layers {
+            for s in 0..20 {
+                assert_eq!(got.k_row(l, s), src.k_row(l, s));
+            }
+        }
+    }
+
+    #[test]
+    fn usage_accounting() {
+        let sp = spec();
+        let mut pool = KvPool::new(&sp, 8);
+        let t = pool.allocate(32).unwrap();
+        let be = sp.n_layers * sp.block_tokens * sp.d_model * 4 * 2;
+        assert_eq!(pool.used_bytes(), 2 * be);
+        assert_eq!(pool.total_bytes(), 8 * be);
+        pool.release(&t);
+    }
+}

@@ -1,0 +1,47 @@
+//! # TokenDance
+//!
+//! Reproduction of *"TokenDance: Scaling Multi-Agent LLM Serving via
+//! Collective KV Cache Sharing"* (CS.DC 2026) as a three-layer
+//! rust + JAX + Pallas stack: this crate is the Layer-3 coordinator — the
+//! serving engine, KV Collector, diff-aware storage and fused restore path —
+//! executing AOT-compiled XLA artifacts (Layer 2 JAX model calling Layer 1
+//! Pallas kernels) through the PJRT C API. Python never runs on the request
+//! path.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tokenizer`] | byte-level tokenizer + `<TTSEP>` round-aware prompts |
+//! | [`model`] | model specs, shape buckets, artifact manifest |
+//! | [`runtime`] | PJRT execution of the AOT artifacts (+ mock for tests) |
+//! | [`kvcache`] | paged GPU-pool analog: block allocator, block tables |
+//! | [`store`] | CPU-side cache store: dense + Master-Mirror diff entries |
+//! | [`rounds`] | segment hashing, All-Gather round detection |
+//! | [`pic`] | position-independent caching: importance selection, plans |
+//! | [`collector`] | KV Collector: grouping + collective reuse (paper §4.2) |
+//! | [`restore`] | fused / dense Mirror restore (paper §4.4, Algorithm 1) |
+//! | [`scheduler`] | continuous batching, admission, preemption |
+//! | [`engine`] | the serving engine tying every subsystem together |
+//! | [`workload`] | GenerativeAgents / AgentSociety trace synthesizers |
+//! | [`metrics`] | latency/usage recorders and table emitters |
+//! | [`experiments`] | one driver per paper figure (2, 3, 10–14) |
+//! | [`util`] | offline-environment stand-ins: PRNG, JSON, stats, CLI |
+
+pub mod collector;
+pub mod engine;
+pub mod experiments;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod pic;
+pub mod restore;
+pub mod rounds;
+pub mod runtime;
+pub mod scheduler;
+pub mod store;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

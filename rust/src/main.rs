@@ -1,0 +1,247 @@
+//! `tokendance` — CLI entrypoint for the serving engine and the paper's
+//! experiment reproductions.
+//!
+//! ```text
+//! tokendance serve        [--model M] [--policy P] [--agents N] ...
+//! tokendance experiments  <fig2|fig3|fig10|fig11|fig12|fig13|fig14|all>
+//!                         [--quick] [--mock] [--artifacts DIR] [--out DIR]
+//! tokendance info         [--artifacts DIR]
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::experiments::{self, ExpContext};
+use tokendance::util::cli::Args;
+use tokendance::util::stats::{fmt_bytes, fmt_secs, Samples};
+use tokendance::workload::driver::drive_sessions;
+use tokendance::workload::{Family, WorkloadConfig};
+
+const USAGE: &str = "\
+tokendance — collective KV cache sharing for multi-agent LLM serving
+
+USAGE:
+  tokendance serve [options]        run a multi-agent serving session
+  tokendance experiments <FIG...>   reproduce paper figures
+                                    (fig2 fig3 fig10 fig11 fig12 fig13
+                                     fig14 | all)
+  tokendance info [options]         show artifacts / models / buckets
+
+COMMON OPTIONS:
+  --artifacts DIR   AOT artifacts directory      [artifacts]
+  --mock            use the mock runtime (no PJRT; logic dry-run)
+  --out DIR         result output directory      [results]
+  --quick           reduced experiment grids
+
+SERVE OPTIONS:
+  --model M         sim-7b | sim-14b             [sim-7b]
+  --policy P        vllm | cb-ord | cb | tokendance  [tokendance]
+  --family F        generative-agents | agent-society
+  --agents N        agents per round             [5]
+  --rounds N        rounds per session           [3]
+  --sessions N      concurrent sessions          [1]
+  --qps Q           offered subrequests/sec      [8]
+  --pool-blocks N   KV pool capacity in blocks   [auto]
+";
+
+fn parse_policy(s: &str) -> Result<Policy> {
+    Ok(match s {
+        "vllm" | "vllm-prefix" => Policy::VllmPrefix,
+        "cb-ord" | "cacheblend-ordinary" => Policy::CacheBlendOrdinary,
+        "cb" | "cacheblend" => Policy::CacheBlendFull,
+        "tokendance" | "td" => Policy::TokenDance,
+        _ => bail!("unknown policy {s}"),
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ctx = ExpContext::from_args(args)?;
+    let model = args.get_or("model", "sim-7b").to_string();
+    let policy = parse_policy(args.get_or("policy", "tokendance"))?;
+    let agents = args.usize_or("agents", 5);
+    let rounds = args.usize_or("rounds", 3);
+    let sessions = args.usize_or("sessions", 1);
+    let qps = args.f64_or("qps", 8.0);
+    let family = match args.get_or("family", "generative-agents") {
+        "agent-society" => Family::AgentSociety,
+        _ => Family::GenerativeAgents,
+    };
+    let spec = ctx.rt.spec(&model)?.clone();
+    let pool = args.usize_or(
+        "pool-blocks",
+        2 * sessions * agents * spec.n_blocks(),
+    );
+
+    println!(
+        "serving {model} policy={} family={} agents={agents} \
+         rounds={rounds} sessions={sessions} qps={qps}",
+        policy.label(),
+        family.label()
+    );
+    let mut eng = Engine::new(
+        ctx.rt.clone(),
+        EngineConfig::for_policy(&model, policy, pool),
+    )?;
+    let cfg = WorkloadConfig::for_family(family, 1, agents, rounds);
+    let report = drive_sessions(&mut eng, &cfg, sessions, qps, 0x5E12)?;
+
+    let mut rl = Samples::new();
+    report.round_latencies().iter().for_each(|&l| rl.push(l));
+    let mut sl = Samples::new();
+    report.subrequests.iter().for_each(|&l| sl.push(l));
+    println!(
+        "\ncompleted {} rounds / {} subrequests in {}",
+        report.rounds.len(),
+        report.subrequests.len(),
+        fmt_secs(report.wall_secs)
+    );
+    println!(
+        "round latency:      p50 {} p99 {} max {}",
+        fmt_secs(rl.p50()),
+        fmt_secs(rl.p99()),
+        fmt_secs(rl.max())
+    );
+    println!(
+        "subrequest latency: p50 {} p99 {}",
+        fmt_secs(sl.p50()),
+        fmt_secs(sl.p99())
+    );
+    println!(
+        "throughput:         {:.2} subrequests/s",
+        report.subrequests.len() as f64 / report.wall_secs
+    );
+    let ps = eng.pool().stats();
+    println!(
+        "kv pool:            peak {}/{} blocks ({})",
+        ps.peak_used_blocks,
+        ps.total_blocks,
+        fmt_bytes(
+            ps.peak_used_blocks
+                * spec.block_tokens
+                * spec.kv_bytes_per_token()
+        )
+    );
+    let st = eng.store().stats();
+    println!(
+        "cpu store:          {} dense + {} mirrors, {}, family \
+         compression {:.1}x",
+        st.dense_entries,
+        st.mirror_entries,
+        fmt_bytes(eng.store().bytes()),
+        st.family_compression_ratio()
+    );
+    println!(
+        "reuse:              {:.0}% of prompt tokens served from cache; \
+         {} restores ({} mean)",
+        100.0 * eng.metrics.reuse_fraction(),
+        eng.metrics.restores,
+        fmt_secs(eng.metrics.restore_secs.mean()),
+    );
+    println!(
+        "phase means:        reuse {} | restore {} | encode {}",
+        fmt_secs(eng.metrics.reuse_secs.mean()),
+        fmt_secs(eng.metrics.restore_secs.mean()),
+        fmt_secs(eng.metrics.encode_secs.mean()),
+    );
+    println!("runtime calls:      {}", eng.rt.calls());
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    let ctx = ExpContext::from_args(args)?;
+    let figs: Vec<String> = if args.positional.len() > 1 {
+        args.positional[1..].to_vec()
+    } else {
+        vec!["all".to_string()]
+    };
+    let all = figs.iter().any(|f| f == "all");
+    let want = |n: &str| all || figs.iter().any(|f| f == n);
+    let mut ran = 0;
+    if want("fig2") {
+        experiments::fig2::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("fig3") {
+        experiments::fig3::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("fig10") {
+        experiments::fig10::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("fig11") {
+        experiments::fig11::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("fig12") {
+        experiments::fig12::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("fig13") {
+        experiments::fig13::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("fig14") {
+        experiments::fig14::run(&ctx, args)?;
+        ran += 1;
+    }
+    if ran == 0 {
+        bail!("no figure matched {figs:?}; see --help");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let ctx = ExpContext::from_args(args)?;
+    for model in ["sim-7b", "sim-14b"] {
+        let spec = ctx.rt.spec(model)?;
+        println!(
+            "{model}: {} layers, d_model {}, {} heads, vocab {}, max_seq \
+             {}, {} per token KV, check layer {}",
+            spec.n_layers,
+            spec.d_model,
+            spec.n_heads,
+            spec.vocab,
+            spec.max_seq,
+            fmt_bytes(spec.kv_bytes_per_token()),
+            spec.check_layer
+        );
+    }
+    let b = ctx.rt.buckets();
+    println!("buckets: prefill {:?}", b.prefill_t);
+    println!("         decode  {:?}", b.decode_b);
+    println!("         group   {:?}", b.group_g);
+    println!("         select  {:?}", b.select_r);
+    println!("         diff    {:?}", b.diff_nb);
+    Ok(())
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty()
+        || raw[0] == "--help"
+        || raw[0] == "-h"
+        || raw[0] == "help"
+    {
+        print!("{USAGE}");
+        return;
+    }
+    let args = match Args::parse(raw, &["quick", "mock", "no-warmup"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "experiments" | "exp" => cmd_experiments(&args),
+        "info" => cmd_info(&args),
+        other => Err(anyhow!("unknown command {other:?}\n\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,243 @@
+//! Metrics: per-request latency phases, KV-pool usage timelines, and the
+//! table/series emitters the experiment drivers print (paper-style rows).
+
+use std::time::Instant;
+
+use crate::util::stats::Samples;
+
+/// Phase timestamps of one subrequest, recorded by the engine.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub agent: usize,
+    pub round: usize,
+    pub arrived: Instant,
+    pub admitted: Option<Instant>,
+    pub prefill_done: Option<Instant>,
+    pub completed: Option<Instant>,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub reused_tokens: usize,
+    pub recomputed_tokens: usize,
+}
+
+impl RequestTrace {
+    pub fn new(id: u64, agent: usize, round: usize, arrived: Instant)
+        -> Self
+    {
+        RequestTrace {
+            id,
+            agent,
+            round,
+            arrived,
+            admitted: None,
+            prefill_done: None,
+            completed: None,
+            prompt_tokens: 0,
+            generated_tokens: 0,
+            reused_tokens: 0,
+            recomputed_tokens: 0,
+        }
+    }
+
+    pub fn e2e_secs(&self) -> Option<f64> {
+        self.completed
+            .map(|c| c.duration_since(self.arrived).as_secs_f64())
+    }
+
+    pub fn queue_secs(&self) -> Option<f64> {
+        self.admitted
+            .map(|a| a.duration_since(self.arrived).as_secs_f64())
+    }
+
+    pub fn prefill_secs(&self) -> Option<f64> {
+        match (self.admitted, self.prefill_done) {
+            (Some(a), Some(p)) => Some(p.duration_since(a).as_secs_f64()),
+            _ => None,
+        }
+    }
+}
+
+/// A usage sample of the paged pool / cpu store over time.
+#[derive(Clone, Copy, Debug)]
+pub struct UsageSample {
+    pub at_secs: f64,
+    pub pool_used_blocks: usize,
+    pub pool_total_blocks: usize,
+    pub store_bytes: usize,
+}
+
+/// Collected engine metrics for one run.
+#[derive(Debug, Default)]
+pub struct RunMetrics {
+    pub requests: Vec<RequestTrace>,
+    pub usage: Vec<UsageSample>,
+    pub runtime_calls: u64,
+    pub restores: u64,
+    pub restore_secs: Samples,
+    pub reuse_secs: Samples,
+    /// Round-end Master-Mirror encode cost (off the serving critical path
+    /// in principle; measured to keep it honest).
+    pub encode_secs: Samples,
+    pub prefill_full: u64,
+    pub prefill_reused: u64,
+    pub store_evictions: u64,
+}
+
+impl RunMetrics {
+    /// End-to-end latency samples of completed requests.
+    pub fn e2e(&self) -> Samples {
+        let mut s = Samples::new();
+        for r in &self.requests {
+            if let Some(x) = r.e2e_secs() {
+                s.push(x);
+            }
+        }
+        s
+    }
+
+    /// Per-round latency: max completion - min arrival within each round.
+    pub fn round_latencies(&self) -> Vec<(usize, f64)> {
+        use std::collections::BTreeMap;
+        let mut rounds: BTreeMap<usize, (Option<Instant>, Option<Instant>)> =
+            BTreeMap::new();
+        for r in &self.requests {
+            let e = rounds.entry(r.round).or_insert((None, None));
+            e.0 = Some(match e.0 {
+                None => r.arrived,
+                Some(a) => a.min(r.arrived),
+            });
+            if let Some(c) = r.completed {
+                e.1 = Some(match e.1 {
+                    None => c,
+                    Some(b) => b.max(c),
+                });
+            }
+        }
+        rounds
+            .into_iter()
+            .filter_map(|(round, (a, c))| match (a, c) {
+                (Some(a), Some(c)) => {
+                    Some((round, c.duration_since(a).as_secs_f64()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn peak_pool_blocks(&self) -> usize {
+        self.usage
+            .iter()
+            .map(|u| u.pool_used_blocks)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn peak_store_bytes(&self) -> usize {
+        self.usage.iter().map(|u| u.store_bytes).max().unwrap_or(0)
+    }
+
+    /// Fraction of prompt tokens served from cache across requests.
+    pub fn reuse_fraction(&self) -> f64 {
+        let (reused, total): (usize, usize) = self
+            .requests
+            .iter()
+            .fold((0, 0), |(r, t), q| {
+                (r + q.reused_tokens, t + q.prompt_tokens)
+            });
+        if total == 0 {
+            0.0
+        } else {
+            reused as f64 / total as f64
+        }
+    }
+}
+
+/// Render a markdown-style table (used by every experiment driver).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> =
+        headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            s.push_str(&format!(" {c:>w$} |"));
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&line(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&line(
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+        &widths,
+    ));
+    for row in rows {
+        out.push_str(&line(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn round_latency_spans_first_arrival_to_last_completion() {
+        let t0 = Instant::now();
+        let mut m = RunMetrics::default();
+        for (i, (dt_arr, dt_done)) in
+            [(0.0, 0.5), (0.1, 0.3), (0.05, 0.9)].iter().enumerate()
+        {
+            let mut r = RequestTrace::new(
+                i as u64,
+                i,
+                7,
+                t0 + Duration::from_secs_f64(*dt_arr),
+            );
+            r.completed = Some(t0 + Duration::from_secs_f64(*dt_done));
+            m.requests.push(r);
+        }
+        let rl = m.round_latencies();
+        assert_eq!(rl.len(), 1);
+        assert_eq!(rl[0].0, 7);
+        assert!((rl[0].1 - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reuse_fraction_aggregates() {
+        let t0 = Instant::now();
+        let mut m = RunMetrics::default();
+        let mut a = RequestTrace::new(0, 0, 0, t0);
+        a.prompt_tokens = 100;
+        a.reused_tokens = 80;
+        let mut b = RequestTrace::new(1, 1, 0, t0);
+        b.prompt_tokens = 100;
+        b.reused_tokens = 20;
+        m.requests.extend([a, b]);
+        assert!((m.reuse_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let t = render_table(
+            &["sys", "lat"],
+            &[
+                vec!["vllm".into(), "1.25".into()],
+                vec!["tokendance".into(), "0.61".into()],
+            ],
+        );
+        assert!(t.contains("| tokendance |"));
+        assert_eq!(t.lines().count(), 4);
+    }
+}

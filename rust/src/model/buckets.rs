@@ -1,0 +1,92 @@
+//! Static shape buckets. XLA executables are fixed-shape; the runtime pads
+//! every call to the smallest bucket that fits. Bucket lists are read from
+//! the manifest so rust and python cannot drift.
+
+/// The bucket lists for each artifact kind (ascending).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Buckets {
+    pub prefill_t: Vec<usize>,
+    pub decode_b: Vec<usize>,
+    pub group_g: Vec<usize>,
+    pub select_r: Vec<usize>,
+    pub diff_nb: Vec<usize>,
+}
+
+impl Default for Buckets {
+    fn default() -> Self {
+        // mirrors python/compile/config.py; normally overwritten by the
+        // manifest — kept for mock-runtime tests.
+        Buckets {
+            prefill_t: vec![64, 128, 256, 512],
+            decode_b: vec![1, 2, 4, 8, 16],
+            group_g: vec![1, 2, 4, 8, 16],
+            select_r: vec![32, 64, 128],
+            diff_nb: vec![2, 4, 8, 16, 32],
+        }
+    }
+}
+
+impl Buckets {
+    /// Smallest bucket >= n, or None if n exceeds the largest bucket.
+    pub fn fit(buckets: &[usize], n: usize) -> Option<usize> {
+        buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn fit_prefill(&self, n: usize) -> Option<usize> {
+        Self::fit(&self.prefill_t, n)
+    }
+
+    pub fn fit_decode(&self, n: usize) -> Option<usize> {
+        Self::fit(&self.decode_b, n)
+    }
+
+    pub fn fit_group(&self, n: usize) -> Option<usize> {
+        Self::fit(&self.group_g, n)
+    }
+
+    pub fn fit_select(&self, n: usize) -> Option<usize> {
+        Self::fit(&self.select_r, n)
+    }
+
+    pub fn fit_diff(&self, n: usize) -> Option<usize> {
+        Self::fit(&self.diff_nb, n)
+    }
+
+    /// Largest selective-recompute bucket (used to chunk oversize
+    /// recompute sets).
+    pub fn max_select(&self) -> usize {
+        *self.select_r.last().unwrap()
+    }
+
+    pub fn max_group(&self) -> usize {
+        *self.group_g.last().unwrap()
+    }
+
+    pub fn max_diff(&self) -> usize {
+        *self.diff_nb.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_picks_smallest_sufficient() {
+        let b = Buckets::default();
+        assert_eq!(b.fit_prefill(1), Some(64));
+        assert_eq!(b.fit_prefill(64), Some(64));
+        assert_eq!(b.fit_prefill(65), Some(128));
+        assert_eq!(b.fit_prefill(512), Some(512));
+        assert_eq!(b.fit_prefill(513), None);
+    }
+
+    #[test]
+    fn fit_group_and_select() {
+        let b = Buckets::default();
+        assert_eq!(b.fit_group(3), Some(4));
+        assert_eq!(b.fit_group(10), Some(16));
+        assert_eq!(b.fit_select(33), Some(64));
+        assert_eq!(b.max_select(), 128);
+    }
+}

@@ -1,0 +1,236 @@
+//! Loader for `artifacts/manifest.json` (emitted by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Buckets, ModelSpec};
+use crate::util::json::Json;
+
+/// One weight tensor's slot in the flat f32 blob.
+#[derive(Clone, Debug)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_elems: usize,
+    pub size_elems: usize,
+}
+
+/// One HLO artifact: file, parameter list, and which params are weights.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: String,
+    pub model: String,
+    pub bucket: Option<usize>,
+    pub file: PathBuf,
+    /// (param name, shape) in HLO parameter order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Names of the leading weight parameters, in order.
+    pub weight_params: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// The parsed manifest: models, weight layouts, artifacts, buckets.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, (ModelSpec, Vec<WeightEntry>, PathBuf)>,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub buckets: Buckets,
+}
+
+fn usizes(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let g = |k: &str| -> Result<usize> {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("model {name} missing {k}"))
+            };
+            let spec = ModelSpec {
+                name: name.clone(),
+                n_layers: g("n_layers")?,
+                d_model: g("d_model")?,
+                n_heads: g("n_heads")?,
+                d_ff: g("d_ff")?,
+                vocab: g("vocab")?,
+                max_seq: g("max_seq")?,
+                block_tokens: g("block_tokens")?,
+                check_layer: g("check_layer")?,
+                rope_theta: m
+                    .get("rope_theta")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(10000.0),
+            };
+            let weights = m
+                .get("weights")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("model {name} missing weights"))?
+                .iter()
+                .map(|w| -> Result<WeightEntry> {
+                    Ok(WeightEntry {
+                        name: w
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("weight name"))?
+                            .to_string(),
+                        shape: usizes(
+                            w.get("shape").unwrap_or(&Json::Null),
+                        ),
+                        offset_elems: w
+                            .get("offset_elems")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(0),
+                        size_elems: w
+                            .get("size_elems")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let wfile = dir.join(
+                m.get("weights_file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model {name} weights_file"))?,
+            );
+            models.insert(name.clone(), (spec, weights, wfile));
+        }
+
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let s = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            artifacts.push(ArtifactInfo {
+                name: s("name")?,
+                kind: s("kind")?,
+                model: s("model")?,
+                bucket: a.get("bucket").and_then(Json::as_usize),
+                file: dir.join(s("file")?),
+                params: a
+                    .get("params")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|p| {
+                        (
+                            p.get("name")
+                                .and_then(Json::as_str)
+                                .unwrap_or("")
+                                .to_string(),
+                            usizes(p.get("shape").unwrap_or(&Json::Null)),
+                        )
+                    })
+                    .collect(),
+                weight_params: a
+                    .get("weight_params")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect(),
+                outputs: a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect(),
+            });
+        }
+
+        let bk = j
+            .get("buckets")
+            .ok_or_else(|| anyhow!("manifest missing buckets"))?;
+        let buckets = Buckets {
+            prefill_t: usizes(bk.get("prefill").unwrap_or(&Json::Null)),
+            decode_b: usizes(bk.get("decode").unwrap_or(&Json::Null)),
+            group_g: usizes(bk.get("ropediff").unwrap_or(&Json::Null)),
+            select_r: usizes(bk.get("selective").unwrap_or(&Json::Null)),
+            diff_nb: usizes(bk.get("restore").unwrap_or(&Json::Null)),
+        };
+        if buckets.prefill_t.is_empty() {
+            bail!("manifest has empty prefill buckets");
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), models, artifacts, buckets })
+    }
+
+    pub fn artifact(
+        &self,
+        kind: &str,
+        model: &str,
+        bucket: Option<usize>,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind && a.model == model && a.bucket == bucket
+        })
+    }
+
+    pub fn spec(&self, model: &str) -> Option<&ModelSpec> {
+        self.models.get(model).map(|(s, _, _)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("sim-7b"));
+        assert!(m.models.contains_key("sim-14b"));
+        let spec = m.spec("sim-7b").unwrap();
+        assert_eq!(spec.d_model, 128);
+        // every artifact file must exist
+        for a in &m.artifacts {
+            assert!(a.file.exists(), "{} missing", a.file.display());
+        }
+        // bucket lookup works
+        assert!(m.artifact("prefill", "sim-7b", Some(64)).is_some());
+        assert!(m.artifact("rope_recover", "sim-7b", None).is_some());
+        assert!(m.artifact("prefill", "sim-7b", Some(999)).is_none());
+        // 14b has 2x the KV bytes of 7b (the paper's 7B->14B property)
+        let s7 = m.spec("sim-7b").unwrap();
+        let s14 = m.spec("sim-14b").unwrap();
+        assert_eq!(
+            s14.kv_bytes_per_token(),
+            2 * s7.kv_bytes_per_token()
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! Model specifications, shape buckets, and the AOT artifact manifest.
+//!
+//! The rust side never hard-codes tensor shapes: everything is read from
+//! `artifacts/manifest.json`, which aot.py emits together with the HLO
+//! files. [`ModelSpec`] mirrors python/compile/config.py's `ModelConfig`.
+
+pub mod buckets;
+pub mod manifest;
+
+pub use buckets::Buckets;
+pub use manifest::{ArtifactInfo, Manifest, WeightEntry};
+
+/// Static description of a simulated model scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// S: the padded cache length every artifact works over.
+    pub max_seq: usize,
+    /// Storage/diff block granularity in tokens.
+    pub block_tokens: usize,
+    /// PIC important-position check layer.
+    pub check_layer: usize,
+    pub rope_theta: f64,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// f32 K+V bytes per token across all layers — the unit the paper's
+    /// storage numbers are expressed in.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * 2 * self.d_model * 4
+    }
+
+    /// Number of 16-token blocks in a full-length cache.
+    pub fn n_blocks(&self) -> usize {
+        self.max_seq / self.block_tokens
+    }
+
+    /// Elements in one [L, S, d] cache plane (K or V).
+    pub fn plane_elems(&self) -> usize {
+        self.n_layers * self.max_seq * self.d_model
+    }
+
+    /// Elements of one token's K (or V) row across all layers.
+    pub fn row_elems(&self) -> usize {
+        self.n_layers * self.d_model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn spec_7b() -> ModelSpec {
+        ModelSpec {
+            name: "sim-7b".into(),
+            n_layers: 4,
+            d_model: 128,
+            n_heads: 8,
+            d_ff: 256,
+            vocab: 512,
+            max_seq: 512,
+            block_tokens: 16,
+            check_layer: 0,
+            rope_theta: 10000.0,
+        }
+    }
+
+    #[test]
+    fn derived_sizes() {
+        let s = spec_7b();
+        assert_eq!(s.head_dim(), 16);
+        assert_eq!(s.kv_bytes_per_token(), 4 * 2 * 128 * 4);
+        assert_eq!(s.n_blocks(), 32);
+        assert_eq!(s.plane_elems(), 4 * 512 * 128);
+    }
+}

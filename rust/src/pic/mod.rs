@@ -1,0 +1,266 @@
+//! Position-independent caching (PIC) machinery: important-position
+//! selection over check-layer deviation scores, and the reuse plan that
+//! bridges collective reuse (§4.2) to diff-aware storage (§4.3).
+//!
+//! The selection policy is CacheBlend's: recompute (a) every position with
+//! no usable cached value (score >= the invalid sentinel), (b) the
+//! top-`recompute_frac` highest-deviation cached positions, and (c) always
+//! the last position (its logits feed decoding).
+
+/// Scores at or above this are "no cached value — must recompute"
+/// (mirrors INVALID_SCORE in python/compile/kernels/diff_select.py).
+pub const INVALID_SCORE: f32 = 1e9;
+
+#[derive(Clone, Debug)]
+pub struct ImportanceConfig {
+    /// Fraction of *cached* positions to refresh (CacheBlend's r).
+    pub recompute_frac: f64,
+    /// Lower bound on refreshed cached positions (when any are cached).
+    pub min_recompute: usize,
+}
+
+impl Default for ImportanceConfig {
+    fn default() -> Self {
+        ImportanceConfig { recompute_frac: 0.15, min_recompute: 4 }
+    }
+}
+
+/// Pick the recompute set for one request. `scores[0..valid_len]` are the
+/// check-layer deviations (slots beyond valid_len are padding). Returns
+/// ascending slot indices, always containing `valid_len - 1`.
+pub fn select_important(
+    scores: &[f32],
+    valid_len: usize,
+    cfg: &ImportanceConfig,
+) -> Vec<i32> {
+    assert!(valid_len > 0);
+    let mut sel: Vec<usize> = Vec::new();
+    let mut cached: Vec<(usize, f32)> = Vec::new();
+    for (i, &s) in scores.iter().enumerate().take(valid_len) {
+        if s >= INVALID_SCORE {
+            sel.push(i);
+        } else {
+            cached.push((i, s));
+        }
+    }
+    // top-r% of cached positions by deviation
+    let want = ((cached.len() as f64 * cfg.recompute_frac).ceil() as usize)
+        .max(if cached.is_empty() { 0 } else { cfg.min_recompute })
+        .min(cached.len());
+    cached.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    sel.extend(cached.iter().take(want).map(|(i, _)| *i));
+    if !sel.contains(&(valid_len - 1)) {
+        sel.push(valid_len - 1);
+    }
+    sel.sort_unstable();
+    sel.dedup();
+    sel.into_iter().map(|i| i as i32).collect()
+}
+
+/// Block-clustered importance selection: aggregate scores per
+/// `block_tokens` block and recompute whole blocks — uncached blocks, the
+/// top-`recompute_frac` highest-deviation cached blocks, and always the
+/// block holding `valid_len - 1`.
+///
+/// Clustering the refresh at storage-block granularity is what keeps the
+/// Master-Mirror diffs block-sparse (paper §4.3: "differing positions tend
+/// to cluster in contiguous blocks"); sibling requests select largely the
+/// same shared blocks because the scores are content-driven.
+pub fn select_important_blocks(
+    scores: &[f32],
+    valid_len: usize,
+    block_tokens: usize,
+    cfg: &ImportanceConfig,
+) -> Vec<i32> {
+    assert!(valid_len > 0);
+    let nb = valid_len.div_ceil(block_tokens);
+    let mut forced: Vec<usize> = Vec::new(); // blocks with uncached slots
+    let mut cached: Vec<(usize, f32)> = Vec::new();
+    for b in 0..nb {
+        let lo = b * block_tokens;
+        let hi = (lo + block_tokens).min(valid_len);
+        let mut any_invalid = false;
+        let mut sum = 0.0f32;
+        for &s in &scores[lo..hi] {
+            if s >= INVALID_SCORE {
+                any_invalid = true;
+            } else {
+                sum += s;
+            }
+        }
+        if any_invalid {
+            forced.push(b);
+        } else {
+            cached.push((b, sum / (hi - lo) as f32));
+        }
+    }
+    let want = ((cached.len() as f64 * cfg.recompute_frac).ceil() as usize)
+        .max(if cached.is_empty() {
+            0
+        } else {
+            cfg.min_recompute.div_ceil(block_tokens)
+        })
+        .min(cached.len());
+    cached.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut blocks: Vec<usize> = forced;
+    blocks.extend(cached.iter().take(want).map(|(b, _)| *b));
+    let last_block = (valid_len - 1) / block_tokens;
+    if !blocks.contains(&last_block) {
+        blocks.push(last_block);
+    }
+    blocks.sort_unstable();
+    blocks.dedup();
+    let mut sel = Vec::new();
+    for b in blocks {
+        let lo = b * block_tokens;
+        let hi = (lo + block_tokens).min(valid_len);
+        sel.extend((lo..hi).map(|i| i as i32));
+    }
+    sel
+}
+
+/// Sum of finite (cached-position) deviation scores — the request's total
+/// deviation used for Master election.
+pub fn total_deviation(scores: &[f32], valid_len: usize) -> f64 {
+    scores
+        .iter()
+        .take(valid_len)
+        .filter(|&&s| s < INVALID_SCORE)
+        .map(|&s| s as f64)
+        .sum()
+}
+
+/// The reuse plan (paper §4.2 "Reuse Plan Output"): which requests formed
+/// the group, each one's accumulated deviation, and the elected Master —
+/// "the request whose recovered result is closest to the group's common
+/// structure, typically the one with the lowest total deviation".
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReusePlan {
+    /// Engine request ids of the group members.
+    pub members: Vec<u64>,
+    /// Total deviation per member (same order).
+    pub deviations: Vec<f64>,
+    /// Index into `members` of the elected Master.
+    pub master_idx: usize,
+}
+
+impl ReusePlan {
+    pub fn elect(members: Vec<u64>, deviations: Vec<f64>) -> ReusePlan {
+        debug_assert_eq!(members.len(), deviations.len());
+        let master_idx = deviations
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        ReusePlan { members, deviations, master_idx }
+    }
+
+    pub fn master(&self) -> u64 {
+        self.members[self.master_idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invalid_positions_always_selected() {
+        let mut scores = vec![0.0f32; 32];
+        scores[5] = INVALID_SCORE;
+        scores[6] = INVALID_SCORE;
+        let sel = select_important(
+            &scores,
+            32,
+            &ImportanceConfig { recompute_frac: 0.0, min_recompute: 0 },
+        );
+        assert!(sel.contains(&5) && sel.contains(&6));
+        assert!(sel.contains(&31), "last position always present");
+        assert_eq!(sel.len(), 3);
+    }
+
+    #[test]
+    fn top_fraction_by_deviation() {
+        // 20 cached positions, scores ascending: top-15% = 3 positions
+        let scores: Vec<f32> = (0..20).map(|i| i as f32 / 100.0).collect();
+        let sel = select_important(
+            &scores,
+            20,
+            &ImportanceConfig { recompute_frac: 0.15, min_recompute: 1 },
+        );
+        // highest deviations are 17, 18, 19; 19 is also last
+        assert!(sel.contains(&17) && sel.contains(&18) && sel.contains(&19));
+        assert_eq!(sel.len(), 3);
+    }
+
+    #[test]
+    fn min_recompute_floor_applies() {
+        let scores = vec![0.001f32; 40];
+        let sel = select_important(
+            &scores,
+            40,
+            &ImportanceConfig { recompute_frac: 0.0, min_recompute: 4 },
+        );
+        // 4 forced + possibly last (tie-broken inside the 4)
+        assert!(sel.len() >= 4);
+    }
+
+    #[test]
+    fn selection_is_sorted_and_unique() {
+        let mut scores = vec![0.5f32; 16];
+        scores[15] = INVALID_SCORE;
+        let sel =
+            select_important(&scores, 16, &ImportanceConfig::default());
+        let mut sorted = sel.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sel, sorted);
+    }
+
+    #[test]
+    fn block_selection_expands_whole_blocks() {
+        let mut scores = vec![0.0f32; 64];
+        // one hot block (block 2) and uncached tail (block 3 partial)
+        for s in &mut scores[32..48] {
+            *s = 5.0;
+        }
+        scores[50] = INVALID_SCORE;
+        let sel = select_important_blocks(
+            &scores,
+            52,
+            16,
+            &ImportanceConfig { recompute_frac: 0.26, min_recompute: 1 },
+        );
+        // block 2 (hot) + block 3 (uncached + last) selected, as whole
+        // blocks (block 3 truncated at valid_len)
+        let want: Vec<i32> = (32..52).collect();
+        assert_eq!(sel, want);
+    }
+
+    #[test]
+    fn block_selection_includes_last_block() {
+        let scores = vec![0.0f32; 32];
+        let sel = select_important_blocks(
+            &scores,
+            32,
+            16,
+            &ImportanceConfig { recompute_frac: 0.0, min_recompute: 0 },
+        );
+        assert_eq!(sel, (16..32).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn master_election_minimizes_deviation() {
+        let plan = ReusePlan::elect(vec![10, 11, 12], vec![3.0, 0.5, 2.0]);
+        assert_eq!(plan.master(), 11);
+        assert_eq!(plan.master_idx, 1);
+    }
+
+    #[test]
+    fn deviation_ignores_invalid() {
+        let scores = vec![0.5, INVALID_SCORE, 0.25, INVALID_SCORE];
+        assert!((total_deviation(&scores, 4) - 0.75).abs() < 1e-9);
+        assert!((total_deviation(&scores, 1) - 0.5).abs() < 1e-9);
+    }
+}

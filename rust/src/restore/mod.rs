@@ -1,0 +1,286 @@
+//! Mirror restore paths (paper §4.4, Algorithm 1).
+//!
+//! **Fused** restore hands the Master planes + block-sparse diff + position
+//! maps to the `restore` artifact in one call: the diff scatter and the
+//! RoPE recovery happen while the data is resident (the Pallas kernel's
+//! per-tile skip-or-correct dispatch, Figure 9), and the result lands in
+//! the paged pool directly. No dense Mirror is ever materialized host-side.
+//!
+//! **Dense** restore is the strawman the paper measures against: copy the
+//! full Master into a fresh host buffer, overwrite the differing blocks,
+//! *then* run a standalone RoPE-recovery pass over the dense copy — an
+//! extra dense write+read round trip for an object the system never keeps.
+//!
+//! Both paths end by scattering into the paged [`KvPool`], so their outputs
+//! are bit-identical; only the data movement differs.
+
+use anyhow::Result;
+
+use crate::kvcache::{BlockTable, KvPool};
+use crate::runtime::{KvBuf, ModelRuntime, SparseDiff};
+use crate::store::MirrorHandle;
+
+/// Restore strategy selector (ablation knob for Fig 13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RestoreMode {
+    Fused,
+    Dense,
+}
+
+/// Outcome statistics for one restore.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RestoreStats {
+    pub diff_blocks: usize,
+    pub bytes_moved: usize,
+    pub used_fused_kernel: bool,
+}
+
+/// Restore a Mirror into `pool`/`table`. `new_pos[slot]` is the target
+/// position of slot `slot` (slots == positions after restore; the handle's
+/// stored positions are the donor frame).
+pub fn restore_mirror(
+    rt: &dyn ModelRuntime,
+    model: &str,
+    handle: &MirrorHandle,
+    mode: RestoreMode,
+    pool: &mut KvPool,
+    table: &mut BlockTable,
+) -> Result<RestoreStats> {
+    let len = handle.mirror.tokens.len();
+    let (restored, stats) = materialize_mirror(rt, model, handle, mode)?;
+    // write into paged memory (Algorithm 1 line 10)
+    pool.extend(table, len)?;
+    table.len = len;
+    pool.scatter(table, &restored, len);
+    Ok(stats)
+}
+
+/// Materialize a Mirror to a padded [L, S, d] working buffer (the restore
+/// compute without the paged-memory writeback — used when the engine needs
+/// the rows as donors rather than as a resident sequence).
+///
+/// The Mirror encoding is content-aligned (store::AlignedDiff): the host
+/// side of "load Master chunks" (Algorithm 1 line 3) gathers the master's
+/// blocks in the mirror's block order — free while streaming — and the
+/// corrections live in the source position frame, so the fused artifact's
+/// scatter-then-rotate order reproduces the mirror.
+pub fn materialize_mirror(
+    rt: &dyn ModelRuntime,
+    model: &str,
+    handle: &MirrorHandle,
+    mode: RestoreMode,
+) -> Result<(KvBuf, RestoreStats)> {
+    let spec = rt.spec(model)?.clone();
+    let s = spec.max_seq;
+    let len = handle.mirror.tokens.len();
+    debug_assert!(len <= s);
+    let diff = &handle.mirror.diff;
+
+    // host half of the chunk load: permuted master + source positions
+    let (master, _derived) = crate::store::gather_permuted_master(
+        &handle.master.kv,
+        &handle.master.positions,
+        &diff.src_block,
+        len,
+        spec.block_tokens,
+        s,
+    );
+    let mut old_pos: Vec<i32> = (0..s as i32).collect();
+    old_pos[..diff.src_pos.len().min(s)]
+        .copy_from_slice(&diff.src_pos[..diff.src_pos.len().min(s)]);
+    let new_pos: Vec<i32> = (0..s as i32).collect();
+
+    let corr = &diff.corrections;
+    let mut stats = RestoreStats {
+        diff_blocks: corr.n_blocks(),
+        ..Default::default()
+    };
+
+    // RoPE recovery is the identity when every valid slot keeps its
+    // position (the common case for retained-context restores): both paths
+    // then skip the rotation compute, and the comparison isolates the data
+    // movement — exactly Fig 13's question (§Perf iteration 3).
+    let identity = old_pos
+        .iter()
+        .zip(&new_pos)
+        .take(len)
+        .all(|(a, b)| a == b);
+
+    let restored = match mode {
+        RestoreMode::Fused => {
+            stats.used_fused_kernel = true;
+            stats.bytes_moved = master.bytes() + corr.bytes();
+            if identity {
+                // single transfer pass: master chunks stream through with
+                // corrections applied in place — no dense intermediate,
+                // no rotation work
+                let mut out = master;
+                corr.apply_to(&mut out);
+                out
+            } else {
+                // one artifact call restores the K plane (correction
+                // scatter + RoPE recovery fused — the L1 Pallas kernel);
+                // V has no positional component, so its corrections ride
+                // the host transfer pass and never cross the device
+                // boundary (§Perf L1-2). Oversize diffs never reach here
+                // (the engine stores them dense instead).
+                let mut out = rt.fused_restore(
+                    model,
+                    &master,
+                    &SparseDiff {
+                        block_ids: &corr.block_ids,
+                        diff_k: &corr.k,
+                    },
+                    &old_pos,
+                    &new_pos,
+                )?;
+                out.v.copy_from_slice(&master.v);
+                corr.apply_v_to(&mut out);
+                out
+            }
+        }
+        RestoreMode::Dense => {
+            // strawman: materialize the dense mirror first (extra dense
+            // write) ...
+            let mut dense = master.clone();
+            corr.apply_to(&mut dense);
+            // ... then a standalone pass re-reads the dense copy: a full
+            // copy round trip even when the rotation is the identity
+            stats.bytes_moved =
+                2 * master.bytes() + corr.bytes() + master.bytes();
+            if identity {
+                dense.clone() // the extra write-then-read round trip
+            } else {
+                rt.rope_recover(model, &mut dense, &old_pos, &new_pos)?;
+                dense
+            }
+        }
+    };
+    Ok((restored, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockRuntime;
+    use crate::store::{
+        diff_blocks, identity_aligned, CacheStore, DenseEntry, MirrorEntry,
+        Role, StoreKey,
+    };
+    use crate::runtime::ModelRuntime;
+
+    fn setup() -> (MockRuntime, CacheStore, StoreKey, StoreKey, KvBuf) {
+        let rt = MockRuntime::new();
+        let spec = rt.spec("sim-7b").unwrap().clone();
+        let mut store = CacheStore::new(&spec, 1 << 26);
+        let toks: Vec<u32> = (0..64u32).map(|i| 4 + (i * 3) % 200).collect();
+        let master_kv = {
+            let pre = rt.prefill("sim-7b", &toks, 64).unwrap();
+            pre.kv.extract_rows(0, 64)
+        };
+        // mirror: differs in blocks 0 and 2 (first 16 and tokens 32..48)
+        let mut mirror_kv = master_kv.clone();
+        for blk in [0usize, 2] {
+            let o = mirror_kv.off(1, blk * 16 + 3);
+            mirror_kv.k[o] += 0.5;
+            mirror_kv.v[o] -= 0.25;
+        }
+        let d = diff_blocks(&master_kv, &mirror_kv, 64, 16);
+        assert_eq!(d.block_ids, vec![0, 2]);
+        let d = identity_aligned(d, 4, 64);
+
+        let mk = StoreKey { content: 1, role: Role::AgentCache { agent: 0 } };
+        let sk = StoreKey { content: 2, role: Role::AgentCache { agent: 1 } };
+        store.put_dense(
+            mk,
+            DenseEntry {
+                tokens: toks.clone(),
+                positions: (0..64).collect(),
+                kv: master_kv,
+            },
+        );
+        store
+            .put_mirror(
+                sk,
+                MirrorEntry {
+                    master: mk,
+                    tokens: toks,
+                    positions: (0..64).collect(),
+                    diff: d,
+                },
+            )
+            .unwrap();
+        (rt, store, mk, sk, mirror_kv)
+    }
+
+    #[test]
+    fn fused_and_dense_restore_agree() {
+        let (rt, mut store, _mk, sk, mirror_kv) = setup();
+        let spec = rt.spec("sim-7b").unwrap().clone();
+
+        let run = |mode, store: &mut CacheStore| {
+            let mut pool = KvPool::for_seqs(&spec, 1);
+            let mut table = pool.allocate(64).unwrap();
+            let handle = match store.get(&sk) {
+                Some(crate::store::Fetched::Mirror(h)) => h,
+                _ => panic!("expected mirror"),
+            };
+            let stats = restore_mirror(
+                &rt, "sim-7b", &handle, mode, &mut pool, &mut table,
+            )
+            .unwrap();
+            (pool.gather(&table), stats)
+        };
+
+        let (fused, fs) = run(RestoreMode::Fused, &mut store);
+        let (dense, ds) = run(RestoreMode::Dense, &mut store);
+        assert_eq!(fused, dense, "paths must be bit-identical");
+        assert_eq!(fs.diff_blocks, 2);
+        assert!(fs.used_fused_kernel && !ds.used_fused_kernel);
+        assert!(fs.bytes_moved < ds.bytes_moved,
+                "fused moves less data: {} vs {}", fs.bytes_moved,
+                ds.bytes_moved);
+
+        // positions unchanged (old == new) => V must match the mirror and
+        // K must match too (delta 0)
+        for l in 0..spec.n_layers {
+            for s in 0..64 {
+                assert_eq!(fused.k_row(l, s), mirror_kv.k_row(l, s));
+                assert_eq!(fused.v_row(l, s), mirror_kv.v_row(l, s));
+            }
+        }
+    }
+
+    #[test]
+    fn restore_with_position_shift_recovers_rope() {
+        let (rt, mut store, _mk, sk, _mirror) = setup();
+        let spec = rt.spec("sim-7b").unwrap().clone();
+        // master rows were computed at positions 10..74; the mirror's rows
+        // restore to slots 0..64 (RoPE recovery shifts by -10)
+        {
+            let handle = match store.get(&sk) {
+                Some(crate::store::Fetched::Mirror(h)) => h.mirror.clone(),
+                _ => panic!(),
+            };
+            let mut m = handle;
+            m.diff.src_pos = (10..74).collect();
+            store.put_mirror(sk, m).unwrap();
+        }
+        let mut pool = KvPool::for_seqs(&spec, 1);
+        let mut table = pool.allocate(64).unwrap();
+        let handle = match store.get(&sk) {
+            Some(crate::store::Fetched::Mirror(h)) => h,
+            _ => panic!(),
+        };
+        let master_row0: Vec<f32> = handle.master.kv.k_row(0, 20).to_vec();
+        restore_mirror(
+            &rt, "sim-7b", &handle, RestoreMode::Fused, &mut pool,
+            &mut table,
+        )
+        .unwrap();
+        let got = pool.gather(&table);
+        // mock rotation: K += 0.001 * (new - old) = 0.001 * -10
+        let expect = master_row0[0] - 0.010;
+        assert!((got.k_row(0, 20)[0] - expect).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,271 @@
+//! Round-aware segment indexing and All-Gather round detection (paper
+//! §4.1 / §5 "Round-Aware Segment Indexing").
+//!
+//! The runtime receives prompts as `<TTSEP>`-delimited token streams. This
+//! module replaces fixed-size positional chunk hashing with *segment-based
+//! content hashing*: every delimited segment is keyed by an FNV-1a hash of
+//! its token ids, so two requests containing the same shared output block
+//! map to the same cache object regardless of the block's absolute offset.
+//!
+//! [`detect_pattern`] then groups concurrently-arriving requests whose
+//! segment sets overlap into All-Gather rounds — the unit the KV Collector
+//! (collector/) optimizes over. Requests that share no segments fall back
+//! to the single-request path, as the paper requires.
+
+use std::collections::HashMap;
+
+use crate::tokenizer::{split_segments, TTSEP_ID};
+use crate::util::fnv1a_tokens;
+
+/// One segment of an analyzed prompt.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub hash: u64,
+    /// Slot range [start, end) in the flat prompt (separator slots belong
+    /// to no segment).
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Segment {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// A prompt analyzed into content-hashed segments.
+#[derive(Clone, Debug)]
+pub struct SegmentedPrompt {
+    pub tokens: Vec<u32>,
+    pub segments: Vec<Segment>,
+}
+
+/// Build a segmented prompt from out-of-band block structure (the engine's
+/// default: no separator tokens in the stream; boundaries come from the
+/// application's `RoundAwarePrompt::blocks` metadata). See DESIGN.md
+/// §Hardware-Adaptation for why in-band separators are kept optional at
+/// this cache scale.
+pub fn segment_blocks(prompt: &crate::tokenizer::RoundAwarePrompt)
+    -> SegmentedPrompt
+{
+    let tokens = prompt.serialize_plain();
+    let mut segments = Vec::new();
+    let mut cursor = 0usize;
+    for b in &prompt.blocks {
+        let start = cursor;
+        let end = start + b.tokens.len();
+        segments.push(Segment {
+            hash: fnv1a_tokens(&b.tokens),
+            start,
+            end,
+        });
+        cursor = end;
+    }
+    SegmentedPrompt { tokens, segments }
+}
+
+/// Split + hash a flat prompt at `<TTSEP>` boundaries (the paper's in-band
+/// wire format).
+pub fn segment_prompt(tokens: &[u32]) -> SegmentedPrompt {
+    let mut segments = Vec::new();
+    let mut cursor = 0usize;
+    for seg in split_segments(tokens) {
+        let start = cursor;
+        let end = start + seg.len();
+        segments.push(Segment { hash: fnv1a_tokens(seg), start, end });
+        cursor = end + 1; // skip the separator slot
+    }
+    SegmentedPrompt { tokens: tokens.to_vec(), segments }
+}
+
+/// How much two prompts share, at segment granularity (token count).
+pub fn shared_segment_tokens(a: &SegmentedPrompt, b: &SegmentedPrompt)
+    -> usize
+{
+    let set: HashMap<u64, usize> = a
+        .segments
+        .iter()
+        .map(|s| (s.hash, s.len()))
+        .collect();
+    b.segments
+        .iter()
+        .filter(|s| set.contains_key(&s.hash))
+        .map(|s| s.len())
+        .sum()
+}
+
+/// Detection verdict for a batch of requests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PatternVerdict {
+    /// Requests form an All-Gather round: >= `min_requests` requests
+    /// sharing >= `min_shared_frac` of their tokens on average.
+    AllGather { shared_hashes: Vec<u64> },
+    /// No exploitable round structure; use the single-request path.
+    Independent,
+}
+
+/// Round-detection configuration.
+#[derive(Clone, Debug)]
+pub struct DetectorConfig {
+    pub min_requests: usize,
+    /// Minimum fraction of a prompt's tokens that must belong to segments
+    /// shared with the rest of the candidate round.
+    pub min_shared_frac: f64,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        DetectorConfig { min_requests: 2, min_shared_frac: 0.3 }
+    }
+}
+
+/// Detect the All-Gather pattern over a set of segmented prompts: find the
+/// segment hashes present in at least `min_requests` prompts and check the
+/// shared fraction. This is what lets TokenDance "fall back to the standard
+/// single-request path with no performance loss" for non-round traffic.
+pub fn detect_pattern(
+    prompts: &[&SegmentedPrompt],
+    cfg: &DetectorConfig,
+) -> PatternVerdict {
+    if prompts.len() < cfg.min_requests {
+        return PatternVerdict::Independent;
+    }
+    // count which segment hashes appear in how many prompts
+    let mut seen: HashMap<u64, usize> = HashMap::new();
+    for p in prompts {
+        let mut uniq: Vec<u64> = p.segments.iter().map(|s| s.hash).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        for h in uniq {
+            *seen.entry(h).or_insert(0) += 1;
+        }
+    }
+    let shared: Vec<u64> = seen
+        .iter()
+        .filter(|(_, &c)| c >= cfg.min_requests)
+        .map(|(&h, _)| h)
+        .collect();
+    if shared.is_empty() {
+        return PatternVerdict::Independent;
+    }
+    // shared token fraction per prompt
+    let sharedset: std::collections::HashSet<u64> =
+        shared.iter().copied().collect();
+    let mut total_frac = 0.0;
+    for p in prompts {
+        let total: usize = p.segments.iter().map(Segment::len).sum();
+        let sh: usize = p
+            .segments
+            .iter()
+            .filter(|s| sharedset.contains(&s.hash))
+            .map(Segment::len)
+            .sum();
+        total_frac += if total == 0 { 0.0 } else { sh as f64 / total as f64 };
+    }
+    if total_frac / prompts.len() as f64 >= cfg.min_shared_frac {
+        let mut sh = shared;
+        sh.sort_unstable();
+        PatternVerdict::AllGather { shared_hashes: sh }
+    } else {
+        PatternVerdict::Independent
+    }
+}
+
+/// Count the `<TTSEP>` separators in a prompt (diagnostics).
+pub fn separator_count(tokens: &[u32]) -> usize {
+    tokens.iter().filter(|&&t| t == TTSEP_ID).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{encode, BlockKind, RoundAwarePrompt};
+
+    fn prompt(private: &str, shared: &[&str]) -> SegmentedPrompt {
+        let mut p = RoundAwarePrompt::new();
+        p.push(BlockKind::PrivateHistory, encode(private));
+        for (i, s) in shared.iter().enumerate() {
+            p.push(
+                BlockKind::SharedOutput { producer: i, round: 0 },
+                encode(s),
+            );
+        }
+        segment_prompt(&p.serialize())
+    }
+
+    #[test]
+    fn segments_keyed_by_content_not_position() {
+        // same shared block at different offsets (different history length)
+        let a = prompt("short", &["the shared update"]);
+        let b = prompt("a much longer private history", &["the shared update"]);
+        assert_eq!(a.segments[1].hash, b.segments[1].hash);
+        assert_ne!(a.segments[1].start, b.segments[1].start);
+        assert_ne!(a.segments[0].hash, b.segments[0].hash);
+    }
+
+    #[test]
+    fn segment_ranges_cover_prompt() {
+        let p = prompt("hist", &["one", "two"]);
+        assert_eq!(p.segments.len(), 3);
+        assert_eq!(p.segments[0].start, 0);
+        // ranges are disjoint and ordered, with separator gaps of 1
+        for w in p.segments.windows(2) {
+            assert_eq!(w[0].end + 1, w[1].start);
+        }
+        assert_eq!(p.segments.last().unwrap().end, p.tokens.len());
+    }
+
+    #[test]
+    fn detects_all_gather_round() {
+        let shared = ["agent0 did X", "agent1 did Y", "agent2 did Z"];
+        let a = prompt("history of a", &shared);
+        let b = prompt("much longer history of b", &shared);
+        let c = prompt("c", &shared);
+        let verdict =
+            detect_pattern(&[&a, &b, &c], &DetectorConfig::default());
+        match verdict {
+            PatternVerdict::AllGather { shared_hashes } => {
+                assert_eq!(shared_hashes.len(), 3);
+            }
+            _ => panic!("expected AllGather"),
+        }
+    }
+
+    #[test]
+    fn independent_requests_fall_back() {
+        let a = prompt("history a", &["only a's content"]);
+        let b = prompt("history b", &["completely different content"]);
+        assert_eq!(
+            detect_pattern(&[&a, &b], &DetectorConfig::default()),
+            PatternVerdict::Independent
+        );
+        // single request is never a round
+        assert_eq!(
+            detect_pattern(&[&a], &DetectorConfig::default()),
+            PatternVerdict::Independent
+        );
+    }
+
+    #[test]
+    fn low_shared_fraction_is_independent() {
+        // shared block is tiny relative to private history
+        let shared = ["x"];
+        let a = prompt(&"a".repeat(500), &shared);
+        let b = prompt(&"b".repeat(500), &shared);
+        assert_eq!(
+            detect_pattern(&[&a, &b], &DetectorConfig::default()),
+            PatternVerdict::Independent
+        );
+    }
+
+    #[test]
+    fn shared_token_count() {
+        let a = prompt("private-a", &["s1", "s2"]);
+        let b = prompt("private-b", &["s1", "s2"]);
+        assert_eq!(shared_segment_tokens(&a, &b), 4);
+    }
+}

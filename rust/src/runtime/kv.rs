@@ -1,0 +1,183 @@
+//! Host-side KV tensors in the canonical [L, S, d] layout (K and V planes),
+//! plus row/block views used by the paged pool, the store, and the restore
+//! paths. All AOT artifacts exchange caches in this layout.
+
+use crate::model::ModelSpec;
+
+/// A dense K/V cache pair for one sequence: two [L, S, d] f32 planes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvBuf {
+    pub layers: usize,
+    pub seq: usize,
+    pub d: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvBuf {
+    pub fn zeroed(layers: usize, seq: usize, d: usize) -> Self {
+        let n = layers * seq * d;
+        KvBuf { layers, seq, d, k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    pub fn for_spec(spec: &ModelSpec) -> Self {
+        Self::zeroed(spec.n_layers, spec.max_seq, spec.d_model)
+    }
+
+    #[inline]
+    pub fn off(&self, layer: usize, slot: usize) -> usize {
+        (layer * self.seq + slot) * self.d
+    }
+
+    pub fn k_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let o = self.off(layer, slot);
+        &self.k[o..o + self.d]
+    }
+
+    pub fn v_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let o = self.off(layer, slot);
+        &self.v[o..o + self.d]
+    }
+
+    pub fn set_row(&mut self, layer: usize, slot: usize, k: &[f32], v: &[f32]) {
+        let o = self.off(layer, slot);
+        self.k[o..o + self.d].copy_from_slice(k);
+        self.v[o..o + self.d].copy_from_slice(v);
+    }
+
+    /// Copy `len` consecutive token rows (all layers) from `src` starting at
+    /// `src_slot` into self starting at `dst_slot`.
+    pub fn copy_rows_from(
+        &mut self,
+        src: &KvBuf,
+        src_slot: usize,
+        dst_slot: usize,
+        len: usize,
+    ) {
+        debug_assert_eq!(self.d, src.d);
+        debug_assert_eq!(self.layers, src.layers);
+        for l in 0..self.layers {
+            let so = src.off(l, src_slot);
+            let do_ = self.off(l, dst_slot);
+            self.k[do_..do_ + len * self.d]
+                .copy_from_slice(&src.k[so..so + len * src.d]);
+            self.v[do_..do_ + len * self.d]
+                .copy_from_slice(&src.v[so..so + len * src.d]);
+        }
+    }
+
+    /// Extract `len` token rows (all layers) starting at `slot` into a new
+    /// compact KvBuf of seq == len.
+    pub fn extract_rows(&self, slot: usize, len: usize) -> KvBuf {
+        let mut out = KvBuf::zeroed(self.layers, len, self.d);
+        out.copy_rows_from(self, slot, 0, len);
+        out
+    }
+
+    /// Bytes of one plane pair (K+V) this buffer holds.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    /// Max |a-b| across both planes (test / similarity helper).
+    pub fn max_abs_diff(&self, other: &KvBuf) -> f32 {
+        self.k
+            .iter()
+            .zip(&other.k)
+            .chain(self.v.iter().zip(&other.v))
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Fraction of 16-token blocks (token-block granularity, all layers)
+    /// that are bitwise-close (<= tol everywhere) between self and other.
+    /// Used by the Fig-3 similarity analysis.
+    pub fn block_similarity(&self, other: &KvBuf, block_tokens: usize,
+                            valid_len: usize, tol: f32) -> f64 {
+        let nb = valid_len.div_ceil(block_tokens);
+        if nb == 0 {
+            return 1.0;
+        }
+        let mut same = 0usize;
+        for b in 0..nb {
+            let start = b * block_tokens;
+            let end = (start + block_tokens).min(valid_len);
+            let mut eq = true;
+            'outer: for l in 0..self.layers {
+                let o1 = self.off(l, start);
+                let o2 = other.off(l, start);
+                let n = (end - start) * self.d;
+                for i in 0..n {
+                    if (self.k[o1 + i] - other.k[o2 + i]).abs() > tol
+                        || (self.v[o1 + i] - other.v[o2 + i]).abs() > tol
+                    {
+                        eq = false;
+                        break 'outer;
+                    }
+                }
+            }
+            if eq {
+                same += 1;
+            }
+        }
+        same as f64 / nb as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(layers: usize, seq: usize, d: usize, scale: f32) -> KvBuf {
+        let mut b = KvBuf::zeroed(layers, seq, d);
+        for l in 0..layers {
+            for s in 0..seq {
+                let kr: Vec<f32> =
+                    (0..d).map(|i| scale * (l * seq * d + s * d + i) as f32).collect();
+                let vr: Vec<f32> = kr.iter().map(|x| -x).collect();
+                b.set_row(l, s, &kr, &vr);
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn row_offsets_consistent() {
+        let b = filled(2, 8, 4, 1.0);
+        assert_eq!(b.k_row(1, 3)[0], (1 * 8 * 4 + 3 * 4) as f32);
+        assert_eq!(b.v_row(0, 0)[1], -1.0);
+    }
+
+    #[test]
+    fn copy_and_extract_roundtrip() {
+        let src = filled(2, 8, 4, 1.0);
+        let seg = src.extract_rows(2, 3);
+        assert_eq!(seg.seq, 3);
+        assert_eq!(seg.k_row(0, 0), src.k_row(0, 2));
+        assert_eq!(seg.k_row(1, 2), src.k_row(1, 4));
+
+        let mut dst = KvBuf::zeroed(2, 8, 4);
+        dst.copy_rows_from(&seg, 0, 5, 3);
+        assert_eq!(dst.k_row(0, 5), src.k_row(0, 2));
+        assert_eq!(dst.v_row(1, 7), src.v_row(1, 4));
+    }
+
+    #[test]
+    fn block_similarity_counts_identical_blocks() {
+        let a = filled(1, 32, 4, 1.0);
+        let mut b = a.clone();
+        // corrupt one token in the second 16-token block
+        let d = b.d;
+        let o = b.off(0, 17);
+        b.k[o] += 5.0;
+        let _ = d;
+        assert_eq!(a.block_similarity(&b, 16, 32, 1e-6), 0.5);
+        assert_eq!(a.block_similarity(&a, 16, 32, 1e-6), 1.0);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let b = KvBuf::zeroed(4, 512, 128);
+        assert_eq!(b.bytes(), 4 * 512 * 128 * 4 * 2);
+    }
+}

@@ -1,0 +1,391 @@
+//! Deterministic mock runtime for logic tests and scheduler benches — no
+//! PJRT, no artifacts. Its math is a miniature of the real model's *reuse
+//! semantics*:
+//!
+//! * a token's K row at (layer l, position p) is `f(token, l, ·) + 0.001*p
+//!   + ctx(l)` where `ctx` hashes the preceding tokens for layers >=
+//!   check_layer and is 0 below — so prefix reuse scores ~0, cross-context
+//!   reuse scores > 0, exactly like the real check-layer diff;
+//! * "RoPE rotation" is the additive position term, so re-rotation
+//!   old->new is `+ 0.001*(new-old)` (additivity mirrors real RoPE);
+//! * logits are a deterministic hash of (last token, len, context), so
+//!   greedy decoding is reproducible and perturbation-sensitive (the Fig-14
+//!   divergence logic can be unit-tested).
+
+use anyhow::{anyhow, Result};
+
+use super::kv::KvBuf;
+use super::traits::*;
+use crate::model::{Buckets, ModelSpec};
+use crate::util::fnv1a_tokens;
+
+const POS_SCALE: f32 = 1e-3;
+const CTX_SCALE: f32 = 1e-2;
+pub const MOCK_INVALID_SCORE: f32 = 1e9;
+
+pub struct MockRuntime {
+    specs: Vec<ModelSpec>,
+    buckets: Buckets,
+    calls: std::cell::RefCell<u64>,
+}
+
+impl Default for MockRuntime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MockRuntime {
+    pub fn new() -> Self {
+        let mk = |name: &str, layers: usize| ModelSpec {
+            name: name.into(),
+            n_layers: layers,
+            d_model: 16,
+            n_heads: 4,
+            d_ff: 32,
+            vocab: 512,
+            max_seq: 512,
+            block_tokens: 16,
+            check_layer: 1,
+            rope_theta: 10000.0,
+        };
+        MockRuntime {
+            specs: vec![mk("sim-7b", 4), mk("sim-14b", 8)],
+            buckets: Buckets::default(),
+            calls: std::cell::RefCell::new(0),
+        }
+    }
+
+    fn bump(&self) {
+        *self.calls.borrow_mut() += 1;
+    }
+
+    /// Content component of a K/V element (context-free).
+    fn base(token: u32, layer: usize, i: usize, plane: u8) -> f32 {
+        let h = fnv1a_tokens(&[token, layer as u32, i as u32, plane as u32]);
+        ((h % 2000) as f32 - 1000.0) / 1000.0
+    }
+
+    /// Context component: hashes the tokens preceding `pos`; zero below the
+    /// check layer (mirrors "layer-0 K is context-free").
+    fn ctx(spec: &ModelSpec, tokens: &[u32], pos: usize, layer: usize) -> f32 {
+        if layer < spec.check_layer || pos == 0 {
+            return 0.0;
+        }
+        let h = fnv1a_tokens(&tokens[..pos.min(tokens.len())]);
+        ((h % 1000) as f32 / 1000.0) * CTX_SCALE
+    }
+
+    fn fill_row(
+        spec: &ModelSpec,
+        kv: &mut KvBuf,
+        tokens: &[u32],
+        pos: usize,
+        slot: usize,
+    ) {
+        let t = tokens[slot.min(tokens.len() - 1)];
+        for l in 0..spec.n_layers {
+            let c = Self::ctx(spec, tokens, slot, l);
+            let k: Vec<f32> = (0..spec.d_model)
+                .map(|i| {
+                    Self::base(t, l, i, 0) + POS_SCALE * pos as f32 + c
+                })
+                .collect();
+            let v: Vec<f32> = (0..spec.d_model)
+                .map(|i| Self::base(t, l, i, 1) + c)
+                .collect();
+            kv.set_row(l, slot, &k, &v);
+        }
+    }
+
+    fn logits_for(spec: &ModelSpec, tokens: &[u32], len: usize) -> Vec<f32> {
+        let h = fnv1a_tokens(&tokens[..len.min(tokens.len())]);
+        let mut out = vec![0.0f32; spec.vocab];
+        // a peaked, deterministic distribution over byte tokens
+        let top = 4 + (h % 252) as usize;
+        out[top] = 10.0;
+        out[4 + ((h >> 8) % 252) as usize] += 5.0;
+        out
+    }
+}
+
+impl ModelRuntime for MockRuntime {
+    fn spec(&self, model: &str) -> Result<&ModelSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.name == model)
+            .ok_or_else(|| anyhow!("unknown mock model {model}"))
+    }
+
+    fn buckets(&self) -> &Buckets {
+        &self.buckets
+    }
+
+    fn prefill(&self, model: &str, tokens: &[u32], len: usize)
+        -> Result<PrefillOut>
+    {
+        self.bump();
+        let spec = self.spec(model)?;
+        let t = self
+            .buckets
+            .fit_prefill(len)
+            .ok_or_else(|| anyhow!("prompt too long"))?;
+        let mut kv = KvBuf::zeroed(spec.n_layers, t, spec.d_model);
+        for slot in 0..len {
+            Self::fill_row(spec, &mut kv, tokens, slot, slot);
+        }
+        Ok(PrefillOut { logits: Self::logits_for(spec, tokens, len), kv })
+    }
+
+    fn decode(&self, model: &str, seqs: &[DecodeSeq]) -> Result<Vec<DecodeOut>> {
+        self.bump();
+        let spec = self.spec(model)?;
+        Ok(seqs
+            .iter()
+            .map(|q| {
+                let row = spec.n_layers * spec.d_model;
+                let mut k_new = vec![0.0f32; row];
+                let mut v_new = vec![0.0f32; row];
+                for l in 0..spec.n_layers {
+                    for i in 0..spec.d_model {
+                        k_new[l * spec.d_model + i] =
+                            Self::base(q.token, l, i, 0)
+                                + POS_SCALE * q.len as f32;
+                        v_new[l * spec.d_model + i] =
+                            Self::base(q.token, l, i, 1);
+                    }
+                }
+                // logits hash the cache contents coarsely + the new token,
+                // so cache perturbations can flip greedy decisions
+                let sig = (q.kv.k.iter().take(64).sum::<f32>() * 1000.0)
+                    as i64 as u32;
+                let logits = Self::logits_for(
+                    spec,
+                    &[q.token, q.len as u32, sig],
+                    3,
+                );
+                DecodeOut { logits, k_new, v_new }
+            })
+            .collect())
+    }
+
+    fn ropediff(&self, model: &str, group: &[RopeDiffSeq])
+        -> Result<Vec<RopeDiffOut>>
+    {
+        self.bump();
+        let spec = self.spec(model)?;
+        let s = spec.max_seq;
+        group
+            .iter()
+            .map(|q| {
+                let mut k_rot = q.kv.clone();
+                // additive "rotation": + POS_SCALE * (new - old) on K
+                for l in 0..spec.n_layers {
+                    for slot in 0..s {
+                        if q.valid[slot] == 0 {
+                            continue;
+                        }
+                        let delta = slot as i32 - q.old_pos[slot];
+                        let o = k_rot.off(l, slot);
+                        for i in 0..spec.d_model {
+                            k_rot.k[o + i] += POS_SCALE * delta as f32;
+                        }
+                    }
+                }
+                // scores: |rotated cached K - fresh K| at the check layer
+                let cl = spec.check_layer;
+                let scores: Vec<f32> = (0..s)
+                    .map(|slot| {
+                        if q.valid[slot] == 0 {
+                            return MOCK_INVALID_SCORE;
+                        }
+                        let t = q.tokens[slot];
+                        let c = Self::ctx(spec, q.tokens, slot, cl);
+                        let mut acc = 0.0f32;
+                        for i in 0..spec.d_model {
+                            let fresh = Self::base(t, cl, i, 0)
+                                + POS_SCALE * slot as f32
+                                + c;
+                            acc += (k_rot.k_row(cl, slot)[i] - fresh).abs();
+                        }
+                        acc / spec.d_model as f32
+                    })
+                    .collect();
+                Ok(RopeDiffOut { k_rot, scores })
+            })
+            .collect()
+    }
+
+    fn selective(&self, model: &str, input: &SelectiveIn)
+        -> Result<SelectiveOut>
+    {
+        self.bump();
+        let spec = self.spec(model)?;
+        let mut kv = input.kv.clone();
+        for &p in input.sel {
+            let slot = p as usize;
+            if slot < input.len {
+                Self::fill_row(spec, &mut kv, input.tokens, slot, slot);
+            }
+        }
+        Ok(SelectiveOut {
+            logits: Self::logits_for(spec, input.tokens, input.len),
+            kv,
+        })
+    }
+
+    fn fused_restore(
+        &self,
+        model: &str,
+        master_k: &KvBuf,
+        diff: &SparseDiff,
+        old_pos: &[i32],
+        new_pos: &[i32],
+    ) -> Result<KvBuf> {
+        self.bump();
+        let spec = self.spec(model)?;
+        let (l, s, d, bt) =
+            (spec.n_layers, spec.max_seq, spec.d_model, spec.block_tokens);
+        let mut out = master_k.clone();
+        let blk_layer = bt * d;
+        for (bi, &bid) in diff.block_ids.iter().enumerate() {
+            if bid < 0 {
+                continue;
+            }
+            let start = bid as usize * bt;
+            for ll in 0..l {
+                let o = out.off(ll, start);
+                let src = bi * l * blk_layer + ll * blk_layer;
+                out.k[o..o + blk_layer]
+                    .copy_from_slice(&diff.diff_k[src..src + blk_layer]);
+            }
+        }
+        for ll in 0..l {
+            for slot in 0..s {
+                let delta = new_pos[slot] - old_pos[slot];
+                let o = out.off(ll, slot);
+                for i in 0..d {
+                    out.k[o + i] += POS_SCALE * delta as f32;
+                }
+            }
+        }
+        out.v.iter_mut().for_each(|x| *x = 0.0);
+        Ok(out)
+    }
+
+    fn rope_recover(
+        &self,
+        model: &str,
+        k: &mut KvBuf,
+        old_pos: &[i32],
+        new_pos: &[i32],
+    ) -> Result<()> {
+        self.bump();
+        let spec = self.spec(model)?;
+        for l in 0..spec.n_layers {
+            for slot in 0..spec.max_seq {
+                let delta = new_pos[slot] - old_pos[slot];
+                let o = k.off(l, slot);
+                for i in 0..spec.d_model {
+                    k.k[o + i] += POS_SCALE * delta as f32;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn calls(&self) -> u64 {
+        *self.calls.borrow()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_reuse_scores_zero_context_change_positive() {
+        let rt = MockRuntime::new();
+        let spec = rt.spec("sim-7b").unwrap().clone();
+        let s = spec.max_seq;
+        let toks: Vec<u32> = (0..40u32).map(|i| 4 + (i * 7) % 200).collect();
+        let pre = rt.prefill("sim-7b", &toks, 40).unwrap();
+        let mut cache = KvBuf::for_spec(&spec);
+        cache.copy_rows_from(&pre.kv, 0, 0, 40);
+
+        let mut padded = toks.clone();
+        padded.resize(s, 0);
+        let old: Vec<i32> = (0..s as i32).collect();
+        let mut valid = vec![0u8; s];
+        valid[..40].iter_mut().for_each(|x| *x = 1);
+        let out = rt
+            .ropediff(
+                "sim-7b",
+                &[RopeDiffSeq {
+                    tokens: &padded,
+                    old_pos: &old,
+                    valid: &valid,
+                    kv: &cache,
+                }],
+            )
+            .unwrap();
+        let sc = &out[0].scores;
+        assert!(sc[..40].iter().all(|&x| x < 1e-4), "prefix must score 0");
+        assert!(sc[40..].iter().all(|&x| x >= MOCK_INVALID_SCORE));
+
+        // different preceding context -> positive scores at check layer
+        let mut padded2 = padded.clone();
+        padded2[0] = 99; // change first token => context of all later shifts
+        let out2 = rt
+            .ropediff(
+                "sim-7b",
+                &[RopeDiffSeq {
+                    tokens: &padded2,
+                    old_pos: &old,
+                    valid: &valid,
+                    kv: &cache,
+                }],
+            )
+            .unwrap();
+        assert!(
+            out2[0].scores[1..40].iter().all(|&x| x > 0.0),
+            "context change must be visible"
+        );
+    }
+
+    #[test]
+    fn rotation_is_additive_and_restore_matches() {
+        let rt = MockRuntime::new();
+        let spec = rt.spec("sim-7b").unwrap().clone();
+        let toks: Vec<u32> = (0..32u32).map(|i| 10 + i).collect();
+        let pre = rt.prefill("sim-7b", &toks, 32).unwrap();
+        let mut master = KvBuf::for_spec(&spec);
+        master.copy_rows_from(&pre.kv, 0, 0, 32);
+        let old: Vec<i32> = (0..spec.max_seq as i32).collect();
+        let new: Vec<i32> = old.iter().map(|x| x + 5).collect();
+        let diff = SparseDiff { block_ids: &[], diff_k: &[] };
+        let restored = rt
+            .fused_restore("sim-7b", &master, &diff, &old, &new)
+            .unwrap();
+        // K shifted by +5 * POS_SCALE; V zeroed (the K-only contract —
+        // the restore path fills V from the host transfer)
+        assert!(
+            (restored.k_row(0, 0)[0] - master.k_row(0, 0)[0] - 5.0 * POS_SCALE)
+                .abs()
+                < 1e-6
+        );
+        assert!(restored.v_row(2, 3).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn decode_is_deterministic() {
+        let rt = MockRuntime::new();
+        let spec = rt.spec("sim-7b").unwrap().clone();
+        let kv = KvBuf::for_spec(&spec);
+        let mk = || DecodeSeq { token: 42, len: 3, kv: &kv };
+        let a = rt.decode("sim-7b", &[mk()]).unwrap();
+        let b = rt.decode("sim-7b", &[mk()]).unwrap();
+        assert_eq!(argmax(&a[0].logits), argmax(&b[0].logits));
+        assert_eq!(a[0].k_new, b[0].k_new);
+    }
+}

@@ -1,0 +1,18 @@
+//! Runtime layer: execution of the AOT-compiled model from the rust hot
+//! path. [`traits::ModelRuntime`] is the interface; [`pjrt::PjrtRuntime`]
+//! drives the real artifacts through the PJRT C API (see
+//! /opt/xla-example/load_hlo for the pattern) and [`mock::MockRuntime`] is
+//! the deterministic stand-in for logic tests.
+
+pub mod kv;
+pub mod mock;
+pub mod pjrt;
+pub mod traits;
+
+pub use kv::KvBuf;
+pub use mock::MockRuntime;
+pub use pjrt::PjrtRuntime;
+pub use traits::{
+    argmax, DecodeOut, DecodeSeq, ModelRuntime, PrefillOut, RopeDiffOut,
+    RopeDiffSeq, SelectiveIn, SelectiveOut, SparseDiff,
+};

@@ -1,0 +1,423 @@
+//! The real runtime: loads the AOT HLO-text artifacts, compiles them on the
+//! PJRT CPU client, uploads model weights once as device-resident buffers,
+//! and executes the Layer-2/-1 compute from the rust hot path.
+//!
+//! Executables are compiled lazily on first use and cached; weights never
+//! travel per call (`execute_b` with stored `PjRtBuffer`s — per-call inputs
+//! are uploaded with `buffer_from_host_buffer`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::kv::KvBuf;
+use super::traits::*;
+use crate::model::{ArtifactInfo, Buckets, Manifest, ModelSpec};
+use crate::tokenizer::PAD_ID;
+
+/// Per-model state: spec + weight tensors resident on the PJRT device.
+struct ModelState {
+    spec: ModelSpec,
+    /// name -> device buffer, in manifest layout order.
+    weights: HashMap<String, PjRtBuffer>,
+}
+
+/// Host-side input for one executable parameter.
+enum In<'a> {
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+}
+
+pub struct PjrtRuntime {
+    client: PjRtClient,
+    manifest: Manifest,
+    models: HashMap<String, ModelState>,
+    exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    calls: RefCell<u64>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest + weights from an artifacts directory and create
+    /// the PJRT CPU client. Executables compile lazily; call
+    /// [`PjrtRuntime::warmup`] to pre-compile a working set.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut models = HashMap::new();
+        for (name, (spec, entries, wfile)) in &manifest.models {
+            let blob = std::fs::read(wfile)
+                .with_context(|| format!("reading {}", wfile.display()))?;
+            if blob.len() % 4 != 0 {
+                bail!("weight blob {} not f32-aligned", wfile.display());
+            }
+            let flat: Vec<f32> = blob
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let mut weights = HashMap::new();
+            for e in entries {
+                let data = flat
+                    .get(e.offset_elems..e.offset_elems + e.size_elems)
+                    .ok_or_else(|| anyhow!("weight {} out of range", e.name))?;
+                let buf = client
+                    .buffer_from_host_buffer::<f32>(data, &e.shape, None)
+                    .map_err(|er| anyhow!("upload {}: {er:?}", e.name))?;
+                weights.insert(e.name.clone(), buf);
+            }
+            models.insert(
+                name.clone(),
+                ModelState { spec: spec.clone(), weights },
+            );
+        }
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            models,
+            exes: RefCell::new(HashMap::new()),
+            calls: RefCell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Pre-compile all artifacts for a model (or all models if None) so
+    /// first-request latency excludes XLA compilation.
+    pub fn warmup(&self, model: Option<&str>) -> Result<()> {
+        let arts: Vec<ArtifactInfo> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| model.map_or(true, |m| a.model == m))
+            .cloned()
+            .collect();
+        for a in arts {
+            self.exe(&a)?;
+        }
+        Ok(())
+    }
+
+    fn artifact(&self, kind: &str, model: &str, bucket: Option<usize>)
+        -> Result<ArtifactInfo>
+    {
+        self.manifest
+            .artifact(kind, model, bucket)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!("no artifact {kind}/{model}/bucket={bucket:?}")
+            })
+    }
+
+    fn exe(&self, art: &ArtifactInfo) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&art.name) {
+            return Ok(e.clone());
+        }
+        let proto = HloModuleProto::from_text_file(
+            art.file.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", art.file.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", art.name))?;
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(art.name.clone(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute an artifact: stored weight buffers first (per the manifest's
+    /// weight_params), then per-call inputs. Returns the decomposed output
+    /// tuple as host literals.
+    fn call(&self, art: &ArtifactInfo, inputs: &[In]) -> Result<Vec<Literal>> {
+        let exe = self.exe(art)?;
+        let model = self
+            .models
+            .get(&art.model)
+            .ok_or_else(|| anyhow!("unknown model {}", art.model))?;
+        let mut args: Vec<PjRtBuffer> = Vec::new();
+        let mut refs: Vec<&PjRtBuffer> = Vec::new();
+        for wname in &art.weight_params {
+            refs.push(
+                model
+                    .weights
+                    .get(wname)
+                    .ok_or_else(|| anyhow!("missing weight {wname}"))?,
+            );
+        }
+        for inp in inputs {
+            let buf = match inp {
+                In::F32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(data, dims, None),
+                In::I32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer::<i32>(data, dims, None),
+            }
+            .map_err(|e| anyhow!("upload input: {e:?}"))?;
+            args.push(buf);
+        }
+        // interleave: weights come first in HLO parameter order, then inputs
+        let mut all: Vec<&PjRtBuffer> = refs;
+        all.extend(args.iter());
+        *self.calls.borrow_mut() += 1;
+        let out = exe
+            .execute_b(&all)
+            .map_err(|e| anyhow!("execute {}: {e:?}", art.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    fn spec_of(&self, model: &str) -> Result<&ModelState> {
+        self.models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))
+    }
+}
+
+fn to_f32(l: &Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e:?}"))
+}
+
+impl ModelRuntime for PjrtRuntime {
+    fn spec(&self, model: &str) -> Result<&ModelSpec> {
+        Ok(&self.spec_of(model)?.spec)
+    }
+
+    fn buckets(&self) -> &Buckets {
+        &self.manifest.buckets
+    }
+
+    fn prefill(&self, model: &str, tokens: &[u32], len: usize)
+        -> Result<PrefillOut>
+    {
+        let spec = self.spec(model)?.clone();
+        let t = self
+            .buckets()
+            .fit_prefill(len)
+            .ok_or_else(|| anyhow!("prompt of {len} exceeds max bucket"))?;
+        let art = self.artifact("prefill", model, Some(t))?;
+        let mut toks = vec![PAD_ID as i32; t];
+        for (i, &tk) in tokens.iter().take(len).enumerate() {
+            toks[i] = tk as i32;
+        }
+        let lenv = [len as i32];
+        let out = self.call(
+            &art,
+            &[In::I32(&toks, vec![t]), In::I32(&lenv, vec![1])],
+        )?;
+        let logits = to_f32(&out[0])?;
+        let k = to_f32(&out[1])?;
+        let v = to_f32(&out[2])?;
+        let mut kv = KvBuf::zeroed(spec.n_layers, t, spec.d_model);
+        kv.k = k;
+        kv.v = v;
+        Ok(PrefillOut { logits, kv })
+    }
+
+    fn decode(&self, model: &str, seqs: &[DecodeSeq]) -> Result<Vec<DecodeOut>> {
+        let spec = self.spec(model)?.clone();
+        let n = seqs.len();
+        let b = self
+            .buckets()
+            .fit_decode(n)
+            .ok_or_else(|| anyhow!("decode batch {n} exceeds max bucket"))?;
+        let art = self.artifact("decode", model, Some(b))?;
+        let (l, s, d) = (spec.n_layers, spec.max_seq, spec.d_model);
+        let plane = l * s * d;
+        let mut toks = vec![0i32; b];
+        let mut lens = vec![1i32; b];
+        let mut kc = vec![0f32; b * plane];
+        let mut vc = vec![0f32; b * plane];
+        for (i, q) in seqs.iter().enumerate() {
+            toks[i] = q.token as i32;
+            lens[i] = q.len as i32;
+            debug_assert_eq!(q.kv.k.len(), plane);
+            kc[i * plane..(i + 1) * plane].copy_from_slice(&q.kv.k);
+            vc[i * plane..(i + 1) * plane].copy_from_slice(&q.kv.v);
+        }
+        let out = self.call(
+            &art,
+            &[
+                In::I32(&toks, vec![b]),
+                In::I32(&lens, vec![b]),
+                In::F32(&kc, vec![b, l, s, d]),
+                In::F32(&vc, vec![b, l, s, d]),
+            ],
+        )?;
+        let logits = to_f32(&out[0])?; // [B, vocab]
+        let kn = to_f32(&out[1])?; // [B, L, d]
+        let vn = to_f32(&out[2])?;
+        let vsz = spec.vocab;
+        let row = l * d;
+        Ok((0..n)
+            .map(|i| DecodeOut {
+                logits: logits[i * vsz..(i + 1) * vsz].to_vec(),
+                k_new: kn[i * row..(i + 1) * row].to_vec(),
+                v_new: vn[i * row..(i + 1) * row].to_vec(),
+            })
+            .collect())
+    }
+
+    fn ropediff(&self, model: &str, group: &[RopeDiffSeq])
+        -> Result<Vec<RopeDiffOut>>
+    {
+        let spec = self.spec(model)?.clone();
+        let n = group.len();
+        let g = self
+            .buckets()
+            .fit_group(n)
+            .ok_or_else(|| anyhow!("group of {n} exceeds max bucket"))?;
+        let art = self.artifact("ropediff", model, Some(g))?;
+        let (l, s, d) = (spec.n_layers, spec.max_seq, spec.d_model);
+        let plane = l * s * d;
+        let mut toks = vec![PAD_ID as i32; g * s];
+        let mut old = vec![0i32; g * s];
+        let mut valid = vec![0i32; g * s];
+        let mut kc = vec![0f32; g * plane];
+        for (i, q) in group.iter().enumerate() {
+            debug_assert_eq!(q.tokens.len(), s);
+            debug_assert_eq!(q.kv.k.len(), plane);
+            for (j, &tk) in q.tokens.iter().enumerate() {
+                toks[i * s + j] = tk as i32;
+            }
+            old[i * s..(i + 1) * s]
+                .copy_from_slice(q.old_pos);
+            for (j, &vb) in q.valid.iter().enumerate() {
+                valid[i * s + j] = vb as i32;
+            }
+            kc[i * plane..(i + 1) * plane].copy_from_slice(&q.kv.k);
+        }
+        let out = self.call(
+            &art,
+            &[
+                In::I32(&toks, vec![g, s]),
+                In::I32(&old, vec![g, s]),
+                In::I32(&valid, vec![g, s]),
+                In::F32(&kc, vec![g, l, s, d]),
+            ],
+        )?;
+        let k_rot = to_f32(&out[0])?; // [G, L, S, d]
+        let scores = to_f32(&out[1])?; // [G, S]
+        Ok((0..n)
+            .map(|i| {
+                let mut kv = KvBuf::zeroed(l, s, d);
+                kv.k.copy_from_slice(
+                    &k_rot[i * plane..(i + 1) * plane],
+                );
+                RopeDiffOut {
+                    k_rot: kv,
+                    scores: scores[i * s..(i + 1) * s].to_vec(),
+                }
+            })
+            .collect())
+    }
+
+    fn selective(&self, model: &str, input: &SelectiveIn)
+        -> Result<SelectiveOut>
+    {
+        let spec = self.spec(model)?.clone();
+        let (l, s, d) = (spec.n_layers, spec.max_seq, spec.d_model);
+        let r = self
+            .buckets()
+            .fit_select(input.sel.len())
+            .ok_or_else(|| {
+                anyhow!("selection of {} exceeds max bucket", input.sel.len())
+            })?;
+        let art = self.artifact("selective", model, Some(r))?;
+        let mut toks = vec![PAD_ID as i32; s];
+        for (j, &tk) in input.tokens.iter().enumerate() {
+            toks[j] = tk as i32;
+        }
+        let mut sel = vec![(input.len - 1) as i32; r];
+        sel[..input.sel.len()].copy_from_slice(input.sel);
+        let lenv = [input.len as i32];
+        let out = self.call(
+            &art,
+            &[
+                In::I32(&toks, vec![s]),
+                In::I32(&sel, vec![r]),
+                In::F32(&input.kv.k, vec![l, s, d]),
+                In::F32(&input.kv.v, vec![l, s, d]),
+                In::I32(&lenv, vec![1]),
+            ],
+        )?;
+        let logits = to_f32(&out[0])?;
+        let mut kv = KvBuf::zeroed(l, s, d);
+        kv.k = to_f32(&out[1])?;
+        kv.v = to_f32(&out[2])?;
+        Ok(SelectiveOut { logits, kv })
+    }
+
+    fn fused_restore(
+        &self,
+        model: &str,
+        master_k: &KvBuf,
+        diff: &SparseDiff,
+        old_pos: &[i32],
+        new_pos: &[i32],
+    ) -> Result<KvBuf> {
+        let spec = self.spec(model)?.clone();
+        let (l, s, d, bt) =
+            (spec.n_layers, spec.max_seq, spec.d_model, spec.block_tokens);
+        let nb = self
+            .buckets()
+            .fit_diff(diff.block_ids.len())
+            .ok_or_else(|| {
+                anyhow!("diff of {} blocks exceeds bucket", diff.block_ids.len())
+            })?;
+        let art = self.artifact("restore", model, Some(nb))?;
+        let blk = l * bt * d;
+        let mut ids = vec![-1i32; nb];
+        ids[..diff.block_ids.len()].copy_from_slice(diff.block_ids);
+        let mut dk = vec![0f32; nb * blk];
+        dk[..diff.diff_k.len()].copy_from_slice(diff.diff_k);
+        let out = self.call(
+            &art,
+            &[
+                In::F32(&master_k.k, vec![l, s, d]),
+                In::I32(&ids, vec![nb]),
+                In::F32(&dk, vec![nb, l, bt, d]),
+                In::I32(old_pos, vec![s]),
+                In::I32(new_pos, vec![s]),
+            ],
+        )?;
+        let mut kv = KvBuf::zeroed(l, s, d);
+        kv.k = to_f32(&out[0])?;
+        Ok(kv)
+    }
+
+    fn rope_recover(
+        &self,
+        model: &str,
+        k: &mut KvBuf,
+        old_pos: &[i32],
+        new_pos: &[i32],
+    ) -> Result<()> {
+        let spec = self.spec(model)?.clone();
+        let (l, s, d) = (spec.n_layers, spec.max_seq, spec.d_model);
+        let art = self.artifact("rope_recover", model, None)?;
+        let out = self.call(
+            &art,
+            &[
+                In::F32(&k.k, vec![l, s, d]),
+                In::I32(old_pos, vec![s]),
+                In::I32(new_pos, vec![s]),
+            ],
+        )?;
+        k.k = to_f32(&out[0])?;
+        Ok(())
+    }
+
+    fn calls(&self) -> u64 {
+        *self.calls.borrow()
+    }
+}

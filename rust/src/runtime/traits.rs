@@ -1,0 +1,153 @@
+//! The `ModelRuntime` abstraction: everything the L3 coordinator needs from
+//! the compiled model, expressed over host tensors. Implemented by
+//! [`crate::runtime::pjrt::PjrtRuntime`] (real AOT artifacts via the PJRT C
+//! API) and [`crate::runtime::mock::MockRuntime`] (deterministic fake for
+//! logic tests and scheduler benches).
+
+use anyhow::Result;
+
+use super::kv::KvBuf;
+use crate::model::{Buckets, ModelSpec};
+
+/// Prefill result: next-token logits + the prompt's K/V ([L, T, d] with
+/// T = the shape bucket used; rows past `len` are padding garbage).
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+    pub kv: KvBuf,
+}
+
+/// One sequence's decode-step input.
+pub struct DecodeSeq<'a> {
+    pub token: u32,
+    /// Current cache length; the new token's position == len.
+    pub len: usize,
+    pub kv: &'a KvBuf,
+}
+
+/// Decode result for one sequence: logits + the new token's K/V rows
+/// ([L, d] each) which the caller writes at slot `len`.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+}
+
+/// Input for the collective rope+diff pass (one request of the group).
+pub struct RopeDiffSeq<'a> {
+    /// Full padded prompt tokens [S].
+    pub tokens: &'a [u32],
+    /// Donor positions per slot [S] (meaningful where valid == 1).
+    pub old_pos: &'a [i32],
+    /// 1 where the slot holds a reused cached token.
+    pub valid: &'a [u8],
+    /// Cached K planes gathered from donors, [L, S, d] (in `kv.k`; the V
+    /// planes ride along untouched by the rotation).
+    pub kv: &'a KvBuf,
+}
+
+/// Output of the collective pass for one request: rotated K planes and
+/// per-slot deviation scores.
+pub struct RopeDiffOut {
+    pub k_rot: KvBuf,
+    pub scores: Vec<f32>,
+}
+
+/// Input to selective recomputation for one request.
+pub struct SelectiveIn<'a> {
+    /// Full padded prompt tokens [S].
+    pub tokens: &'a [u32],
+    /// Positions to recompute (engine pads to the R bucket by repeating
+    /// len-1; must include len-1).
+    pub sel: &'a [i32],
+    /// The blended cache to correct, [L, S, d] planes.
+    pub kv: &'a KvBuf,
+    pub len: usize,
+}
+
+pub struct SelectiveOut {
+    pub logits: Vec<f32>,
+    pub kv: KvBuf,
+}
+
+/// A block-sparse Mirror K-diff (token-block granularity, all layers).
+/// V corrections never cross the runtime boundary — V has no positional
+/// component, so the host transfer pass applies them directly.
+pub struct SparseDiff<'a> {
+    /// Token-block ids (each covers `block_tokens` slots, all layers).
+    pub block_ids: &'a [i32],
+    /// K correction values, [NB, L, B, d] flattened.
+    pub diff_k: &'a [f32],
+}
+
+/// The runtime interface the coordinator drives. One instance serves all
+/// models listed in the manifest.
+pub trait ModelRuntime {
+    fn spec(&self, model: &str) -> Result<&ModelSpec>;
+    fn buckets(&self) -> &Buckets;
+
+    /// Full prefill of `tokens[..len]` (padded to a T bucket internally).
+    fn prefill(&self, model: &str, tokens: &[u32], len: usize)
+        -> Result<PrefillOut>;
+
+    /// One decode step for a batch of sequences (padded to a B bucket).
+    fn decode(&self, model: &str, seqs: &[DecodeSeq]) -> Result<Vec<DecodeOut>>;
+
+    /// Collective RoPE re-rotation + check-layer diff scoring for a group
+    /// (padded to a G bucket). `group.len() == 1` is the serial PIC path.
+    fn ropediff(&self, model: &str, group: &[RopeDiffSeq])
+        -> Result<Vec<RopeDiffOut>>;
+
+    /// CacheBlend-style selective recomputation of `sel` rows.
+    fn selective(&self, model: &str, input: &SelectiveIn)
+        -> Result<SelectiveOut>;
+
+    /// Fused Mirror K-restore: master K + block-sparse K diff + RoPE
+    /// recovery in one pass (paper Algorithm 1; the V plane rides the host
+    /// transfer). Returns the restored K planes in `out.k` (out.v zeroed).
+    fn fused_restore(
+        &self,
+        model: &str,
+        master_k: &KvBuf,
+        diff: &SparseDiff,
+        old_pos: &[i32],
+        new_pos: &[i32],
+    ) -> Result<KvBuf>;
+
+    /// Standalone RoPE recovery of a dense K plane set (the dense-restore
+    /// baseline's second pass).
+    fn rope_recover(
+        &self,
+        model: &str,
+        k: &mut KvBuf,
+        old_pos: &[i32],
+        new_pos: &[i32],
+    ) -> Result<()>;
+
+    /// Number of executable invocations so far (perf accounting).
+    fn calls(&self) -> u64;
+}
+
+/// Greedy argmax over logits — sampling is always greedy (temperature 0)
+/// to match the paper's accuracy methodology (§6.6).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

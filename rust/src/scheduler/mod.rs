@@ -1,0 +1,152 @@
+//! Admission queue + continuous-batching schedule decisions.
+//!
+//! The engine is single-threaded (one "GPU"); the scheduler decides which
+//! waiting requests to admit (KV-pool space for prompt + generation must be
+//! available), which running sequences join the next decode step (capped by
+//! the largest decode bucket), and which retained caches to evict or swap
+//! when admission stalls — the behavior Figure 2 attributes to memory
+//! saturation ("forcing the scheduler to preempt and swap").
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A queued subrequest (engine-level handle).
+#[derive(Clone, Debug)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub arrived: Instant,
+    /// Blocks required to admit: prompt + max_new tokens.
+    pub blocks_needed: usize,
+}
+
+/// The admission queue (FIFO; head-of-line blocking is intentional — it is
+/// what the paper's latency curves measure under memory pressure).
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    q: VecDeque<QueuedRequest>,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: QueuedRequest) {
+        self.q.push_back(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Blocks the head request needs (eviction target for the engine).
+    pub fn head_demand(&self) -> Option<usize> {
+        self.q.front().map(|r| r.blocks_needed)
+    }
+
+    /// Pop every request (in order) that fits in `free_blocks`, stopping at
+    /// the first that does not fit (FIFO admission, no reordering).
+    pub fn admit(&mut self, mut free_blocks: usize) -> Vec<QueuedRequest> {
+        let mut out = Vec::new();
+        while let Some(front) = self.q.front() {
+            if front.blocks_needed <= free_blocks {
+                free_blocks -= front.blocks_needed;
+                out.push(self.q.pop_front().unwrap());
+            } else {
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Split `n_running` sequences into decode batches bounded by the largest
+/// decode bucket (round-robin over steps happens naturally as the engine
+/// loops).
+pub fn decode_batches(n_running: usize, max_batch: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < n_running {
+        let end = (start + max_batch).min(n_running);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+/// Retention-eviction policy: given retained (idle) cache owners ordered by
+/// last use (oldest first) and the block deficit, return how many owners to
+/// evict to cover the deficit.
+pub fn plan_evictions(
+    retained_blocks: &[usize],
+    deficit: usize,
+) -> usize {
+    let mut freed = 0usize;
+    let mut n = 0usize;
+    for &b in retained_blocks {
+        if freed >= deficit {
+            break;
+        }
+        freed += b;
+        n += 1;
+    }
+    if freed >= deficit {
+        n
+    } else {
+        retained_blocks.len() // evict everything; may still not fit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, blocks: usize) -> QueuedRequest {
+        QueuedRequest { id, arrived: Instant::now(), blocks_needed: blocks }
+    }
+
+    #[test]
+    fn fifo_admission_no_reorder() {
+        let mut q = AdmissionQueue::new();
+        q.push(req(1, 4));
+        q.push(req(2, 10)); // too big
+        q.push(req(3, 1)); // would fit, but FIFO blocks it
+        let admitted = q.admit(6);
+        assert_eq!(
+            admitted.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1]
+        );
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.head_demand(), Some(10));
+    }
+
+    #[test]
+    fn admits_multiple_when_space() {
+        let mut q = AdmissionQueue::new();
+        q.push(req(1, 3));
+        q.push(req(2, 3));
+        q.push(req(3, 3));
+        let admitted = q.admit(7);
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn decode_batches_cover_all() {
+        assert_eq!(decode_batches(0, 16), vec![]);
+        assert_eq!(decode_batches(5, 16), vec![(0, 5)]);
+        assert_eq!(decode_batches(20, 16), vec![(0, 16), (16, 20)]);
+    }
+
+    #[test]
+    fn eviction_plan_covers_deficit() {
+        assert_eq!(plan_evictions(&[4, 4, 4], 6), 2);
+        assert_eq!(plan_evictions(&[4, 4, 4], 20), 3);
+        assert_eq!(plan_evictions(&[], 5), 0);
+        assert_eq!(plan_evictions(&[8], 0), 0);
+    }
+}

@@ -1,0 +1,447 @@
+//! Block-sparse K/V diff encoding (paper §4.3, "Block-Sparse Diff
+//! Representation"). A diff records the 16-token blocks (all layers, K and
+//! V planes) where a Mirror's cache differs from its Master, plus the
+//! Mirror's values for those blocks. K and V share the block-index list
+//! (the paper's metadata-sharing optimization): a block is listed if
+//! *either* plane differs anywhere in it.
+
+use crate::runtime::KvBuf;
+
+/// A block-sparse diff between a mirror and a master of equal valid length.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BlockSparseDiff {
+    /// Differing token-block ids (ascending); each covers `block_tokens`
+    /// slots across all layers.
+    pub block_ids: Vec<i32>,
+    /// Mirror K values for the listed blocks, [NB, L, B, d] flattened.
+    pub k: Vec<f32>,
+    /// Mirror V values, same shape.
+    pub v: Vec<f32>,
+    pub block_tokens: usize,
+    pub layers: usize,
+    pub d: usize,
+}
+
+impl BlockSparseDiff {
+    /// Resident bytes of the diff (values + index metadata).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4 + self.block_ids.len() * 4
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.block_ids.len()
+    }
+
+    /// Elements of one block in one plane.
+    fn block_elems(&self) -> usize {
+        self.layers * self.block_tokens * self.d
+    }
+
+    /// Apply only the V-plane corrections (the fused path restores K
+    /// through the kernel and V through the host transfer).
+    pub fn apply_v_to(&self, kv: &mut KvBuf) {
+        let bt = self.block_tokens;
+        let be = bt * self.d;
+        for (bi, &bid) in self.block_ids.iter().enumerate() {
+            let tok0 = bid as usize * bt;
+            let n = bt.min(kv.seq.saturating_sub(tok0)) * self.d;
+            for l in 0..self.layers {
+                let src = bi * self.block_elems() + l * be;
+                let o = kv.off(l, tok0);
+                kv.v[o..o + n].copy_from_slice(&self.v[src..src + n]);
+            }
+        }
+    }
+
+    /// Apply the diff onto a dense buffer (the host-side half of dense
+    /// restore; the fused path does this on the fly inside the transfer).
+    pub fn apply_to(&self, kv: &mut KvBuf) {
+        let bt = self.block_tokens;
+        let be = bt * self.d;
+        for (bi, &bid) in self.block_ids.iter().enumerate() {
+            let tok0 = bid as usize * bt;
+            // tail blocks may be partial when the target buffer is compact
+            let n = bt.min(kv.seq.saturating_sub(tok0)) * self.d;
+            for l in 0..self.layers {
+                let src = bi * self.block_elems() + l * be;
+                let o = kv.off(l, tok0);
+                kv.k[o..o + n].copy_from_slice(&self.k[src..src + n]);
+                kv.v[o..o + n].copy_from_slice(&self.v[src..src + n]);
+            }
+        }
+    }
+}
+
+/// A content-aligned Mirror encoding: each mirror block names the master
+/// block it was sourced from (matched by token content), the per-slot
+/// source positions give the RoPE recovery deltas, and `corrections` holds
+/// the blocks whose values the source + rotation cannot reproduce
+/// (recomputed positions, private content). Correction values are stored
+/// in the *source position frame* so the restore path can apply them
+/// before the single RoPE-recovery pass (paper Algorithm 1: diff at line
+/// 7, RoPERecover at line 9).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AlignedDiff {
+    /// Per mirror block: source master block id, or -1 (no source — the
+    /// whole block lives in `corrections`).
+    pub src_block: Vec<i32>,
+    /// Per mirror slot: the master position its row is sourced from
+    /// (slot itself when no source, making the rotation the identity).
+    pub src_pos: Vec<i32>,
+    /// Blocks where gather+rotate differs from the mirror (values in the
+    /// source frame).
+    pub corrections: BlockSparseDiff,
+}
+
+impl AlignedDiff {
+    pub fn bytes(&self) -> usize {
+        self.corrections.bytes()
+            + self.src_block.len() * 4
+            + self.src_pos.len() * 4
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.corrections.n_blocks()
+    }
+}
+
+/// Compute the block-sparse diff of `mirror` against `master` over the
+/// first `valid_len` tokens. Buffers may be padded (seq >= valid_len);
+/// both must share layout. `tol` is the per-element tolerance: 0.0 for
+/// bitwise diffs, a small epsilon when comparing across composed RoPE
+/// rotations (float roundoff).
+pub fn diff_blocks_tol(
+    master: &KvBuf,
+    mirror: &KvBuf,
+    valid_len: usize,
+    block_tokens: usize,
+    tol: f32,
+) -> BlockSparseDiff {
+    debug_assert_eq!(master.layers, mirror.layers);
+    debug_assert_eq!(master.d, mirror.d);
+    let layers = master.layers;
+    let d = master.d;
+    let nb = valid_len.div_ceil(block_tokens);
+    let mut out = BlockSparseDiff {
+        block_ids: Vec::new(),
+        k: Vec::new(),
+        v: Vec::new(),
+        block_tokens,
+        layers,
+        d,
+    };
+    for b in 0..nb {
+        let tok0 = b * block_tokens;
+        let ntok = block_tokens.min(valid_len - tok0);
+        let mut differs = false;
+        'scan: for l in 0..layers {
+            let mo = master.off(l, tok0);
+            let ro = mirror.off(l, tok0);
+            for i in 0..ntok * d {
+                if (master.k[mo + i] - mirror.k[ro + i]).abs() > tol
+                    || (master.v[mo + i] - mirror.v[ro + i]).abs() > tol
+                {
+                    differs = true;
+                    break 'scan;
+                }
+            }
+        }
+        if differs {
+            out.block_ids.push(b as i32);
+            // store the mirror's full block (padded region copied as-is so
+            // the restore scatter is branch-free)
+            for l in 0..layers {
+                let ro = mirror.off(l, tok0);
+                let take = ntok * d;
+                out.k.extend_from_slice(&mirror.k[ro..ro + take]);
+                out.k.extend(std::iter::repeat(0.0)
+                    .take((block_tokens - ntok) * d));
+                out.v.extend_from_slice(&mirror.v[ro..ro + take]);
+                out.v.extend(std::iter::repeat(0.0)
+                    .take((block_tokens - ntok) * d));
+            }
+        }
+    }
+    out
+}
+
+/// Extract the given token-blocks of a buffer into a BlockSparseDiff
+/// (values verbatim). Used to re-express correction values in a different
+/// position frame than the one the block ids were detected in.
+pub fn extract_blocks(
+    src: &KvBuf,
+    block_ids: &[i32],
+    valid_len: usize,
+    block_tokens: usize,
+) -> BlockSparseDiff {
+    let mut out = BlockSparseDiff {
+        block_ids: block_ids.to_vec(),
+        k: Vec::new(),
+        v: Vec::new(),
+        block_tokens,
+        layers: src.layers,
+        d: src.d,
+    };
+    for &bid in block_ids {
+        let tok0 = bid as usize * block_tokens;
+        let ntok = block_tokens.min(valid_len.saturating_sub(tok0));
+        for l in 0..src.layers {
+            let so = src.off(l, tok0);
+            let take = ntok * src.d;
+            out.k.extend_from_slice(&src.k[so..so + take]);
+            out.k.extend(
+                std::iter::repeat(0.0).take((block_tokens - ntok) * src.d),
+            );
+            out.v.extend_from_slice(&src.v[so..so + take]);
+            out.v.extend(
+                std::iter::repeat(0.0).take((block_tokens - ntok) * src.d),
+            );
+        }
+    }
+    out
+}
+
+/// Bitwise block-sparse diff (positional alignment) — see
+/// [`diff_blocks_tol`].
+pub fn diff_blocks(
+    master: &KvBuf,
+    mirror: &KvBuf,
+    valid_len: usize,
+    block_tokens: usize,
+) -> BlockSparseDiff {
+    diff_blocks_tol(master, mirror, valid_len, block_tokens, 0.0)
+}
+
+/// Match mirror blocks to master blocks by token content: returns per
+/// mirror block the id of a master block with identical tokens (first
+/// match), or -1. `block_tokens`-sized chunks; partial tail blocks only
+/// match partial tails of equal length.
+pub fn match_blocks_by_content(
+    master_tokens: &[u32],
+    mirror_tokens: &[u32],
+    block_tokens: usize,
+) -> Vec<i32> {
+    use std::collections::HashMap;
+    let mut index: HashMap<&[u32], i32> = HashMap::new();
+    let n_master = master_tokens.len().div_ceil(block_tokens);
+    for b in (0..n_master).rev() {
+        let lo = b * block_tokens;
+        let hi = (lo + block_tokens).min(master_tokens.len());
+        // rev() so the FIRST master occurrence wins on duplicates
+        index.insert(&master_tokens[lo..hi], b as i32);
+    }
+    let n_mirror = mirror_tokens.len().div_ceil(block_tokens);
+    (0..n_mirror)
+        .map(|b| {
+            let lo = b * block_tokens;
+            let hi = (lo + block_tokens).min(mirror_tokens.len());
+            index.get(&mirror_tokens[lo..hi]).copied().unwrap_or(-1)
+        })
+        .collect()
+}
+
+/// Match mirror blocks to master blocks by *segment identity*: two
+/// prompts' segments with equal content hashes map chunk-for-chunk (both
+/// sides' copies were reused from the same donor object, so their values
+/// are rotation-consistent — chunk-level content matching alone can
+/// collide when different donors contain identical 16-token chunks, e.g.
+/// repetitive greedy outputs, whose context-dependent V values differ).
+/// Segments must start block-aligned (the workload pads blocks).
+pub fn match_blocks_by_segments(
+    master_segs: &[crate::rounds::Segment],
+    mirror_segs: &[crate::rounds::Segment],
+    mirror_len: usize,
+    block_tokens: usize,
+) -> Vec<i32> {
+    use std::collections::HashMap;
+    let mut by_hash: HashMap<(u64, usize), usize> = HashMap::new();
+    for seg in master_segs.iter().rev() {
+        by_hash.insert((seg.hash, seg.len()), seg.start);
+    }
+    let nb = mirror_len.div_ceil(block_tokens);
+    let mut out = vec![-1i32; nb];
+    for seg in mirror_segs {
+        if seg.is_empty() || seg.start % block_tokens != 0 {
+            continue;
+        }
+        let Some(&mstart) = by_hash.get(&(seg.hash, seg.len())) else {
+            continue;
+        };
+        if mstart % block_tokens != 0 {
+            continue;
+        }
+        let n_chunks = seg.len() / block_tokens; // full chunks only
+        for j in 0..n_chunks {
+            let mb = seg.start / block_tokens + j;
+            if mb < nb {
+                out[mb] = (mstart / block_tokens + j) as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Gather a permuted master: for each mirror block with a source, copy the
+/// master's block rows into the mirror's slot range; record per-slot
+/// source positions (master positions for sourced slots, the slot itself
+/// otherwise). Returns (permuted buffer padded like `out_template`,
+/// src_pos).
+pub fn gather_permuted_master(
+    master: &KvBuf,
+    master_positions: &[i32],
+    src_block: &[i32],
+    mirror_len: usize,
+    block_tokens: usize,
+    padded_seq: usize,
+) -> (KvBuf, Vec<i32>) {
+    let mut out = KvBuf::zeroed(master.layers, padded_seq, master.d);
+    let mut src_pos: Vec<i32> = (0..padded_seq as i32).collect();
+    for (b, &src) in src_block.iter().enumerate() {
+        let lo = b * block_tokens;
+        let hi = (lo + block_tokens).min(mirror_len);
+        if src < 0 {
+            continue;
+        }
+        let mlo = src as usize * block_tokens;
+        let n = hi - lo;
+        out.copy_rows_from(master, mlo, lo, n.min(master.seq - mlo));
+        for i in 0..n {
+            src_pos[lo + i] = master_positions
+                .get(mlo + i)
+                .copied()
+                .unwrap_or((mlo + i) as i32);
+        }
+    }
+    (out, src_pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(layers: usize, seq: usize, d: usize) -> KvBuf {
+        let mut kv = KvBuf::zeroed(layers, seq, d);
+        for (i, x) in kv.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        for (i, x) in kv.v.iter_mut().enumerate() {
+            *x = -(i as f32);
+        }
+        kv
+    }
+
+    #[test]
+    fn identical_buffers_produce_empty_diff() {
+        let a = buf(2, 64, 8);
+        let d = diff_blocks(&a, &a.clone(), 64, 16);
+        assert!(d.block_ids.is_empty());
+        assert_eq!(d.bytes(), 0);
+    }
+
+    #[test]
+    fn single_element_change_flags_one_block() {
+        let a = buf(2, 64, 8);
+        let mut b = a.clone();
+        let o = b.off(1, 33); // token 33 -> block 2
+        b.v[o + 3] += 7.0;
+        let d = diff_blocks(&a, &b, 64, 16);
+        assert_eq!(d.block_ids, vec![2]);
+        // applying the diff onto a copy of the master reproduces the mirror
+        let mut restored = a.clone();
+        d.apply_to(&mut restored);
+        assert_eq!(restored, b);
+    }
+
+    #[test]
+    fn partial_tail_block_roundtrip() {
+        let a = buf(2, 64, 8);
+        let mut b = a.clone();
+        let o = b.off(0, 50); // valid_len 52 -> tail block is partial
+        b.k[o] = 1e6;
+        let d = diff_blocks(&a, &b, 52, 16);
+        assert_eq!(d.block_ids, vec![3]);
+        let mut restored = a.clone();
+        d.apply_to(&mut restored);
+        for l in 0..2 {
+            for s in 0..52 {
+                assert_eq!(restored.k_row(l, s), b.k_row(l, s));
+                assert_eq!(restored.v_row(l, s), b.v_row(l, s));
+            }
+        }
+    }
+
+    #[test]
+    fn shared_index_covers_k_and_v() {
+        let a = buf(1, 32, 4);
+        let mut b = a.clone();
+        let ok = b.off(0, 2);
+        b.k[ok] += 1.0; // K differs in block 0
+        let ov = b.off(0, 20);
+        b.v[ov] += 1.0; // V differs in block 1
+        let d = diff_blocks(&a, &b, 32, 16);
+        assert_eq!(d.block_ids, vec![0, 1], "one shared list for K and V");
+    }
+
+    #[test]
+    fn tolerance_suppresses_roundoff() {
+        let a = buf(1, 32, 4);
+        let mut b = a.clone();
+        for x in b.k.iter_mut() {
+            *x += 1e-6; // roundoff-scale noise everywhere
+        }
+        let o = b.off(0, 20);
+        b.k[o] += 1.0; // one real change in block 1
+        assert_eq!(diff_blocks_tol(&a, &b, 32, 16, 1e-4).block_ids, vec![1]);
+        assert_eq!(diff_blocks(&a, &b, 32, 16).block_ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn content_matching_finds_shifted_blocks() {
+        // master: [A B C D], mirror: [X B A D] at block granularity
+        let blk = |c: u32| -> Vec<u32> { (0..16).map(|i| c * 100 + i).collect() };
+        let master: Vec<u32> =
+            [blk(1), blk(2), blk(3), blk(4)].concat();
+        let mirror: Vec<u32> =
+            [blk(9), blk(2), blk(1), blk(4)].concat();
+        let m = match_blocks_by_content(&master, &mirror, 16);
+        assert_eq!(m, vec![-1, 1, 0, 3]);
+    }
+
+    #[test]
+    fn partial_tail_blocks_match_only_equal_length() {
+        let master: Vec<u32> = (0..20).collect(); // blocks: [0..16], [16..20]
+        let mirror: Vec<u32> = (0..20).collect();
+        assert_eq!(match_blocks_by_content(&master, &mirror, 16), vec![0, 1]);
+        let shorter: Vec<u32> = (0..18).collect();
+        let m = match_blocks_by_content(&master, &shorter, 16);
+        assert_eq!(m[0], 0);
+        assert_eq!(m[1], -1, "different tail length must not match");
+    }
+
+    #[test]
+    fn gather_permuted_master_maps_positions() {
+        let master = buf(2, 32, 4);
+        let master_pos: Vec<i32> = (10..42).collect();
+        // mirror block 0 sourced from master block 1; block 1 unsourced
+        let (out, src_pos) = gather_permuted_master(
+            &master, &master_pos, &[1, -1], 32, 16, 64,
+        );
+        assert_eq!(out.k_row(0, 0), master.k_row(0, 16));
+        assert_eq!(src_pos[0], 26); // master position of slot 16
+        assert_eq!(src_pos[16], 16); // unsourced: identity
+        assert_eq!(out.k_row(1, 20), &[0.0; 4][..]);
+    }
+
+    #[test]
+    fn bytes_grow_with_blocks() {
+        let a = buf(2, 64, 8);
+        let mut b = a.clone();
+        for blk in [0usize, 2] {
+            let o = b.off(0, blk * 16);
+            b.k[o] += 1.0;
+        }
+        let d = diff_blocks(&a, &b, 64, 16);
+        assert_eq!(d.n_blocks(), 2);
+        assert_eq!(d.bytes(), 2 * (2 * 16 * 8 * 4 * 2) + 2 * 4);
+    }
+}

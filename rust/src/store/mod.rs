@@ -1,0 +1,507 @@
+//! Diff-aware CPU-side cache store (paper §4.3) — the LMCache-analog layer.
+//!
+//! Two entry classes:
+//!
+//! * **Dense** — a full [L, len, d] K/V copy (what every baseline stores,
+//!   and what Masters are).
+//! * **Mirror** — a reference to a Master plus a block-sparse K/V diff:
+//!   the token-blocks (16 tokens × all layers) where the mirror's cache
+//!   differs from the master's, at 10–20% of positions in All-Gather
+//!   rounds. Reads return a lazy [`MirrorHandle`]; materialization is
+//!   deferred to the restore path (fused or dense).
+//!
+//! Entries are keyed by segment content hash + a role tag, so both segment
+//! donors (shared output blocks) and retained agent caches live here. When
+//! a reuse plan names the Master, the store uses it; otherwise a
+//! token-similarity heuristic picks the closest existing dense entry
+//! (paper's fallback).
+
+pub mod diff;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::ModelSpec;
+use crate::runtime::KvBuf;
+pub use diff::{
+    diff_blocks, diff_blocks_tol, extract_blocks, gather_permuted_master,
+    match_blocks_by_content, match_blocks_by_segments, AlignedDiff,
+    BlockSparseDiff,
+};
+
+/// Key of a stored cache object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StoreKey {
+    /// Content hash of the token segment (or full context for retained
+    /// agent caches).
+    pub content: u64,
+    /// Disambiguates roles (segment donor vs agent retention).
+    pub role: Role,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Role {
+    /// KV of one shared output block (donor for PIC reuse).
+    Segment,
+    /// A full retained agent context cache (master or mirror).
+    AgentCache { agent: usize },
+}
+
+/// Dense stored entry.
+#[derive(Clone, Debug)]
+pub struct DenseEntry {
+    pub tokens: Vec<u32>,
+    /// Positions the rows were computed at (slot i held position pos[i]).
+    pub positions: Vec<i32>,
+    /// [L, len, d] planes (seq == len, compact).
+    pub kv: KvBuf,
+}
+
+/// Mirror entry: master reference + content-aligned block-sparse diff.
+#[derive(Clone, Debug)]
+pub struct MirrorEntry {
+    pub master: StoreKey,
+    pub tokens: Vec<u32>,
+    pub positions: Vec<i32>,
+    pub diff: AlignedDiff,
+}
+
+#[derive(Clone, Debug)]
+pub enum Entry {
+    Dense(DenseEntry),
+    Mirror(MirrorEntry),
+}
+
+/// Lazy read handle for a Mirror: everything the restore path needs without
+/// materializing a dense tensor (paper: "a lightweight mirror object").
+pub struct MirrorHandle<'a> {
+    pub master: &'a DenseEntry,
+    pub mirror: &'a MirrorEntry,
+}
+
+/// Storage accounting for the Fig-12 compression analysis.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    pub dense_entries: usize,
+    pub mirror_entries: usize,
+    pub dense_bytes: usize,
+    pub mirror_bytes: usize,
+    /// Bytes mirrors would occupy if stored dense (the baseline cost).
+    pub mirror_dense_equiv_bytes: usize,
+    /// Dense bytes held by full agent-context caches (Masters + dense
+    /// retention) as opposed to small segment donors.
+    pub agent_dense_bytes: usize,
+    /// Total diff blocks across mirrors (Fig-12 right panel).
+    pub mirror_diff_blocks: usize,
+}
+
+impl StoreStats {
+    /// Whole-store compression ratio: full-dense cost / actual cost.
+    pub fn compression_ratio(&self) -> f64 {
+        let actual = (self.dense_bytes + self.mirror_bytes) as f64;
+        let dense_equiv =
+            (self.dense_bytes + self.mirror_dense_equiv_bytes) as f64;
+        if actual == 0.0 {
+            1.0
+        } else {
+            dense_equiv / actual
+        }
+    }
+
+    /// The paper's Fig-12 ratio, over the sibling cache *family* only
+    /// (Masters + Mirrors; segment donors excluded): what the round's N
+    /// caches would cost dense, divided by master-plus-diff cost.
+    pub fn family_compression_ratio(&self) -> f64 {
+        let actual = (self.agent_dense_bytes + self.mirror_bytes) as f64;
+        let dense_equiv = (self.agent_dense_bytes
+            + self.mirror_dense_equiv_bytes) as f64;
+        if actual == 0.0 {
+            1.0
+        } else {
+            dense_equiv / actual
+        }
+    }
+
+    /// Average diff blocks per mirror (Fig-12 right panel).
+    pub fn avg_changed_blocks(&self) -> f64 {
+        if self.mirror_entries == 0 {
+            0.0
+        } else {
+            self.mirror_diff_blocks as f64 / self.mirror_entries as f64
+        }
+    }
+}
+
+/// The store itself. `capacity_bytes` bounds resident data; inserting past
+/// capacity evicts least-recently-used entries (masters are pinned while
+/// mirrors reference them).
+pub struct CacheStore {
+    spec: ModelSpec,
+    entries: HashMap<StoreKey, Entry>,
+    lru: Vec<StoreKey>, // front = oldest
+    capacity_bytes: usize,
+    bytes: usize,
+    /// master key -> number of mirrors referencing it
+    master_refs: HashMap<StoreKey, usize>,
+    pub evictions: u64,
+}
+
+fn dense_bytes(e: &DenseEntry) -> usize {
+    e.kv.bytes() + e.tokens.len() * 8
+}
+
+fn mirror_bytes(m: &MirrorEntry) -> usize {
+    m.diff.bytes() + m.tokens.len() * 8
+}
+
+impl CacheStore {
+    pub fn new(spec: &ModelSpec, capacity_bytes: usize) -> Self {
+        CacheStore {
+            spec: spec.clone(),
+            entries: HashMap::new(),
+            lru: Vec::new(),
+            capacity_bytes,
+            bytes: 0,
+            master_refs: HashMap::new(),
+            evictions: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn touch(&mut self, key: StoreKey) {
+        if let Some(p) = self.lru.iter().position(|k| *k == key) {
+            self.lru.remove(p);
+        }
+        self.lru.push(key);
+    }
+
+    fn entry_bytes(e: &Entry) -> usize {
+        match e {
+            Entry::Dense(d) => dense_bytes(d),
+            Entry::Mirror(m) => mirror_bytes(m),
+        }
+    }
+
+    fn evict_for(&mut self, need: usize) {
+        let mut i = 0;
+        while self.bytes + need > self.capacity_bytes && i < self.lru.len() {
+            let key = self.lru[i];
+            let pinned = self.master_refs.get(&key).copied().unwrap_or(0) > 0;
+            if pinned {
+                i += 1;
+                continue;
+            }
+            self.lru.remove(i);
+            if let Some(e) = self.entries.remove(&key) {
+                self.bytes -= Self::entry_bytes(&e);
+                if let Entry::Mirror(m) = &e {
+                    if let Some(rc) = self.master_refs.get_mut(&m.master) {
+                        *rc = rc.saturating_sub(1);
+                    }
+                }
+                self.evictions += 1;
+            }
+        }
+    }
+
+    fn remove_existing(&mut self, key: StoreKey) {
+        if let Some(old) = self.entries.remove(&key) {
+            self.bytes -= Self::entry_bytes(&old);
+            if let Entry::Mirror(m) = &old {
+                if let Some(rc) = self.master_refs.get_mut(&m.master) {
+                    *rc = rc.saturating_sub(1);
+                }
+            }
+            if let Some(p) = self.lru.iter().position(|k| *k == key) {
+                self.lru.remove(p);
+            }
+        }
+    }
+
+    /// Insert (or replace) a dense entry.
+    pub fn put_dense(&mut self, key: StoreKey, entry: DenseEntry) {
+        self.remove_existing(key);
+        let nb = dense_bytes(&entry);
+        self.evict_for(nb);
+        self.bytes += nb;
+        self.entries.insert(key, Entry::Dense(entry));
+        self.touch(key);
+    }
+
+    /// Insert a mirror referencing `master` (which must be dense).
+    pub fn put_mirror(&mut self, key: StoreKey, entry: MirrorEntry)
+        -> Result<()>
+    {
+        match self.entries.get(&entry.master) {
+            Some(Entry::Dense(_)) => {}
+            _ => return Err(anyhow!("mirror master missing or not dense")),
+        }
+        self.remove_existing(key);
+        let nb = mirror_bytes(&entry);
+        self.evict_for(nb);
+        self.bytes += nb;
+        *self.master_refs.entry(entry.master).or_insert(0) += 1;
+        self.entries.insert(key, Entry::Mirror(entry));
+        self.touch(key);
+        Ok(())
+    }
+
+    pub fn contains(&self, key: &StoreKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// Fetch an entry. Dense entries come back directly; mirrors come back
+    /// as lazy handles.
+    pub fn get(&mut self, key: &StoreKey) -> Option<Fetched<'_>> {
+        if !self.entries.contains_key(key) {
+            return None;
+        }
+        self.touch(*key);
+        match self.entries.get(key) {
+            Some(Entry::Dense(d)) => Some(Fetched::Dense(d)),
+            Some(Entry::Mirror(m)) => {
+                let master = match self.entries.get(&m.master) {
+                    Some(Entry::Dense(d)) => d,
+                    _ => return None, // master evicted (shouldn't happen)
+                };
+                Some(Fetched::Mirror(MirrorHandle { master, mirror: m }))
+            }
+            None => None,
+        }
+    }
+
+    /// Token-similarity fallback (paper §4.3): among dense entries of the
+    /// same role class and length, pick the one with the highest token
+    /// overlap ratio; None if nothing exceeds `min_similarity`.
+    pub fn find_similar_master(
+        &self,
+        tokens: &[u32],
+        min_similarity: f64,
+    ) -> Option<(StoreKey, f64)> {
+        let mut best: Option<(StoreKey, f64)> = None;
+        for (k, e) in &self.entries {
+            let Entry::Dense(d) = e else { continue };
+            if d.tokens.len() != tokens.len() {
+                continue;
+            }
+            let same = d
+                .tokens
+                .iter()
+                .zip(tokens)
+                .filter(|(a, b)| a == b)
+                .count();
+            let sim = same as f64 / tokens.len().max(1) as f64;
+            if sim >= min_similarity
+                && best.map_or(true, |(_, b)| sim > b)
+            {
+                best = Some((*k, sim));
+            }
+        }
+        best
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let mut st = StoreStats::default();
+        for (k, e) in &self.entries {
+            match e {
+                Entry::Dense(d) => {
+                    st.dense_entries += 1;
+                    st.dense_bytes += dense_bytes(d);
+                    if matches!(k.role, Role::AgentCache { .. }) {
+                        st.agent_dense_bytes += dense_bytes(d);
+                    }
+                }
+                Entry::Mirror(m) => {
+                    st.mirror_entries += 1;
+                    st.mirror_bytes += mirror_bytes(m);
+                    st.mirror_diff_blocks += m.diff.n_blocks();
+                    // dense-equivalent: a full [L, len, d] K+V copy
+                    st.mirror_dense_equiv_bytes += m.tokens.len()
+                        * self.spec.kv_bytes_per_token()
+                        + m.tokens.len() * 8;
+                }
+            }
+        }
+        st
+    }
+}
+
+pub enum Fetched<'a> {
+    Dense(&'a DenseEntry),
+    Mirror(MirrorHandle<'a>),
+}
+
+/// Wrap a positionally-aligned BlockSparseDiff into an AlignedDiff with the
+/// identity source mapping (mirror block i sourced from master block i,
+/// positions unchanged). Used where master and mirror share slot layout.
+pub fn identity_aligned(
+    corrections: BlockSparseDiff,
+    n_blocks: usize,
+    len: usize,
+) -> AlignedDiff {
+    AlignedDiff {
+        src_block: (0..n_blocks as i32).collect(),
+        src_pos: (0..len as i32).collect(),
+        corrections,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            vocab: 512,
+            max_seq: 64,
+            block_tokens: 16,
+            check_layer: 1,
+            rope_theta: 10000.0,
+        }
+    }
+
+    fn dense(spec: &ModelSpec, len: usize, fill: f32) -> DenseEntry {
+        let mut kv = KvBuf::zeroed(spec.n_layers, len, spec.d_model);
+        kv.k.iter_mut().for_each(|x| *x = fill);
+        kv.v.iter_mut().for_each(|x| *x = -fill);
+        DenseEntry {
+            tokens: (0..len as u32).map(|i| 4 + (i + fill as u32)).collect(),
+            positions: (0..len as i32).collect(),
+            kv,
+        }
+    }
+
+    fn key(c: u64) -> StoreKey {
+        StoreKey { content: c, role: Role::Segment }
+    }
+
+    #[test]
+    fn put_get_dense() {
+        let sp = spec();
+        let mut st = CacheStore::new(&sp, 1 << 20);
+        st.put_dense(key(1), dense(&sp, 32, 1.0));
+        match st.get(&key(1)) {
+            Some(Fetched::Dense(d)) => assert_eq!(d.tokens.len(), 32),
+            _ => panic!("expected dense"),
+        }
+        assert!(st.get(&key(2)).is_none());
+    }
+
+    #[test]
+    fn mirror_requires_master_and_counts_compression() {
+        let sp = spec();
+        let mut st = CacheStore::new(&sp, 1 << 22);
+        let master = dense(&sp, 64, 1.0);
+        // mirror differs in one 16-token block
+        let mut mk = master.kv.clone();
+        let o = mk.off(0, 17);
+        mk.k[o] += 1.0;
+        let d = diff_blocks(&master.kv, &mk, 64, sp.block_tokens);
+        assert_eq!(d.block_ids, vec![1]);
+        let d = identity_aligned(d, 4, 64);
+
+        st.put_dense(key(1), master);
+        let m = MirrorEntry {
+            master: key(1),
+            tokens: (0..64).map(|i| 4 + i as u32).collect(),
+            positions: (0..64).collect(),
+            diff: d,
+        };
+        assert!(st
+            .put_mirror(key(2), m.clone())
+            .is_ok());
+        // mirror against a missing master fails
+        let mut bad = m;
+        bad.master = key(99);
+        assert!(st.put_mirror(key(3), bad).is_err());
+
+        let stats = st.stats();
+        assert_eq!(stats.dense_entries, 1);
+        assert_eq!(stats.mirror_entries, 1);
+        assert!(stats.compression_ratio() > 1.5,
+                "ratio={}", stats.compression_ratio());
+    }
+
+    #[test]
+    fn lru_eviction_pins_referenced_masters() {
+        let sp = spec();
+        // capacity fits ~2 dense entries of len 64
+        let one = dense(&sp, 64, 1.0);
+        let cap = (one.kv.bytes() + 64 * 8) * 2 + 64;
+        let mut st = CacheStore::new(&sp, cap);
+        st.put_dense(key(1), dense(&sp, 64, 1.0));
+        let mut mk = dense(&sp, 64, 1.0).kv;
+        let o = mk.off(0, 0);
+        mk.k[o] += 2.0;
+        let diff = identity_aligned(
+            diff_blocks(&st_master_kv(&st), &mk, 64, sp.block_tokens),
+            4,
+            64,
+        );
+        st.put_mirror(
+            key(2),
+            MirrorEntry {
+                master: key(1),
+                tokens: (0..64).map(|i| i as u32).collect(),
+                positions: (0..64).collect(),
+                diff,
+            },
+        )
+        .unwrap();
+        // a new dense entry forces eviction: the mirror (unpinned) must go
+        // first even though the master is older in LRU order
+        st.put_dense(key(3), dense(&sp, 64, 3.0));
+        assert!(st.contains(&key(1)), "pinned master survives");
+        assert!(!st.contains(&key(2)), "mirror evicted first");
+        assert!(st.evictions > 0);
+        // with the mirror gone the pin is released; the master is now
+        // ordinary LRU fodder
+        st.put_dense(key(4), dense(&sp, 64, 4.0));
+        assert!(!st.contains(&key(1)), "unpinned master evictable");
+        assert!(st.contains(&key(3)) && st.contains(&key(4)));
+    }
+
+    fn st_master_kv(st: &CacheStore) -> KvBuf {
+        match st.entries.get(&key(1)) {
+            Some(Entry::Dense(d)) => d.kv.clone(),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn similarity_fallback_finds_closest() {
+        let sp = spec();
+        let mut st = CacheStore::new(&sp, 1 << 22);
+        st.put_dense(key(1), dense(&sp, 32, 1.0));
+        st.put_dense(key(2), dense(&sp, 32, 2.0));
+        // query equals entry-2's tokens except 2 positions
+        let mut q: Vec<u32> = (0..32).map(|i| 4 + (i + 2)).collect();
+        q[0] = 999;
+        q[1] = 998;
+        let (k, sim) = st.find_similar_master(&q, 0.8).unwrap();
+        assert_eq!(k, key(2));
+        assert!((sim - 30.0 / 32.0).abs() < 1e-9);
+        assert!(st.find_similar_master(&q, 0.99).is_none());
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CLI argument helper — the offline stand-in for clap. Supports
+//! `--flag`, `--key value`, and positional arguments, with typed getters.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "\u{1}"; // sentinel for value-less flags
+
+impl Args {
+    /// Parse an iterator of raw args (excluding argv[0]). `bool_flags`
+    /// lists the names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.insert(name.to_string(), FLAG_SET.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or(format!("--{name} expects a value"))?;
+                    out.flags.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = mk(
+            &["fig10", "--quick", "--agents", "5", "--qps=2.5"],
+            &["quick"],
+        );
+        assert_eq!(a.positional, vec!["fig10"]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.usize_or("agents", 0), 5);
+        assert_eq!(a.f64_or("qps", 0.0), 2.5);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(
+            ["--agents".to_string()].into_iter(),
+            &[],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = mk(&["--list", "1,2,3"], &[]);
+        assert_eq!(a.usize_list_or("list", &[9]), vec![1, 2, 3]);
+        assert_eq!(a.usize_list_or("other", &[9]), vec![9]);
+    }
+}

@@ -1,0 +1,52 @@
+//! Small self-contained utilities standing in for crates that are not
+//! available in this offline build environment (rand, serde_json,
+//! criterion's stats, clap): a splitmix/xoshiro PRNG, a minimal JSON
+//! parser/emitter, latency statistics, and a tiny CLI argument helper.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic wall-clock helper used across metrics and benches.
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+/// FNV-1a 64-bit hash — used for content-hashing token segments.
+/// Deterministic across runs and platforms (no randomized state), which the
+/// segment index relies on for stable cache keys.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over a token-id slice (little-endian u32 bytes).
+pub fn fnv1a_tokens(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_deterministic_and_distinguishes() {
+        assert_eq!(fnv1a(b"abc"), fnv1a(b"abc"));
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_ne!(fnv1a_tokens(&[1, 2, 3]), fnv1a_tokens(&[1, 2, 4]));
+        // token hashing is not byte-concat ambiguous
+        assert_ne!(fnv1a_tokens(&[0x0102]), fnv1a_tokens(&[0x01, 0x02]));
+    }
+}

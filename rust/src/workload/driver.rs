@@ -1,0 +1,232 @@
+//! Session driver: paces All-Gather rounds into the engine at an offered
+//! QPS (open-loop arrivals, closed-loop round dependencies — a session's
+//! round t+1 cannot be built before round t's outputs exist), collects
+//! completions, and reports round latencies. This is the measurement
+//! harness behind Fig 2 and Fig 10.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::{IndependentWorkload, Session, WorkloadConfig};
+use crate::engine::Engine;
+use crate::util::rng::Rng;
+
+/// Outcome of a driven run.
+#[derive(Debug, Default)]
+pub struct DriveReport {
+    /// (session, round, latency secs) — latency from the round's offered
+    /// arrival time to its last completion.
+    pub rounds: Vec<(usize, usize, f64)>,
+    /// Per-subrequest end-to-end latencies (secs) in completion order.
+    pub subrequests: Vec<f64>,
+    pub wall_secs: f64,
+}
+
+impl DriveReport {
+    pub fn round_latencies(&self) -> Vec<f64> {
+        self.rounds.iter().map(|(_, _, l)| *l).collect()
+    }
+}
+
+/// Drive `sessions` concurrent All-Gather sessions at `qps` offered
+/// subrequests/sec. Rounds arrive per a deterministic exponential schedule;
+/// a round that is "due" but whose predecessor has not completed is
+/// submitted immediately upon completion (its latency clock still starts
+/// at the offered arrival time — open-loop accounting).
+pub fn drive_sessions(
+    eng: &mut Engine,
+    cfg: &WorkloadConfig,
+    sessions: usize,
+    qps: f64,
+    seed: u64,
+) -> Result<DriveReport> {
+    let start = Instant::now();
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<Session> = (0..sessions)
+        .map(|s| Session::new(cfg.clone(), s))
+        .collect();
+    let round_rate = qps / cfg.n_agents as f64; // rounds/sec offered
+    // next offered arrival per session
+    let mut due: Vec<Instant> = (0..sessions)
+        .map(|_| start + Duration::from_secs_f64(rng.exp(round_rate)))
+        .collect();
+    let mut in_flight: Vec<bool> = vec![false; sessions];
+    // round id -> (session, outstanding, offered arrival)
+    let mut open_rounds: HashMap<usize, (usize, usize, Instant)> =
+        HashMap::new();
+    // completions buffered per session for absorb()
+    let mut outputs: HashMap<usize, Vec<(usize, Vec<u32>)>> = HashMap::new();
+    let mut report = DriveReport::default();
+
+    loop {
+        let now = Instant::now();
+        // submit due rounds
+        for s in 0..sessions {
+            if live[s].done() || in_flight[s] || now < due[s] {
+                continue;
+            }
+            let arrival = due[s];
+            let reqs = live[s].next_round();
+            let rid = live[s].global_round();
+            open_rounds.insert(rid, (s, reqs.len(), arrival));
+            for r in reqs {
+                eng.submit(r, arrival)?;
+            }
+            in_flight[s] = true;
+        }
+
+        let worked = eng.tick()?;
+        for c in eng.take_finished() {
+            let now2 = Instant::now();
+            outputs
+                .entry(c.round)
+                .or_default()
+                .push((c.agent, c.generated.clone()));
+            if let Some(tr) = eng
+                .metrics
+                .requests
+                .iter()
+                .find(|t| t.id == c.id)
+            {
+                if let Some(e) = tr.e2e_secs() {
+                    report.subrequests.push(e);
+                }
+            }
+            if let Some((s, outstanding, arrival)) =
+                open_rounds.get_mut(&c.round)
+            {
+                *outstanding -= 1;
+                if *outstanding == 0 {
+                    let s = *s;
+                    let arrival = *arrival;
+                    open_rounds.remove(&c.round);
+                    let outs = outputs.remove(&live[s].global_round())
+                        .unwrap_or_default();
+                    report.rounds.push((
+                        s,
+                        live[s].round,
+                        now2.duration_since(arrival).as_secs_f64(),
+                    ));
+                    live[s].absorb(&outs);
+                    in_flight[s] = false;
+                    // next round offered relative to this one's arrival
+                    due[s] = (arrival
+                        + Duration::from_secs_f64(rng.exp(round_rate)))
+                    .max(now2);
+                }
+            }
+        }
+
+        let all_done =
+            live.iter().all(Session::done) && eng.pending_count() == 0;
+        if all_done {
+            break;
+        }
+        if !worked {
+            // idle until the next due arrival
+            let next = due
+                .iter()
+                .zip(&live)
+                .filter(|(_, l)| !l.done())
+                .map(|(d, _)| *d)
+                .min();
+            if let Some(next) = next {
+                let now3 = Instant::now();
+                if next > now3 {
+                    std::thread::sleep((next - now3).min(
+                        Duration::from_millis(5),
+                    ));
+                }
+            }
+        }
+    }
+    report.wall_secs = start.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Drive the independent-request control workload at `qps` (Fig 2).
+pub fn drive_independent(
+    eng: &mut Engine,
+    workload: &mut IndependentWorkload,
+    qps: f64,
+    seed: u64,
+) -> Result<DriveReport> {
+    let start = Instant::now();
+    let mut rng = Rng::new(seed);
+    let mut due = start + Duration::from_secs_f64(rng.exp(qps));
+    let mut report = DriveReport::default();
+    loop {
+        let now = Instant::now();
+        while now >= due && !workload.done() {
+            if let Some(r) = workload.next_request() {
+                eng.submit(r, due)?;
+            }
+            due += Duration::from_secs_f64(rng.exp(qps));
+        }
+        let worked = eng.tick()?;
+        for c in eng.take_finished() {
+            if let Some(tr) =
+                eng.metrics.requests.iter().find(|t| t.id == c.id)
+            {
+                if let Some(e) = tr.e2e_secs() {
+                    report.subrequests.push(e);
+                }
+            }
+        }
+        if workload.done() && eng.pending_count() == 0 {
+            break;
+        }
+        if !worked && !workload.done() {
+            let now2 = Instant::now();
+            if due > now2 {
+                std::thread::sleep(
+                    (due - now2).min(Duration::from_millis(5)),
+                );
+            }
+        }
+    }
+    report.wall_secs = start.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineConfig, Policy};
+    use crate::runtime::MockRuntime;
+    use std::rc::Rc;
+
+    #[test]
+    fn drives_sessions_to_completion() {
+        let rt = Rc::new(MockRuntime::new());
+        let mut eng = Engine::new(
+            rt,
+            EngineConfig::for_policy("sim-7b", Policy::TokenDance, 1024),
+        )
+        .unwrap();
+        let cfg = WorkloadConfig::generative_agents(1, 3, 2);
+        let report =
+            drive_sessions(&mut eng, &cfg, 2, 1000.0, 7).unwrap();
+        // 2 sessions x 2 rounds
+        assert_eq!(report.rounds.len(), 4);
+        // 2 x 2 x 3 subrequests
+        assert_eq!(report.subrequests.len(), 12);
+        assert!(report.round_latencies().iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn drives_independent_to_completion() {
+        let rt = Rc::new(MockRuntime::new());
+        let mut eng = Engine::new(
+            rt,
+            EngineConfig::for_policy("sim-7b", Policy::VllmPrefix, 1024),
+        )
+        .unwrap();
+        let mut w = IndependentWorkload::new(6, 100, 8, 3);
+        let report =
+            drive_independent(&mut eng, &mut w, 1000.0, 9).unwrap();
+        assert_eq!(report.subrequests.len(), 6);
+    }
+}

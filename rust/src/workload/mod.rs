@@ -1,0 +1,431 @@
+//! Workload synthesis: All-Gather multi-agent sessions in the style of
+//! GenerativeAgents and AgentSociety, plus the independent-request control
+//! workload of Fig 2. Deterministic (seeded) so every experiment is
+//! reproducible; outputs of round t feed round t+1's shared blocks, so the
+//! engine's real generated tokens drive the trace exactly as in a live
+//! serving deployment.
+
+pub mod driver;
+pub mod text;
+
+use crate::engine::AgentRequest;
+use crate::tokenizer::{encode, BlockKind, RoundAwarePrompt};
+use crate::util::rng::Rng;
+
+/// The two workload families of the paper's evaluation (§6.1): they "span
+/// different operating regimes: GenerativeAgents uses shorter private
+/// histories and fewer agents per round, while AgentSociety uses longer
+/// histories with more agents."
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    GenerativeAgents,
+    AgentSociety,
+}
+
+impl Family {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Family::GenerativeAgents => "GenerativeAgents",
+            Family::AgentSociety => "AgentSociety",
+        }
+    }
+}
+
+/// The eight evaluation scenarios of paper Fig 14.
+pub const SCENARIOS: [(usize, Family, &str); 8] = [
+    (1, Family::GenerativeAgents, "Meet and Greet"),
+    (2, Family::GenerativeAgents, "Valentine's Day Party"),
+    (3, Family::GenerativeAgents, "Election Discussions"),
+    (4, Family::GenerativeAgents, "Winning the Election"),
+    (5, Family::AgentSociety, "Information Outbreak"),
+    (6, Family::AgentSociety, "Pre-Landfall Activity"),
+    (7, Family::AgentSociety, "Hurricane"),
+    (8, Family::AgentSociety, "Economic Stabilization"),
+];
+
+/// Workload shape parameters. Token budgets are pre-padding; every block is
+/// padded to the storage block size so shared content keeps stable
+/// intra-block phases (DESIGN.md §Hardware-Adaptation).
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub family: Family,
+    pub scenario: usize,
+    pub n_agents: usize,
+    pub n_rounds: usize,
+    /// Persona/system block size (bytes of text before padding).
+    pub sys_bytes: usize,
+    /// Per-round private history growth (bytes).
+    pub turn_bytes: usize,
+    /// Sliding window: private turns kept in the prompt.
+    pub keep_turns: usize,
+    /// Round task block size (bytes).
+    pub task_bytes: usize,
+    /// Tokens generated per agent per round (also the shared-block size).
+    pub max_new_tokens: usize,
+    /// Alignment (storage block size).
+    pub align: usize,
+    /// Cap on shared output blocks per prompt (None = all agents'
+    /// outputs). Fig 11 varies consumer count against a fixed shared set.
+    pub shared_producers: Option<usize>,
+    pub seed: u64,
+}
+
+impl WorkloadConfig {
+    /// The GenerativeAgents regime: short private histories.
+    pub fn generative_agents(scenario: usize, n_agents: usize,
+                             n_rounds: usize) -> Self {
+        WorkloadConfig {
+            family: Family::GenerativeAgents,
+            scenario,
+            n_agents,
+            n_rounds,
+            sys_bytes: 8,
+            turn_bytes: 8,
+            keep_turns: 1,
+            task_bytes: 12,
+            max_new_tokens: 32,
+            align: 16,
+            shared_producers: None,
+            seed: 0xDA0CE ^ (scenario as u64),
+        }
+    }
+
+    /// The AgentSociety regime: longer histories.
+    pub fn agent_society(scenario: usize, n_agents: usize,
+                         n_rounds: usize) -> Self {
+        WorkloadConfig {
+            family: Family::AgentSociety,
+            scenario,
+            n_agents,
+            n_rounds,
+            sys_bytes: 44,
+            turn_bytes: 28,
+            keep_turns: 2,
+            task_bytes: 12,
+            max_new_tokens: 16,
+            align: 16,
+            shared_producers: None,
+            seed: 0x50C1E7 ^ (scenario as u64),
+        }
+    }
+
+    pub fn for_family(family: Family, scenario: usize, n_agents: usize,
+                      n_rounds: usize) -> Self {
+        match family {
+            Family::GenerativeAgents => {
+                Self::generative_agents(scenario, n_agents, n_rounds)
+            }
+            Family::AgentSociety => {
+                Self::agent_society(scenario, n_agents, n_rounds)
+            }
+        }
+    }
+
+    /// Upper bound on a round's prompt+generation length (tokens, after
+    /// padding) — used to size pools and validate against max_seq.
+    pub fn max_context(&self) -> usize {
+        let pad = |b: usize| b.div_ceil(self.align) * self.align;
+        let producers =
+            self.shared_producers.unwrap_or(self.n_agents).min(self.n_agents);
+        pad(self.sys_bytes + 24)
+            + self.keep_turns * pad(self.turn_bytes + 16)
+            + producers * pad(self.max_new_tokens)
+            + pad(self.task_bytes + 16)
+            + self.max_new_tokens
+    }
+}
+
+/// One live All-Gather session: agent histories + the previous round's
+/// shared output blocks.
+pub struct Session {
+    pub cfg: WorkloadConfig,
+    pub session_id: usize,
+    rng: Rng,
+    personas: Vec<String>,
+    /// Private turn summaries per agent (sliding window applied at prompt
+    /// build).
+    turns: Vec<Vec<String>>,
+    /// (producer agent, output tokens) of the previous round.
+    shared: Vec<(usize, Vec<u32>)>,
+    pub round: usize,
+}
+
+impl Session {
+    pub fn new(cfg: WorkloadConfig, session_id: usize) -> Self {
+        let mut rng = Rng::new(
+            cfg.seed ^ (session_id as u64).wrapping_mul(0x9E37_79B9),
+        );
+        let personas = (0..cfg.n_agents)
+            .map(|a| text::persona(&mut rng.fork(a as u64), a, cfg.sys_bytes))
+            .collect();
+        Session {
+            personas,
+            turns: vec![Vec::new(); cfg.n_agents],
+            shared: Vec::new(),
+            round: 0,
+            rng,
+            cfg,
+            session_id,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.round >= self.cfg.n_rounds
+    }
+
+    /// Build this round's subrequests (one per agent). Shared blocks are
+    /// the previous round's outputs, in per-agent rotated order (paper
+    /// Figure 1: "may use a different block order").
+    pub fn next_round(&mut self) -> Vec<AgentRequest> {
+        let cfg = &self.cfg;
+        let task = text::paragraph(
+            &mut self.rng.fork(0x7A5C ^ self.round as u64),
+            cfg.task_bytes,
+        );
+        let task = format!("r{} {}", self.round, task);
+        let mut out = Vec::new();
+        for a in 0..cfg.n_agents {
+            let mut p = RoundAwarePrompt::new();
+            p.push(BlockKind::PrivateHistory, encode(&self.personas[a]));
+            let keep = cfg.keep_turns.min(self.turns[a].len());
+            let start = self.turns[a].len() - keep;
+            for t in &self.turns[a][start..] {
+                p.push(BlockKind::PrivateHistory, encode(t));
+            }
+            let cap = cfg
+                .shared_producers
+                .unwrap_or(self.shared.len())
+                .min(self.shared.len());
+            let pool = &self.shared[..cap];
+            let n = pool.len().max(1);
+            for i in 0..pool.len() {
+                let (producer, toks) = &pool[(i + a) % n];
+                p.push(
+                    BlockKind::SharedOutput {
+                        producer: *producer,
+                        round: self.round,
+                    },
+                    toks.clone(),
+                );
+            }
+            p.push(BlockKind::RoundTask, encode(&task));
+            p.pad_blocks(cfg.align, encode(" ")[0]);
+            out.push(AgentRequest {
+                agent: self.agent_id(a),
+                round: self.global_round(),
+                prompt: p,
+                max_new_tokens: cfg.max_new_tokens,
+                retain: true,
+            });
+        }
+        out
+    }
+
+    /// Globally-unique agent id (sessions do not share agents).
+    pub fn agent_id(&self, a: usize) -> usize {
+        self.session_id * 1000 + a
+    }
+
+    /// Globally-unique round id for engine bookkeeping.
+    pub fn global_round(&self) -> usize {
+        self.session_id * 100_000 + self.round
+    }
+
+    /// Feed the round's completions back: outputs become the next round's
+    /// shared blocks and extend each agent's private history.
+    pub fn absorb(&mut self, outputs: &[(usize, Vec<u32>)]) {
+        let mut shared: Vec<(usize, Vec<u32>)> = outputs
+            .iter()
+            .map(|(agent, toks)| (agent % 1000, toks.clone()))
+            .collect();
+        shared.sort_by_key(|(a, _)| *a);
+        for (a, toks) in &shared {
+            let summary = format!(
+                "r{} a{}: {:x}",
+                self.round,
+                a,
+                crate::util::fnv1a_tokens(toks) & 0xFFFF,
+            );
+            let mut s = summary;
+            let pad_to = self.cfg.turn_bytes;
+            while s.len() < pad_to {
+                s.push('.');
+            }
+            self.turns[*a].push(s);
+        }
+        self.shared = shared;
+        self.round += 1;
+    }
+}
+
+/// The Fig-2 control: independent single requests with the same total
+/// subrequest count and similar prompt sizes, but no sharing and no
+/// retention value (each request is a fresh "agent").
+pub struct IndependentWorkload {
+    rng: Rng,
+    prompt_tokens: usize,
+    pub max_new_tokens: usize,
+    issued: usize,
+    total: usize,
+}
+
+impl IndependentWorkload {
+    pub fn new(total: usize, prompt_tokens: usize, max_new_tokens: usize,
+               seed: u64) -> Self {
+        IndependentWorkload {
+            rng: Rng::new(seed),
+            prompt_tokens,
+            max_new_tokens,
+            issued: 0,
+            total,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.issued >= self.total
+    }
+
+    pub fn next_request(&mut self) -> Option<AgentRequest> {
+        if self.done() {
+            return None;
+        }
+        let i = self.issued;
+        self.issued += 1;
+        let body = text::paragraph(
+            &mut self.rng.fork(i as u64),
+            self.prompt_tokens,
+        );
+        let mut p = RoundAwarePrompt::new();
+        p.push(BlockKind::PrivateHistory, encode(&body));
+        p.push(BlockKind::RoundTask, encode("respond"));
+        p.pad_blocks(16, encode(" ")[0]);
+        Some(AgentRequest {
+            agent: 500_000 + i, // unique; never reused
+            round: 900_000 + i, // every request its own "round"
+            prompt: p,
+            max_new_tokens: self.max_new_tokens,
+            retain: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_rounds_fit_model_context() {
+        for family in [Family::GenerativeAgents, Family::AgentSociety] {
+            let cfg = WorkloadConfig::for_family(family, 1, 10, 3);
+            assert!(
+                cfg.max_context() <= 512,
+                "{family:?} context {} exceeds S",
+                cfg.max_context()
+            );
+        }
+    }
+
+    #[test]
+    fn prompts_share_output_blocks_across_agents() {
+        let cfg = WorkloadConfig::generative_agents(1, 4, 3);
+        let mut s = Session::new(cfg, 0);
+        let r0 = s.next_round();
+        assert_eq!(r0.len(), 4);
+        // feed synthetic outputs
+        let outs: Vec<(usize, Vec<u32>)> = (0..4)
+            .map(|a| (a, vec![10 + a as u32; 32]))
+            .collect();
+        s.absorb(&outs);
+        let r1 = s.next_round();
+        // every agent's prompt contains all 4 shared blocks (order rotated)
+        for (a, req) in r1.iter().enumerate() {
+            let shared: Vec<&Vec<u32>> = req
+                .prompt
+                .blocks
+                .iter()
+                .filter_map(|b| match b.kind {
+                    BlockKind::SharedOutput { .. } => Some(&b.tokens),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(shared.len(), 4, "agent {a}");
+        }
+        // rotation: agent 0 and agent 1 order differs
+        let first_block = |req: &AgentRequest| {
+            req.prompt
+                .blocks
+                .iter()
+                .find_map(|b| match b.kind {
+                    BlockKind::SharedOutput { producer, .. } => {
+                        Some(producer)
+                    }
+                    _ => None,
+                })
+                .unwrap()
+        };
+        assert_ne!(first_block(&r1[0]), first_block(&r1[1]));
+    }
+
+    #[test]
+    fn sessions_are_deterministic() {
+        let cfg = WorkloadConfig::agent_society(5, 3, 2);
+        let mut a = Session::new(cfg.clone(), 0);
+        let mut b = Session::new(cfg, 0);
+        let ra = a.next_round();
+        let rb = b.next_round();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(
+                x.prompt.serialize_plain(),
+                y.prompt.serialize_plain()
+            );
+        }
+    }
+
+    #[test]
+    fn private_history_window_slides() {
+        let cfg = WorkloadConfig::generative_agents(2, 2, 5);
+        let mut s = Session::new(cfg, 0);
+        for round in 0..4 {
+            let _ = s.next_round();
+            let outs: Vec<(usize, Vec<u32>)> =
+                (0..2).map(|a| (a, vec![20 + round; 32])).collect();
+            s.absorb(&outs);
+        }
+        let reqs = s.next_round();
+        // private blocks: persona + at most keep_turns turns
+        let privates = reqs[0]
+            .prompt
+            .blocks
+            .iter()
+            .filter(|b| matches!(b.kind, BlockKind::PrivateHistory))
+            .count();
+        assert_eq!(privates, 1 + 1);
+    }
+
+    #[test]
+    fn independent_workload_unique_prompts() {
+        let mut w = IndependentWorkload::new(3, 120, 16, 42);
+        let a = w.next_request().unwrap();
+        let b = w.next_request().unwrap();
+        assert_ne!(a.agent, b.agent);
+        assert_ne!(
+            a.prompt.serialize_plain(),
+            b.prompt.serialize_plain()
+        );
+        let _ = w.next_request().unwrap();
+        assert!(w.done());
+        assert!(w.next_request().is_none());
+    }
+
+    #[test]
+    fn scenario_table_is_complete() {
+        assert_eq!(SCENARIOS.len(), 8);
+        assert_eq!(
+            SCENARIOS
+                .iter()
+                .filter(|(_, f, _)| *f == Family::GenerativeAgents)
+                .count(),
+            4
+        );
+    }
+}

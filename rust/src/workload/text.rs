@@ -1,0 +1,87 @@
+//! Deterministic synthetic text for agent personas, observations, and
+//! tasks. Stands in for the GenerativeAgents / AgentSociety corpora: the
+//! serving layer only cares about token content identity and lengths, which
+//! these generators control precisely (see DESIGN.md substitution table).
+
+use crate::util::rng::Rng;
+
+const NOUNS: &[&str] = &[
+    "market", "storm", "ballot", "park", "cafe", "festival", "shelter",
+    "council", "river", "school", "warehouse", "clinic", "library",
+    "harbor", "farm", "theater",
+];
+
+const VERBS: &[&str] = &[
+    "discusses", "observes", "plans", "reports", "organizes", "joins",
+    "avoids", "supports", "questions", "announces", "prepares", "shares",
+];
+
+const ADJS: &[&str] = &[
+    "urgent", "calm", "crowded", "quiet", "uncertain", "hopeful",
+    "damaged", "busy", "empty", "festive", "tense", "stable",
+];
+
+const NAMES: &[&str] = &[
+    "Isabella", "Klaus", "Maria", "Tom", "Ayesha", "Liu", "Sam", "Elena",
+    "Noor", "Diego", "Wolf", "Mei", "Omar", "Jo", "Ana", "Kai",
+];
+
+/// One deterministic sentence (ends with a period + space).
+pub fn sentence(rng: &mut Rng) -> String {
+    format!(
+        "{} {} the {} {}. ",
+        NAMES[rng.below(NAMES.len())],
+        VERBS[rng.below(VERBS.len())],
+        ADJS[rng.below(ADJS.len())],
+        NOUNS[rng.below(NOUNS.len())],
+    )
+}
+
+/// Text of at least `min_bytes` bytes (whole sentences).
+pub fn paragraph(rng: &mut Rng, min_bytes: usize) -> String {
+    let mut out = String::new();
+    while out.len() < min_bytes {
+        out.push_str(&sentence(rng));
+    }
+    out
+}
+
+/// A persona blurb for an agent (kept compact: "T. is agent 3." — the
+/// paper's GenerativeAgents regime has short private histories, and the
+/// private fraction is the floor on Master-Mirror compression).
+pub fn persona(rng: &mut Rng, agent: usize, min_bytes: usize) -> String {
+    let name = NAMES[agent % NAMES.len()];
+    let mut out = format!("{} is agent {agent}. ",
+                          &name[..1.max(name.len().min(3))]);
+    if out.len() < min_bytes {
+        out.push_str(&paragraph(rng, min_bytes - out.len()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        assert_eq!(paragraph(&mut a, 100), paragraph(&mut b, 100));
+    }
+
+    #[test]
+    fn paragraph_meets_min_length() {
+        let mut r = Rng::new(9);
+        for n in [1, 50, 200] {
+            assert!(paragraph(&mut r, n).len() >= n);
+        }
+    }
+
+    #[test]
+    fn personas_differ_by_agent() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_ne!(persona(&mut r1, 0, 60), persona(&mut r2, 1, 60));
+    }
+}

@@ -1,0 +1,265 @@
+//! Integration tests over the REAL runtime: AOT artifacts loaded through
+//! PJRT, numerics anchored to the python oracle via artifacts/golden.json,
+//! and the full engine driven end to end on both simulated model scales.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use tokendance::engine::{AgentRequest, Engine, EngineConfig, Policy};
+use tokendance::runtime::{
+    argmax, DecodeSeq, KvBuf, ModelRuntime, PjrtRuntime, RopeDiffSeq,
+};
+use tokendance::tokenizer::{encode, BlockKind, RoundAwarePrompt};
+use tokendance::util::json::Json;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn runtime() -> Option<Rc<PjrtRuntime>> {
+    artifacts_dir().map(|d| Rc::new(PjrtRuntime::load(&d).unwrap()))
+}
+
+#[test]
+fn golden_prefill_matches_python_oracle() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let golden_text =
+        std::fs::read_to_string(dir.join("golden.json")).unwrap();
+    let golden = Json::parse(&golden_text).unwrap();
+    for model in ["sim-7b", "sim-14b"] {
+        let g = golden.get(model).expect("model in golden");
+        let tokens: Vec<u32> = g
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_usize().unwrap() as u32)
+            .collect();
+        let len = g.get("len").unwrap().as_usize().unwrap();
+        let out = rt.prefill(model, &tokens, len).unwrap();
+        // logits prefix
+        let want: Vec<f64> = g
+            .get("logits_prefix")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        for (i, w) in want.iter().enumerate() {
+            assert!(
+                (out.logits[i] as f64 - w).abs() < 1e-3,
+                "{model} logit[{i}]: {} vs {w}",
+                out.logits[i]
+            );
+        }
+        // greedy argmax
+        let want_arg = g.get("argmax").unwrap().as_usize().unwrap() as u32;
+        assert_eq!(argmax(&out.logits), want_arg, "{model} argmax");
+        // K/V checksums over the valid rows
+        let spec = rt.spec(model).unwrap().clone();
+        let mut ksum = 0f64;
+        let mut vsum = 0f64;
+        for l in 0..spec.n_layers {
+            for s in 0..len {
+                ksum += out.kv.k_row(l, s).iter().map(|x| x.abs() as f64).sum::<f64>();
+                vsum += out.kv.v_row(l, s).iter().map(|x| x.abs() as f64).sum::<f64>();
+            }
+        }
+        let want_k = g.get("k_sum").unwrap().as_f64().unwrap();
+        let want_v = g.get("v_sum").unwrap().as_f64().unwrap();
+        assert!((ksum - want_k).abs() / want_k < 1e-4, "{model} k_sum {ksum} vs {want_k}");
+        assert!((vsum - want_v).abs() / want_v < 1e-4, "{model} v_sum {vsum} vs {want_v}");
+    }
+}
+
+#[test]
+fn decode_extends_prefill_consistently() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let model = "sim-7b";
+    let spec = rt.spec(model).unwrap().clone();
+    let toks: Vec<u32> = (0..40u32).map(|i| 4 + (i * 11) % 250).collect();
+
+    // prefill 40 tokens, then decode token 41 and compare against a
+    // prefill of 41 tokens
+    let p40 = rt.prefill(model, &toks, 40).unwrap();
+    let next = 4 + 123u32;
+    let mut kv = KvBuf::for_spec(&spec);
+    kv.copy_rows_from(&p40.kv, 0, 0, 40);
+    let outs = rt
+        .decode(model, &[DecodeSeq { token: next, len: 40, kv: &kv }])
+        .unwrap();
+
+    let mut toks41 = toks.clone();
+    toks41.push(next);
+    let p41 = rt.prefill(model, &toks41, 41).unwrap();
+    // logits at the new position must match
+    for (a, b) in outs[0].logits.iter().zip(&p41.logits) {
+        assert!((a - b).abs() < 1e-3, "decode logits diverge: {a} vs {b}");
+    }
+    // K/V rows for the new token must match
+    for l in 0..spec.n_layers {
+        let d = spec.d_model;
+        let want_k = p41.kv.k_row(l, 40);
+        let got_k = &outs[0].k_new[l * d..(l + 1) * d];
+        for (a, b) in got_k.iter().zip(want_k) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn collective_equals_serial_on_real_model() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let model = "sim-7b";
+    let spec = rt.spec(model).unwrap().clone();
+    let s = spec.max_seq;
+    let toks: Vec<u32> = (0..48u32).map(|i| 4 + (i * 7) % 200).collect();
+    let pre = rt.prefill(model, &toks, 48).unwrap();
+    let mut cache = KvBuf::for_spec(&spec);
+    cache.copy_rows_from(&pre.kv, 0, 0, 48);
+
+    let mut padded = toks.clone();
+    padded.resize(s, 0);
+    let old: Vec<i32> = (0..s as i32).collect();
+    let mut valid = vec![0u8; s];
+    valid[..48].iter_mut().for_each(|x| *x = 1);
+
+    let mk = || RopeDiffSeq {
+        tokens: &padded,
+        old_pos: &old,
+        valid: &valid,
+        kv: &cache,
+    };
+    let group = rt.ropediff(model, &[mk(), mk(), mk()]).unwrap();
+    let single = rt.ropediff(model, &[mk()]).unwrap();
+    for g in &group {
+        for (a, b) in g.scores.iter().zip(&single[0].scores) {
+            assert!((a - b).abs() < 1e-4, "scores differ: {a} vs {b}");
+        }
+        let err = g.k_rot.max_abs_diff(&single[0].k_rot);
+        assert!(err < 1e-4, "k_rot differs by {err}");
+    }
+    // prefix reuse at unchanged positions scores ~0
+    assert!(
+        single[0].scores[..48].iter().all(|&x| x < 1e-2),
+        "prefix positions should score ~0: {:?}",
+        &single[0].scores[..8]
+    );
+}
+
+fn mk_prompt(agent: usize, hist: &str, shared: &[Vec<u32>], task: &str)
+    -> RoundAwarePrompt
+{
+    let mut p = RoundAwarePrompt::new();
+    p.push(BlockKind::PrivateHistory, encode(hist));
+    let n = shared.len().max(1);
+    for i in 0..shared.len() {
+        p.push(
+            BlockKind::SharedOutput { producer: i, round: 0 },
+            shared[(i + agent) % n].clone(),
+        );
+    }
+    p.push(BlockKind::RoundTask, encode(task));
+    p.pad_blocks(16, encode(" ")[0]);
+    p
+}
+
+fn run_two_rounds(policy: Policy, rt: Rc<PjrtRuntime>) -> Vec<Vec<Vec<u32>>> {
+    let mut eng =
+        Engine::new(rt, EngineConfig::for_policy("sim-7b", policy, 256))
+            .unwrap();
+    let mut shared: Vec<Vec<u32>> = Vec::new();
+    let mut out = Vec::new();
+    for round in 0..2 {
+        let now = Instant::now();
+        for a in 0..3 {
+            let p = mk_prompt(
+                a,
+                &format!("agent {a} persona"),
+                &shared,
+                &format!("round {round}"),
+            );
+            eng.submit(
+                AgentRequest { agent: a, round, prompt: p, max_new_tokens: 16, retain: true },
+                now,
+            )
+            .unwrap();
+        }
+        let done = eng.drain().unwrap();
+        assert_eq!(done.len(), 3);
+        let mut outs = vec![Vec::new(); 3];
+        shared = vec![Vec::new(); 3];
+        for c in &done {
+            outs[c.agent] = c.generated.clone();
+            shared[c.agent] = c.generated.clone();
+        }
+        out.push(outs);
+    }
+    out
+}
+
+#[test]
+fn engine_end_to_end_all_policies_real_model() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // exact policies agree bit-for-bit
+    let v = run_two_rounds(Policy::VllmPrefix, rt.clone());
+    let o = run_two_rounds(Policy::CacheBlendOrdinary, rt.clone());
+    assert_eq!(v, o, "exact paths must produce identical greedy streams");
+
+    // PIC policies agree with each other (collective == per-request)
+    let c = run_two_rounds(Policy::CacheBlendFull, rt.clone());
+    let t = run_two_rounds(Policy::TokenDance, rt.clone());
+    assert_eq!(c, t, "TokenDance must equal CacheBlend outputs (§6.6)");
+
+    // all policies generate full-length outputs
+    for outs in [&v, &c] {
+        for r in outs.iter() {
+            for g in r {
+                assert_eq!(g.len(), 16);
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_real_model_14b_smoke() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut eng = Engine::new(
+        rt,
+        EngineConfig::for_policy("sim-14b", Policy::TokenDance, 256),
+    )
+    .unwrap();
+    let now = Instant::now();
+    for a in 0..2 {
+        let p = mk_prompt(a, "persona", &[], "go");
+        eng.submit(
+            AgentRequest { agent: a, round: 0, prompt: p, max_new_tokens: 8, retain: true },
+            now,
+        )
+        .unwrap();
+    }
+    let done = eng.drain().unwrap();
+    assert_eq!(done.len(), 2);
+}

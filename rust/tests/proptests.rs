@@ -1,0 +1,468 @@
+//! Property-based tests over the coordinator invariants (routing,
+//! batching, storage, reuse) using a seeded-sweep helper — the offline
+//! stand-in for proptest: each property runs across many generated cases
+//! with shrink-free reporting of the failing seed.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use tokendance::collector::{run_reuse, CollectorConfig, ReuseTask};
+use tokendance::engine::{AgentRequest, Engine, EngineConfig, Policy};
+use tokendance::kvcache::KvPool;
+use tokendance::model::{Buckets, ModelSpec};
+use tokendance::pic::{select_important_blocks, ImportanceConfig, INVALID_SCORE};
+use tokendance::rounds::{detect_pattern, segment_prompt, DetectorConfig};
+use tokendance::runtime::{KvBuf, MockRuntime, ModelRuntime};
+use tokendance::store::{diff_blocks_tol, gather_permuted_master,
+                        match_blocks_by_content};
+use tokendance::tokenizer::{encode, split_segments, BlockKind,
+                            RoundAwarePrompt, TTSEP_ID};
+use tokendance::util::rng::Rng;
+
+/// Run `prop` for `cases` seeds; panic with the seed on failure.
+fn forall(cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x9E3779B97F4A7C15 ^ seed);
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut rng)),
+        );
+        if let Err(e) = r {
+            eprintln!(">>> property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn spec() -> ModelSpec {
+    MockRuntime::new().spec("sim-7b").unwrap().clone()
+}
+
+// ---------------------------------------------------------------------
+// tokenizer / rounds
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_serialize_split_roundtrip() {
+    forall(200, |rng| {
+        let n_blocks = rng.range(1, 6);
+        let mut p = RoundAwarePrompt::new();
+        for i in 0..n_blocks {
+            let len = rng.below(20);
+            let toks: Vec<u32> = (0..len)
+                .map(|_| 4 + rng.below(256) as u32)
+                .collect();
+            let kind = match i {
+                0 => BlockKind::PrivateHistory,
+                _ => BlockKind::SharedOutput { producer: i, round: 0 },
+            };
+            p.push(kind, toks);
+        }
+        let wire = p.serialize();
+        let segs = split_segments(&wire);
+        assert_eq!(segs.len(), n_blocks);
+        for (seg, blk) in segs.iter().zip(&p.blocks) {
+            assert_eq!(*seg, &blk.tokens[..]);
+        }
+        // no separators leak into plain serialization
+        assert!(!p.serialize_plain().contains(&TTSEP_ID));
+    });
+}
+
+#[test]
+fn prop_pad_blocks_alignment() {
+    forall(100, |rng| {
+        let mut p = RoundAwarePrompt::new();
+        for _ in 0..rng.range(1, 5) {
+            let len = rng.range(1, 40);
+            p.push(
+                BlockKind::PrivateHistory,
+                (0..len).map(|_| 4 + rng.below(200) as u32).collect(),
+            );
+        }
+        p.pad_blocks(16, 36);
+        let mut cursor = 0;
+        for b in &p.blocks {
+            assert_eq!(cursor % 16, 0, "every block starts aligned");
+            assert_eq!(b.tokens.len() % 16, 0);
+            cursor += b.tokens.len();
+        }
+    });
+}
+
+#[test]
+fn prop_segment_hash_position_independent() {
+    forall(100, |rng| {
+        let shared: Vec<u32> =
+            (0..rng.range(1, 30)).map(|_| 4 + rng.below(200) as u32).collect();
+        let mk = |pre_len: usize, rng: &mut Rng| {
+            let mut p = RoundAwarePrompt::new();
+            p.push(
+                BlockKind::PrivateHistory,
+                (0..pre_len).map(|_| 4 + rng.below(200) as u32).collect(),
+            );
+            p.push(
+                BlockKind::SharedOutput { producer: 0, round: 0 },
+                shared.clone(),
+            );
+            segment_prompt(&p.serialize())
+        };
+        let a = mk(rng.range(1, 50), rng);
+        let b = mk(rng.range(1, 50), rng);
+        assert_eq!(a.segments[1].hash, b.segments[1].hash);
+    });
+}
+
+#[test]
+fn prop_detector_never_groups_disjoint_prompts() {
+    forall(60, |rng| {
+        let mk = |rng: &mut Rng| {
+            let mut p = RoundAwarePrompt::new();
+            p.push(
+                BlockKind::PrivateHistory,
+                (0..rng.range(10, 60))
+                    .map(|_| 4 + rng.below(250) as u32)
+                    .collect(),
+            );
+            segment_prompt(&p.serialize())
+        };
+        let prompts: Vec<_> = (0..rng.range(2, 6)).map(|_| mk(rng)).collect();
+        let refs: Vec<&_> = prompts.iter().collect();
+        // random prompts virtually never share segments
+        let verdict = detect_pattern(&refs, &DetectorConfig::default());
+        assert_eq!(
+            verdict,
+            tokendance::rounds::PatternVerdict::Independent
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// kv pool
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_pool_never_leaks_blocks() {
+    forall(100, |rng| {
+        let sp = spec();
+        let total = rng.range(8, 64);
+        let mut pool = KvPool::new(&sp, total);
+        let mut live = Vec::new();
+        for _ in 0..rng.range(5, 40) {
+            if rng.f64() < 0.6 || live.is_empty() {
+                let want = rng.range(1, 80);
+                if let Ok(t) = pool.allocate(want) {
+                    live.push(t);
+                }
+            } else {
+                let i = rng.below(live.len());
+                let t = live.swap_remove(i);
+                pool.release(&t);
+            }
+            let st = pool.stats();
+            assert_eq!(st.used_blocks + st.free_blocks, total);
+            let live_blocks: usize =
+                live.iter().map(|t| t.blocks.len()).sum();
+            assert_eq!(st.used_blocks, live_blocks);
+        }
+        for t in &live {
+            pool.release(t);
+        }
+        assert_eq!(pool.stats().used_blocks, 0);
+    });
+}
+
+#[test]
+fn prop_scatter_gather_identity() {
+    forall(60, |rng| {
+        let sp = spec();
+        let mut pool = KvPool::for_seqs(&sp, 2);
+        let len = rng.range(1, sp.max_seq);
+        let mut src = KvBuf::for_spec(&sp);
+        for x in src.k.iter_mut() {
+            *x = (rng.f64() - 0.5) as f32;
+        }
+        for x in src.v.iter_mut() {
+            *x = (rng.f64() - 0.5) as f32;
+        }
+        let mut t = pool.allocate(len).unwrap();
+        t.len = len;
+        pool.scatter(&t, &src, len);
+        let got = pool.gather(&t);
+        for l in 0..sp.n_layers {
+            for s in 0..len {
+                assert_eq!(got.k_row(l, s), src.k_row(l, s));
+                assert_eq!(got.v_row(l, s), src.v_row(l, s));
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// diff encoding
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_diff_roundtrip_reconstructs_mirror() {
+    forall(80, |rng| {
+        let sp = spec();
+        let len = rng.range(16, sp.max_seq);
+        let mut master = KvBuf::zeroed(sp.n_layers, len, sp.d_model);
+        for x in master.k.iter_mut() {
+            *x = (rng.f64() - 0.5) as f32;
+        }
+        for x in master.v.iter_mut() {
+            *x = (rng.f64() - 0.5) as f32;
+        }
+        let mut mirror = master.clone();
+        // perturb random positions
+        for _ in 0..rng.below(20) {
+            let l = rng.below(sp.n_layers);
+            let s = rng.below(len);
+            let o = mirror.off(l, s) + rng.below(sp.d_model);
+            mirror.k[o] += 1.0;
+        }
+        let d = diff_blocks_tol(&master, &mirror, len, sp.block_tokens, 0.0);
+        let mut rebuilt = master.clone();
+        d.apply_to(&mut rebuilt);
+        assert_eq!(rebuilt, mirror);
+    });
+}
+
+#[test]
+fn prop_content_match_is_sound() {
+    forall(80, |rng| {
+        let bt = 16;
+        let n = rng.range(2, 8);
+        let master: Vec<u32> = (0..n * bt)
+            .map(|_| 4 + rng.below(200) as u32)
+            .collect();
+        // mirror = permutation of master blocks (+ maybe a novel block)
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut mirror = Vec::new();
+        for &b in &order {
+            mirror.extend_from_slice(&master[b * bt..(b + 1) * bt]);
+        }
+        let map = match_blocks_by_content(&master, &mirror, bt);
+        for (mb, &src) in map.iter().enumerate() {
+            assert!(src >= 0, "permuted block must match");
+            // soundness: matched content is identical
+            let s = src as usize;
+            assert_eq!(
+                &master[s * bt..(s + 1) * bt],
+                &mirror[mb * bt..(mb + 1) * bt]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_gather_permuted_respects_map() {
+    forall(60, |rng| {
+        let sp = spec();
+        let bt = sp.block_tokens;
+        let n = rng.range(2, 8);
+        let len = n * bt;
+        let mut master = KvBuf::zeroed(sp.n_layers, len, sp.d_model);
+        for (i, x) in master.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let positions: Vec<i32> = (0..len as i32).collect();
+        let src_map: Vec<i32> = (0..n)
+            .map(|_| {
+                if rng.f64() < 0.2 {
+                    -1
+                } else {
+                    rng.below(n) as i32
+                }
+            })
+            .collect();
+        let (out, src_pos) = gather_permuted_master(
+            &master, &positions, &src_map, len, bt, sp.max_seq,
+        );
+        for (b, &src) in src_map.iter().enumerate() {
+            for t in 0..bt {
+                let slot = b * bt + t;
+                if src < 0 {
+                    assert_eq!(out.k_row(0, slot), vec![0.0; sp.d_model]);
+                    assert_eq!(src_pos[slot], slot as i32);
+                } else {
+                    let ms = src as usize * bt + t;
+                    assert_eq!(out.k_row(0, slot), master.k_row(0, ms));
+                    assert_eq!(src_pos[slot], ms as i32);
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// importance selection
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_block_selection_invariants() {
+    forall(150, |rng| {
+        let bt = 16;
+        let len = rng.range(1, 512);
+        let mut scores = vec![0f32; len];
+        for s in scores.iter_mut() {
+            *s = if rng.f64() < 0.2 {
+                INVALID_SCORE
+            } else {
+                rng.f64() as f32
+            };
+        }
+        let cfg = ImportanceConfig {
+            recompute_frac: rng.f64() * 0.5,
+            min_recompute: rng.below(32),
+        };
+        let sel = select_important_blocks(&scores, len, bt, &cfg);
+        // sorted unique, in range, last position present
+        assert!(sel.windows(2).all(|w| w[0] < w[1]));
+        assert!(sel.iter().all(|&i| (i as usize) < len));
+        assert!(sel.contains(&((len - 1) as i32)));
+        // every invalid position is selected
+        for (i, &s) in scores.iter().enumerate() {
+            if s >= INVALID_SCORE {
+                assert!(sel.contains(&(i as i32)), "invalid {i} unselected");
+            }
+        }
+        // block-clustered: selected positions cover whole blocks
+        for &i in &sel {
+            let b = i as usize / bt;
+            let lo = b * bt;
+            let hi = ((b + 1) * bt).min(len);
+            for j in lo..hi {
+                assert!(sel.contains(&(j as i32)));
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// collector + engine
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_collective_equals_serial() {
+    let rt = MockRuntime::new();
+    forall(25, |rng| {
+        let sp = rt.spec("sim-7b").unwrap().clone();
+        let s = sp.max_seq;
+        let n = rng.range(2, 6);
+        let len = rng.range(8, 128);
+        let toks: Vec<u32> =
+            (0..len).map(|_| 4 + rng.below(200) as u32).collect();
+        let pre = rt.prefill("sim-7b", &toks, len).unwrap();
+        let mk = |id: u64| {
+            let mut tokens = toks.clone();
+            tokens.resize(s, 0);
+            let mut kv = KvBuf::for_spec(&sp);
+            kv.copy_rows_from(&pre.kv, 0, 0, len);
+            let mut valid = vec![0u8; s];
+            valid[..len].iter_mut().for_each(|x| *x = 1);
+            ReuseTask {
+                id,
+                tokens,
+                valid_len: len,
+                old_pos: (0..s as i32).collect(),
+                valid,
+                kv,
+            }
+        };
+        let t1: Vec<ReuseTask> = (0..n as u64).map(mk).collect();
+        let t2: Vec<ReuseTask> = (0..n as u64).map(mk).collect();
+        let (rc, _) = run_reuse(
+            &rt,
+            "sim-7b",
+            &t1,
+            &CollectorConfig { collective: true, ..Default::default() },
+        )
+        .unwrap();
+        let (rs, _) = run_reuse(
+            &rt,
+            "sim-7b",
+            &t2,
+            &CollectorConfig { collective: false, ..Default::default() },
+        )
+        .unwrap();
+        for (a, b) in rc.iter().zip(&rs) {
+            assert_eq!(a.kv, b.kv);
+            assert_eq!(a.logits, b.logits);
+        }
+    });
+}
+
+#[test]
+fn prop_engine_serves_random_round_shapes() {
+    forall(15, |rng| {
+        let rt = Rc::new(MockRuntime::new());
+        let policy = match rng.below(4) {
+            0 => Policy::VllmPrefix,
+            1 => Policy::CacheBlendOrdinary,
+            2 => Policy::CacheBlendFull,
+            _ => Policy::TokenDance,
+        };
+        let mut eng = Engine::new(
+            rt,
+            EngineConfig::for_policy("sim-7b", policy, 512),
+        )
+        .unwrap();
+        let agents = rng.range(1, 6);
+        let rounds = rng.range(1, 4);
+        let mut shared: Vec<Vec<u32>> = Vec::new();
+        for round in 0..rounds {
+            let now = Instant::now();
+            for a in 0..agents {
+                let mut p = RoundAwarePrompt::new();
+                p.push(
+                    BlockKind::PrivateHistory,
+                    encode(&format!("agent {a} h{}", rng.below(1000))),
+                );
+                for (i, toks) in shared.iter().enumerate() {
+                    p.push(
+                        BlockKind::SharedOutput { producer: i, round },
+                        toks.clone(),
+                    );
+                }
+                p.push(BlockKind::RoundTask, encode("go"));
+                p.pad_blocks(16, 36);
+                eng.submit(
+                    AgentRequest {
+                        agent: a,
+                        round,
+                        prompt: p,
+                        max_new_tokens: rng.range(1, 16),
+                        retain: true,
+                    },
+                    now,
+                )
+                .unwrap();
+            }
+            let done = eng.drain().unwrap();
+            assert_eq!(done.len(), agents, "{policy:?} must complete");
+            shared = done.iter().map(|c| c.generated.clone()).collect();
+        }
+        assert_eq!(eng.pending_count(), 0);
+    });
+}
+
+#[test]
+fn prop_buckets_fit_monotone() {
+    let b = Buckets::default();
+    forall(200, |rng| {
+        let n = rng.range(1, 600);
+        if let Some(f) = Buckets::fit(&b.prefill_t, n) {
+            assert!(f >= n);
+            // minimality: no smaller bucket fits
+            for &x in &b.prefill_t {
+                if x >= n {
+                    assert!(f <= x);
+                }
+            }
+        } else {
+            assert!(n > *b.prefill_t.last().unwrap());
+        }
+    });
+}

@@ -1,0 +1,141 @@
+//! Workload-level integration over the mock runtime: full sessions through
+//! the driver at various QPS, policy comparisons at trace level, and
+//! failure injection (pool exhaustion, store pressure, oversize rounds).
+
+use std::rc::Rc;
+
+use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::runtime::{MockRuntime, ModelRuntime};
+use tokendance::workload::driver::{drive_independent, drive_sessions};
+use tokendance::workload::{
+    Family, IndependentWorkload, Session, WorkloadConfig, SCENARIOS,
+};
+
+fn eng(policy: Policy, pool: usize) -> Engine {
+    Engine::new(
+        Rc::new(MockRuntime::new()),
+        EngineConfig::for_policy("sim-7b", policy, pool),
+    )
+    .unwrap()
+}
+
+#[test]
+fn all_scenarios_complete_under_all_policies() {
+    for (id, family, _) in SCENARIOS {
+        for policy in [Policy::VllmPrefix, Policy::TokenDance] {
+            let mut e = eng(policy, 1024);
+            let cfg = WorkloadConfig::for_family(family, id, 3, 2);
+            let report = drive_sessions(&mut e, &cfg, 1, 1e6, 1).unwrap();
+            assert_eq!(report.rounds.len(), 2, "scenario {id} {policy:?}");
+            assert_eq!(report.subrequests.len(), 6);
+        }
+    }
+}
+
+#[test]
+fn multiple_sessions_interleave() {
+    let mut e = eng(Policy::TokenDance, 2048);
+    let cfg = WorkloadConfig::generative_agents(1, 3, 3);
+    let report = drive_sessions(&mut e, &cfg, 3, 1e6, 5).unwrap();
+    assert_eq!(report.rounds.len(), 9);
+    assert_eq!(report.subrequests.len(), 27);
+    // sessions do not cross-contaminate agents
+    assert_eq!(e.pending_count(), 0);
+}
+
+#[test]
+fn low_qps_round_latency_excludes_idle_time() {
+    let mut e = eng(Policy::TokenDance, 1024);
+    let cfg = WorkloadConfig::generative_agents(1, 2, 2);
+    // very low qps: rounds spaced out; latency counted from offered
+    // arrival, so idle gaps must not inflate it
+    let report = drive_sessions(&mut e, &cfg, 1, 50.0, 3).unwrap();
+    for (_, _, l) in &report.rounds {
+        assert!(*l < 5.0, "round latency {l} unreasonable");
+    }
+}
+
+#[test]
+fn independent_workload_frees_pool() {
+    let rt = Rc::new(MockRuntime::new());
+    let spec = rt.spec("sim-7b").unwrap().clone();
+    let mut e = Engine::new(
+        rt,
+        EngineConfig::for_policy("sim-7b", Policy::VllmPrefix,
+                                 4 * spec.n_blocks()),
+    )
+    .unwrap();
+    let mut w = IndependentWorkload::new(12, 150, 8, 3);
+    let report = drive_independent(&mut e, &mut w, 1e6, 3).unwrap();
+    assert_eq!(report.subrequests.len(), 12);
+    // one-shot requests release their blocks at completion
+    assert_eq!(e.pool().stats().used_blocks, 0);
+}
+
+#[test]
+fn agents_session_survives_pool_pressure() {
+    // pool barely fits two sequences; 5 agents queue through it
+    let rt = Rc::new(MockRuntime::new());
+    let spec = rt.spec("sim-7b").unwrap().clone();
+    let mut e = Engine::new(
+        rt,
+        EngineConfig::for_policy("sim-7b", Policy::TokenDance,
+                                 2 * spec.n_blocks()),
+    )
+    .unwrap();
+    let cfg = WorkloadConfig::generative_agents(2, 5, 2);
+    let report = drive_sessions(&mut e, &cfg, 1, 1e6, 9).unwrap();
+    assert_eq!(report.subrequests.len(), 10);
+}
+
+#[test]
+fn store_pressure_evicts_but_serves() {
+    let rt = Rc::new(MockRuntime::new());
+    let mut cfg = EngineConfig::for_policy("sim-7b", Policy::TokenDance, 1024);
+    cfg.store_bytes = 200 << 10; // tiny CPU store
+    let mut e = Engine::new(rt, cfg).unwrap();
+    let w = WorkloadConfig::generative_agents(1, 4, 3);
+    let report = drive_sessions(&mut e, &w, 1, 1e6, 2).unwrap();
+    assert_eq!(report.rounds.len(), 3);
+    assert!(e.store().bytes() <= 200 << 10, "store respects capacity");
+    assert!(e.metrics.store_evictions > 0 || e.store().len() < 20);
+}
+
+#[test]
+fn oversize_round_rejected_cleanly() {
+    let mut e = eng(Policy::TokenDance, 1024);
+    // 20 agents x 32-token outputs exceed max_seq once shared
+    let cfg = WorkloadConfig::generative_agents(1, 20, 2);
+    let mut s = Session::new(cfg, 0);
+    let reqs = s.next_round(); // round 0 fits (no shared blocks yet)
+    let now = std::time::Instant::now();
+    for r in reqs {
+        e.submit(r, now).unwrap();
+    }
+    let done = e.drain().unwrap();
+    let outs: Vec<(usize, Vec<u32>)> =
+        done.iter().map(|c| (c.agent, c.generated.clone())).collect();
+    s.absorb(&outs);
+    // round 1 prompts exceed max_seq -> submit must error, not corrupt
+    let mut any_err = false;
+    for r in s.next_round() {
+        if e.submit(r, now).is_err() {
+            any_err = true;
+        }
+    }
+    assert!(any_err, "oversize prompts must be rejected");
+    let _ = e.drain().unwrap();
+    assert_eq!(e.pending_count(), 0);
+}
+
+#[test]
+fn generative_agents_vs_agent_society_profiles() {
+    let ga = WorkloadConfig::generative_agents(1, 8, 3);
+    let as_ = WorkloadConfig::agent_society(5, 8, 3);
+    assert_eq!(ga.family, Family::GenerativeAgents);
+    assert_eq!(as_.family, Family::AgentSociety);
+    // the paper's contrast: AgentSociety has longer private histories
+    assert!(as_.sys_bytes > ga.sys_bytes);
+    assert!(as_.keep_turns > ga.keep_turns);
+    assert!(ga.max_context() <= 512 && as_.max_context() <= 512);
+}
