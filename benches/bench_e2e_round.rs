@@ -6,7 +6,8 @@ include!("harness.rs");
 
 
 
-use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::engine::{Engine, Policy};
+use tokendance::serve::RoundSubmission;
 use tokendance::workload::{Session, WorkloadConfig};
 
 fn main() {
@@ -22,15 +23,12 @@ fn main() {
                     policy.label()
                 );
                 let b = Bencher::run(&label, iters, 0, || {
-                    let mut eng = Engine::new(
-                        rt.clone(),
-                        EngineConfig::for_policy(
-                            model,
-                            policy,
-                            2 * agents * spec.n_blocks(),
-                        ),
-                    )
-                    .unwrap();
+                    let mut eng = Engine::builder(model)
+                        .policy(policy)
+                        .pool_blocks(2 * agents * spec.n_blocks())
+                        .runtime(rt.clone())
+                        .build()
+                        .unwrap();
                     let mut session = Session::new(
                         WorkloadConfig::generative_agents(1, agents, 2),
                         0,
@@ -38,10 +36,10 @@ fn main() {
                     // warm round + measured round (both timed; dominated
                     // by the measured reuse round at round 1)
                     while !session.done() {
-                        let now = Instant::now();
-                        for r in session.next_round() {
-                            eng.submit(r, now).unwrap();
-                        }
+                        let sub =
+                            RoundSubmission::new(session.global_round())
+                                .requests(session.next_round());
+                        eng.submit_round(sub).unwrap();
                         let done = eng.drain().unwrap();
                         let outs: Vec<(usize, Vec<u32>)> = done
                             .iter()

@@ -4,7 +4,7 @@
 
 include!("harness.rs");
 
-use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::engine::{Engine, Policy};
 use tokendance::workload::driver::{drive_independent, drive_sessions};
 use tokendance::workload::{IndependentWorkload, WorkloadConfig};
 
@@ -19,22 +19,24 @@ fn main() {
     let pool = agents * spec.n_blocks();
 
     let b = Bencher::run("multi-agent session (vLLM+prefix)", iters, 0, || {
-        let mut eng = Engine::new(
-            rt.clone(),
-            EngineConfig::for_policy(model, Policy::VllmPrefix, pool),
-        )
-        .unwrap();
+        let mut eng = Engine::builder(model)
+            .policy(Policy::VllmPrefix)
+            .pool_blocks(pool)
+            .runtime(rt.clone())
+            .build()
+            .unwrap();
         let cfg = WorkloadConfig::generative_agents(1, agents, rounds);
         let _ = drive_sessions(&mut eng, &cfg, 1, 1e6, 1).unwrap();
     });
     b.report();
 
     let b2 = Bencher::run("independent requests (same count)", iters, 0, || {
-        let mut eng = Engine::new(
-            rt.clone(),
-            EngineConfig::for_policy(model, Policy::VllmPrefix, pool),
-        )
-        .unwrap();
+        let mut eng = Engine::builder(model)
+            .policy(Policy::VllmPrefix)
+            .pool_blocks(pool)
+            .runtime(rt.clone())
+            .build()
+            .unwrap();
         let mut w = IndependentWorkload::new(agents * rounds, 300, 32, 1);
         let _ = drive_independent(&mut eng, &mut w, 1e6, 1).unwrap();
     });

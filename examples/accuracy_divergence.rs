@@ -9,27 +9,27 @@
 
 use std::path::Path;
 use std::rc::Rc;
-use std::time::Instant;
 
-use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::engine::{Engine, Policy};
 use tokendance::runtime::PjrtRuntime;
+use tokendance::serve::RoundSubmission;
 use tokendance::workload::{Session, WorkloadConfig};
 
 fn run(rt: Rc<PjrtRuntime>, policy: Policy, rounds: usize)
     -> anyhow::Result<Vec<Vec<(usize, Vec<u32>)>>>
 {
-    let mut eng = Engine::new(
-        rt,
-        EngineConfig::for_policy("sim-7b", policy, 512),
-    )?;
+    let mut eng = Engine::builder("sim-7b")
+        .policy(policy)
+        .pool_blocks(512)
+        .runtime(rt)
+        .build()?;
     let mut session =
         Session::new(WorkloadConfig::generative_agents(3, 4, rounds), 0);
     let mut out = Vec::new();
     while !session.done() {
-        let now = Instant::now();
-        for r in session.next_round() {
-            eng.submit(r, now)?;
-        }
+        let sub = RoundSubmission::new(session.global_round())
+            .requests(session.next_round());
+        eng.submit_round(sub)?;
         let done = eng.drain()?;
         let mut outs: Vec<(usize, Vec<u32>)> = done
             .iter()

@@ -9,7 +9,7 @@
 use std::path::Path;
 use std::rc::Rc;
 
-use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::engine::{Engine, Policy};
 use tokendance::runtime::{ModelRuntime, PjrtRuntime};
 use tokendance::util::stats::Samples;
 use tokendance::workload::driver::drive_sessions;
@@ -29,10 +29,11 @@ fn main() -> anyhow::Result<()> {
         let mut supported = 0usize;
         for agents in [2usize, 4, 6, 8] {
             let pool = (agents * spec.n_blocks() * 6) / 10 + spec.n_blocks();
-            let mut eng = Engine::new(
-                rt.clone(),
-                EngineConfig::for_policy(model, policy, pool),
-            )?;
+            let mut eng = Engine::builder(model)
+                .policy(policy)
+                .pool_blocks(pool)
+                .runtime(rt.clone())
+                .build()?;
             let cfg = WorkloadConfig::agent_society(5, agents, 3);
             let report = drive_sessions(&mut eng, &cfg, 1, qps, 7)?;
             let mut s = Samples::new();

@@ -1,35 +1,48 @@
-//! Quickstart: load the AOT artifacts, build a TokenDance engine, run one
-//! 4-agent All-Gather round, and print what happened.
+//! Quickstart: build a TokenDance engine with [`EngineBuilder`], submit
+//! one 4-agent All-Gather round with [`Engine::submit_round`], and watch
+//! the typed event stream.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
+//! # (falls back to the deterministic mock runtime when artifacts are
+//! #  missing, so it also runs out of the box)
 //! ```
 
 use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
 
-use tokendance::engine::{AgentRequest, Engine, EngineConfig, Policy};
-use tokendance::runtime::PjrtRuntime;
+use tokendance::engine::{AgentRequest, Engine, Policy};
+use tokendance::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
+use tokendance::serve::{EngineEvent, RoundSubmission};
 use tokendance::tokenizer::{decode, encode, BlockKind, RoundAwarePrompt};
 
 fn main() -> anyhow::Result<()> {
-    // 1. the runtime: AOT-compiled XLA artifacts through PJRT (python is
-    //    never on this path — `make artifacts` already ran it once)
-    let rt = Rc::new(PjrtRuntime::load(Path::new("artifacts"))?);
+    // 1. the runtime: AOT-compiled XLA artifacts through PJRT when built
+    //    (`make artifacts`), the deterministic mock otherwise
+    let rt: Rc<dyn ModelRuntime> =
+        match PjrtRuntime::load(Path::new("artifacts")) {
+            Ok(rt) => Rc::new(rt),
+            Err(e) => {
+                eprintln!("(mock runtime: {e:#})");
+                Rc::new(MockRuntime::new())
+            }
+        };
 
     // 2. a TokenDance engine: paged KV pool + diff-aware store + collector
-    let mut engine = Engine::new(
-        rt,
-        EngineConfig::for_policy("sim-7b", Policy::TokenDance, 256),
-    )?;
+    let mut engine = Engine::builder("sim-7b")
+        .policy(Policy::TokenDance)
+        .pool_blocks(256)
+        .runtime(rt)
+        .build()?;
 
     // 3. one All-Gather round: every agent gets a private history plus the
-    //    same shared output blocks (here: synthetic round-0 outputs)
+    //    same shared output blocks (here: synthetic round-0 outputs), in
+    //    per-agent rotated order, submitted atomically as a round
     let shared: Vec<Vec<u32>> = (0..4)
         .map(|i| encode(&format!("agent {i} reported sector {i} clear. ")))
         .collect();
-    let t0 = Instant::now();
+    let mut sub = RoundSubmission::new(0);
     for agent in 0..4usize {
         let mut prompt = RoundAwarePrompt::new();
         prompt.push(
@@ -37,7 +50,6 @@ fn main() -> anyhow::Result<()> {
             encode(&format!("You are agent {agent}, a scout.")),
         );
         for i in 0..shared.len() {
-            // per-agent block order, as All-Gather schedulers do
             let producer = (i + agent) % shared.len();
             prompt.push(
                 BlockKind::SharedOutput { producer, round: 0 },
@@ -46,19 +58,23 @@ fn main() -> anyhow::Result<()> {
         }
         prompt.push(BlockKind::RoundTask, encode("Report your next move."));
         prompt.pad_blocks(16, encode(" ")[0]);
-        engine.submit(
-            AgentRequest {
-                agent,
-                round: 0,
-                prompt,
-                max_new_tokens: 16,
-                retain: true,
-            },
-            t0,
-        )?;
+        sub.push(AgentRequest {
+            agent,
+            round: 0,
+            prompt,
+            max_new_tokens: 16,
+            retain: true,
+        });
     }
+    let t0 = Instant::now();
+    let handle = engine.submit_round(sub)?;
+    println!(
+        "submitted round {} ({} subrequests)\n",
+        handle.round(),
+        handle.len()
+    );
 
-    // 4. drain the round and inspect
+    // 4. drain the round and inspect the typed event stream
     let done = engine.drain()?;
     println!("round completed in {:?}\n", t0.elapsed());
     for c in &done {
@@ -67,6 +83,24 @@ fn main() -> anyhow::Result<()> {
             c.agent,
             decode(&c.generated).chars().take(48).collect::<String>()
         );
+    }
+    println!();
+    for ev in engine.poll_events() {
+        match ev {
+            EngineEvent::PrefillDone { id, reused_tokens, .. } => {
+                println!("  prefill #{id}: {reused_tokens} tokens reused");
+            }
+            EngineEvent::Finished { id, e2e_secs, .. } => {
+                println!("  finished #{id} in {e2e_secs:.3}s");
+            }
+            EngineEvent::RoundClosed { round, staged, mirror_bytes } => {
+                println!(
+                    "  round {round} closed: {staged} caches staged, \
+                     {mirror_bytes} mirror bytes"
+                );
+            }
+            _ => {}
+        }
     }
     println!(
         "\nreuse: {:.0}% of prompt tokens served from cache",

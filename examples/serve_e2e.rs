@@ -11,7 +11,7 @@
 use std::path::Path;
 use std::rc::Rc;
 
-use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::engine::{Engine, Policy};
 use tokendance::runtime::{ModelRuntime, PjrtRuntime};
 use tokendance::util::stats::{fmt_bytes, fmt_secs, Samples};
 use tokendance::workload::driver::drive_sessions;
@@ -36,10 +36,11 @@ fn main() -> anyhow::Result<()> {
         "peak pool", "store", "reuse"
     );
     for policy in Policy::all() {
-        let mut eng = Engine::new(
-            rt.clone(),
-            EngineConfig::for_policy(model, policy, pool),
-        )?;
+        let mut eng = Engine::builder(model)
+            .policy(policy)
+            .pool_blocks(pool)
+            .runtime(rt.clone())
+            .build()?;
         let cfg = WorkloadConfig::generative_agents(1, agents, rounds);
         let report = drive_sessions(&mut eng, &cfg, 1, qps, 0xE2E)?;
         let mut rl = Samples::new();

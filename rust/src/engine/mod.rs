@@ -12,10 +12,15 @@
 //! The engine is single-threaded — one simulated accelerator — with an
 //! admission queue and continuous batching: `tick()` admits + prefills
 //! waiting requests, then advances every running sequence one decode step.
+//!
+//! The public serving surface is round-native and lives in
+//! [`crate::serve`]: engines are built with `EngineBuilder`, All-Gather
+//! rounds enter atomically through `Engine::submit_round`, and all
+//! per-request/round observability flows out of `Engine::poll_events`.
 
 mod prefill;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -29,6 +34,7 @@ use crate::restore::RestoreMode;
 use crate::rounds::{segment_blocks, DetectorConfig, SegmentedPrompt};
 use crate::runtime::{argmax, DecodeSeq, KvBuf, ModelRuntime};
 use crate::scheduler::{decode_batches, AdmissionQueue, QueuedRequest};
+use crate::serve::EngineEvent;
 use crate::store::{CacheStore, Role, StoreKey};
 use crate::tokenizer::{RoundAwarePrompt, EOS_ID};
 use crate::util::fnv1a_tokens;
@@ -59,6 +65,27 @@ impl Policy {
             Policy::CacheBlendFull,
             Policy::TokenDance,
         ]
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = anyhow::Error;
+
+    /// Parse the CLI/experiment aliases (`vllm`, `cb-ord`, `cb`,
+    /// `tokendance`, `td`, plus their long forms).
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "vllm" | "vllm-prefix" => Policy::VllmPrefix,
+            "cb-ord" | "cacheblend-ordinary" => Policy::CacheBlendOrdinary,
+            "cb" | "cacheblend" => Policy::CacheBlendFull,
+            "tokendance" | "td" => Policy::TokenDance,
+            other => {
+                return Err(anyhow!(
+                    "unknown policy {other:?} (expected vllm | cb-ord | \
+                     cb | tokendance)"
+                ))
+            }
+        })
     }
 }
 
@@ -195,10 +222,19 @@ pub struct Engine {
     round_outstanding: HashMap<usize, usize>,
     /// Completed caches awaiting round-end Mirror encoding (TokenDance).
     round_staging: HashMap<usize, Vec<StagedCache>>,
+    /// Typed event stream, drained via `Engine::poll_events` (serve/).
+    pub(crate) events: VecDeque<EngineEvent>,
+    /// Events discarded after the buffer cap — non-zero only for callers
+    /// that never poll (e.g. drain()-only benches).
+    pub events_dropped: u64,
     pub metrics: RunMetrics,
     next_id: u64,
     started: Instant,
 }
+
+/// Event-buffer cap: far above any round's event count, small enough that
+/// a poll-free caller cannot grow memory without bound.
+const EVENT_BUF_CAP: usize = 1 << 16;
 
 impl Engine {
     pub fn new(rt: Rc<dyn ModelRuntime>, cfg: EngineConfig) -> Result<Self> {
@@ -218,6 +254,8 @@ impl Engine {
             finished: Vec::new(),
             round_outstanding: HashMap::new(),
             round_staging: HashMap::new(),
+            events: VecDeque::new(),
+            events_dropped: 0,
             metrics: RunMetrics::default(),
             next_id: 0,
             started: Instant::now(),
@@ -240,10 +278,14 @@ impl Engine {
         &mut self.store
     }
 
-    /// Submit a subrequest; `arrived` is its workload arrival timestamp
-    /// (may predate the call if the engine was busy).
-    pub fn submit(&mut self, req: AgentRequest, arrived: Instant)
-        -> Result<u64>
+    /// Validate a subrequest without registering it: non-empty prompt,
+    /// fits `max_seq`, and — the fail-fast admission guarantee — its block
+    /// demand fits the pool *at all*. A request whose demand exceeds the
+    /// total pool would sit at the head of the FIFO queue forever (no
+    /// amount of `evict_retained` can help), stalling every round behind
+    /// it; rejecting it at submission keeps the queue live.
+    pub(crate) fn prepare(&self, req: &AgentRequest)
+        -> Result<(Vec<u32>, SegmentedPrompt)>
     {
         // out-of-band block structure: no separator tokens in the stream
         let seg = segment_blocks(&req.prompt);
@@ -258,6 +300,31 @@ impl Engine {
                 self.spec.max_seq
             ));
         }
+        let needed = self.pool.blocks_for(total);
+        let cap = self.pool.stats().total_blocks;
+        if needed > cap {
+            return Err(anyhow!(
+                "request needs {needed} KV blocks but the pool holds only \
+                 {cap}: it can never be admitted (raise pool_blocks or \
+                 shrink the prompt)"
+            ));
+        }
+        Ok((tokens, seg))
+    }
+
+    /// Register a subrequest already validated by [`Engine::prepare`];
+    /// `arrived` is its workload arrival timestamp (may predate the call
+    /// if the engine was busy). Internal: callers go through
+    /// `Engine::submit_round` (serve/), which owns validation, round
+    /// registration, and arrival stamping.
+    pub(crate) fn submit(
+        &mut self,
+        req: AgentRequest,
+        tokens: Vec<u32>,
+        seg: SegmentedPrompt,
+        arrived: Instant,
+    ) -> u64 {
+        let total = tokens.len() + req.max_new_tokens;
         let id = self.next_id;
         self.next_id += 1;
         *self.round_outstanding.entry(req.round).or_insert(0) += 1;
@@ -269,8 +336,22 @@ impl Engine {
             arrived,
             blocks_needed: self.pool.blocks_for(total),
         });
+        self.push_event(EngineEvent::Queued {
+            id,
+            agent: req.agent,
+            round: req.round,
+        });
         self.pending.insert(id, Pending { id, req, tokens, seg });
-        Ok(id)
+        id
+    }
+
+    /// Append to the event stream, dropping the oldest event past the cap.
+    pub(crate) fn push_event(&mut self, ev: EngineEvent) {
+        if self.events.len() >= EVENT_BUF_CAP {
+            self.events.pop_front();
+            self.events_dropped += 1;
+        }
+        self.events.push_back(ev);
     }
 
     /// Free retained GPU caches (oldest round first) until `deficit` blocks
@@ -322,6 +403,10 @@ impl Engine {
                 {
                     t.admitted = Some(now);
                 }
+                self.push_event(EngineEvent::Admitted {
+                    id: p.id,
+                    round: p.req.round,
+                });
             }
             self.prefill_batch(batch)?;
             self.sample_usage();

@@ -436,11 +436,20 @@ impl Engine {
 
     fn mark_prefill_done(&mut self, id: u64, reused: usize, _fresh: usize) {
         let now = Instant::now();
+        let mut round = None;
         if let Some(t) =
             self.metrics.requests.iter_mut().find(|t| t.id == id)
         {
             t.prefill_done = Some(now);
             t.reused_tokens = reused;
+            round = Some(t.round);
+        }
+        if let Some(round) = round {
+            self.push_event(crate::serve::EngineEvent::PrefillDone {
+                id,
+                round,
+                reused_tokens: reused,
+            });
         }
     }
 
@@ -588,6 +597,20 @@ impl Engine {
     }
 
     fn complete_bookkeeping(&mut self, r: Running) -> Result<()> {
+        let e2e = self
+            .metrics
+            .requests
+            .iter()
+            .find(|t| t.id == r.id)
+            .and_then(|t| t.e2e_secs())
+            .unwrap_or(0.0);
+        self.push_event(crate::serve::EngineEvent::Finished {
+            id: r.id,
+            agent: r.agent,
+            round: r.round,
+            generated: r.generated.clone(),
+            e2e_secs: e2e,
+        });
         self.finished.push(Completion {
             id: r.id,
             agent: r.agent,
@@ -595,18 +618,27 @@ impl Engine {
             generated: r.generated,
         });
 
-        // round bookkeeping
+        // round bookkeeping: the engine owns the round lifecycle; callers
+        // observe it through the RoundClosed event
         if let Some(c) = self.round_outstanding.get_mut(&r.round) {
             *c -= 1;
             if *c == 0 {
                 self.round_outstanding.remove(&r.round);
+                let staged =
+                    self.round_staging.get(&r.round).map_or(0, Vec::len);
+                let mut mirror_bytes = 0;
                 if self.cfg.policy == Policy::TokenDance {
                     let t0 = Instant::now();
-                    self.encode_round(r.round)?;
+                    mirror_bytes = self.encode_round(r.round)?;
                     self.metrics
                         .encode_secs
                         .push(t0.elapsed().as_secs_f64());
                 }
+                self.push_event(crate::serve::EngineEvent::RoundClosed {
+                    round: r.round,
+                    staged,
+                    mirror_bytes,
+                });
             }
         }
         Ok(())
@@ -615,12 +647,15 @@ impl Engine {
     /// Round-end Master-Mirror encoding (paper §4.3): elect the Master
     /// (lowest reuse deviation; ties broken by longest context), store it
     /// dense, and encode every sibling as a block-sparse diff against it.
-    fn encode_round(&mut self, round: usize) -> Result<()> {
+    /// Returns the store bytes of the mirrors inserted for this round
+    /// (measured per entry, so concurrent store eviction cannot skew it).
+    fn encode_round(&mut self, round: usize) -> Result<usize> {
+        let mut mirror_bytes = 0usize;
         let Some(mut staged) = self.round_staging.remove(&round) else {
-            return Ok(());
+            return Ok(mirror_bytes);
         };
         if staged.is_empty() {
-            return Ok(());
+            return Ok(mirror_bytes);
         }
         let spec = self.spec.clone();
         // elect: min deviation, tie-break longer context
@@ -762,23 +797,23 @@ impl Engine {
                 let corrections = extract_blocks(
                     &unrot, &changed.block_ids, len, bt,
                 );
-                self.store.put_mirror(
-                    key,
-                    MirrorEntry {
-                        master: master_key,
-                        tokens: s.tokens.clone(),
-                        positions: (0..len as i32).collect(),
-                        diff: AlignedDiff {
-                            src_block,
-                            src_pos: src_pos[..len].to_vec(),
-                            corrections,
-                        },
+                let entry = MirrorEntry {
+                    master: master_key,
+                    tokens: s.tokens.clone(),
+                    positions: (0..len as i32).collect(),
+                    diff: AlignedDiff {
+                        src_block,
+                        src_pos: src_pos[..len].to_vec(),
+                        corrections,
                     },
-                )?;
+                };
+                // same measure the store's accounting uses (diff + tokens)
+                mirror_bytes += entry.diff.bytes() + entry.tokens.len() * 8;
+                self.store.put_mirror(key, entry)?;
             }
             self.agents.entry(s.agent).or_default().store_key = Some(key);
         }
-        Ok(())
+        Ok(mirror_bytes)
     }
 }
 

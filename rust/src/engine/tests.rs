@@ -1,19 +1,19 @@
 //! Engine integration tests over the mock runtime: every policy end to
 //! end, retention semantics, reuse accounting, pool pressure, determinism.
 
-use std::rc::Rc;
-use std::time::Instant;
-
 use super::*;
-use crate::runtime::MockRuntime;
+use crate::serve::RoundSubmission;
 use crate::store::{Fetched, StoreStats};
 use crate::tokenizer::{encode, BlockKind};
 
 const MODEL: &str = "sim-7b";
 
 fn engine(policy: Policy, pool_blocks: usize) -> Engine {
-    let rt = Rc::new(MockRuntime::new());
-    Engine::new(rt, EngineConfig::for_policy(MODEL, policy, pool_blocks))
+    Engine::builder(MODEL)
+        .policy(policy)
+        .pool_blocks(pool_blocks)
+        .mock()
+        .build()
         .unwrap()
 }
 
@@ -57,7 +57,7 @@ fn run_rounds(
     let mut shared: Vec<(usize, Vec<u32>)> = Vec::new();
     let mut all_outputs = Vec::new();
     for round in 0..n_rounds {
-        let now = Instant::now();
+        let mut sub = RoundSubmission::new(round);
         for a in 0..n_agents {
             let p = prompt(
                 a,
@@ -65,18 +65,15 @@ fn run_rounds(
                 &shared,
                 &format!("round {round}: act"),
             );
-            eng.submit(
-                AgentRequest {
-                    agent: a,
-                    round,
-                    prompt: p,
-                    max_new_tokens: 16,
-                    retain: true,
-                },
-                now,
-            )
-            .unwrap();
+            sub.push(AgentRequest {
+                agent: a,
+                round,
+                prompt: p,
+                max_new_tokens: 16,
+                retain: true,
+            });
         }
+        eng.submit_round(sub).unwrap();
         let done = eng.drain().unwrap();
         if done.len() != n_agents {
             panic!("round {round}: {}/{} done, pending={}, pool={:?}",
@@ -198,7 +195,7 @@ fn tokendance_reuses_more_than_vllm() {
 fn run_shared_heavy(eng: &mut Engine, n_agents: usize, n_rounds: usize) {
     let mut shared: Vec<(usize, Vec<u32>)> = Vec::new();
     for round in 0..n_rounds {
-        let now = Instant::now();
+        let mut sub = RoundSubmission::new(round);
         for a in 0..n_agents {
             let mut p = RoundAwarePrompt::new();
             p.push(BlockKind::PrivateHistory, encode(&format!("agent {a}")));
@@ -212,12 +209,15 @@ fn run_shared_heavy(eng: &mut Engine, n_agents: usize, n_rounds: usize) {
             }
             p.push(BlockKind::RoundTask, encode("act now"));
             p.pad_blocks(16, encode(" ")[0]);
-            eng.submit(
-                AgentRequest { agent: a, round, prompt: p, max_new_tokens: 16, retain: true },
-                now,
-            )
-            .unwrap();
+            sub.push(AgentRequest {
+                agent: a,
+                round,
+                prompt: p,
+                max_new_tokens: 16,
+                retain: true,
+            });
         }
+        eng.submit_round(sub).unwrap();
         let done = eng.drain().unwrap();
         assert_eq!(done.len(), n_agents);
         shared = done
@@ -234,11 +234,14 @@ fn tokendance_stores_mirrors_with_compression() {
     // block, recompute fraction low — mirrors must compress well against
     // the Master (the Fig-12 mechanism; magnitudes are measured by the
     // fig12 experiment at full workload scale)
-    let rt = Rc::new(MockRuntime::new());
-    let mut cfg = EngineConfig::for_policy(MODEL, Policy::TokenDance, 512);
-    cfg.collector.importance.recompute_frac = 0.05;
-    cfg.collector.importance.min_recompute = 1;
-    let mut eng = Engine::new(rt, cfg).unwrap();
+    let mut eng = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(512)
+        .recompute_frac(0.05)
+        .min_recompute(1)
+        .mock()
+        .build()
+        .unwrap();
     run_shared_heavy(&mut eng, 8, 3);
 
     let st: StoreStats = eng.store().stats();
@@ -315,10 +318,15 @@ fn rejects_oversize_prompts() {
     let mut eng = engine(Policy::TokenDance, 256);
     let mut p = RoundAwarePrompt::new();
     p.push(BlockKind::PrivateHistory, vec![5u32; 600]);
-    let err = eng.submit(
-        AgentRequest { agent: 0, round: 0, prompt: p, max_new_tokens: 8, retain: true },
-        Instant::now(),
-    );
+    let err = eng.submit_round(RoundSubmission::new(0).request(
+        AgentRequest {
+            agent: 0,
+            round: 0,
+            prompt: p,
+            max_new_tokens: 8,
+            retain: true,
+        },
+    ));
     assert!(err.is_err());
 }
 

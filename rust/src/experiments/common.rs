@@ -6,8 +6,9 @@ use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-use crate::engine::{Engine, EngineConfig, Policy};
+use crate::engine::{Engine, Policy};
 use crate::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
+use crate::serve::EngineBuilder;
 use crate::util::cli::Args;
 
 /// Execution context shared by every experiment driver.
@@ -47,17 +48,10 @@ impl ExpContext {
         Ok(ExpContext { rt, quick: args.flag("quick"), out_dir })
     }
 
-    pub fn engine(&self, model: &str, policy: Policy, pool_blocks: usize)
-        -> Result<Engine>
-    {
-        Engine::new(
-            self.rt.clone(),
-            EngineConfig::for_policy(model, policy, pool_blocks),
-        )
-    }
-
-    pub fn engine_with(&self, cfg: EngineConfig) -> Result<Engine> {
-        Engine::new(self.rt.clone(), cfg)
+    /// Start an [`EngineBuilder`] bound to this context's runtime; the
+    /// experiment chains its policy/pool/knob calls and `build()`s.
+    pub fn builder(&self, model: &str) -> EngineBuilder {
+        Engine::builder(model).runtime(self.rt.clone())
     }
 
     /// Write a result file (markdown/CSV) under the output directory.

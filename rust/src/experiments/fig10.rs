@@ -30,7 +30,11 @@ fn round_latency_at(
     // fixed memory budget: enough pool for ~60% of full retention — the
     // capacity pressure regime of the paper
     let pool = (sessions * agents * spec.n_blocks() * 6) / 10 + spec.n_blocks();
-    let mut eng = ctx.engine(model, policy, pool)?;
+    let mut eng = ctx
+        .builder(model)
+        .policy(policy)
+        .pool_blocks(pool)
+        .build()?;
     let cfg = WorkloadConfig::for_family(family, 1, agents, rounds);
     let report = drive_sessions(&mut eng, &cfg, sessions, qps, 0xF16)?;
     let mut s = Samples::new();

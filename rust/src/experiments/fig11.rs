@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use super::common::ExpContext;
-use crate::engine::{EngineConfig, Policy};
+use crate::engine::Policy;
 use crate::metrics::render_table;
 use crate::util::cli::Args;
 use crate::util::stats::Samples;
@@ -26,13 +26,12 @@ fn reuse_time(
     rounds: usize,
 ) -> Result<f64> {
     let spec = ctx.rt.spec(model)?.clone();
-    let mut cfg = EngineConfig::for_policy(
-        model,
-        Policy::TokenDance,
-        2 * agents * spec.n_blocks(),
-    );
-    cfg.collector.collective = collective;
-    let mut eng = ctx.engine_with(cfg)?;
+    let mut eng = ctx
+        .builder(model)
+        .policy(Policy::TokenDance)
+        .pool_blocks(2 * agents * spec.n_blocks())
+        .collective(collective)
+        .build()?;
     let mut w = WorkloadConfig::generative_agents(1, agents, rounds);
     // fixed shared set so cross-agent redundancy stays controlled as the
     // agent count grows (the paper replays a single round's output set)

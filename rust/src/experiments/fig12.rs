@@ -7,13 +7,12 @@
 //! 7B — is the reproduction target (EXPERIMENTS.md discusses calibration).
 //! Also derives the implied capacity gain (§6.4 "Implied capacity gain").
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use super::common::ExpContext;
-use crate::engine::{EngineConfig, Policy};
+use crate::engine::Policy;
 use crate::metrics::render_table;
+use crate::serve::RoundSubmission;
 use crate::util::cli::Args;
 use crate::workload::{Session, WorkloadConfig};
 
@@ -27,24 +26,22 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
     let mut summary = String::new();
     for model in ["sim-7b", "sim-14b"] {
         let spec = ctx.rt.spec(model)?.clone();
-        let mut cfg = EngineConfig::for_policy(
-            model,
-            Policy::TokenDance,
-            2 * agents * spec.n_blocks(),
-        );
         // the paper's regime favors low recompute fractions
-        cfg.collector.importance.recompute_frac = 0.08;
-        cfg.collector.importance.min_recompute = spec.block_tokens;
-        let mut eng = ctx.engine_with(cfg)?;
+        let mut eng = ctx
+            .builder(model)
+            .policy(Policy::TokenDance)
+            .pool_blocks(2 * agents * spec.n_blocks())
+            .recompute_frac(0.08)
+            .min_recompute(spec.block_tokens)
+            .build()?;
         let mut session = Session::new(
             WorkloadConfig::generative_agents(1, agents, rounds),
             0,
         );
         while !session.done() {
-            let now = Instant::now();
-            for r in session.next_round() {
-                eng.submit(r, now)?;
-            }
+            let sub = RoundSubmission::new(session.global_round())
+                .requests(session.next_round());
+            eng.submit_round(sub)?;
             let done = eng.drain()?;
             let outs: Vec<(usize, Vec<u32>)> = done
                 .iter()

@@ -9,9 +9,10 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::common::ExpContext;
-use crate::engine::{EngineConfig, Policy};
+use crate::engine::Policy;
 use crate::metrics::render_table;
 use crate::restore::RestoreMode;
+use crate::serve::RoundSubmission;
 use crate::util::cli::Args;
 use crate::util::stats::Samples;
 use crate::workload::{Session, WorkloadConfig};
@@ -27,13 +28,12 @@ fn restore_latency(
     rounds: usize,
 ) -> Result<(f64, u64)> {
     let spec = ctx.rt.spec(model)?.clone();
-    let mut cfg = EngineConfig::for_policy(
-        model,
-        Policy::TokenDance,
-        2 * agents * spec.n_blocks(),
-    );
-    cfg.restore_mode = Some(mode);
-    let mut eng = ctx.engine_with(cfg)?;
+    let mut eng = ctx
+        .builder(model)
+        .policy(Policy::TokenDance)
+        .pool_blocks(2 * agents * spec.n_blocks())
+        .restore_mode(mode)
+        .build()?;
     let mut session = Session::new(
         WorkloadConfig::generative_agents(1, agents, rounds),
         0,
@@ -42,9 +42,9 @@ fn restore_latency(
     // rounds so the arrival spacing matches agents/qps
     while !session.done() {
         let now = Instant::now();
-        for r in session.next_round() {
-            eng.submit(r, now)?;
-        }
+        let sub = RoundSubmission::new(session.global_round())
+            .requests(session.next_round());
+        eng.submit_round(sub)?;
         let done = eng.drain()?;
         let outs: Vec<(usize, Vec<u32>)> = done
             .iter()

@@ -5,13 +5,12 @@
 //! attributable to the underlying PIC method — verified here by also
 //! comparing TokenDance against per-request CacheBlend (must be 0 always).
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use super::common::ExpContext;
 use crate::engine::{Engine, Policy};
 use crate::metrics::render_table;
+use crate::serve::RoundSubmission;
 use crate::util::cli::Args;
 use crate::workload::{Session, WorkloadConfig, SCENARIOS};
 
@@ -23,10 +22,9 @@ fn run_scenario(
     let mut session = Session::new(cfg.clone(), 0);
     let mut rounds = Vec::new();
     while !session.done() {
-        let now = Instant::now();
-        for r in session.next_round() {
-            eng.submit(r, now)?;
-        }
+        let sub = RoundSubmission::new(session.global_round())
+            .requests(session.next_round());
+        eng.submit_round(sub)?;
         let done = eng.drain()?;
         let mut outs: Vec<(usize, Vec<u32>)> = done
             .iter()
@@ -66,12 +64,12 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
     // keep the perturbation comparable (CacheBlend's r trades accuracy for
     // speed; see EXPERIMENTS.md scale discussion)
     let frac = args.f64_or("recompute-frac", 0.35);
-    let mk_engine = |policy: Policy| -> Result<crate::engine::Engine> {
-        let mut c = crate::engine::EngineConfig::for_policy(
-            &model, policy, pool,
-        );
-        c.collector.importance.recompute_frac = frac;
-        ctx.engine_with(c)
+    let mk_engine = |policy: Policy| -> Result<Engine> {
+        ctx.builder(&model)
+            .policy(policy)
+            .pool_blocks(pool)
+            .recompute_frac(frac)
+            .build()
     };
     let mut rows = Vec::new();
     let mut zero_div = 0usize;

@@ -35,14 +35,22 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
 
     // multi-agent workload on the request-local baseline (the paper runs
     // this probe on vLLM with prefix caching)
-    let mut eng = ctx.engine(&model, Policy::VllmPrefix, pool_blocks)?;
+    let mut eng = ctx
+        .builder(&model)
+        .policy(Policy::VllmPrefix)
+        .pool_blocks(pool_blocks)
+        .build()?;
     let cfg = WorkloadConfig::generative_agents(1, agents, rounds);
     let ma = drive_sessions(&mut eng, &cfg, sessions, qps, 0xF162)?;
     let ma_peak = eng.pool().stats().peak_used_blocks;
     let ma_lat = ma.subrequests.clone();
 
     // independent workload: same number of subrequests, similar sizes
-    let mut eng2 = ctx.engine(&model, Policy::VllmPrefix, pool_blocks)?;
+    let mut eng2 = ctx
+        .builder(&model)
+        .policy(Policy::VllmPrefix)
+        .pool_blocks(pool_blocks)
+        .build()?;
     let mut iw = IndependentWorkload::new(
         total_subreq,
         cfg.max_context() - cfg.max_new_tokens - 64,

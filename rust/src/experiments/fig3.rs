@@ -4,14 +4,13 @@
 //! collect each agent's recovered cache, and compare every pair at
 //! content-aligned block granularity.
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use super::common::ExpContext;
-use crate::engine::{AgentRequest, Policy};
+use crate::engine::Policy;
 use crate::metrics::render_table;
 use crate::runtime::KvBuf;
+use crate::serve::RoundSubmission;
 use crate::store::match_blocks_by_content;
 use crate::util::cli::Args;
 use crate::workload::{Session, WorkloadConfig};
@@ -76,24 +75,23 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
     println!("model={model} agents={agents} (one GenerativeAgents round)");
 
     let spec = ctx.rt.spec(&model)?.clone();
-    let mut cfg = crate::engine::EngineConfig::for_policy(
-        &model, Policy::TokenDance, 2048,
-    );
     // the paper regime favors a low recompute fraction (as in fig12)
-    cfg.collector.importance.recompute_frac = 0.08;
-    cfg.collector.importance.min_recompute = spec.block_tokens;
-    let mut eng = ctx.engine_with(cfg)?;
+    let mut eng = ctx
+        .builder(&model)
+        .policy(Policy::TokenDance)
+        .pool_blocks(2048)
+        .recompute_frac(0.08)
+        .min_recompute(spec.block_tokens)
+        .build()?;
     let cfg = WorkloadConfig::generative_agents(1, agents, 2);
     let mut session = Session::new(cfg, 0);
 
     // round 0 (cold) to produce shared blocks, then the measured round
     let mut caches: Vec<(usize, Vec<u32>, KvBuf)> = Vec::new();
     for round in 0..2 {
-        let now = Instant::now();
-        let reqs: Vec<AgentRequest> = session.next_round();
-        for r in reqs {
-            eng.submit(r, now)?;
-        }
+        let sub = RoundSubmission::new(session.global_round())
+            .requests(session.next_round());
+        eng.submit_round(sub)?;
         let done = eng.drain()?;
         let outs: Vec<(usize, Vec<u32>)> = done
             .iter()

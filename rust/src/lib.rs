@@ -23,6 +23,7 @@
 //! | [`restore`] | fused / dense Mirror restore (paper §4.4, Algorithm 1) |
 //! | [`scheduler`] | continuous batching, admission, preemption |
 //! | [`engine`] | the serving engine tying every subsystem together |
+//! | [`serve`] | round-native public API: builder, round handles, events |
 //! | [`workload`] | GenerativeAgents / AgentSociety trace synthesizers |
 //! | [`metrics`] | latency/usage recorders and table emitters |
 //! | [`experiments`] | one driver per paper figure (2, 3, 10–14) |
@@ -39,9 +40,12 @@ pub mod restore;
 pub mod rounds;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod store;
 pub mod tokenizer;
 pub mod util;
 pub mod workload;
+
+pub use serve::{EngineBuilder, EngineEvent, RoundHandle, RoundSubmission};
 
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -10,7 +10,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::engine::{Engine, Policy};
 use tokendance::experiments::{self, ExpContext};
 use tokendance::util::cli::Args;
 use tokendance::util::stats::{fmt_bytes, fmt_secs, Samples};
@@ -44,20 +44,10 @@ SERVE OPTIONS:
   --pool-blocks N   KV pool capacity in blocks   [auto]
 ";
 
-fn parse_policy(s: &str) -> Result<Policy> {
-    Ok(match s {
-        "vllm" | "vllm-prefix" => Policy::VllmPrefix,
-        "cb-ord" | "cacheblend-ordinary" => Policy::CacheBlendOrdinary,
-        "cb" | "cacheblend" => Policy::CacheBlendFull,
-        "tokendance" | "td" => Policy::TokenDance,
-        _ => bail!("unknown policy {s}"),
-    })
-}
-
 fn cmd_serve(args: &Args) -> Result<()> {
     let ctx = ExpContext::from_args(args)?;
     let model = args.get_or("model", "sim-7b").to_string();
-    let policy = parse_policy(args.get_or("policy", "tokendance"))?;
+    let policy: Policy = args.get_or("policy", "tokendance").parse()?;
     let agents = args.usize_or("agents", 5);
     let rounds = args.usize_or("rounds", 3);
     let sessions = args.usize_or("sessions", 1);
@@ -78,10 +68,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy.label(),
         family.label()
     );
-    let mut eng = Engine::new(
-        ctx.rt.clone(),
-        EngineConfig::for_policy(&model, policy, pool),
-    )?;
+    let mut eng = Engine::builder(&model)
+        .policy(policy)
+        .pool_blocks(pool)
+        .runtime(ctx.rt.clone())
+        .build()?;
     let cfg = WorkloadConfig::for_family(family, 1, agents, rounds);
     let report = drive_sessions(&mut eng, &cfg, sessions, qps, 0x5E12)?;
 

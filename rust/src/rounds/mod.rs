@@ -268,4 +268,43 @@ mod tests {
         let b = prompt("private-b", &["s1", "s2"]);
         assert_eq!(shared_segment_tokens(&a, &b), 4);
     }
+
+    #[test]
+    fn detector_empty_prompt_slice_is_independent() {
+        // no prompts at all must not panic, for any min_requests
+        for min_requests in [0, 1, 2] {
+            let cfg = DetectorConfig { min_requests, min_shared_frac: 0.3 };
+            assert_eq!(
+                detect_pattern(&[], &cfg),
+                PatternVerdict::Independent
+            );
+        }
+    }
+
+    #[test]
+    fn detector_min_requests_one_does_not_panic() {
+        let cfg = DetectorConfig { min_requests: 1, min_shared_frac: 0.3 };
+        // a single prompt trivially "shares" all its segments with itself
+        let p = prompt("solo history", &["solo shared"]);
+        assert!(matches!(
+            detect_pattern(&[&p], &cfg),
+            PatternVerdict::AllGather { .. }
+        ));
+        // a prompt with no tokens (empty segment set) stays independent
+        let empty = segment_prompt(&[]);
+        assert_eq!(
+            detect_pattern(&[&empty], &cfg),
+            PatternVerdict::Independent
+        );
+    }
+
+    #[test]
+    fn detector_zero_length_segments_do_not_divide_by_zero() {
+        let cfg = DetectorConfig { min_requests: 2, min_shared_frac: 0.3 };
+        // two prompts that are only separators: every segment is empty, so
+        // total token counts are 0 — the shared fraction must not NaN-trip
+        let a = segment_prompt(&[crate::tokenizer::TTSEP_ID]);
+        let b = segment_prompt(&[crate::tokenizer::TTSEP_ID]);
+        let _ = detect_pattern(&[&a, &b], &cfg); // must not panic
+    }
 }

@@ -6,6 +6,10 @@
 
 pub mod kv;
 pub mod mock;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod traits;
 

@@ -1,0 +1,102 @@
+//! Build-time stand-in for [`PjrtRuntime`] when the `pjrt` cargo feature
+//! is off (the default: the `xla` bindings crate is vendored in deployment
+//! images, not pulled from crates.io). The stub keeps every call-site —
+//! examples, benches, the integration suite, `ExpContext` — compiling;
+//! [`PjrtRuntime::load`] always errors, so no instance can exist and the
+//! trait methods are statically unreachable.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::kv::KvBuf;
+use super::traits::{
+    DecodeOut, DecodeSeq, ModelRuntime, PrefillOut, RopeDiffOut,
+    RopeDiffSeq, SelectiveIn, SelectiveOut, SparseDiff,
+};
+use crate::model::{Buckets, ModelSpec};
+
+/// Unconstructible placeholder for the real PJRT runtime.
+pub struct PjrtRuntime {
+    _unconstructible: std::convert::Infallible,
+}
+
+const NO_PJRT: &str =
+    "PjrtRuntime cannot exist in a build without the `pjrt` feature";
+
+impl PjrtRuntime {
+    /// Always errors in this build; rebuild with `--features pjrt` (and a
+    /// vendored `xla` crate) for real artifact execution, or use
+    /// [`crate::runtime::MockRuntime`] / `EngineBuilder::mock()`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        bail!(
+            "built without the `pjrt` feature: cannot load artifacts from \
+             {} (enable the feature with a vendored `xla` crate, or use \
+             the mock runtime)",
+            artifacts_dir.display()
+        )
+    }
+
+    pub fn warmup(&self, _model: Option<&str>) -> Result<()> {
+        unreachable!("{NO_PJRT}")
+    }
+}
+
+impl ModelRuntime for PjrtRuntime {
+    fn spec(&self, _model: &str) -> Result<&ModelSpec> {
+        unreachable!("{NO_PJRT}")
+    }
+
+    fn buckets(&self) -> &Buckets {
+        unreachable!("{NO_PJRT}")
+    }
+
+    fn prefill(&self, _model: &str, _tokens: &[u32], _len: usize)
+        -> Result<PrefillOut>
+    {
+        unreachable!("{NO_PJRT}")
+    }
+
+    fn decode(&self, _model: &str, _seqs: &[DecodeSeq])
+        -> Result<Vec<DecodeOut>>
+    {
+        unreachable!("{NO_PJRT}")
+    }
+
+    fn ropediff(&self, _model: &str, _group: &[RopeDiffSeq])
+        -> Result<Vec<RopeDiffOut>>
+    {
+        unreachable!("{NO_PJRT}")
+    }
+
+    fn selective(&self, _model: &str, _input: &SelectiveIn)
+        -> Result<SelectiveOut>
+    {
+        unreachable!("{NO_PJRT}")
+    }
+
+    fn fused_restore(
+        &self,
+        _model: &str,
+        _master_k: &KvBuf,
+        _diff: &SparseDiff,
+        _old_pos: &[i32],
+        _new_pos: &[i32],
+    ) -> Result<KvBuf> {
+        unreachable!("{NO_PJRT}")
+    }
+
+    fn rope_recover(
+        &self,
+        _model: &str,
+        _k: &mut KvBuf,
+        _old_pos: &[i32],
+        _new_pos: &[i32],
+    ) -> Result<()> {
+        unreachable!("{NO_PJRT}")
+    }
+
+    fn calls(&self) -> u64 {
+        unreachable!("{NO_PJRT}")
+    }
+}

@@ -1,0 +1,623 @@
+//! Round-native serving surface: the public façade the paper's workloads
+//! are written against.
+//!
+//! The All-Gather **round** — not the individual agent subrequest — is the
+//! unit of collective KV reuse (paper §4), so the API is round-shaped:
+//!
+//! * [`EngineBuilder`] — fluent engine construction (runtime, policy, pool
+//!   sizing, collector/detector/restore knobs) replacing raw
+//!   `EngineConfig` field-poking.
+//! * [`RoundSubmission`] / [`Engine::submit_round`] — atomically register
+//!   every agent subrequest of a round. The engine stamps arrival times
+//!   itself; open-loop drivers may override the offered arrival with
+//!   [`RoundSubmission::offered_at`].
+//! * [`RoundHandle`] — the caller's view of an in-flight round (id,
+//!   subrequest ids, offered arrival).
+//! * [`EngineEvent`] / [`Engine::poll_events`] — a typed event stream
+//!   (`Queued → Admitted → PrefillDone → Finished`, then one
+//!   `RoundClosed` per round) that is the single observability interface
+//!   for drivers, metrics, and experiments.
+//!
+//! The engine keeps `round_outstanding` / `round_staging` bookkeeping
+//! internal; no caller rebuilds round state from per-request completions.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::{AgentRequest, Engine, EngineConfig, Policy};
+use crate::restore::RestoreMode;
+use crate::rounds::DetectorConfig;
+use crate::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
+
+// ---------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------
+
+/// One lifecycle event of a subrequest or round. Per request, events are
+/// emitted in causal order: `Queued`, `Admitted`, `PrefillDone`,
+/// `Finished`; a round's `RoundClosed` follows the last `Finished` of
+/// that round.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineEvent {
+    /// Registered in the admission queue.
+    Queued { id: u64, agent: usize, round: usize },
+    /// Admitted to the KV pool (prefill begins this tick).
+    Admitted { id: u64, round: usize },
+    /// Prefill complete; `reused_tokens` prompt tokens came from cache.
+    PrefillDone { id: u64, round: usize, reused_tokens: usize },
+    /// Generation complete. `e2e_secs` spans offered arrival → completion
+    /// (open-loop accounting when the submitter set an offered arrival).
+    Finished {
+        id: u64,
+        agent: usize,
+        round: usize,
+        generated: Vec<u32>,
+        e2e_secs: f64,
+    },
+    /// Every subrequest of the round finalized; round-end retention work
+    /// (TokenDance Master-Mirror encoding) has run. `staged` is the number
+    /// of caches that were staged for encoding and `mirror_bytes` the
+    /// store bytes the new mirrors occupy (0 for non-TokenDance policies).
+    RoundClosed {
+        round: usize,
+        staged: usize,
+        mirror_bytes: usize,
+    },
+}
+
+impl EngineEvent {
+    /// Round id the event belongs to.
+    pub fn round(&self) -> usize {
+        match self {
+            EngineEvent::Queued { round, .. }
+            | EngineEvent::Admitted { round, .. }
+            | EngineEvent::PrefillDone { round, .. }
+            | EngineEvent::Finished { round, .. }
+            | EngineEvent::RoundClosed { round, .. } => *round,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Round submission + handle
+// ---------------------------------------------------------------------
+
+/// All agent subrequests of one All-Gather round, submitted atomically:
+/// either every request is registered or none is.
+#[derive(Clone, Debug)]
+pub struct RoundSubmission {
+    round: usize,
+    offered_at: Option<Instant>,
+    requests: Vec<AgentRequest>,
+}
+
+impl RoundSubmission {
+    /// A new, empty submission for round `round` (any id unique among
+    /// in-flight rounds; workloads typically use a global round counter).
+    pub fn new(round: usize) -> Self {
+        RoundSubmission { round, offered_at: None, requests: Vec::new() }
+    }
+
+    /// Add one agent subrequest (its `round` field is overwritten with
+    /// this submission's round id).
+    pub fn push(&mut self, req: AgentRequest) {
+        self.requests.push(req);
+    }
+
+    /// Builder-style [`RoundSubmission::push`].
+    pub fn request(mut self, req: AgentRequest) -> Self {
+        self.push(req);
+        self
+    }
+
+    /// Add a batch of subrequests.
+    pub fn requests(mut self, reqs: Vec<AgentRequest>) -> Self {
+        self.requests.extend(reqs);
+        self
+    }
+
+    /// Override the offered arrival time (open-loop accounting: a round
+    /// that was *due* earlier keeps its original latency clock even when
+    /// submitted late). Default: the engine stamps `Instant::now()`.
+    pub fn offered_at(mut self, at: Instant) -> Self {
+        self.offered_at = Some(at);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// The caller's view of a submitted round.
+#[derive(Clone, Debug)]
+pub struct RoundHandle {
+    round: usize,
+    ids: Vec<u64>,
+    offered_at: Instant,
+}
+
+impl RoundHandle {
+    /// The round id (matches [`EngineEvent::round`]).
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Engine-assigned subrequest ids, in submission order.
+    pub fn ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// Offered arrival the round's latency clock starts at.
+    pub fn offered_at(&self) -> Instant {
+        self.offered_at
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+impl Engine {
+    /// Atomically register all subrequests of an All-Gather round. Every
+    /// request is validated first (non-empty prompt, fits `max_seq`, can
+    /// ever fit the KV pool); on any error nothing is registered. The
+    /// engine stamps the arrival time itself unless the submission carries
+    /// an explicit offered arrival.
+    pub fn submit_round(&mut self, sub: RoundSubmission)
+        -> Result<RoundHandle>
+    {
+        let RoundSubmission { round, offered_at, mut requests } = sub;
+        if requests.is_empty() {
+            bail!("round {round}: empty submission");
+        }
+        for r in &mut requests {
+            r.round = round;
+        }
+        // validate everything up front so registration is all-or-nothing;
+        // the prepared (tokens, segments) feed registration directly, so
+        // each prompt is segmented exactly once
+        let mut prepared = Vec::with_capacity(requests.len());
+        for r in &requests {
+            prepared.push(self.prepare(r).with_context(|| {
+                format!("round {round}, agent {}", r.agent)
+            })?);
+        }
+        let arrived = offered_at.unwrap_or_else(Instant::now);
+        let mut ids = Vec::with_capacity(requests.len());
+        for (r, (tokens, seg)) in requests.into_iter().zip(prepared) {
+            ids.push(self.submit(r, tokens, seg, arrived));
+        }
+        Ok(RoundHandle { round, ids, offered_at: arrived })
+    }
+
+    /// Drain the typed event stream. Events accumulate during
+    /// [`Engine::tick`] / [`Engine::drain`]; callers that consume
+    /// completions via [`Engine::drain`] may ignore events entirely (the
+    /// buffer is capped — see [`Engine::events_dropped`]).
+    pub fn poll_events(&mut self) -> Vec<EngineEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Start a fluent engine configuration for `model`.
+    pub fn builder(model: &str) -> EngineBuilder {
+        EngineBuilder::new(model)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------
+
+/// Fluent engine construction. Replaces `EngineConfig::for_policy` +
+/// field-poking at every call-site:
+///
+/// ```ignore
+/// let mut eng = Engine::builder("sim-7b")
+///     .policy(Policy::TokenDance)
+///     .pool_blocks(256)
+///     .mock()
+///     .build()?;
+/// ```
+///
+/// Policy-dependent defaults match `EngineConfig::for_policy`: the
+/// collector runs collective grouping iff the policy is TokenDance, the
+/// restore path is fused for TokenDance and dense otherwise, and the CPU
+/// store holds 512 MiB. The pool defaults to eight full-context
+/// sequences.
+#[derive(Clone)]
+pub struct EngineBuilder {
+    model: String,
+    policy: Policy,
+    runtime: Option<Rc<dyn ModelRuntime>>,
+    artifacts: Option<PathBuf>,
+    pool_blocks: Option<usize>,
+    store_bytes: Option<usize>,
+    collective: Option<bool>,
+    recompute_frac: Option<f64>,
+    min_recompute: Option<usize>,
+    detector: Option<DetectorConfig>,
+    restore_mode: Option<RestoreMode>,
+}
+
+impl EngineBuilder {
+    pub fn new(model: &str) -> Self {
+        EngineBuilder {
+            model: model.to_string(),
+            policy: Policy::TokenDance,
+            runtime: None,
+            artifacts: None,
+            pool_blocks: None,
+            store_bytes: None,
+            collective: None,
+            recompute_frac: None,
+            min_recompute: None,
+            detector: None,
+            restore_mode: None,
+        }
+    }
+
+    /// Reuse policy (default: TokenDance).
+    pub fn policy(mut self, p: Policy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// Execute on an existing runtime (shared across engines).
+    pub fn runtime(mut self, rt: Rc<dyn ModelRuntime>) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Execute on the deterministic mock runtime (logic runs, tests).
+    pub fn mock(self) -> Self {
+        let rt: Rc<dyn ModelRuntime> = Rc::new(MockRuntime::new());
+        self.runtime(rt)
+    }
+
+    /// Load AOT artifacts from `dir` and execute through PJRT. Ignored
+    /// when an explicit runtime was provided.
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Paged-pool capacity in blocks (the "GPU memory budget"); default
+    /// is eight full-context sequences.
+    pub fn pool_blocks(mut self, blocks: usize) -> Self {
+        self.pool_blocks = Some(blocks);
+        self
+    }
+
+    /// CPU-side store capacity in bytes (default 512 MiB).
+    pub fn store_bytes(mut self, bytes: usize) -> Self {
+        self.store_bytes = Some(bytes);
+        self
+    }
+
+    /// Force collective (true) or serial (false) PIC grouping — the
+    /// Fig-11 ablation knob. Default: collective iff TokenDance.
+    pub fn collective(mut self, on: bool) -> Self {
+        self.collective = Some(on);
+        self
+    }
+
+    /// Fraction of cached positions selectively recomputed (CacheBlend's
+    /// `r`).
+    pub fn recompute_frac(mut self, frac: f64) -> Self {
+        self.recompute_frac = Some(frac);
+        self
+    }
+
+    /// Lower bound on selectively recomputed positions.
+    pub fn min_recompute(mut self, n: usize) -> Self {
+        self.min_recompute = Some(n);
+        self
+    }
+
+    /// All-Gather round detector thresholds.
+    pub fn detector(mut self, cfg: DetectorConfig) -> Self {
+        self.detector = Some(cfg);
+        self
+    }
+
+    /// Override the Mirror restore path (fused vs dense) — the Fig-13
+    /// ablation knob.
+    pub fn restore_mode(mut self, mode: RestoreMode) -> Self {
+        self.restore_mode = Some(mode);
+        self
+    }
+
+    pub fn build(self) -> Result<Engine> {
+        let rt: Rc<dyn ModelRuntime> = match (self.runtime, self.artifacts)
+        {
+            (Some(rt), _) => rt,
+            (None, Some(dir)) => Rc::new(
+                PjrtRuntime::load(&dir).with_context(|| {
+                    format!("loading artifacts from {}", dir.display())
+                })?,
+            ),
+            (None, None) => bail!(
+                "EngineBuilder for {:?} has no runtime: call .runtime(rt), \
+                 .mock(), or .artifacts(dir)",
+                self.model
+            ),
+        };
+        let spec = rt.spec(&self.model)?.clone();
+        let mut cfg =
+            EngineConfig::for_policy(&self.model, self.policy, 0);
+        cfg.pool_blocks =
+            self.pool_blocks.unwrap_or(8 * spec.n_blocks());
+        if let Some(b) = self.store_bytes {
+            cfg.store_bytes = b;
+        }
+        if let Some(c) = self.collective {
+            cfg.collector.collective = c;
+        }
+        if let Some(f) = self.recompute_frac {
+            cfg.collector.importance.recompute_frac = f;
+        }
+        if let Some(n) = self.min_recompute {
+            cfg.collector.importance.min_recompute = n;
+        }
+        if let Some(d) = self.detector {
+            cfg.detector = d;
+        }
+        if let Some(m) = self.restore_mode {
+            cfg.restore_mode = Some(m);
+        }
+        Engine::new(rt, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{encode, BlockKind, RoundAwarePrompt};
+
+    fn prompt(agent: usize, shared: &[Vec<u32>]) -> RoundAwarePrompt {
+        let mut p = RoundAwarePrompt::new();
+        p.push(
+            BlockKind::PrivateHistory,
+            encode(&format!("agent {agent} persona")),
+        );
+        let n = shared.len().max(1);
+        for i in 0..shared.len() {
+            let producer = (i + agent) % n;
+            p.push(
+                BlockKind::SharedOutput { producer, round: 0 },
+                shared[producer].clone(),
+            );
+        }
+        p.push(BlockKind::RoundTask, encode("act"));
+        p.pad_blocks(16, encode(" ")[0]);
+        p
+    }
+
+    fn round(n_agents: usize, rid: usize, shared: &[Vec<u32>])
+        -> RoundSubmission
+    {
+        let mut sub = RoundSubmission::new(rid);
+        for a in 0..n_agents {
+            sub.push(AgentRequest {
+                agent: a,
+                round: 0, // overwritten by the submission id
+                prompt: prompt(a, shared),
+                max_new_tokens: 8,
+                retain: true,
+            });
+        }
+        sub
+    }
+
+    fn td_engine(pool_blocks: usize) -> Engine {
+        Engine::builder("sim-7b")
+            .policy(Policy::TokenDance)
+            .pool_blocks(pool_blocks)
+            .mock()
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_applies_policy_defaults() {
+        let e = td_engine(128);
+        assert!(e.cfg.collector.collective);
+        assert_eq!(e.cfg.pool_blocks, 128);
+        let e2 = Engine::builder("sim-7b")
+            .policy(Policy::CacheBlendFull)
+            .mock()
+            .build()
+            .unwrap();
+        assert!(!e2.cfg.collector.collective);
+        // default pool: eight full-context sequences
+        assert_eq!(e2.cfg.pool_blocks, 8 * e2.spec().n_blocks());
+    }
+
+    #[test]
+    fn builder_requires_a_runtime() {
+        assert!(Engine::builder("sim-7b").build().is_err());
+    }
+
+    #[test]
+    fn policy_from_str_aliases() {
+        for (s, want) in [
+            ("vllm", Policy::VllmPrefix),
+            ("vllm-prefix", Policy::VllmPrefix),
+            ("cb-ord", Policy::CacheBlendOrdinary),
+            ("cacheblend-ordinary", Policy::CacheBlendOrdinary),
+            ("cb", Policy::CacheBlendFull),
+            ("cacheblend", Policy::CacheBlendFull),
+            ("tokendance", Policy::TokenDance),
+            ("td", Policy::TokenDance),
+        ] {
+            assert_eq!(s.parse::<Policy>().unwrap(), want);
+        }
+        assert!("nope".parse::<Policy>().is_err());
+    }
+
+    #[test]
+    fn round_emits_exactly_one_round_closed_after_last_completion() {
+        let mut eng = td_engine(256);
+        let h = eng.submit_round(round(3, 7, &[])).unwrap();
+        assert_eq!(h.round(), 7);
+        assert_eq!(h.len(), 3);
+        let done = eng.drain().unwrap();
+        assert_eq!(done.len(), 3);
+        let events = eng.poll_events();
+        let closed: Vec<_> = events
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::RoundClosed { .. }))
+            .collect();
+        assert_eq!(closed.len(), 1, "exactly one RoundClosed");
+        match closed[0] {
+            EngineEvent::RoundClosed { round, staged, .. } => {
+                assert_eq!(*round, 7);
+                assert_eq!(*staged, 3, "all retained caches staged");
+            }
+            _ => unreachable!(),
+        }
+        // RoundClosed comes after every Finished
+        let last_finished = events
+            .iter()
+            .rposition(|e| matches!(e, EngineEvent::Finished { .. }))
+            .unwrap();
+        let closed_pos = events
+            .iter()
+            .position(|e| matches!(e, EngineEvent::RoundClosed { .. }))
+            .unwrap();
+        assert!(closed_pos > last_finished);
+    }
+
+    #[test]
+    fn events_are_causal_per_request() {
+        let mut eng = td_engine(256);
+        let h = eng.submit_round(round(3, 0, &[])).unwrap();
+        eng.drain().unwrap();
+        let events = eng.poll_events();
+        for &id in h.ids() {
+            let phase = |ev: &EngineEvent| match ev {
+                EngineEvent::Queued { id: i, .. } if *i == id => Some(0),
+                EngineEvent::Admitted { id: i, .. } if *i == id => Some(1),
+                EngineEvent::PrefillDone { id: i, .. } if *i == id => {
+                    Some(2)
+                }
+                EngineEvent::Finished { id: i, .. } if *i == id => Some(3),
+                _ => None,
+            };
+            let seen: Vec<usize> =
+                events.iter().filter_map(phase).collect();
+            assert_eq!(seen, vec![0, 1, 2, 3], "request {id}");
+        }
+    }
+
+    #[test]
+    fn submit_round_is_atomic_on_validation_failure() {
+        let mut eng = td_engine(256);
+        let mut sub = round(2, 3, &[]);
+        // third request exceeds max_seq -> whole round must be rejected
+        let mut big = RoundAwarePrompt::new();
+        big.push(BlockKind::PrivateHistory, vec![5u32; 600]);
+        sub.push(AgentRequest {
+            agent: 2,
+            round: 3,
+            prompt: big,
+            max_new_tokens: 8,
+            retain: true,
+        });
+        assert!(eng.submit_round(sub).is_err());
+        assert_eq!(eng.pending_count(), 0, "nothing registered");
+        assert!(eng.poll_events().is_empty(), "no events emitted");
+        // and the engine still serves subsequent rounds
+        eng.submit_round(round(2, 4, &[])).unwrap();
+        assert_eq!(eng.drain().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn empty_round_is_rejected() {
+        let mut eng = td_engine(256);
+        assert!(eng.submit_round(RoundSubmission::new(0)).is_err());
+    }
+
+    #[test]
+    fn impossible_demand_fails_fast_instead_of_stalling() {
+        // pool of 2 blocks (32 tokens) can never hold this request; the
+        // old engine queued it forever behind evict_retained
+        let mut eng = td_engine(2);
+        let err = eng.submit_round(round(1, 0, &[])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("never"),
+            "error should say the request can never fit: {msg}"
+        );
+        assert_eq!(eng.pending_count(), 0);
+        // engine keeps ticking (no stalled head-of-line round)
+        assert!(!eng.tick().unwrap());
+    }
+
+    #[test]
+    fn offered_arrival_drives_latency_clock() {
+        let mut eng = td_engine(256);
+        let offered = Instant::now() - std::time::Duration::from_secs(2);
+        let h = eng
+            .submit_round(round(2, 1, &[]).offered_at(offered))
+            .unwrap();
+        assert_eq!(h.offered_at(), offered);
+        eng.drain().unwrap();
+        for ev in eng.poll_events() {
+            if let EngineEvent::Finished { e2e_secs, .. } = ev {
+                assert!(
+                    e2e_secs >= 2.0,
+                    "open-loop clock starts at the offered arrival \
+                     ({e2e_secs})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn round_closed_reports_mirror_bytes_for_tokendance() {
+        let mut eng = Engine::builder("sim-7b")
+            .policy(Policy::TokenDance)
+            .pool_blocks(512)
+            .recompute_frac(0.05)
+            .min_recompute(1)
+            .mock()
+            .build()
+            .unwrap();
+        // two rounds: round 1 shares round 0's outputs, so its caches
+        // mirror-encode against the elected Master
+        let mut shared: Vec<Vec<u32>> = Vec::new();
+        let mut total_mirror_bytes = 0usize;
+        for rid in 0..3 {
+            eng.submit_round(round(6, rid, &shared)).unwrap();
+            let done = eng.drain().unwrap();
+            let mut outs: Vec<(usize, Vec<u32>)> = done
+                .iter()
+                .map(|c| (c.agent, c.generated.clone()))
+                .collect();
+            outs.sort_by_key(|(a, _)| *a);
+            shared = outs.into_iter().map(|(_, t)| t).collect();
+            for ev in eng.poll_events() {
+                if let EngineEvent::RoundClosed { mirror_bytes, .. } = ev {
+                    total_mirror_bytes += mirror_bytes;
+                }
+            }
+        }
+        assert!(
+            total_mirror_bytes > 0,
+            "shared-heavy rounds must produce mirrors"
+        );
+    }
+}

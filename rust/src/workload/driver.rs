@@ -1,16 +1,23 @@
 //! Session driver: paces All-Gather rounds into the engine at an offered
 //! QPS (open-loop arrivals, closed-loop round dependencies — a session's
-//! round t+1 cannot be built before round t's outputs exist), collects
-//! completions, and reports round latencies. This is the measurement
-//! harness behind Fig 2 and Fig 10.
+//! round t+1 cannot be built before round t's outputs exist), and reports
+//! round latencies. This is the measurement harness behind Fig 2 and
+//! Fig 10.
+//!
+//! The driver is a pure consumer of the round-native API: rounds go in
+//! through [`Engine::submit_round`] and every observation — completions,
+//! subrequest latencies, round closure — comes back through the typed
+//! [`EngineEvent`] stream. No round bookkeeping is rebuilt here; the only
+//! per-session state is the in-flight [`RoundHandle`] and the output
+//! buffer the next round's prompts are assembled from.
 
-use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::{IndependentWorkload, Session, WorkloadConfig};
 use crate::engine::Engine;
+use crate::serve::{EngineEvent, RoundHandle, RoundSubmission};
 use crate::util::rng::Rng;
 
 /// Outcome of a driven run.
@@ -30,11 +37,18 @@ impl DriveReport {
     }
 }
 
+/// Session index owning the in-flight round `round`, if any.
+fn session_of(open: &[Option<RoundHandle>], round: usize) -> Option<usize> {
+    open.iter()
+        .position(|h| h.as_ref().map_or(false, |h| h.round() == round))
+}
+
 /// Drive `sessions` concurrent All-Gather sessions at `qps` offered
 /// subrequests/sec. Rounds arrive per a deterministic exponential schedule;
 /// a round that is "due" but whose predecessor has not completed is
 /// submitted immediately upon completion (its latency clock still starts
-/// at the offered arrival time — open-loop accounting).
+/// at the offered arrival time — open-loop accounting, carried by
+/// [`RoundSubmission::offered_at`]).
 pub fn drive_sessions(
     eng: &mut Engine,
     cfg: &WorkloadConfig,
@@ -52,70 +66,66 @@ pub fn drive_sessions(
     let mut due: Vec<Instant> = (0..sessions)
         .map(|_| start + Duration::from_secs_f64(rng.exp(round_rate)))
         .collect();
-    let mut in_flight: Vec<bool> = vec![false; sessions];
-    // round id -> (session, outstanding, offered arrival)
-    let mut open_rounds: HashMap<usize, (usize, usize, Instant)> =
-        HashMap::new();
+    // the one in-flight round per session (closed-loop dependency)
+    let mut open: Vec<Option<RoundHandle>> =
+        (0..sessions).map(|_| None).collect();
     // completions buffered per session for absorb()
-    let mut outputs: HashMap<usize, Vec<(usize, Vec<u32>)>> = HashMap::new();
+    let mut outputs: Vec<Vec<(usize, Vec<u32>)>> =
+        vec![Vec::new(); sessions];
     let mut report = DriveReport::default();
 
     loop {
         let now = Instant::now();
         // submit due rounds
         for s in 0..sessions {
-            if live[s].done() || in_flight[s] || now < due[s] {
+            if live[s].done() || open[s].is_some() || now < due[s] {
                 continue;
             }
-            let arrival = due[s];
-            let reqs = live[s].next_round();
-            let rid = live[s].global_round();
-            open_rounds.insert(rid, (s, reqs.len(), arrival));
-            for r in reqs {
-                eng.submit(r, arrival)?;
-            }
-            in_flight[s] = true;
+            let sub = RoundSubmission::new(live[s].global_round())
+                .offered_at(due[s])
+                .requests(live[s].next_round());
+            open[s] = Some(eng.submit_round(sub)?);
         }
 
         let worked = eng.tick()?;
-        for c in eng.take_finished() {
-            let now2 = Instant::now();
-            outputs
-                .entry(c.round)
-                .or_default()
-                .push((c.agent, c.generated.clone()));
-            if let Some(tr) = eng
-                .metrics
-                .requests
-                .iter()
-                .find(|t| t.id == c.id)
-            {
-                if let Some(e) = tr.e2e_secs() {
-                    report.subrequests.push(e);
+        // events carry every observation; drop the completion buffer so a
+        // long-running drive does not accumulate it
+        eng.take_finished();
+        for ev in eng.poll_events() {
+            match ev {
+                EngineEvent::Finished {
+                    round,
+                    agent,
+                    generated,
+                    e2e_secs,
+                    ..
+                } => {
+                    report.subrequests.push(e2e_secs);
+                    if let Some(s) = session_of(&open, round) {
+                        outputs[s].push((agent, generated));
+                    }
                 }
-            }
-            if let Some((s, outstanding, arrival)) =
-                open_rounds.get_mut(&c.round)
-            {
-                *outstanding -= 1;
-                if *outstanding == 0 {
-                    let s = *s;
-                    let arrival = *arrival;
-                    open_rounds.remove(&c.round);
-                    let outs = outputs.remove(&live[s].global_round())
-                        .unwrap_or_default();
+                EngineEvent::RoundClosed { round, .. } => {
+                    let Some(s) = session_of(&open, round) else {
+                        continue;
+                    };
+                    let h = open[s].take().unwrap();
+                    let closed_at = Instant::now();
                     report.rounds.push((
                         s,
                         live[s].round,
-                        now2.duration_since(arrival).as_secs_f64(),
+                        closed_at
+                            .duration_since(h.offered_at())
+                            .as_secs_f64(),
                     ));
+                    let outs = std::mem::take(&mut outputs[s]);
                     live[s].absorb(&outs);
-                    in_flight[s] = false;
                     // next round offered relative to this one's arrival
-                    due[s] = (arrival
+                    due[s] = (h.offered_at()
                         + Duration::from_secs_f64(rng.exp(round_rate)))
-                    .max(now2);
+                    .max(closed_at);
                 }
+                _ => {}
             }
         }
 
@@ -133,9 +143,9 @@ pub fn drive_sessions(
                 .map(|(d, _)| *d)
                 .min();
             if let Some(next) = next {
-                let now3 = Instant::now();
-                if next > now3 {
-                    std::thread::sleep((next - now3).min(
+                let now2 = Instant::now();
+                if next > now2 {
+                    std::thread::sleep((next - now2).min(
                         Duration::from_millis(5),
                     ));
                 }
@@ -146,7 +156,8 @@ pub fn drive_sessions(
     Ok(report)
 }
 
-/// Drive the independent-request control workload at `qps` (Fig 2).
+/// Drive the independent-request control workload at `qps` (Fig 2). Each
+/// request is its own single-member round.
 pub fn drive_independent(
     eng: &mut Engine,
     workload: &mut IndependentWorkload,
@@ -161,18 +172,18 @@ pub fn drive_independent(
         let now = Instant::now();
         while now >= due && !workload.done() {
             if let Some(r) = workload.next_request() {
-                eng.submit(r, due)?;
+                let sub = RoundSubmission::new(r.round)
+                    .offered_at(due)
+                    .request(r);
+                eng.submit_round(sub)?;
             }
             due += Duration::from_secs_f64(rng.exp(qps));
         }
         let worked = eng.tick()?;
-        for c in eng.take_finished() {
-            if let Some(tr) =
-                eng.metrics.requests.iter().find(|t| t.id == c.id)
-            {
-                if let Some(e) = tr.e2e_secs() {
-                    report.subrequests.push(e);
-                }
+        eng.take_finished(); // observations come from the event stream
+        for ev in eng.poll_events() {
+            if let EngineEvent::Finished { e2e_secs, .. } = ev {
+                report.subrequests.push(e2e_secs);
             }
         }
         if workload.done() && eng.pending_count() == 0 {
@@ -194,18 +205,16 @@ pub fn drive_independent(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{EngineConfig, Policy};
-    use crate::runtime::MockRuntime;
-    use std::rc::Rc;
+    use crate::engine::Policy;
 
     #[test]
     fn drives_sessions_to_completion() {
-        let rt = Rc::new(MockRuntime::new());
-        let mut eng = Engine::new(
-            rt,
-            EngineConfig::for_policy("sim-7b", Policy::TokenDance, 1024),
-        )
-        .unwrap();
+        let mut eng = Engine::builder("sim-7b")
+            .policy(Policy::TokenDance)
+            .pool_blocks(1024)
+            .mock()
+            .build()
+            .unwrap();
         let cfg = WorkloadConfig::generative_agents(1, 3, 2);
         let report =
             drive_sessions(&mut eng, &cfg, 2, 1000.0, 7).unwrap();
@@ -218,12 +227,12 @@ mod tests {
 
     #[test]
     fn drives_independent_to_completion() {
-        let rt = Rc::new(MockRuntime::new());
-        let mut eng = Engine::new(
-            rt,
-            EngineConfig::for_policy("sim-7b", Policy::VllmPrefix, 1024),
-        )
-        .unwrap();
+        let mut eng = Engine::builder("sim-7b")
+            .policy(Policy::VllmPrefix)
+            .pool_blocks(1024)
+            .mock()
+            .build()
+            .unwrap();
         let mut w = IndependentWorkload::new(6, 100, 8, 3);
         let report =
             drive_independent(&mut eng, &mut w, 1000.0, 9).unwrap();

@@ -6,12 +6,12 @@
 
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::time::Instant;
 
-use tokendance::engine::{AgentRequest, Engine, EngineConfig, Policy};
+use tokendance::engine::{AgentRequest, Engine, Policy};
 use tokendance::runtime::{
     argmax, DecodeSeq, KvBuf, ModelRuntime, PjrtRuntime, RopeDiffSeq,
 };
+use tokendance::serve::RoundSubmission;
 use tokendance::tokenizer::{encode, BlockKind, RoundAwarePrompt};
 use tokendance::util::json::Json;
 
@@ -25,6 +25,7 @@ fn runtime() -> Option<Rc<PjrtRuntime>> {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (run `make artifacts` first)"]
 fn golden_prefill_matches_python_oracle() {
     let Some(dir) = artifacts_dir() else {
         eprintln!("skipping: artifacts not built");
@@ -83,6 +84,7 @@ fn golden_prefill_matches_python_oracle() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (run `make artifacts` first)"]
 fn decode_extends_prefill_consistently() {
     let Some(rt) = runtime() else {
         eprintln!("skipping: artifacts not built");
@@ -121,6 +123,7 @@ fn decode_extends_prefill_consistently() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (run `make artifacts` first)"]
 fn collective_equals_serial_on_real_model() {
     let Some(rt) = runtime() else {
         eprintln!("skipping: artifacts not built");
@@ -181,13 +184,16 @@ fn mk_prompt(agent: usize, hist: &str, shared: &[Vec<u32>], task: &str)
 }
 
 fn run_two_rounds(policy: Policy, rt: Rc<PjrtRuntime>) -> Vec<Vec<Vec<u32>>> {
-    let mut eng =
-        Engine::new(rt, EngineConfig::for_policy("sim-7b", policy, 256))
-            .unwrap();
+    let mut eng = Engine::builder("sim-7b")
+        .policy(policy)
+        .pool_blocks(256)
+        .runtime(rt)
+        .build()
+        .unwrap();
     let mut shared: Vec<Vec<u32>> = Vec::new();
     let mut out = Vec::new();
     for round in 0..2 {
-        let now = Instant::now();
+        let mut sub = RoundSubmission::new(round);
         for a in 0..3 {
             let p = mk_prompt(
                 a,
@@ -195,12 +201,15 @@ fn run_two_rounds(policy: Policy, rt: Rc<PjrtRuntime>) -> Vec<Vec<Vec<u32>>> {
                 &shared,
                 &format!("round {round}"),
             );
-            eng.submit(
-                AgentRequest { agent: a, round, prompt: p, max_new_tokens: 16, retain: true },
-                now,
-            )
-            .unwrap();
+            sub.push(AgentRequest {
+                agent: a,
+                round,
+                prompt: p,
+                max_new_tokens: 16,
+                retain: true,
+            });
         }
+        eng.submit_round(sub).unwrap();
         let done = eng.drain().unwrap();
         assert_eq!(done.len(), 3);
         let mut outs = vec![Vec::new(); 3];
@@ -215,6 +224,7 @@ fn run_two_rounds(policy: Policy, rt: Rc<PjrtRuntime>) -> Vec<Vec<Vec<u32>>> {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (run `make artifacts` first)"]
 fn engine_end_to_end_all_policies_real_model() {
     let Some(rt) = runtime() else {
         eprintln!("skipping: artifacts not built");
@@ -241,25 +251,30 @@ fn engine_end_to_end_all_policies_real_model() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (run `make artifacts` first)"]
 fn engine_real_model_14b_smoke() {
     let Some(rt) = runtime() else {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let mut eng = Engine::new(
-        rt,
-        EngineConfig::for_policy("sim-14b", Policy::TokenDance, 256),
-    )
-    .unwrap();
-    let now = Instant::now();
+    let mut eng = Engine::builder("sim-14b")
+        .policy(Policy::TokenDance)
+        .pool_blocks(256)
+        .runtime(rt)
+        .build()
+        .unwrap();
+    let mut sub = RoundSubmission::new(0);
     for a in 0..2 {
         let p = mk_prompt(a, "persona", &[], "go");
-        eng.submit(
-            AgentRequest { agent: a, round: 0, prompt: p, max_new_tokens: 8, retain: true },
-            now,
-        )
-        .unwrap();
+        sub.push(AgentRequest {
+            agent: a,
+            round: 0,
+            prompt: p,
+            max_new_tokens: 8,
+            retain: true,
+        });
     }
+    eng.submit_round(sub).unwrap();
     let done = eng.drain().unwrap();
     assert_eq!(done.len(), 2);
 }

@@ -3,11 +3,9 @@
 //! stand-in for proptest: each property runs across many generated cases
 //! with shrink-free reporting of the failing seed.
 
-use std::rc::Rc;
-use std::time::Instant;
-
 use tokendance::collector::{run_reuse, CollectorConfig, ReuseTask};
-use tokendance::engine::{AgentRequest, Engine, EngineConfig, Policy};
+use tokendance::engine::{AgentRequest, Engine, Policy};
+use tokendance::serve::RoundSubmission;
 use tokendance::kvcache::KvPool;
 use tokendance::model::{Buckets, ModelSpec};
 use tokendance::pic::{select_important_blocks, ImportanceConfig, INVALID_SCORE};
@@ -397,23 +395,23 @@ fn prop_collective_equals_serial() {
 #[test]
 fn prop_engine_serves_random_round_shapes() {
     forall(15, |rng| {
-        let rt = Rc::new(MockRuntime::new());
         let policy = match rng.below(4) {
             0 => Policy::VllmPrefix,
             1 => Policy::CacheBlendOrdinary,
             2 => Policy::CacheBlendFull,
             _ => Policy::TokenDance,
         };
-        let mut eng = Engine::new(
-            rt,
-            EngineConfig::for_policy("sim-7b", policy, 512),
-        )
-        .unwrap();
+        let mut eng = Engine::builder("sim-7b")
+            .policy(policy)
+            .pool_blocks(512)
+            .mock()
+            .build()
+            .unwrap();
         let agents = rng.range(1, 6);
         let rounds = rng.range(1, 4);
         let mut shared: Vec<Vec<u32>> = Vec::new();
         for round in 0..rounds {
-            let now = Instant::now();
+            let mut sub = RoundSubmission::new(round);
             for a in 0..agents {
                 let mut p = RoundAwarePrompt::new();
                 p.push(
@@ -428,18 +426,15 @@ fn prop_engine_serves_random_round_shapes() {
                 }
                 p.push(BlockKind::RoundTask, encode("go"));
                 p.pad_blocks(16, 36);
-                eng.submit(
-                    AgentRequest {
-                        agent: a,
-                        round,
-                        prompt: p,
-                        max_new_tokens: rng.range(1, 16),
-                        retain: true,
-                    },
-                    now,
-                )
-                .unwrap();
+                sub.push(AgentRequest {
+                    agent: a,
+                    round,
+                    prompt: p,
+                    max_new_tokens: rng.range(1, 16),
+                    retain: true,
+                });
             }
+            eng.submit_round(sub).unwrap();
             let done = eng.drain().unwrap();
             assert_eq!(done.len(), agents, "{policy:?} must complete");
             shared = done.iter().map(|c| c.generated.clone()).collect();

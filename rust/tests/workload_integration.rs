@@ -4,19 +4,21 @@
 
 use std::rc::Rc;
 
-use tokendance::engine::{Engine, EngineConfig, Policy};
+use tokendance::engine::{Engine, Policy};
 use tokendance::runtime::{MockRuntime, ModelRuntime};
+use tokendance::serve::RoundSubmission;
 use tokendance::workload::driver::{drive_independent, drive_sessions};
 use tokendance::workload::{
     Family, IndependentWorkload, Session, WorkloadConfig, SCENARIOS,
 };
 
 fn eng(policy: Policy, pool: usize) -> Engine {
-    Engine::new(
-        Rc::new(MockRuntime::new()),
-        EngineConfig::for_policy("sim-7b", policy, pool),
-    )
-    .unwrap()
+    Engine::builder("sim-7b")
+        .policy(policy)
+        .pool_blocks(pool)
+        .mock()
+        .build()
+        .unwrap()
 }
 
 #[test]
@@ -59,12 +61,12 @@ fn low_qps_round_latency_excludes_idle_time() {
 fn independent_workload_frees_pool() {
     let rt = Rc::new(MockRuntime::new());
     let spec = rt.spec("sim-7b").unwrap().clone();
-    let mut e = Engine::new(
-        rt,
-        EngineConfig::for_policy("sim-7b", Policy::VllmPrefix,
-                                 4 * spec.n_blocks()),
-    )
-    .unwrap();
+    let mut e = Engine::builder("sim-7b")
+        .policy(Policy::VllmPrefix)
+        .pool_blocks(4 * spec.n_blocks())
+        .runtime(rt)
+        .build()
+        .unwrap();
     let mut w = IndependentWorkload::new(12, 150, 8, 3);
     let report = drive_independent(&mut e, &mut w, 1e6, 3).unwrap();
     assert_eq!(report.subrequests.len(), 12);
@@ -77,12 +79,12 @@ fn agents_session_survives_pool_pressure() {
     // pool barely fits two sequences; 5 agents queue through it
     let rt = Rc::new(MockRuntime::new());
     let spec = rt.spec("sim-7b").unwrap().clone();
-    let mut e = Engine::new(
-        rt,
-        EngineConfig::for_policy("sim-7b", Policy::TokenDance,
-                                 2 * spec.n_blocks()),
-    )
-    .unwrap();
+    let mut e = Engine::builder("sim-7b")
+        .policy(Policy::TokenDance)
+        .pool_blocks(2 * spec.n_blocks())
+        .runtime(rt)
+        .build()
+        .unwrap();
     let cfg = WorkloadConfig::generative_agents(2, 5, 2);
     let report = drive_sessions(&mut e, &cfg, 1, 1e6, 9).unwrap();
     assert_eq!(report.subrequests.len(), 10);
@@ -90,10 +92,13 @@ fn agents_session_survives_pool_pressure() {
 
 #[test]
 fn store_pressure_evicts_but_serves() {
-    let rt = Rc::new(MockRuntime::new());
-    let mut cfg = EngineConfig::for_policy("sim-7b", Policy::TokenDance, 1024);
-    cfg.store_bytes = 200 << 10; // tiny CPU store
-    let mut e = Engine::new(rt, cfg).unwrap();
+    let mut e = Engine::builder("sim-7b")
+        .policy(Policy::TokenDance)
+        .pool_blocks(1024)
+        .store_bytes(200 << 10) // tiny CPU store
+        .mock()
+        .build()
+        .unwrap();
     let w = WorkloadConfig::generative_agents(1, 4, 3);
     let report = drive_sessions(&mut e, &w, 1, 1e6, 2).unwrap();
     assert_eq!(report.rounds.len(), 3);
@@ -107,23 +112,22 @@ fn oversize_round_rejected_cleanly() {
     // 20 agents x 32-token outputs exceed max_seq once shared
     let cfg = WorkloadConfig::generative_agents(1, 20, 2);
     let mut s = Session::new(cfg, 0);
-    let reqs = s.next_round(); // round 0 fits (no shared blocks yet)
-    let now = std::time::Instant::now();
-    for r in reqs {
-        e.submit(r, now).unwrap();
-    }
+    // round 0 fits (no shared blocks yet)
+    let sub = RoundSubmission::new(s.global_round())
+        .requests(s.next_round());
+    e.submit_round(sub).unwrap();
     let done = e.drain().unwrap();
     let outs: Vec<(usize, Vec<u32>)> =
         done.iter().map(|c| (c.agent, c.generated.clone())).collect();
     s.absorb(&outs);
-    // round 1 prompts exceed max_seq -> submit must error, not corrupt
-    let mut any_err = false;
-    for r in s.next_round() {
-        if e.submit(r, now).is_err() {
-            any_err = true;
-        }
-    }
-    assert!(any_err, "oversize prompts must be rejected");
+    // round 1 prompts exceed max_seq -> the whole round must be rejected
+    // atomically, leaving the engine clean
+    let sub = RoundSubmission::new(s.global_round())
+        .requests(s.next_round());
+    assert!(
+        e.submit_round(sub).is_err(),
+        "oversize round must be rejected"
+    );
     let _ = e.drain().unwrap();
     assert_eq!(e.pending_count(), 0);
 }
