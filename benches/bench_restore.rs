@@ -36,14 +36,16 @@ fn main() {
                 StoreKey { content: 1, role: Role::AgentCache { agent: 0 } };
             let sk =
                 StoreKey { content: 2, role: Role::AgentCache { agent: 1 } };
-            store.put_dense(
-                mk,
-                DenseEntry {
-                    tokens: toks.clone(),
-                    positions: (0..len as i32).collect(),
-                    kv: master_kv.clone(),
-                },
-            );
+            store
+                .put_dense(
+                    mk,
+                    DenseEntry {
+                        tokens: toks.clone(),
+                        positions: (0..len as i32).collect(),
+                        kv: master_kv.clone(),
+                    },
+                )
+                .unwrap();
             store
                 .put_mirror(
                     sk,

@@ -1,0 +1,127 @@
+//! Bench: CacheStore lifecycle throughput under churn at capacity.
+//!
+//! Guards the O(1) LRU — per-op cost must stay flat as the resident set
+//! grows (the old Vec-backed recency index was O(n) per touch, O(n²) per
+//! round) — and measures the cost of master re-election, the eviction-path
+//! work TokenDance pays when a pinned Master must make way.
+
+include!("harness.rs");
+
+use tokendance::runtime::{KvBuf, MockRuntime, ModelRuntime};
+use tokendance::store::{
+    diff_blocks, identity_aligned, CacheStore, DenseEntry, MirrorEntry,
+    Role, StoreKey,
+};
+
+fn key(c: u64) -> StoreKey {
+    StoreKey { content: c, role: Role::Segment }
+}
+
+fn akey(c: u64, agent: usize) -> StoreKey {
+    StoreKey { content: c, role: Role::AgentCache { agent } }
+}
+
+fn dense(spec: &tokendance::model::ModelSpec, len: usize, salt: u32)
+    -> DenseEntry
+{
+    let mut kv = KvBuf::zeroed(spec.n_layers, len, spec.d_model);
+    for (i, x) in kv.k.iter_mut().enumerate() {
+        *x = ((i as u32) ^ salt) as f32 / 1000.0;
+    }
+    DenseEntry {
+        tokens: (0..len as u32).map(|i| 4 + ((i ^ salt) % 200)).collect(),
+        positions: (0..len as i32).collect(),
+        kv,
+    }
+}
+
+fn main() {
+    let rt = MockRuntime::new();
+    let spec = rt.spec("sim-7b").unwrap().clone();
+    let len = 64usize;
+    let template = dense(&spec, len, 0);
+    let ebytes = template.kv.bytes() + len * 8;
+    println!("== bench_store_churn (O(1) LRU / lifecycle) ==");
+
+    // 1. get+put churn at capacity: per-op time must stay ~flat in n
+    for n in [64usize, 256, 1024] {
+        let mut st = CacheStore::new(&spec, ebytes * n + ebytes / 2);
+        for i in 0..n as u64 {
+            st.put_dense(key(i), dense(&spec, len, i as u32)).unwrap();
+        }
+        let mut i = n as u64;
+        let ops = 256u64;
+        let b = Bencher::run(
+            &format!("churn resident={n} ({ops} get+put/iter)"),
+            20,
+            2,
+            || {
+                for _ in 0..ops {
+                    // touch a pseudo-random key in the resident window
+                    // [i-n, i), then insert (evicting the LRU victim)
+                    let back =
+                        1 + i.wrapping_mul(2654435761) % (n as u64 - 1);
+                    let _ = st.get(&key(i - back));
+                    let mut e = template.clone();
+                    e.tokens[0] = i as u32;
+                    st.put_dense(key(i), e).unwrap();
+                    i += 1;
+                }
+            },
+        );
+        b.report();
+        println!(
+            "    -> {} per get+put pair",
+            fmt(b.mean() / ops as f64)
+        );
+    }
+
+    // 2. master re-election: replacing a pinned master with live mirrors
+    // materializes every mirror, promotes the cheapest, and re-homes the
+    // siblings (full build + re-elect cycle measured)
+    for n_mirrors in [2usize, 4, 8] {
+        let mut round = 0u64;
+        let b = Bencher::run(
+            &format!("build + re-elect master with {n_mirrors} mirrors"),
+            50,
+            2,
+            || {
+                let mut st = CacheStore::new(&spec, 64 << 20);
+                let mk = akey(round * 1000, 0);
+                st.put_dense(mk, dense(&spec, len, 1)).unwrap();
+                let (master_kv, toks) = match st.get(&mk) {
+                    Some(tokendance::store::Fetched::Dense(d)) => {
+                        (d.kv.clone(), d.tokens.clone())
+                    }
+                    _ => unreachable!(),
+                };
+                for j in 0..n_mirrors as u64 {
+                    let mut mkv = master_kv.clone();
+                    let o = mkv.off(0, 17);
+                    mkv.k[o] += 1.0 + j as f32;
+                    let d = diff_blocks(
+                        &master_kv, &mkv, len, spec.block_tokens,
+                    );
+                    let d = identity_aligned(
+                        d, len.div_ceil(spec.block_tokens), len,
+                    );
+                    st.put_mirror(
+                        akey(round * 1000 + 1 + j, 1 + j as usize),
+                        MirrorEntry {
+                            master: mk,
+                            tokens: toks.clone(),
+                            positions: (0..len as i32).collect(),
+                            diff: d,
+                        },
+                    )
+                    .unwrap();
+                }
+                // replacing the pinned master forces the re-election
+                st.put_dense(mk, dense(&spec, len, 9)).unwrap();
+                assert!(st.counters().promotions > 0);
+                round += 1;
+            },
+        );
+        b.report();
+    }
+}

@@ -93,10 +93,17 @@ fn main() -> anyhow::Result<()> {
             EngineEvent::Finished { id, e2e_secs, .. } => {
                 println!("  finished #{id} in {e2e_secs:.3}s");
             }
-            EngineEvent::RoundClosed { round, staged, mirror_bytes } => {
+            EngineEvent::RoundClosed {
+                round,
+                staged,
+                mirror_bytes,
+                store_evictions,
+                store_promotions,
+            } => {
                 println!(
                     "  round {round} closed: {staged} caches staged, \
-                     {mirror_bytes} mirror bytes"
+                     {mirror_bytes} mirror bytes, {store_evictions} \
+                     evictions, {store_promotions} master re-elections"
                 );
             }
             _ => {}

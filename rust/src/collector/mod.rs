@@ -78,13 +78,18 @@ pub fn group_compatible(
     let max_g = buckets.max_group();
     let mut by_bucket: std::collections::BTreeMap<usize, Vec<usize>> =
         Default::default();
-    for (i, t) in tasks.iter().enumerate() {
-        let b = buckets
-            .fit_prefill(t.valid_len)
-            .unwrap_or(usize::MAX);
-        by_bucket.entry(b).or_default().push(i);
-    }
     let mut out = Vec::new();
+    for (i, t) in tasks.iter().enumerate() {
+        match buckets.fit_prefill(t.valid_len) {
+            Some(b) => by_bucket.entry(b).or_default().push(i),
+            // no prefill bucket fits: the task is not length-compatible
+            // with anything — including other over-long tasks, whose
+            // lengths are arbitrary — so it runs as a singleton group
+            // (lumping them into one shared overflow bucket would batch
+            // mismatched lengths through one ropediff call)
+            None => out.push(vec![i]),
+        }
+    }
     for (_, idxs) in by_bucket {
         // split into bucket-exact chunks (e.g. 6 -> 4 + 2) so the batched
         // ropediff call carries no padding lanes — padding waste would
@@ -349,6 +354,32 @@ mod tests {
                 assert_eq!(res[0].kv.k_row(l, s), pre.kv.k_row(l, s));
             }
         }
+    }
+
+    #[test]
+    fn overlong_tasks_fall_back_to_singleton_groups() {
+        // tasks whose valid_len fits no prefill bucket are not
+        // length-compatible with anything — not even each other — and
+        // must each run as their own group (the old code lumped them all
+        // into one shared usize::MAX bucket)
+        let rt = MockRuntime::new();
+        let spec = rt.spec("sim-7b").unwrap().clone();
+        let s = spec.max_seq;
+        let mk = |id: u64, valid_len: usize| ReuseTask {
+            id,
+            tokens: vec![4; s],
+            valid_len,
+            old_pos: (0..s as i32).collect(),
+            valid: vec![1; s],
+            kv: KvBuf::for_spec(&spec),
+        };
+        let over = *rt.buckets().prefill_t.last().unwrap() + 1;
+        let tasks = vec![mk(0, over), mk(1, over + 77), mk(2, 30)];
+        let groups = group_compatible(&rt, &tasks);
+        assert_eq!(groups.len(), 3, "{groups:?}");
+        assert!(groups.contains(&vec![0]));
+        assert!(groups.contains(&vec![1]));
+        assert!(groups.contains(&vec![2]));
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::rounds::{segment_blocks, DetectorConfig, SegmentedPrompt};
 use crate::runtime::{argmax, DecodeSeq, KvBuf, ModelRuntime};
 use crate::scheduler::{decode_batches, AdmissionQueue, QueuedRequest};
 use crate::serve::EngineEvent;
-use crate::store::{CacheStore, Role, StoreKey};
+use crate::store::{CacheStore, Role, StoreCounters, StoreKey};
 use crate::tokenizer::{RoundAwarePrompt, EOS_ID};
 use crate::util::fnv1a_tokens;
 
@@ -228,6 +228,9 @@ pub struct Engine {
     /// that never poll (e.g. drain()-only benches).
     pub events_dropped: u64,
     pub metrics: RunMetrics,
+    /// Store-counter snapshot at the previous `RoundClosed` (the deltas
+    /// each closing round reports).
+    store_mark: StoreCounters,
     next_id: u64,
     started: Instant,
 }
@@ -240,7 +243,11 @@ impl Engine {
     pub fn new(rt: Rc<dyn ModelRuntime>, cfg: EngineConfig) -> Result<Self> {
         let spec = rt.spec(&cfg.model)?.clone();
         let pool = KvPool::new(&spec, cfg.pool_blocks);
-        let store = CacheStore::new(&spec, cfg.store_bytes);
+        let mut store = CacheStore::new(&spec, cfg.store_bytes);
+        // master re-election materializes position-shifted mirrors through
+        // the runtime; without this, the store could only promote
+        // identity-rotation mirrors
+        store.attach_runtime(rt.clone(), cfg.model.clone());
         Ok(Engine {
             rt,
             cfg,
@@ -257,6 +264,7 @@ impl Engine {
             events: VecDeque::new(),
             events_dropped: 0,
             metrics: RunMetrics::default(),
+            store_mark: StoreCounters::default(),
             next_id: 0,
             started: Instant::now(),
         })
@@ -498,7 +506,10 @@ impl Engine {
             store_bytes: self.store.bytes(),
         });
         self.metrics.runtime_calls = self.rt.calls();
-        self.metrics.store_evictions = self.store.evictions;
+        let c = self.store.counters();
+        self.metrics.store_evictions = c.evictions;
+        self.metrics.store_promotions = c.promotions;
+        self.metrics.store_rejections = c.rejected_inserts;
     }
 
     /// Key for a donor segment entry.

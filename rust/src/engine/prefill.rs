@@ -37,6 +37,13 @@ use crate::store::{
 /// accepts (paper §6.6).
 const DIFF_TOL: f32 = 5e-4;
 
+/// Minimum token-overlap ratio for the §4.3 similarity fallback: when an
+/// agent has no resolvable retained cache (cold, or evicted under store
+/// pressure), a same-length dense cache of the same role class with at
+/// least this overlap donates its position-wise matching rows (mismatched
+/// slots stay invalid and are selectively recomputed).
+const SIMILARITY_FALLBACK_MIN: f64 = 0.9;
+
 /// Longest common prefix of two token streams.
 fn common_prefix(a: &[u32], b: &[u32]) -> usize {
     a.iter().zip(b).take_while(|(x, y)| x == y).count()
@@ -412,6 +419,38 @@ impl Engine {
             }
         }
 
+        // (3) token-similarity fallback (paper §4.3): nothing reused so
+        // far — the agent is cold or its retention was evicted under
+        // store pressure — so borrow the closest same-class dense cache
+        // and reuse its position-wise matching rows; mismatched slots
+        // stay invalid and are recomputed like any other PIC correction.
+        // TokenDance-only: the paper attributes this fallback to the
+        // diff-aware store, and the CacheBlend baseline must stay faithful
+        if reused == 0 && self.cfg.policy == Policy::TokenDance {
+            let found = self.store.find_similar_master(
+                crate::store::Role::AgentCache { agent: p.req.agent },
+                &p.tokens,
+                SIMILARITY_FALLBACK_MIN,
+            );
+            if let Some((skey, _sim)) = found {
+                if let Some(Fetched::Dense(e)) = self.store.get(&skey) {
+                    // never mark the last position (fresh logits rule)
+                    let n = e
+                        .tokens
+                        .len()
+                        .min(p.tokens.len().saturating_sub(1));
+                    for slot in 0..n {
+                        if p.tokens[slot] == e.tokens[slot] {
+                            kv.copy_rows_from(&e.kv, slot, slot, 1);
+                            valid[slot] = 1;
+                            old_pos[slot] = e.positions[slot];
+                            reused += 1;
+                        }
+                    }
+                }
+            }
+        }
+
         // never reuse the last position: fresh logits required
         let last = p.tokens.len() - 1;
         valid[last] = 0;
@@ -513,14 +552,18 @@ impl Engine {
             let positions: Vec<i32> = (r.prompt_len as i32
                 ..(r.prompt_len + r.generated.len()) as i32)
                 .collect();
-            self.store.put_dense(
-                Engine::segment_key(&r.generated),
-                DenseEntry {
-                    tokens: r.generated.clone(),
-                    positions,
-                    kv: out_kv,
-                },
-            );
+            // capacity-honest: an oversize donor is rejected (counted by
+            // the store) and the round proceeds without it
+            self.store
+                .put_dense(
+                    Engine::segment_key(&r.generated),
+                    DenseEntry {
+                        tokens: r.generated.clone(),
+                        positions,
+                        kv: out_kv,
+                    },
+                )
+                .ok();
         }
         if matches!(
             self.cfg.policy,
@@ -533,15 +576,18 @@ impl Engine {
                 let seg_tokens = &r.tokens[seg.start..seg.end];
                 let skey = Engine::segment_key(seg_tokens);
                 if !self.store.contains(&skey) {
-                    self.store.put_dense(
-                        skey,
-                        DenseEntry {
-                            tokens: seg_tokens.to_vec(),
-                            positions: (seg.start as i32..seg.end as i32)
-                                .collect(),
-                            kv: r.kv.extract_rows(seg.start, seg.len()),
-                        },
-                    );
+                    self.store
+                        .put_dense(
+                            skey,
+                            DenseEntry {
+                                tokens: seg_tokens.to_vec(),
+                                positions: (seg.start as i32
+                                    ..seg.end as i32)
+                                    .collect(),
+                                kv: r.kv.extract_rows(seg.start, seg.len()),
+                            },
+                        )
+                        .ok();
                 }
             }
         }
@@ -567,15 +613,22 @@ impl Engine {
                     content: crate::util::fnv1a_tokens(&r.tokens),
                     role: crate::store::Role::AgentCache { agent: r.agent },
                 };
-                self.store.put_dense(
-                    key,
-                    DenseEntry {
-                        tokens: r.tokens.clone(),
-                        positions: (0..full_len as i32).collect(),
-                        kv: r.kv.extract_rows(0, full_len),
-                    },
-                );
-                agent.store_key = Some(key);
+                // an oversize cache is rejected by the store; keep the
+                // previous retention pointer (it may still resolve)
+                if self
+                    .store
+                    .put_dense(
+                        key,
+                        DenseEntry {
+                            tokens: r.tokens.clone(),
+                            positions: (0..full_len as i32).collect(),
+                            kv: r.kv.extract_rows(0, full_len),
+                        },
+                    )
+                    .is_ok()
+                {
+                    agent.store_key = Some(key);
+                }
                 self.pool.release(&r.table);
             }
             Policy::TokenDance => {
@@ -634,14 +687,56 @@ impl Engine {
                         .encode_secs
                         .push(t0.elapsed().as_secs_f64());
                 }
+                // lifecycle deltas since the previous RoundClosed: the
+                // eviction/promotion pressure this round generated
+                let c = self.store.counters();
+                let store_evictions =
+                    c.evictions - self.store_mark.evictions;
+                let store_promotions =
+                    c.promotions - self.store_mark.promotions;
+                self.store_mark = c;
                 self.push_event(crate::serve::EngineEvent::RoundClosed {
                     round: r.round,
                     staged,
                     mirror_bytes,
+                    store_evictions,
+                    store_promotions,
                 });
             }
         }
         Ok(())
+    }
+
+    /// Dense retention fallback shared by every encode-round path that
+    /// cannot (or should not) mirror a staged cache: store it dense under
+    /// its per-round key, updating the agent's retention pointer only on
+    /// success (a rejected oversize cache keeps the previous pointer).
+    fn retain_dense(
+        &mut self,
+        round: usize,
+        agent: usize,
+        tokens: Vec<u32>,
+        kv: KvBuf,
+    ) {
+        let len = kv.seq;
+        let key = crate::store::StoreKey {
+            content: crate::util::fnv1a_tokens(&tokens) ^ (round as u64),
+            role: crate::store::Role::AgentCache { agent },
+        };
+        if self
+            .store
+            .put_dense(
+                key,
+                DenseEntry {
+                    positions: (0..len as i32).collect(),
+                    tokens,
+                    kv,
+                },
+            )
+            .is_ok()
+        {
+            self.agents.entry(agent).or_default().store_key = Some(key);
+        }
     }
 
     /// Round-end Master-Mirror encoding (paper §4.3): elect the Master
@@ -677,16 +772,29 @@ impl Engine {
         // padded master for diffing
         let mut master_padded = KvBuf::for_spec(&spec);
         master_padded.copy_rows_from(&master.kv, 0, 0, master.kv.seq);
-        self.store.put_dense(
-            master_key,
-            DenseEntry {
-                positions: (0..master.kv.seq as i32).collect(),
-                tokens: master.tokens.clone(),
-                kv: master.kv,
-            },
-        );
-        self.agents.entry(master.agent).or_default().store_key =
-            Some(master_key);
+        let master_stored = self
+            .store
+            .put_dense(
+                master_key,
+                DenseEntry {
+                    positions: (0..master.kv.seq as i32).collect(),
+                    tokens: master.tokens.clone(),
+                    kv: master.kv,
+                },
+            )
+            .is_ok();
+        if master_stored {
+            self.agents.entry(master.agent).or_default().store_key =
+                Some(master_key);
+        } else {
+            // the elected master itself does not fit the store: no family
+            // encoding is possible this round — retain each sibling dense
+            // best-effort and keep previous pointers where even that fails
+            for s in staged {
+                self.retain_dense(round, s.agent, s.tokens, s.kv);
+            }
+            return Ok(0);
+        }
 
         let max_nb = self.rt.buckets().max_diff();
         let model = self.cfg.model.clone();
@@ -713,21 +821,7 @@ impl Engine {
             // whole cache would be one big correction; store dense without
             // paying two rope passes (§Perf)
             if src_block.iter().all(|&b| b < 0) {
-                let key = crate::store::StoreKey {
-                    content: crate::util::fnv1a_tokens(&s.tokens)
-                        ^ (round as u64),
-                    role: crate::store::Role::AgentCache { agent: s.agent },
-                };
-                self.store.put_dense(
-                    key,
-                    DenseEntry {
-                        positions: (0..len as i32).collect(),
-                        tokens: s.tokens.clone(),
-                        kv: s.kv,
-                    },
-                );
-                self.agents.entry(s.agent).or_default().store_key =
-                    Some(key);
+                self.retain_dense(round, s.agent, s.tokens, s.kv);
                 continue;
             }
             let (permuted, src_pos) = gather_permuted_master(
@@ -773,45 +867,49 @@ impl Engine {
                 // compression would not pay off — store dense (paper:
                 // "if requests diverge more strongly ... the storage
                 // benefit diminishes")
-                self.store.put_dense(
-                    key,
-                    DenseEntry {
-                        positions: (0..len as i32).collect(),
-                        tokens: s.tokens.clone(),
-                        kv: s.kv,
-                    },
-                );
-            } else {
-                // correction values must live in the *source* frame so the
-                // restore path can scatter before its single RoPE pass:
-                // un-rotate the mirror (slot -> src) and extract blocks —
-                // skipped entirely when the rotation is the identity
-                let unrot = if identity {
-                    padded
-                } else {
-                    let mut u = padded;
-                    self.rt
-                        .rope_recover(&model, &mut u, &slots, &src_pos)?;
-                    u
-                };
-                let corrections = extract_blocks(
-                    &unrot, &changed.block_ids, len, bt,
-                );
-                let entry = MirrorEntry {
-                    master: master_key,
-                    tokens: s.tokens.clone(),
-                    positions: (0..len as i32).collect(),
-                    diff: AlignedDiff {
-                        src_block,
-                        src_pos: src_pos[..len].to_vec(),
-                        corrections,
-                    },
-                };
-                // same measure the store's accounting uses (diff + tokens)
-                mirror_bytes += entry.diff.bytes() + entry.tokens.len() * 8;
-                self.store.put_mirror(key, entry)?;
+                self.retain_dense(round, s.agent, s.tokens, s.kv);
+                continue;
             }
-            self.agents.entry(s.agent).or_default().store_key = Some(key);
+            // correction values must live in the *source* frame so the
+            // restore path can scatter before its single RoPE pass:
+            // un-rotate the mirror (slot -> src) and extract blocks —
+            // skipped entirely when the rotation is the identity
+            let unrot = if identity {
+                padded
+            } else {
+                let mut u = padded;
+                self.rt
+                    .rope_recover(&model, &mut u, &slots, &src_pos)?;
+                u
+            };
+            let corrections = extract_blocks(
+                &unrot, &changed.block_ids, len, bt,
+            );
+            let entry = MirrorEntry {
+                master: master_key,
+                tokens: s.tokens.clone(),
+                positions: (0..len as i32).collect(),
+                diff: AlignedDiff {
+                    src_block,
+                    src_pos: src_pos[..len].to_vec(),
+                    corrections,
+                },
+            };
+            // same measure the store's accounting uses (diff + tokens)
+            let entry_bytes = entry.diff.bytes() + entry.tokens.len() * 8;
+            match self.store.put_mirror(key, entry) {
+                Ok(()) => {
+                    mirror_bytes += entry_bytes;
+                    self.agents.entry(s.agent).or_default().store_key =
+                        Some(key);
+                }
+                // the store refused the mirror (no room beside its pinned
+                // master, or the master was evicted by an intervening
+                // sibling insert): dense retention keeps the cache usable
+                Err(_) => {
+                    self.retain_dense(round, s.agent, s.tokens, s.kv);
+                }
+            }
         }
         Ok(mirror_bytes)
     }

@@ -262,6 +262,40 @@ fn tokendance_stores_mirrors_with_compression() {
 }
 
 #[test]
+fn tokendance_survives_store_eviction_pressure() {
+    // a store much smaller than the session's retained working set:
+    // pinned masters meet the evictor, mirrors must never dangle, and
+    // the byte ledger must stay within budget the whole time
+    let cap = 160 << 10;
+    let mut eng = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(512)
+        .store_bytes(cap)
+        .recompute_frac(0.05)
+        .min_recompute(1)
+        .mock()
+        .build()
+        .unwrap();
+    run_shared_heavy(&mut eng, 6, 3);
+    assert!(eng.store().bytes() <= cap, "capacity honored");
+    eng.store().assert_invariants();
+    let c = eng.store().counters();
+    assert!(c.evictions > 0, "pressure must evict: {c:?}");
+    // every agent still resolves its retention pointer or has none —
+    // never a pointer at a dangling mirror
+    for a in 0..6 {
+        if let Some(k) = eng.agent_store_key(a) {
+            if eng.store().contains(&k) {
+                assert!(
+                    eng.store_mut().get(&k).is_some(),
+                    "resident retention key must resolve"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn tokendance_uses_fused_restores() {
     let mut eng = engine(Policy::TokenDance, 512);
     run_shared_heavy(&mut eng, 8, 3);
@@ -311,6 +345,66 @@ fn agent_cache_keys_are_per_round() {
             Some(Fetched::Dense(_)) | Some(Fetched::Mirror(_))
         ));
     }
+}
+
+#[test]
+fn similarity_fallback_reuses_close_cache_when_retention_lost() {
+    // paper §4.3: an agent with no resolvable retained cache (cold, or
+    // evicted under store pressure) borrows the closest same-class dense
+    // cache. Plant a donor differing in one token from the incoming
+    // prompt and check the prefill reuses the matching positions.
+    let mut eng = engine(Policy::TokenDance, 512);
+    let p = prompt(7, &[String::from("persona data")], &[], "act");
+    let toks = crate::rounds::segment_blocks(&p).tokens;
+    assert!(toks.len() >= 16);
+    let mut donor_tokens = toks.clone();
+    donor_tokens[2] ^= 1; // one mismatch, similarity well above 0.9
+    let donor_kv = {
+        let pre = eng
+            .rt
+            .prefill(MODEL, &donor_tokens, donor_tokens.len())
+            .unwrap();
+        pre.kv.extract_rows(0, donor_tokens.len())
+    };
+    eng.store_mut()
+        .put_dense(
+            crate::store::StoreKey {
+                content: 0xD0,
+                role: crate::store::Role::AgentCache { agent: 3 },
+            },
+            crate::store::DenseEntry {
+                positions: (0..donor_tokens.len() as i32).collect(),
+                tokens: donor_tokens,
+                kv: donor_kv,
+            },
+        )
+        .unwrap();
+    // agent 7 has no retention pointer: only the fallback can reuse
+    let mut sub = RoundSubmission::new(0);
+    sub.push(AgentRequest {
+        agent: 7,
+        round: 0,
+        prompt: p,
+        max_new_tokens: 4,
+        retain: false,
+    });
+    eng.submit_round(sub).unwrap();
+    eng.drain().unwrap();
+    let reused: usize = eng
+        .poll_events()
+        .iter()
+        .filter_map(|e| match e {
+            crate::serve::EngineEvent::PrefillDone {
+                reused_tokens, ..
+            } => Some(*reused_tokens),
+            _ => None,
+        })
+        .sum();
+    assert!(
+        reused > 0,
+        "similarity fallback must reuse matching positions"
+    );
+    assert!(reused >= toks.len() - 3, "all but mismatch+last reused");
 }
 
 #[test]

@@ -10,6 +10,8 @@
 //! | [`fig12`] | Master-Mirror compression + changed blocks |
 //! | [`fig13`] | dense vs fused restore latency |
 //! | [`fig14`] | rounds before greedy divergence (8 scenarios) |
+//! | [`pressure`] | (beyond the paper) compression + hit rate + master
+//!   re-elections with the store capacity swept below the working set |
 
 pub mod common;
 pub mod fig10;
@@ -19,5 +21,6 @@ pub mod fig13;
 pub mod fig14;
 pub mod fig2;
 pub mod fig3;
+pub mod pressure;
 
 pub use common::ExpContext;

@@ -16,7 +16,7 @@
 //! | [`model`] | model specs, shape buckets, artifact manifest |
 //! | [`runtime`] | PJRT execution of the AOT artifacts (+ mock for tests) |
 //! | [`kvcache`] | paged GPU-pool analog: block allocator, block tables |
-//! | [`store`] | CPU-side cache store: dense + Master-Mirror diff entries |
+//! | [`store`] | CPU-side cache store: dense + Master-Mirror diff entries, O(1) LRU, master re-election, capacity-honest accounting |
 //! | [`rounds`] | segment hashing, All-Gather round detection |
 //! | [`pic`] | position-independent caching: importance selection, plans |
 //! | [`collector`] | KV Collector: grouping + collective reuse (paper §4.2) |

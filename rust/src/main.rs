@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! tokendance serve        [--model M] [--policy P] [--agents N] ...
-//! tokendance experiments  <fig2|fig3|fig10|fig11|fig12|fig13|fig14|all>
+//! tokendance experiments  <fig2|fig3|fig10|fig11|fig12|fig13|fig14
+//!                          |pressure|all>
 //!                         [--quick] [--mock] [--artifacts DIR] [--out DIR]
 //! tokendance info         [--artifacts DIR]
 //! ```
@@ -24,7 +25,7 @@ USAGE:
   tokendance serve [options]        run a multi-agent serving session
   tokendance experiments <FIG...>   reproduce paper figures
                                     (fig2 fig3 fig10 fig11 fig12 fig13
-                                     fig14 | all)
+                                     fig14 pressure | all)
   tokendance info [options]         show artifacts / models / buckets
 
 COMMON OPTIONS:
@@ -121,6 +122,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_bytes(eng.store().bytes()),
         st.family_compression_ratio()
     );
+    let sc = eng.store().counters();
+    println!(
+        "store lifecycle:    {} evictions, {} master re-elections, \
+         {} rejected inserts, {} hit rate",
+        sc.evictions,
+        sc.promotions,
+        sc.rejected_inserts,
+        sc.hit_rate()
+            .map_or("n/a".into(), |h| format!("{:.0}%", 100.0 * h))
+    );
     println!(
         "reuse:              {:.0}% of prompt tokens served from cache; \
          {} restores ({} mean)",
@@ -174,6 +185,10 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     }
     if want("fig14") {
         experiments::fig14::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("pressure") {
+        experiments::pressure::run(&ctx, args)?;
         ran += 1;
     }
     if ran == 0 {

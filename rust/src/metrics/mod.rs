@@ -82,6 +82,13 @@ pub struct RunMetrics {
     pub prefill_full: u64,
     pub prefill_reused: u64,
     pub store_evictions: u64,
+    /// Master re-elections in the CPU store (a Mirror promoted to dense
+    /// Master because its Master was evicted or replaced while pinned).
+    pub store_promotions: u64,
+    /// Store inserts refused for exceeding capacity (capacity honesty:
+    /// the store never holds more than its budget, so oversize entries
+    /// are turned away and counted instead of silently overcommitting).
+    pub store_rejections: u64,
 }
 
 impl RunMetrics {

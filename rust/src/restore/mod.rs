@@ -14,11 +14,12 @@
 //! Both paths end by scattering into the paged [`KvPool`], so their outputs
 //! are bit-identical; only the data movement differs.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::kvcache::{BlockTable, KvPool};
+use crate::model::ModelSpec;
 use crate::runtime::{KvBuf, ModelRuntime, SparseDiff};
-use crate::store::MirrorHandle;
+use crate::store::{BlockSparseDiff, MirrorHandle};
 
 /// Restore strategy selector (ablation knob for Fig 13).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,12 +72,76 @@ pub fn materialize_mirror(
     mode: RestoreMode,
 ) -> Result<(KvBuf, RestoreStats)> {
     let spec = rt.spec(model)?.clone();
+    let p = prep_mirror(&spec, handle);
+    let corr = &handle.mirror.diff.corrections;
+    let mut stats = RestoreStats {
+        diff_blocks: corr.n_blocks(),
+        ..Default::default()
+    };
+
+    let restored = match mode {
+        RestoreMode::Fused => {
+            stats.used_fused_kernel = true;
+            stats.bytes_moved = p.master.bytes() + corr.bytes();
+            fused_apply(Some((rt, model)), p, corr)?
+        }
+        RestoreMode::Dense => {
+            // strawman: materialize the dense mirror first (extra dense
+            // write) ...
+            let mut dense = p.master.clone();
+            corr.apply_to(&mut dense);
+            // ... then a standalone pass re-reads the dense copy: a full
+            // copy round trip even when the rotation is the identity
+            stats.bytes_moved =
+                2 * p.master.bytes() + corr.bytes() + p.master.bytes();
+            if p.identity {
+                dense.clone() // the extra write-then-read round trip
+            } else {
+                rt.rope_recover(model, &mut dense, &p.old_pos, &p.new_pos)?;
+                dense
+            }
+        }
+    };
+    Ok((restored, stats))
+}
+
+/// Materialize a Mirror for master re-election: identity-rotation mirrors
+/// (the common case — and every re-homed mirror, by construction) rebuild
+/// purely host-side; position-shifted mirrors need the runtime's fused
+/// restore. `rt` is None when the store has no runtime attached, in which
+/// case a position-shifted mirror errors (the store drops it rather than
+/// leaving it dangling).
+pub fn materialize_for_promotion(
+    spec: &ModelSpec,
+    rt: Option<(&dyn ModelRuntime, &str)>,
+    handle: &MirrorHandle,
+) -> Result<KvBuf> {
+    let p = prep_mirror(spec, handle);
+    fused_apply(rt, p, &handle.mirror.diff.corrections)
+}
+
+/// Host-side prep shared by every restore flavor: the permuted master
+/// gather (Algorithm 1 line 3) plus the position maps and the
+/// identity-rotation check.
+struct MirrorPrep {
+    /// Master blocks gathered into the mirror's block order, padded to
+    /// [L, max_seq, d].
+    master: KvBuf,
+    old_pos: Vec<i32>,
+    new_pos: Vec<i32>,
+    /// RoPE recovery is the identity when every valid slot keeps its
+    /// position (the common case for retained-context restores): both
+    /// paths then skip the rotation compute, and the fused/dense
+    /// comparison isolates the data movement — exactly Fig 13's question
+    /// (§Perf iteration 3).
+    identity: bool,
+}
+
+fn prep_mirror(spec: &ModelSpec, handle: &MirrorHandle) -> MirrorPrep {
     let s = spec.max_seq;
     let len = handle.mirror.tokens.len();
     debug_assert!(len <= s);
     let diff = &handle.mirror.diff;
-
-    // host half of the chunk load: permuted master + source positions
     let (master, _derived) = crate::store::gather_permuted_master(
         &handle.master.kv,
         &handle.master.positions,
@@ -89,74 +154,46 @@ pub fn materialize_mirror(
     old_pos[..diff.src_pos.len().min(s)]
         .copy_from_slice(&diff.src_pos[..diff.src_pos.len().min(s)]);
     let new_pos: Vec<i32> = (0..s as i32).collect();
-
-    let corr = &diff.corrections;
-    let mut stats = RestoreStats {
-        diff_blocks: corr.n_blocks(),
-        ..Default::default()
-    };
-
-    // RoPE recovery is the identity when every valid slot keeps its
-    // position (the common case for retained-context restores): both paths
-    // then skip the rotation compute, and the comparison isolates the data
-    // movement — exactly Fig 13's question (§Perf iteration 3).
     let identity = old_pos
         .iter()
         .zip(&new_pos)
         .take(len)
         .all(|(a, b)| a == b);
+    MirrorPrep { master, old_pos, new_pos, identity }
+}
 
-    let restored = match mode {
-        RestoreMode::Fused => {
-            stats.used_fused_kernel = true;
-            stats.bytes_moved = master.bytes() + corr.bytes();
-            if identity {
-                // single transfer pass: master chunks stream through with
-                // corrections applied in place — no dense intermediate,
-                // no rotation work
-                let mut out = master;
-                corr.apply_to(&mut out);
-                out
-            } else {
-                // one artifact call restores the K plane (correction
-                // scatter + RoPE recovery fused — the L1 Pallas kernel);
-                // V has no positional component, so its corrections ride
-                // the host transfer pass and never cross the device
-                // boundary (§Perf L1-2). Oversize diffs never reach here
-                // (the engine stores them dense instead).
-                let mut out = rt.fused_restore(
-                    model,
-                    &master,
-                    &SparseDiff {
-                        block_ids: &corr.block_ids,
-                        diff_k: &corr.k,
-                    },
-                    &old_pos,
-                    &new_pos,
-                )?;
-                out.v.copy_from_slice(&master.v);
-                corr.apply_v_to(&mut out);
-                out
-            }
-        }
-        RestoreMode::Dense => {
-            // strawman: materialize the dense mirror first (extra dense
-            // write) ...
-            let mut dense = master.clone();
-            corr.apply_to(&mut dense);
-            // ... then a standalone pass re-reads the dense copy: a full
-            // copy round trip even when the rotation is the identity
-            stats.bytes_moved =
-                2 * master.bytes() + corr.bytes() + master.bytes();
-            if identity {
-                dense.clone() // the extra write-then-read round trip
-            } else {
-                rt.rope_recover(model, &mut dense, &old_pos, &new_pos)?;
-                dense
-            }
-        }
+/// The fused restore compute over a prepped mirror.
+fn fused_apply(
+    rt: Option<(&dyn ModelRuntime, &str)>,
+    p: MirrorPrep,
+    corr: &BlockSparseDiff,
+) -> Result<KvBuf> {
+    if p.identity {
+        // single transfer pass: master chunks stream through with
+        // corrections applied in place — no dense intermediate, no
+        // rotation work
+        let mut out = p.master;
+        corr.apply_to(&mut out);
+        return Ok(out);
+    }
+    let Some((rt, model)) = rt else {
+        bail!("position-shifted mirror needs a runtime to materialize");
     };
-    Ok((restored, stats))
+    // one artifact call restores the K plane (correction scatter + RoPE
+    // recovery fused — the L1 Pallas kernel); V has no positional
+    // component, so its corrections ride the host transfer pass and never
+    // cross the device boundary (§Perf L1-2). Oversize diffs never reach
+    // here (the engine stores them dense instead).
+    let mut out = rt.fused_restore(
+        model,
+        &p.master,
+        &SparseDiff { block_ids: &corr.block_ids, diff_k: &corr.k },
+        &p.old_pos,
+        &p.new_pos,
+    )?;
+    out.v.copy_from_slice(&p.master.v);
+    corr.apply_v_to(&mut out);
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -191,14 +228,16 @@ mod tests {
 
         let mk = StoreKey { content: 1, role: Role::AgentCache { agent: 0 } };
         let sk = StoreKey { content: 2, role: Role::AgentCache { agent: 1 } };
-        store.put_dense(
-            mk,
-            DenseEntry {
-                tokens: toks.clone(),
-                positions: (0..64).collect(),
-                kv: master_kv,
-            },
-        );
+        store
+            .put_dense(
+                mk,
+                DenseEntry {
+                    tokens: toks.clone(),
+                    positions: (0..64).collect(),
+                    kv: master_kv,
+                },
+            )
+            .unwrap();
         store
             .put_mirror(
                 sk,
@@ -249,6 +288,61 @@ mod tests {
                 assert_eq!(fused.v_row(l, s), mirror_kv.v_row(l, s));
             }
         }
+    }
+
+    #[test]
+    fn promotion_materialization_matches_fused_restore() {
+        let (rt, mut store, _mk, sk, mirror_kv) = setup();
+        let spec = rt.spec("sim-7b").unwrap().clone();
+        // identity mirror: promotion materializes host-side, with or
+        // without a runtime, and reproduces the mirror bit-exactly
+        let handle = match store.get(&sk) {
+            Some(crate::store::Fetched::Mirror(h)) => h,
+            _ => panic!("expected mirror"),
+        };
+        let no_rt = materialize_for_promotion(&spec, None, &handle).unwrap();
+        let with_rt = materialize_for_promotion(
+            &spec,
+            Some((&rt as &dyn ModelRuntime, "sim-7b")),
+            &handle,
+        )
+        .unwrap();
+        assert_eq!(no_rt, with_rt);
+        for l in 0..spec.n_layers {
+            for s in 0..64 {
+                assert_eq!(no_rt.k_row(l, s), mirror_kv.k_row(l, s));
+                assert_eq!(no_rt.v_row(l, s), mirror_kv.v_row(l, s));
+            }
+        }
+    }
+
+    #[test]
+    fn promotion_of_shifted_mirror_requires_runtime() {
+        let (rt, mut store, _mk, sk, _mirror) = setup();
+        let spec = rt.spec("sim-7b").unwrap().clone();
+        {
+            let m = match store.get(&sk) {
+                Some(crate::store::Fetched::Mirror(h)) => h.mirror.clone(),
+                _ => panic!(),
+            };
+            let mut m = m;
+            m.diff.src_pos = (10..74).collect();
+            store.put_mirror(sk, m).unwrap();
+        }
+        let handle = match store.get(&sk) {
+            Some(crate::store::Fetched::Mirror(h)) => h,
+            _ => panic!(),
+        };
+        assert!(
+            materialize_for_promotion(&spec, None, &handle).is_err(),
+            "no runtime: position-shifted mirror must refuse, not corrupt"
+        );
+        assert!(materialize_for_promotion(
+            &spec,
+            Some((&rt as &dyn ModelRuntime, "sim-7b")),
+            &handle
+        )
+        .is_ok());
     }
 
     #[test]

@@ -61,10 +61,16 @@ pub enum EngineEvent {
     /// (TokenDance Master-Mirror encoding) has run. `staged` is the number
     /// of caches that were staged for encoding and `mirror_bytes` the
     /// store bytes the new mirrors occupy (0 for non-TokenDance policies).
+    /// `store_evictions` / `store_promotions` are the CPU-store lifecycle
+    /// deltas since the previous `RoundClosed`: entries evicted under
+    /// capacity pressure and Masters re-elected from their Mirrors while
+    /// this round was in flight.
     RoundClosed {
         round: usize,
         staged: usize,
         mirror_bytes: usize,
+        store_evictions: u64,
+        store_promotions: u64,
     },
 }
 
@@ -619,5 +625,52 @@ mod tests {
             total_mirror_bytes > 0,
             "shared-heavy rounds must produce mirrors"
         );
+    }
+
+    #[test]
+    fn round_closed_reports_store_lifecycle_deltas() {
+        // a store far smaller than the session's working set: every round
+        // must report eviction pressure, and the per-round deltas must
+        // reconcile exactly with the store's cumulative counters
+        let cap = 96 << 10;
+        let mut eng = Engine::builder("sim-7b")
+            .policy(Policy::TokenDance)
+            .pool_blocks(512)
+            .store_bytes(cap)
+            .recompute_frac(0.05)
+            .min_recompute(1)
+            .mock()
+            .build()
+            .unwrap();
+        let mut shared: Vec<Vec<u32>> = Vec::new();
+        let mut evictions = 0u64;
+        let mut promotions = 0u64;
+        for rid in 0..3 {
+            eng.submit_round(round(6, rid, &shared)).unwrap();
+            let done = eng.drain().unwrap();
+            let mut outs: Vec<(usize, Vec<u32>)> = done
+                .iter()
+                .map(|c| (c.agent, c.generated.clone()))
+                .collect();
+            outs.sort_by_key(|(a, _)| *a);
+            shared = outs.into_iter().map(|(_, t)| t).collect();
+            for ev in eng.poll_events() {
+                if let EngineEvent::RoundClosed {
+                    store_evictions,
+                    store_promotions,
+                    ..
+                } = ev
+                {
+                    evictions += store_evictions;
+                    promotions += store_promotions;
+                }
+            }
+        }
+        let c = eng.store().counters();
+        assert_eq!(evictions, c.evictions, "deltas reconcile");
+        assert_eq!(promotions, c.promotions, "deltas reconcile");
+        assert!(evictions > 0, "a 96 KiB store must evict under 6 agents");
+        assert!(eng.store().bytes() <= cap, "capacity honored");
+        eng.store().assert_invariants();
     }
 }

@@ -201,6 +201,46 @@ pub fn extract_blocks(
     out
 }
 
+/// Re-diff a sibling cache against a new master positionally (both in the
+/// slot frame) and wrap the result as an identity-sourced [`AlignedDiff`]:
+/// every block within the master's `master_len` is sourced from the master
+/// block at the same index (blocks past the master's end are unsourced,
+/// `-1`) and every slot keeps its position, so restoring the mirror never
+/// needs RoPE recovery. Blocks differing beyond `tol` carry the sibling's
+/// values as corrections — including any sibling blocks past `master_len`,
+/// which compare against padding and therefore land in the corrections.
+/// Used by master re-election to re-home surviving mirrors.
+pub fn rediff_identity(
+    master_padded: &KvBuf,
+    sibling_padded: &KvBuf,
+    master_len: usize,
+    valid_len: usize,
+    block_tokens: usize,
+    tol: f32,
+) -> AlignedDiff {
+    let corrections = diff_blocks_tol(
+        master_padded,
+        sibling_padded,
+        valid_len,
+        block_tokens,
+        tol,
+    );
+    let src_block = (0..valid_len.div_ceil(block_tokens))
+        .map(|b| {
+            if b * block_tokens < master_len {
+                b as i32
+            } else {
+                -1 // no master rows to gather; corrections carry the block
+            }
+        })
+        .collect();
+    AlignedDiff {
+        src_block,
+        src_pos: (0..valid_len as i32).collect(),
+        corrections,
+    }
+}
+
 /// Bitwise block-sparse diff (positional alignment) — see
 /// [`diff_blocks_tol`].
 pub fn diff_blocks(
@@ -303,6 +343,11 @@ pub fn gather_permuted_master(
             continue;
         }
         let mlo = src as usize * block_tokens;
+        if mlo >= master.seq {
+            // source block entirely past the master's rows: nothing to
+            // gather (slots stay zero; the diff's corrections cover them)
+            continue;
+        }
         let n = hi - lo;
         out.copy_rows_from(master, mlo, lo, n.min(master.seq - mlo));
         for i in 0..n {
@@ -430,6 +475,54 @@ mod tests {
         assert_eq!(src_pos[0], 26); // master position of slot 16
         assert_eq!(src_pos[16], 16); // unsourced: identity
         assert_eq!(out.k_row(1, 20), &[0.0; 4][..]);
+    }
+
+    #[test]
+    fn rediff_identity_roundtrips_through_identity_restore() {
+        // sibling differs from the master in one block; gather-identity +
+        // corrections must reproduce the sibling exactly
+        let master = buf(2, 64, 8);
+        let mut sib = buf(2, 64, 8);
+        let o = sib.off(1, 20); // block 1
+        sib.k[o] += 3.0;
+        let d = rediff_identity(&master, &sib, 64, 64, 16, 0.0);
+        assert_eq!(d.src_block, vec![0, 1, 2, 3]);
+        assert_eq!(d.src_pos, (0..64).collect::<Vec<i32>>());
+        assert_eq!(d.corrections.block_ids, vec![1]);
+        let mut rebuilt = master.clone();
+        d.corrections.apply_to(&mut rebuilt);
+        assert_eq!(rebuilt, sib);
+    }
+
+    #[test]
+    fn rediff_identity_unsources_blocks_past_the_master() {
+        // sibling longer than the master: blocks past master_len have no
+        // source (no master rows to gather at restore time) and compare
+        // against padding, so they ride entirely in the corrections
+        let master = buf(2, 64, 8); // valid rows: 0..32
+        let mut sib = buf(2, 64, 8);
+        for s in 32..48 {
+            let o = sib.off(0, s);
+            sib.k[o] = 9999.0;
+        }
+        let d = rediff_identity(&master, &sib, 32, 48, 16, 0.0);
+        assert_eq!(d.src_block, vec![0, 1, -1]);
+        assert!(d.corrections.block_ids.contains(&2));
+        // gather with the unsourced tail must not touch master rows past
+        // its end — and the roundtrip still reproduces the sibling
+        let positions: Vec<i32> = (0..32).collect();
+        let short_master = master.extract_rows(0, 32);
+        let (out, src_pos) = gather_permuted_master(
+            &short_master, &positions, &d.src_block, 48, 16, 64,
+        );
+        assert_eq!(src_pos[40], 40, "unsourced slots keep identity");
+        let mut rebuilt = out;
+        d.corrections.apply_to(&mut rebuilt);
+        for l in 0..2 {
+            for s in 0..48 {
+                assert_eq!(rebuilt.k_row(l, s), sib.k_row(l, s));
+            }
+        }
     }
 
     #[test]

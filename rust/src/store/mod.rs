@@ -13,21 +13,51 @@
 //! Entries are keyed by segment content hash + a role tag, so both segment
 //! donors (shared output blocks) and retained agent caches live here. When
 //! a reuse plan names the Master, the store uses it; otherwise a
-//! token-similarity heuristic picks the closest existing dense entry
-//! (paper's fallback).
+//! token-similarity heuristic picks the closest existing dense entry of the
+//! same role class (paper's fallback).
+//!
+//! ## Lifecycle (pinning, re-election, capacity honesty)
+//!
+//! The store lives permanently at capacity in production, so its lifecycle
+//! rules are load-bearing:
+//!
+//! * **Pinning.** A Master is pinned while any Mirror references it,
+//!   tracked by an exact reverse index (`master -> {mirror keys}`), never
+//!   by a bare refcount that can go stale.
+//! * **Master re-election.** When a pinned Master is replaced
+//!   ([`CacheStore::put_dense`] on its key) or selected for eviction, its
+//!   Mirrors are *not* orphaned: every Mirror is materialized through the
+//!   restore path, the cheapest one is promoted to a dense Master, and the
+//!   siblings are re-diffed against it (identity-sourced, so restoring a
+//!   re-homed Mirror never needs RoPE recovery). A resident Mirror's
+//!   Master is therefore always resident and dense — an invariant
+//!   [`CacheStore::assert_invariants`] checks.
+//! * **O(1) LRU.** Recency is an intrusive doubly-linked list threaded
+//!   through the entry map: `touch`, insert, and evict are O(1) per entry
+//!   (the former `Vec<StoreKey>` index was O(n) per access and O(n²) per
+//!   round at scale). Reading a Mirror also touches its Master, so a
+//!   Master is never colder than its hottest Mirror.
+//! * **Capacity honesty.** Inserts larger than `capacity_bytes` are
+//!   rejected (`Err`), the byte ledger always equals the sum of resident
+//!   entry sizes, and `bytes() <= capacity_bytes` holds after every
+//!   operation. Lifecycle activity (evictions, promotions, re-homes,
+//!   drops, rejections, hits/misses) is counted in [`StoreCounters`] and
+//!   surfaced through [`StoreStats`], `EngineEvent::RoundClosed`, and the
+//!   metrics layer.
 
 pub mod diff;
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
+use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::model::ModelSpec;
-use crate::runtime::KvBuf;
+use crate::runtime::{KvBuf, ModelRuntime};
 pub use diff::{
     diff_blocks, diff_blocks_tol, extract_blocks, gather_permuted_master,
-    match_blocks_by_content, match_blocks_by_segments, AlignedDiff,
-    BlockSparseDiff,
+    match_blocks_by_content, match_blocks_by_segments, rediff_identity,
+    AlignedDiff, BlockSparseDiff,
 };
 
 /// Key of a stored cache object.
@@ -46,6 +76,20 @@ pub enum Role {
     Segment,
     /// A full retained agent context cache (master or mirror).
     AgentCache { agent: usize },
+}
+
+impl Role {
+    /// Role *class* equality — the partition the similarity fallback
+    /// respects: segment donors never serve as similarity masters for
+    /// agent-cache queries and vice versa (the agent id within
+    /// `AgentCache` does not matter).
+    pub fn same_class(self, other: Role) -> bool {
+        matches!(
+            (self, other),
+            (Role::Segment, Role::Segment)
+                | (Role::AgentCache { .. }, Role::AgentCache { .. })
+        )
+    }
 }
 
 /// Dense stored entry.
@@ -80,7 +124,8 @@ pub struct MirrorHandle<'a> {
     pub mirror: &'a MirrorEntry,
 }
 
-/// Storage accounting for the Fig-12 compression analysis.
+/// Storage accounting for the Fig-12 compression analysis, plus the
+/// cumulative lifecycle counters (copied from [`StoreCounters`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StoreStats {
     pub dense_entries: usize,
@@ -94,6 +139,30 @@ pub struct StoreStats {
     pub agent_dense_bytes: usize,
     /// Total diff blocks across mirrors (Fig-12 right panel).
     pub mirror_diff_blocks: usize,
+    /// Cumulative lifecycle counters since store creation.
+    pub counters: StoreCounters,
+}
+
+/// Cumulative lifecycle counters (capacity-honesty observability).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Entries removed to make room (capacity pressure).
+    pub evictions: u64,
+    /// Master re-elections: a Mirror promoted to dense Master because its
+    /// Master was evicted or replaced while still referenced.
+    pub promotions: u64,
+    /// Sibling Mirrors re-encoded against a newly elected Master.
+    pub rehomed_mirrors: u64,
+    /// Mirrors dropped because they could not be re-homed (no runtime for
+    /// a position-shifted materialization, or nothing fit).
+    pub dropped_mirrors: u64,
+    /// Inserts refused because the entry alone exceeds capacity (or a
+    /// Mirror could not fit beside its pinned Master).
+    pub rejected_inserts: u64,
+    /// `get` calls that found an entry.
+    pub hits: u64,
+    /// `get` calls that missed.
+    pub misses: u64,
 }
 
 impl StoreStats {
@@ -133,18 +202,55 @@ impl StoreStats {
     }
 }
 
+impl StoreCounters {
+    /// Fraction of `get` calls that hit, or None when the store was never
+    /// read (a store that did nothing is not a store that hit 100%).
+    pub fn hit_rate(&self) -> Option<f64> {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.hits as f64 / total as f64)
+        }
+    }
+}
+
+/// Per-element tolerance when re-diffing a materialized sibling against a
+/// newly elected Master: restored values may differ from the master's by
+/// restore-path roundoff (same class of perturbation as the engine's
+/// encode tolerance); genuine divergence is orders of magnitude larger.
+const REDIFF_TOL: f32 = 5e-4;
+
+/// One resident entry plus its intrusive LRU links and cached size.
+struct Resident {
+    entry: Entry,
+    /// Cached `entry_bytes(entry)` — the unit of the byte ledger.
+    bytes: usize,
+    /// LRU neighbor toward the head (older).
+    prev: Option<StoreKey>,
+    /// LRU neighbor toward the tail (newer).
+    next: Option<StoreKey>,
+}
+
 /// The store itself. `capacity_bytes` bounds resident data; inserting past
-/// capacity evicts least-recently-used entries (masters are pinned while
-/// mirrors reference them).
+/// capacity evicts least-recently-used entries. Masters are pinned while
+/// mirrors reference them — but pinning re-elects under pressure instead
+/// of exempting the family from eviction forever (see module docs).
 pub struct CacheStore {
     spec: ModelSpec,
-    entries: HashMap<StoreKey, Entry>,
-    lru: Vec<StoreKey>, // front = oldest
+    entries: HashMap<StoreKey, Resident>,
+    /// LRU-oldest resident key.
+    head: Option<StoreKey>,
+    /// LRU-newest resident key.
+    tail: Option<StoreKey>,
     capacity_bytes: usize,
     bytes: usize,
-    /// master key -> number of mirrors referencing it
-    master_refs: HashMap<StoreKey, usize>,
-    pub evictions: u64,
+    /// Exact reverse index: master key -> keys of mirrors referencing it.
+    master_refs: HashMap<StoreKey, BTreeSet<StoreKey>>,
+    counters: StoreCounters,
+    /// Runtime used to materialize position-shifted mirrors during master
+    /// re-election; identity mirrors promote host-side without it.
+    runtime: Option<(Rc<dyn ModelRuntime>, String)>,
 }
 
 fn dense_bytes(e: &DenseEntry) -> usize {
@@ -155,17 +261,37 @@ fn mirror_bytes(m: &MirrorEntry) -> usize {
     m.diff.bytes() + m.tokens.len() * 8
 }
 
+/// Materialized snapshot of one mirror, taken before its master goes away.
+struct Promotable {
+    key: StoreKey,
+    tokens: Vec<u32>,
+    /// Compact [L, len, d] dense planes.
+    kv: KvBuf,
+    /// Resident cost of the mirror form (promotion prefers the cheapest).
+    cost: usize,
+}
+
 impl CacheStore {
     pub fn new(spec: &ModelSpec, capacity_bytes: usize) -> Self {
         CacheStore {
             spec: spec.clone(),
             entries: HashMap::new(),
-            lru: Vec::new(),
+            head: None,
+            tail: None,
             capacity_bytes,
             bytes: 0,
             master_refs: HashMap::new(),
-            evictions: 0,
+            counters: StoreCounters::default(),
+            runtime: None,
         }
+    }
+
+    /// Attach the runtime master re-election uses to materialize
+    /// position-shifted mirrors (identity mirrors — including every
+    /// re-homed one — promote host-side without it). The engine attaches
+    /// its runtime at construction.
+    pub fn attach_runtime(&mut self, rt: Rc<dyn ModelRuntime>, model: String) {
+        self.runtime = Some((rt, model));
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -184,11 +310,60 @@ impl CacheStore {
         self.bytes
     }
 
-    fn touch(&mut self, key: StoreKey) {
-        if let Some(p) = self.lru.iter().position(|k| *k == key) {
-            self.lru.remove(p);
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Cumulative lifecycle counters since store creation.
+    pub fn counters(&self) -> StoreCounters {
+        self.counters
+    }
+
+    // -----------------------------------------------------------------
+    // intrusive LRU list (O(1) touch / evict)
+    // -----------------------------------------------------------------
+
+    fn unlink(&mut self, key: StoreKey) {
+        let (prev, next) = {
+            let r = self.entries.get(&key).expect("unlink of missing entry");
+            (r.prev, r.next)
+        };
+        match prev {
+            Some(p) => self.entries.get_mut(&p).unwrap().next = next,
+            None => self.head = next,
         }
-        self.lru.push(key);
+        match next {
+            Some(n) => self.entries.get_mut(&n).unwrap().prev = prev,
+            None => self.tail = prev,
+        }
+        let r = self.entries.get_mut(&key).unwrap();
+        r.prev = None;
+        r.next = None;
+    }
+
+    fn push_back(&mut self, key: StoreKey) {
+        match self.tail {
+            Some(t) => {
+                self.entries.get_mut(&t).unwrap().next = Some(key);
+                let r = self.entries.get_mut(&key).unwrap();
+                r.prev = Some(t);
+                r.next = None;
+            }
+            None => {
+                let r = self.entries.get_mut(&key).unwrap();
+                r.prev = None;
+                r.next = None;
+                self.head = Some(key);
+            }
+        }
+        self.tail = Some(key);
+    }
+
+    fn touch(&mut self, key: StoreKey) {
+        if self.entries.contains_key(&key) {
+            self.unlink(key);
+            self.push_back(key);
+        }
     }
 
     fn entry_bytes(e: &Entry) -> usize {
@@ -198,67 +373,302 @@ impl CacheStore {
         }
     }
 
-    fn evict_for(&mut self, need: usize) {
-        let mut i = 0;
-        while self.bytes + need > self.capacity_bytes && i < self.lru.len() {
-            let key = self.lru[i];
-            let pinned = self.master_refs.get(&key).copied().unwrap_or(0) > 0;
-            if pinned {
-                i += 1;
-                continue;
-            }
-            self.lru.remove(i);
-            if let Some(e) = self.entries.remove(&key) {
-                self.bytes -= Self::entry_bytes(&e);
-                if let Entry::Mirror(m) = &e {
-                    if let Some(rc) = self.master_refs.get_mut(&m.master) {
-                        *rc = rc.saturating_sub(1);
-                    }
-                }
-                self.evictions += 1;
-            }
-        }
+    fn is_pinned(&self, key: &StoreKey) -> bool {
+        self.master_refs.get(key).is_some_and(|s| !s.is_empty())
     }
 
-    fn remove_existing(&mut self, key: StoreKey) {
-        if let Some(old) = self.entries.remove(&key) {
-            self.bytes -= Self::entry_bytes(&old);
-            if let Entry::Mirror(m) = &old {
-                if let Some(rc) = self.master_refs.get_mut(&m.master) {
-                    *rc = rc.saturating_sub(1);
-                }
-            }
-            if let Some(p) = self.lru.iter().position(|k| *k == key) {
-                self.lru.remove(p);
-            }
+    /// Insert a fresh resident at the MRU end, maintaining the byte ledger
+    /// and the mirror reverse index. The key must not be resident.
+    fn insert_resident(&mut self, key: StoreKey, entry: Entry) {
+        debug_assert!(!self.entries.contains_key(&key));
+        let nb = Self::entry_bytes(&entry);
+        if let Entry::Mirror(m) = &entry {
+            self.master_refs.entry(m.master).or_default().insert(key);
         }
-    }
-
-    /// Insert (or replace) a dense entry.
-    pub fn put_dense(&mut self, key: StoreKey, entry: DenseEntry) {
-        self.remove_existing(key);
-        let nb = dense_bytes(&entry);
-        self.evict_for(nb);
         self.bytes += nb;
-        self.entries.insert(key, Entry::Dense(entry));
-        self.touch(key);
+        self.entries.insert(
+            key,
+            Resident { entry, bytes: nb, prev: None, next: None },
+        );
+        self.push_back(key);
     }
 
-    /// Insert a mirror referencing `master` (which must be dense).
+    /// Remove a resident entry (ledger + LRU + reverse index). The caller
+    /// must have resolved pins first (re-election) — removing a referenced
+    /// master here would orphan its mirrors.
+    fn remove_resident(&mut self, key: StoreKey) -> Option<Entry> {
+        if !self.entries.contains_key(&key) {
+            return None;
+        }
+        debug_assert!(!self.is_pinned(&key), "removing a pinned master");
+        self.unlink(key);
+        let r = self.entries.remove(&key).unwrap();
+        self.bytes -= r.bytes;
+        if let Entry::Mirror(m) = &r.entry {
+            if let Some(set) = self.master_refs.get_mut(&m.master) {
+                set.remove(&key);
+                if set.is_empty() {
+                    self.master_refs.remove(&m.master);
+                }
+            }
+        }
+        Some(r.entry)
+    }
+
+    // -----------------------------------------------------------------
+    // master re-election
+    // -----------------------------------------------------------------
+
+    /// Re-elect a Master about to disappear (replaced or evicted) while
+    /// Mirrors still reference it: materialize every Mirror via the
+    /// restore path, promote the cheapest whose dense form fits capacity,
+    /// and re-diff the siblings against the new Master (identity-sourced,
+    /// so their future restores never need RoPE recovery). Mirrors that
+    /// cannot be materialized or re-homed are dropped (counted), never
+    /// left dangling. On return `old_key` is either removed (promotion
+    /// happened) or unpinned (every mirror was dropped).
+    fn reelect_master(&mut self, old_key: StoreKey) {
+        let Some(refs) = self.master_refs.get(&old_key) else { return };
+        let mirror_keys: Vec<StoreKey> = refs.iter().copied().collect();
+
+        // 1. materialize every mirror while the old master is resident
+        let mut mats: Vec<Promotable> = Vec::new();
+        let mut dropped: Vec<StoreKey> = Vec::new();
+        for mk in mirror_keys {
+            let made = {
+                let Some(mr) = self.entries.get(&mk) else { continue };
+                let Entry::Mirror(m) = &mr.entry else { continue };
+                let Some(ms) = self.entries.get(&old_key) else { return };
+                let Entry::Dense(md) = &ms.entry else { return };
+                let rt = self
+                    .runtime
+                    .as_ref()
+                    .map(|(r, name)| (r.as_ref(), name.as_str()));
+                let handle = MirrorHandle { master: md, mirror: m };
+                crate::restore::materialize_for_promotion(
+                    &self.spec, rt, &handle,
+                )
+                .ok()
+                .map(|padded| Promotable {
+                    key: mk,
+                    tokens: m.tokens.clone(),
+                    kv: padded.extract_rows(0, m.tokens.len()),
+                    cost: mr.bytes,
+                })
+            };
+            match made {
+                Some(p) => mats.push(p),
+                None => dropped.push(mk),
+            }
+        }
+        for mk in dropped {
+            self.remove_resident(mk);
+            self.counters.dropped_mirrors += 1;
+            self.counters.evictions += 1;
+        }
+        if mats.is_empty() {
+            // every mirror failed to materialize: the master is unpinned
+            // now and ordinary eviction handles it
+            return;
+        }
+
+        // 2. promote the cheapest mirror whose dense form fits capacity
+        mats.sort_by(|a, b| (a.cost, a.key).cmp(&(b.cost, b.key)));
+        let cap = self.capacity_bytes;
+        let Some(pos) = mats
+            .iter()
+            .position(|p| p.kv.bytes() + p.tokens.len() * 8 <= cap)
+        else {
+            // no candidate fits the store at all: drop them (counted) and
+            // leave the now-unpinned master to ordinary eviction
+            for m in mats {
+                self.remove_resident(m.key);
+                self.counters.dropped_mirrors += 1;
+                self.counters.evictions += 1;
+            }
+            return;
+        };
+        let promoted = mats.remove(pos);
+
+        // 3. swap the family over: mirrors out, old master out, new
+        // master in (the byte ledger tracks every step)
+        for m in &mats {
+            self.remove_resident(m.key);
+        }
+        self.remove_resident(promoted.key);
+        self.remove_resident(old_key);
+        let plen = promoted.tokens.len();
+        let mut master_padded = KvBuf::for_spec(&self.spec);
+        master_padded.copy_rows_from(&promoted.kv, 0, 0, plen);
+        self.insert_resident(
+            promoted.key,
+            Entry::Dense(DenseEntry {
+                tokens: promoted.tokens,
+                positions: (0..plen as i32).collect(),
+                kv: promoted.kv,
+            }),
+        );
+        self.counters.promotions += 1;
+
+        // 4. re-home the siblings against the new master
+        let bt = self.spec.block_tokens;
+        for m in mats {
+            let Promotable { key, tokens, kv, .. } = m;
+            let len = tokens.len();
+            let mut sib_padded = KvBuf::for_spec(&self.spec);
+            sib_padded.copy_rows_from(&kv, 0, 0, len);
+            let diff = rediff_identity(
+                &master_padded, &sib_padded, plen, len, bt, REDIFF_TOL,
+            );
+            let mb = diff.bytes() + tokens.len() * 8;
+            let dense_cost = kv.bytes() + tokens.len() * 8;
+            let positions: Vec<i32> = (0..len as i32).collect();
+            if mb < dense_cost {
+                self.insert_resident(
+                    key,
+                    Entry::Mirror(MirrorEntry {
+                        master: promoted.key,
+                        tokens,
+                        positions,
+                        diff,
+                    }),
+                );
+                self.counters.rehomed_mirrors += 1;
+            } else if dense_cost <= self.capacity_bytes {
+                // the sibling diverged too far from the new master for a
+                // mirror to pay off: keep it dense
+                self.insert_resident(
+                    key,
+                    Entry::Dense(DenseEntry { tokens, positions, kv }),
+                );
+                self.counters.rehomed_mirrors += 1;
+            } else {
+                self.counters.dropped_mirrors += 1;
+                self.counters.evictions += 1;
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // eviction
+    // -----------------------------------------------------------------
+
+    /// Evict LRU-first until `need` more bytes fit. A pinned Master chosen
+    /// as the victim is not skipped: a new Master is re-elected from its
+    /// Mirrors, after which the loop continues. `protect` is never evicted
+    /// or re-elected (the Master a Mirror insert is about to reference).
+    fn evict_for(&mut self, need: usize, protect: Option<StoreKey>) {
+        // every iteration either evicts an entry or resolves a pin
+        // (re-election removes the old master), so the loop terminates;
+        // the guard is belt-and-braces, not load-bearing
+        let mut guard = 4 * self.entries.len() + 8;
+        while self.bytes + need > self.capacity_bytes && guard > 0 {
+            guard -= 1;
+            let mut victim = None;
+            let mut cur = self.head;
+            while let Some(k) = cur {
+                if Some(k) != protect {
+                    victim = Some(k);
+                    break;
+                }
+                cur = self.entries.get(&k).and_then(|r| r.next);
+            }
+            let Some(victim) = victim else { break };
+            if self.is_pinned(&victim) {
+                self.reelect_master(victim);
+                // if every mirror was dropped the master is now unpinned
+                // and the next iteration evicts it
+            } else {
+                self.remove_resident(victim);
+                self.counters.evictions += 1;
+            }
+        }
+    }
+
+    /// Remove whatever currently sits at `key` (replacement path): a
+    /// pinned Master re-elects first so its Mirrors never dangle.
+    fn remove_existing(&mut self, key: StoreKey) {
+        if self.is_pinned(&key) {
+            self.reelect_master(key);
+        }
+        if self.entries.contains_key(&key) {
+            self.remove_resident(key);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // public mutation API
+    // -----------------------------------------------------------------
+
+    /// Insert (or replace) a dense entry. Entries larger than the store's
+    /// capacity are rejected (`Err`, counted) — the store never holds more
+    /// than `capacity_bytes`. Replacing a Master that still has Mirrors
+    /// first re-elects a new Master from them.
+    pub fn put_dense(&mut self, key: StoreKey, entry: DenseEntry)
+        -> Result<()>
+    {
+        let nb = dense_bytes(&entry);
+        if nb > self.capacity_bytes {
+            self.counters.rejected_inserts += 1;
+            bail!(
+                "dense entry of {nb} B exceeds store capacity {} B",
+                self.capacity_bytes
+            );
+        }
+        self.remove_existing(key);
+        self.evict_for(nb, None);
+        self.insert_resident(key, Entry::Dense(entry));
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
+        Ok(())
+    }
+
+    /// Insert a mirror referencing `master` (which must be resident and
+    /// dense, and distinct from `key`). Rejected (`Err`, counted) when the
+    /// mirror alone exceeds capacity or cannot fit beside its pinned
+    /// Master. A rejected insert may still have displaced the previous
+    /// entry at `key` (replacement happens before capacity is known).
     pub fn put_mirror(&mut self, key: StoreKey, entry: MirrorEntry)
         -> Result<()>
     {
-        match self.entries.get(&entry.master) {
+        if key == entry.master {
+            return Err(anyhow!("mirror cannot reference itself"));
+        }
+        match self.entries.get(&entry.master).map(|r| &r.entry) {
             Some(Entry::Dense(_)) => {}
             _ => return Err(anyhow!("mirror master missing or not dense")),
         }
-        self.remove_existing(key);
         let nb = mirror_bytes(&entry);
-        self.evict_for(nb);
-        self.bytes += nb;
-        *self.master_refs.entry(entry.master).or_insert(0) += 1;
-        self.entries.insert(key, Entry::Mirror(entry));
-        self.touch(key);
+        // feasibility first: the mirror must fit beside the master it
+        // pins. Checking before remove_existing avoids destroying the
+        // previous entry at `key` (possibly via a full re-election) for an
+        // insert that can only be rejected.
+        let master_resident_bytes = self
+            .entries
+            .get(&entry.master)
+            .map_or(0, |r| r.bytes);
+        if master_resident_bytes + nb > self.capacity_bytes {
+            self.counters.rejected_inserts += 1;
+            bail!(
+                "mirror of {nb} B cannot fit beside its pinned master \
+                 ({master_resident_bytes} B) within capacity {} B",
+                self.capacity_bytes
+            );
+        }
+        self.remove_existing(key);
+        self.evict_for(nb, Some(entry.master));
+        if self.bytes + nb > self.capacity_bytes {
+            // the protected master plus this mirror cannot coexist
+            self.counters.rejected_inserts += 1;
+            bail!(
+                "mirror of {nb} B cannot fit beside its pinned master \
+                 within {} B",
+                self.capacity_bytes
+            );
+        }
+        self.insert_resident(key, Entry::Mirror(entry));
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
         Ok(())
     }
 
@@ -267,36 +677,61 @@ impl CacheStore {
     }
 
     /// Fetch an entry. Dense entries come back directly; mirrors come back
-    /// as lazy handles.
+    /// as lazy handles. Reading a mirror touches its Master too, so a
+    /// Master is never LRU-colder than its hottest Mirror.
     pub fn get(&mut self, key: &StoreKey) -> Option<Fetched<'_>> {
-        if !self.entries.contains_key(key) {
-            return None;
-        }
-        self.touch(*key);
-        match self.entries.get(key) {
-            Some(Entry::Dense(d)) => Some(Fetched::Dense(d)),
-            Some(Entry::Mirror(m)) => {
-                let master = match self.entries.get(&m.master) {
-                    Some(Entry::Dense(d)) => d,
-                    _ => return None, // master evicted (shouldn't happen)
-                };
-                Some(Fetched::Mirror(MirrorHandle { master, mirror: m }))
+        let master_key = match self.entries.get(key).map(|r| &r.entry) {
+            None => {
+                self.counters.misses += 1;
+                return None;
             }
-            None => None,
+            Some(Entry::Dense(_)) => None,
+            Some(Entry::Mirror(m)) => Some(m.master),
+        };
+        self.counters.hits += 1;
+        self.touch(*key);
+        if let Some(mk) = master_key {
+            self.touch(mk);
+        }
+        match master_key {
+            None => match &self.entries.get(key).unwrap().entry {
+                Entry::Dense(d) => Some(Fetched::Dense(d)),
+                Entry::Mirror(_) => unreachable!(),
+            },
+            Some(mk) => {
+                let mirror = match &self.entries.get(key).unwrap().entry {
+                    Entry::Mirror(m) => m,
+                    Entry::Dense(_) => unreachable!(),
+                };
+                let master = match self.entries.get(&mk).map(|r| &r.entry) {
+                    Some(Entry::Dense(d)) => d,
+                    _ => unreachable!(
+                        "store invariant violated: resident mirror's \
+                         master is missing or not dense"
+                    ),
+                };
+                Some(Fetched::Mirror(MirrorHandle { master, mirror }))
+            }
         }
     }
 
     /// Token-similarity fallback (paper §4.3): among dense entries of the
-    /// same role class and length, pick the one with the highest token
-    /// overlap ratio; None if nothing exceeds `min_similarity`.
+    /// same role class as `role` and the same length, pick the one with
+    /// the highest token overlap ratio; None if nothing exceeds
+    /// `min_similarity`. Ties break toward the smallest key so the choice
+    /// is deterministic regardless of hash-map iteration order.
     pub fn find_similar_master(
         &self,
+        role: Role,
         tokens: &[u32],
         min_similarity: f64,
     ) -> Option<(StoreKey, f64)> {
         let mut best: Option<(StoreKey, f64)> = None;
-        for (k, e) in &self.entries {
-            let Entry::Dense(d) = e else { continue };
+        for (k, r) in &self.entries {
+            let Entry::Dense(d) = &r.entry else { continue };
+            if !k.role.same_class(role) {
+                continue;
+            }
             if d.tokens.len() != tokens.len() {
                 continue;
             }
@@ -308,7 +743,9 @@ impl CacheStore {
                 .count();
             let sim = same as f64 / tokens.len().max(1) as f64;
             if sim >= min_similarity
-                && best.map_or(true, |(_, b)| sim > b)
+                && best.map_or(true, |(bk, b)| {
+                    sim > b || (sim == b && *k < bk)
+                })
             {
                 best = Some((*k, sim));
             }
@@ -318,8 +755,8 @@ impl CacheStore {
 
     pub fn stats(&self) -> StoreStats {
         let mut st = StoreStats::default();
-        for (k, e) in &self.entries {
-            match e {
+        for (k, r) in &self.entries {
+            match &r.entry {
                 Entry::Dense(d) => {
                     st.dense_entries += 1;
                     st.dense_bytes += dense_bytes(d);
@@ -338,7 +775,87 @@ impl CacheStore {
                 }
             }
         }
+        st.counters = self.counters;
         st
+    }
+
+    /// Panic unless every structural invariant holds: the byte ledger
+    /// equals the sum of resident entry sizes and stays within capacity,
+    /// the LRU chain is a consistent doubly-linked list covering exactly
+    /// the resident keys, every reverse-index edge matches a resident
+    /// Mirror, and every resident Mirror's Master is resident and dense.
+    /// Cheap enough for tests and debug builds (O(n)); called after every
+    /// mutation in debug builds.
+    pub fn assert_invariants(&self) {
+        // byte ledger
+        let mut sum = 0usize;
+        for (k, r) in &self.entries {
+            let eb = Self::entry_bytes(&r.entry);
+            assert_eq!(r.bytes, eb, "stale cached size for {k:?}");
+            sum += eb;
+        }
+        assert_eq!(self.bytes, sum, "byte ledger out of balance");
+        assert!(
+            self.bytes <= self.capacity_bytes,
+            "over capacity: {} > {}",
+            self.bytes,
+            self.capacity_bytes
+        );
+        // LRU chain
+        let mut seen = 0usize;
+        let mut prev: Option<StoreKey> = None;
+        let mut cur = self.head;
+        while let Some(k) = cur {
+            let r = self
+                .entries
+                .get(&k)
+                .expect("LRU chain references a missing entry");
+            assert_eq!(r.prev, prev, "broken prev link at {k:?}");
+            prev = Some(k);
+            cur = r.next;
+            seen += 1;
+            assert!(seen <= self.entries.len(), "LRU chain cycle");
+        }
+        assert_eq!(self.tail, prev, "tail does not end the LRU chain");
+        assert_eq!(
+            seen,
+            self.entries.len(),
+            "LRU chain length != resident entries"
+        );
+        // mirror/master topology
+        for (k, r) in &self.entries {
+            if let Entry::Mirror(m) = &r.entry {
+                let set = self
+                    .master_refs
+                    .get(&m.master)
+                    .expect("resident mirror missing from reverse index");
+                assert!(set.contains(k), "reverse index misses {k:?}");
+                match self.entries.get(&m.master).map(|r| &r.entry) {
+                    Some(Entry::Dense(_)) => {}
+                    _ => panic!(
+                        "mirror {k:?} dangling: master {:?} not resident \
+                         dense",
+                        m.master
+                    ),
+                }
+            }
+        }
+        for (mk, set) in &self.master_refs {
+            assert!(!set.is_empty(), "empty reverse-index set for {mk:?}");
+            assert!(
+                matches!(
+                    self.entries.get(mk).map(|r| &r.entry),
+                    Some(Entry::Dense(_))
+                ),
+                "reverse index names a non-dense master {mk:?}"
+            );
+            for s in set {
+                match self.entries.get(s).map(|r| &r.entry) {
+                    Some(Entry::Mirror(m)) => assert_eq!(m.master, *mk),
+                    _ => panic!("reverse-index edge {mk:?} -> {s:?} stale"),
+                }
+            }
+        }
     }
 }
 
@@ -396,16 +913,48 @@ mod tests {
         StoreKey { content: c, role: Role::Segment }
     }
 
+    fn akey(c: u64, agent: usize) -> StoreKey {
+        StoreKey { content: c, role: Role::AgentCache { agent } }
+    }
+
+    /// A mirror of `master` differing in one block, with the differing
+    /// element's value derived from `salt` (so promoted data is checkable).
+    fn mirror_of(
+        sp: &ModelSpec,
+        st: &mut CacheStore,
+        master: StoreKey,
+        salt: f32,
+    ) -> MirrorEntry {
+        let (mkv, toks) = match st.get(&master) {
+            Some(Fetched::Dense(d)) => (d.kv.clone(), d.tokens.clone()),
+            _ => panic!("master not dense"),
+        };
+        let len = toks.len();
+        let mut mk = mkv.clone();
+        let o = mk.off(0, 17.min(len - 1));
+        mk.k[o] += salt;
+        let d = diff_blocks(&mkv, &mk, len, sp.block_tokens);
+        let d = identity_aligned(d, len.div_ceil(sp.block_tokens), len);
+        MirrorEntry {
+            master,
+            tokens: toks,
+            positions: (0..len as i32).collect(),
+            diff: d,
+        }
+    }
+
     #[test]
     fn put_get_dense() {
         let sp = spec();
         let mut st = CacheStore::new(&sp, 1 << 20);
-        st.put_dense(key(1), dense(&sp, 32, 1.0));
+        st.put_dense(key(1), dense(&sp, 32, 1.0)).unwrap();
         match st.get(&key(1)) {
             Some(Fetched::Dense(d)) => assert_eq!(d.tokens.len(), 32),
             _ => panic!("expected dense"),
         }
         assert!(st.get(&key(2)).is_none());
+        let c = st.counters();
+        assert_eq!((c.hits, c.misses), (1, 1));
     }
 
     #[test]
@@ -421,87 +970,204 @@ mod tests {
         assert_eq!(d.block_ids, vec![1]);
         let d = identity_aligned(d, 4, 64);
 
-        st.put_dense(key(1), master);
+        st.put_dense(key(1), master).unwrap();
         let m = MirrorEntry {
             master: key(1),
             tokens: (0..64).map(|i| 4 + i as u32).collect(),
             positions: (0..64).collect(),
             diff: d,
         };
-        assert!(st
-            .put_mirror(key(2), m.clone())
-            .is_ok());
+        assert!(st.put_mirror(key(2), m.clone()).is_ok());
         // mirror against a missing master fails
-        let mut bad = m;
+        let mut bad = m.clone();
         bad.master = key(99);
         assert!(st.put_mirror(key(3), bad).is_err());
+        // a mirror referencing itself fails
+        let mut selfish = m;
+        selfish.master = key(4);
+        assert!(st.put_mirror(key(4), selfish).is_err());
 
         let stats = st.stats();
         assert_eq!(stats.dense_entries, 1);
         assert_eq!(stats.mirror_entries, 1);
         assert!(stats.compression_ratio() > 1.5,
                 "ratio={}", stats.compression_ratio());
+        st.assert_invariants();
     }
 
     #[test]
-    fn lru_eviction_pins_referenced_masters() {
+    fn eviction_promotes_pinned_master_instead_of_orphaning() {
         let sp = spec();
         // capacity fits ~2 dense entries of len 64
         let one = dense(&sp, 64, 1.0);
         let cap = (one.kv.bytes() + 64 * 8) * 2 + 64;
         let mut st = CacheStore::new(&sp, cap);
-        st.put_dense(key(1), dense(&sp, 64, 1.0));
-        let mut mk = dense(&sp, 64, 1.0).kv;
-        let o = mk.off(0, 0);
-        mk.k[o] += 2.0;
-        let diff = identity_aligned(
-            diff_blocks(&st_master_kv(&st), &mk, 64, sp.block_tokens),
-            4,
-            64,
-        );
-        st.put_mirror(
-            key(2),
-            MirrorEntry {
-                master: key(1),
-                tokens: (0..64).map(|i| i as u32).collect(),
-                positions: (0..64).collect(),
-                diff,
-            },
-        )
-        .unwrap();
-        // a new dense entry forces eviction: the mirror (unpinned) must go
-        // first even though the master is older in LRU order
-        st.put_dense(key(3), dense(&sp, 64, 3.0));
-        assert!(st.contains(&key(1)), "pinned master survives");
-        assert!(!st.contains(&key(2)), "mirror evicted first");
-        assert!(st.evictions > 0);
-        // with the mirror gone the pin is released; the master is now
-        // ordinary LRU fodder
-        st.put_dense(key(4), dense(&sp, 64, 4.0));
-        assert!(!st.contains(&key(1)), "unpinned master evictable");
-        assert!(st.contains(&key(3)) && st.contains(&key(4)));
+        st.put_dense(key(1), dense(&sp, 64, 1.0)).unwrap();
+        let m = mirror_of(&sp, &mut st, key(1), 2.0);
+        let mirror_kv_expected = {
+            let mut kv = dense(&sp, 64, 1.0).kv;
+            let o = kv.off(0, 17);
+            kv.k[o] += 2.0;
+            kv
+        };
+        st.put_mirror(key(2), m).unwrap();
+        // a new dense entry forces eviction; the LRU-oldest entry is the
+        // pinned master -> its mirror is promoted to a dense master
+        // (lossless for the mirror) and the old master goes
+        st.put_dense(key(3), dense(&sp, 64, 3.0)).unwrap();
+        assert!(!st.contains(&key(1)), "old master re-elected away");
+        assert!(st.contains(&key(3)));
+        match st.get(&key(2)) {
+            Some(Fetched::Dense(d)) => {
+                assert_eq!(d.kv, mirror_kv_expected,
+                           "promotion preserves the mirror's data");
+            }
+            _ => panic!("promoted mirror must be resident dense"),
+        }
+        let c = st.counters();
+        assert_eq!(c.promotions, 1);
+        st.assert_invariants();
+        // the promoted master is unpinned: ordinary LRU fodder now. The
+        // data check above touched key(2), so key(3) is the LRU victim.
+        st.put_dense(key(4), dense(&sp, 64, 4.0)).unwrap();
+        assert!(st.contains(&key(2)) && st.contains(&key(4)));
+        assert!(!st.contains(&key(3)), "unpinned LRU victim evicted");
+        assert!(st.counters().evictions > 0);
     }
 
-    fn st_master_kv(st: &CacheStore) -> KvBuf {
-        match st.entries.get(&key(1)) {
-            Some(Entry::Dense(d)) => d.kv.clone(),
-            _ => panic!(),
+    #[test]
+    fn replacing_a_pinned_master_reelects_and_rehomes_siblings() {
+        let sp = spec();
+        let mut st = CacheStore::new(&sp, 1 << 22);
+        st.put_dense(akey(1, 0), dense(&sp, 64, 1.0)).unwrap();
+        let m2 = mirror_of(&sp, &mut st, akey(1, 0), 2.0);
+        let m3 = mirror_of(&sp, &mut st, akey(1, 0), 3.0);
+        st.put_mirror(akey(2, 1), m2).unwrap();
+        st.put_mirror(akey(3, 2), m3).unwrap();
+        // overwrite the master key with unrelated content: both mirrors
+        // must survive — one promoted, one re-homed against it
+        st.put_dense(akey(1, 0), dense(&sp, 32, 9.0)).unwrap();
+        st.assert_invariants();
+        let c = st.counters();
+        assert_eq!(c.promotions, 1);
+        assert_eq!(c.rehomed_mirrors, 1);
+        // regression (the orphaning bug): get on a resident mirror never
+        // returns None
+        for k in [akey(2, 1), akey(3, 2)] {
+            assert!(st.contains(&k));
+            assert!(st.get(&k).is_some(), "{k:?} orphaned");
         }
+        // the cheapest mirror (tie broken by key order) got promoted
+        assert!(matches!(st.get(&akey(2, 1)), Some(Fetched::Dense(_))));
+        // the sibling's data survived the re-home bit-exactly (identity
+        // mirrors promote and re-diff without roundoff)
+        let expect3 = {
+            let mut kv = dense(&sp, 64, 1.0).kv;
+            let o = kv.off(0, 17);
+            kv.k[o] += 3.0;
+            kv
+        };
+        match st.get(&akey(3, 2)) {
+            Some(Fetched::Mirror(h)) => {
+                let mut rebuilt = h.master.kv.clone();
+                h.mirror.diff.corrections.apply_to(&mut rebuilt);
+                assert_eq!(rebuilt, expect3);
+            }
+            Some(Fetched::Dense(d)) => assert_eq!(d.kv, expect3),
+            None => panic!("sibling lost"),
+        }
+    }
+
+    #[test]
+    fn oversize_inserts_are_rejected_capacity_honest() {
+        let sp = spec();
+        let small = dense(&sp, 16, 1.0);
+        let cap = small.kv.bytes() + 16 * 8 + 32;
+        let mut st = CacheStore::new(&sp, cap);
+        assert!(st.put_dense(key(1), dense(&sp, 64, 1.0)).is_err());
+        assert_eq!(st.bytes(), 0);
+        assert_eq!(st.counters().rejected_inserts, 1);
+        st.put_dense(key(2), small).unwrap();
+        assert!(st.bytes() <= cap);
+        st.assert_invariants();
+    }
+
+    #[test]
+    fn mirror_that_cannot_fit_beside_its_master_is_rejected() {
+        let sp = spec();
+        // size the capacity to master + mirror minus a sliver: the mirror
+        // alone fits, but not beside the master it must pin
+        let master = dense(&sp, 32, 1.0);
+        let master_bytes = master.kv.bytes() + 32 * 8;
+        let mut probe = CacheStore::new(&sp, 1 << 22);
+        probe.put_dense(key(1), master.clone()).unwrap();
+        let m = mirror_of(&sp, &mut probe, key(1), 1.5);
+        let mb = m.diff.bytes() + m.tokens.len() * 8;
+        assert!(mb < master_bytes, "premise: mirror cheaper than master");
+        let cap = master_bytes + mb - 16;
+        let mut st = CacheStore::new(&sp, cap);
+        st.put_dense(key(1), master).unwrap();
+        let err = st.put_mirror(key(2), m);
+        assert!(err.is_err(), "must reject, never overcommit");
+        assert!(st.contains(&key(1)), "protected master survives");
+        assert!(!st.contains(&key(2)));
+        assert!(st.bytes() <= cap);
+        assert_eq!(st.counters().rejected_inserts, 1);
+        st.assert_invariants();
     }
 
     #[test]
     fn similarity_fallback_finds_closest() {
         let sp = spec();
         let mut st = CacheStore::new(&sp, 1 << 22);
-        st.put_dense(key(1), dense(&sp, 32, 1.0));
-        st.put_dense(key(2), dense(&sp, 32, 2.0));
+        st.put_dense(key(1), dense(&sp, 32, 1.0)).unwrap();
+        st.put_dense(key(2), dense(&sp, 32, 2.0)).unwrap();
         // query equals entry-2's tokens except 2 positions
         let mut q: Vec<u32> = (0..32).map(|i| 4 + (i + 2)).collect();
         q[0] = 999;
         q[1] = 998;
-        let (k, sim) = st.find_similar_master(&q, 0.8).unwrap();
+        let (k, sim) =
+            st.find_similar_master(Role::Segment, &q, 0.8).unwrap();
         assert_eq!(k, key(2));
         assert!((sim - 30.0 / 32.0).abs() < 1e-9);
-        assert!(st.find_similar_master(&q, 0.99).is_none());
+        assert!(st.find_similar_master(Role::Segment, &q, 0.99).is_none());
+    }
+
+    #[test]
+    fn similarity_fallback_respects_role_class() {
+        let sp = spec();
+        let mut st = CacheStore::new(&sp, 1 << 22);
+        // identical tokens under both role classes
+        st.put_dense(key(7), dense(&sp, 32, 1.0)).unwrap();
+        st.put_dense(akey(8, 3), dense(&sp, 32, 1.0)).unwrap();
+        let q = dense(&sp, 32, 1.0).tokens;
+        // an AgentCache query must never elect a Segment donor
+        let (k, sim) = st
+            .find_similar_master(Role::AgentCache { agent: 9 }, &q, 0.5)
+            .unwrap();
+        assert_eq!(k, akey(8, 3));
+        assert!((sim - 1.0).abs() < 1e-9);
+        let (k, _) =
+            st.find_similar_master(Role::Segment, &q, 0.5).unwrap();
+        assert_eq!(k, key(7));
+    }
+
+    #[test]
+    fn lru_order_survives_touch_churn() {
+        // O(1) list bookkeeping: interleaved touches and inserts keep the
+        // chain consistent and evict in true recency order
+        let sp = spec();
+        let one = dense(&sp, 16, 1.0);
+        let eb = one.kv.bytes() + 16 * 8;
+        let mut st = CacheStore::new(&sp, eb * 3 + 16);
+        st.put_dense(key(1), dense(&sp, 16, 1.0)).unwrap();
+        st.put_dense(key(2), dense(&sp, 16, 2.0)).unwrap();
+        st.put_dense(key(3), dense(&sp, 16, 3.0)).unwrap();
+        // touch 1 so 2 becomes the LRU victim
+        assert!(st.get(&key(1)).is_some());
+        st.put_dense(key(4), dense(&sp, 16, 4.0)).unwrap();
+        assert!(st.contains(&key(1)) && st.contains(&key(3)));
+        assert!(!st.contains(&key(2)), "true LRU victim evicted");
+        st.assert_invariants();
     }
 }

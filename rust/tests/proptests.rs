@@ -11,8 +11,10 @@ use tokendance::model::{Buckets, ModelSpec};
 use tokendance::pic::{select_important_blocks, ImportanceConfig, INVALID_SCORE};
 use tokendance::rounds::{detect_pattern, segment_prompt, DetectorConfig};
 use tokendance::runtime::{KvBuf, MockRuntime, ModelRuntime};
-use tokendance::store::{diff_blocks_tol, gather_permuted_master,
-                        match_blocks_by_content};
+use tokendance::store::{diff_blocks, diff_blocks_tol,
+                        gather_permuted_master, identity_aligned,
+                        match_blocks_by_content, CacheStore, DenseEntry,
+                        Fetched, MirrorEntry, Role, StoreKey};
 use tokendance::tokenizer::{encode, split_segments, BlockKind,
                             RoundAwarePrompt, TTSEP_ID};
 use tokendance::util::rng::Rng;
@@ -290,6 +292,106 @@ fn prop_gather_permuted_respects_map() {
                     assert_eq!(src_pos[slot], ms as i32);
                 }
             }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// diff-aware store lifecycle
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_store_churn_preserves_invariants() {
+    forall(30, |rng| {
+        let sp = spec();
+        let bt = sp.block_tokens;
+        let mk_key = |i: usize| StoreKey {
+            content: i as u64,
+            role: if i % 2 == 0 {
+                Role::Segment
+            } else {
+                Role::AgentCache { agent: i }
+            },
+        };
+        let mk_dense = |len: usize, salt: u32| {
+            let mut kv = KvBuf::zeroed(sp.n_layers, len, sp.d_model);
+            for (i, x) in kv.k.iter_mut().enumerate() {
+                *x = ((i as u32) ^ salt) as f32 / 100.0;
+            }
+            DenseEntry {
+                tokens: (0..len as u32)
+                    .map(|i| 4 + ((i ^ salt) % 200))
+                    .collect(),
+                positions: (0..len as i32).collect(),
+                kv,
+            }
+        };
+        // capacity around ~4 dense entries of len 48: constant eviction
+        // pressure, pins meeting the evictor, frequent re-elections
+        let probe = mk_dense(48, 0);
+        let cap = (probe.kv.bytes() + 48 * 8) * 4 + rng.below(4096);
+        let mut st = CacheStore::new(&sp, cap);
+        let nk = 12;
+        for _ in 0..rng.range(30, 80) {
+            let i = rng.below(nk);
+            let k = mk_key(i);
+            match rng.below(4) {
+                0 | 1 => {
+                    let len = 16 * rng.range(1, 5); // 16..64
+                    // oversize inserts are legal input: the store must
+                    // reject them, not overcommit
+                    let _ = st.put_dense(k, mk_dense(len, rng.below(1 << 20) as u32));
+                }
+                2 => {
+                    // mirror a resident dense entry, if any
+                    let mkey = mk_key(rng.below(nk));
+                    let master = match st.get(&mkey) {
+                        Some(Fetched::Dense(d)) => {
+                            Some((d.tokens.clone(), d.kv.clone()))
+                        }
+                        _ => None,
+                    };
+                    if let Some((toks, mkv)) = master {
+                        if k != mkey {
+                            let len = toks.len();
+                            let mut kv2 = mkv.clone();
+                            let o = kv2.off(0, rng.below(len));
+                            kv2.k[o] += 7.0;
+                            let d = diff_blocks(&mkv, &kv2, len, bt);
+                            let d = identity_aligned(
+                                d, len.div_ceil(bt), len,
+                            );
+                            let _ = st.put_mirror(
+                                k,
+                                MirrorEntry {
+                                    master: mkey,
+                                    tokens: toks,
+                                    positions: (0..len as i32).collect(),
+                                    diff: d,
+                                },
+                            );
+                        }
+                    }
+                }
+                _ => {
+                    // a resident mirror always resolves: its master is
+                    // resident and dense (the no-orphan invariant)
+                    let resident = st.contains(&k);
+                    match st.get(&k) {
+                        Some(Fetched::Mirror(h)) => {
+                            assert_eq!(
+                                h.master.kv.seq,
+                                h.master.tokens.len()
+                            );
+                        }
+                        Some(Fetched::Dense(_)) => {}
+                        None => assert!(!resident, "resident key missed"),
+                    }
+                }
+            }
+            // after every op: ledger balances, LRU chain is exact, no
+            // dangling master refs, capacity honored
+            st.assert_invariants();
         }
     });
 }

@@ -103,7 +103,15 @@ fn store_pressure_evicts_but_serves() {
     let report = drive_sessions(&mut e, &w, 1, 1e6, 2).unwrap();
     assert_eq!(report.rounds.len(), 3);
     assert!(e.store().bytes() <= 200 << 10, "store respects capacity");
-    assert!(e.metrics.store_evictions > 0 || e.store().len() < 20);
+    // pressure must show up somewhere honest: eviction or rejection
+    // counters, or a store that simply stayed small
+    let c = e.store().counters();
+    assert!(
+        c.evictions + c.rejected_inserts > 0 || e.store().len() < 20,
+        "no lifecycle activity under a tiny store: {c:?}"
+    );
+    // and never as a dangling mirror or an unbalanced ledger
+    e.store().assert_invariants();
 }
 
 #[test]
