@@ -1,0 +1,141 @@
+//! Bench: per-agent round-assembly cost vs agent count (paper §4.2 —
+//! "the cost of reusing a shared block is paid once regardless of agent
+//! count").
+//!
+//! Sweeps 8/16/32/64 agents over a *fixed* shared-block set and reports,
+//! for the collective gather-plan path against the seed per-agent path:
+//! assembly wall time per round and per agent, store lookups, plan dedup
+//! hits, and mirror restores per round. The collective property shows up
+//! twice: per-agent assembly time stays flat (within 1.5x) across the
+//! sweep, and store lookups per round stop scaling with agent count
+//! while the per-agent path's grow linearly in it.
+
+include!("harness.rs");
+
+use tokendance::engine::{AgentRequest, Engine, Policy};
+use tokendance::serve::RoundSubmission;
+use tokendance::tokenizer::{BlockKind, RoundAwarePrompt};
+
+const SHARED_BLOCKS: usize = 8;
+const BLOCK_TOKENS: usize = 16;
+const ROUNDS: usize = 3;
+
+fn block(seed: u32) -> Vec<u32> {
+    (0..BLOCK_TOKENS as u32).map(|t| 4 + (seed + t * 3) % 200).collect()
+}
+
+struct Row {
+    agents: usize,
+    path: &'static str,
+    asm_per_round: f64,
+    per_agent: f64,
+    lookups_per_round: f64,
+    dedup_per_round: f64,
+    restores_per_round: f64,
+}
+
+fn run_case(
+    rt: &std::rc::Rc<dyn tokendance::runtime::ModelRuntime>,
+    model: &str,
+    agents: usize,
+    gather_plan: bool,
+) -> Row {
+    let shared: Vec<Vec<u32>> =
+        (0..SHARED_BLOCKS as u32).map(|i| block(i * 37)).collect();
+    let mut eng = Engine::builder(model)
+        .policy(Policy::TokenDance)
+        .pool_blocks(1024)
+        .gather_plan(gather_plan)
+        .runtime(rt.clone())
+        .build()
+        .unwrap();
+    for round in 0..ROUNDS {
+        let mut sub = RoundSubmission::new(round);
+        for a in 0..agents {
+            let mut p = RoundAwarePrompt::new();
+            // private history varies per (agent, round) so the fixed
+            // shared set stays the reused part every round
+            p.push(
+                BlockKind::PrivateHistory,
+                block(1000 + (a * ROUNDS + round) as u32),
+            );
+            for i in 0..SHARED_BLOCKS {
+                let producer = (i + a) % SHARED_BLOCKS;
+                p.push(
+                    BlockKind::SharedOutput { producer, round: 0 },
+                    shared[producer].clone(),
+                );
+            }
+            p.push(BlockKind::RoundTask, block(5000 + round as u32));
+            sub.push(AgentRequest {
+                agent: a,
+                round,
+                prompt: p,
+                max_new_tokens: 8,
+                retain: true,
+            });
+        }
+        eng.submit_round(sub).unwrap();
+        eng.drain().unwrap();
+    }
+    let m = &eng.metrics;
+    let rounds = m.assembly_secs.len().max(1) as f64;
+    Row {
+        agents,
+        path: if gather_plan { "gather" } else { "per-agent" },
+        asm_per_round: m.assembly_secs.mean(),
+        per_agent: m.assembly_secs.mean() / agents as f64,
+        lookups_per_round: m.assembly_lookups as f64 / rounds,
+        dedup_per_round: m.assembly_dedup_hits as f64 / rounds,
+        restores_per_round: m.assembly_restores as f64 / rounds,
+    }
+}
+
+fn main() {
+    let (rt, real) = bench_runtime();
+    let model = "sim-7b";
+    println!("== bench_round_assembly (collective assembly, paper §4.2) ==");
+    println!(
+        "fixed shared set: {SHARED_BLOCKS} blocks x {BLOCK_TOKENS} tokens; \
+         {ROUNDS} rounds, retain=true, runtime={}",
+        if real { "pjrt" } else { "mock" }
+    );
+    println!(
+        "{:>6}  {:<9}  {:>10}  {:>10}  {:>11}  {:>9}  {:>12}",
+        "agents",
+        "path",
+        "asm/round",
+        "per-agent",
+        "lookups/rnd",
+        "dedup/rnd",
+        "restores/rnd"
+    );
+    let mut flat: Vec<(usize, f64)> = Vec::new();
+    for &agents in &[8usize, 16, 32, 64] {
+        for &plan in &[false, true] {
+            let r = run_case(&rt, model, agents, plan);
+            if plan {
+                flat.push((agents, r.per_agent));
+            }
+            println!(
+                "{:>6}  {:<9}  {:>10}  {:>10}  {:>11.1}  {:>9.1}  {:>12.1}",
+                r.agents,
+                r.path,
+                fmt(r.asm_per_round),
+                fmt(r.per_agent),
+                r.lookups_per_round,
+                r.dedup_per_round,
+                r.restores_per_round
+            );
+        }
+    }
+    let base = flat.first().map(|&(_, t)| t).unwrap_or(f64::NAN);
+    let worst = flat
+        .iter()
+        .map(|&(_, t)| t / base)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "flatness (gather path): worst per-agent cost / 8-agent cost = \
+         {worst:.2}x (target <= 1.5x)"
+    );
+}

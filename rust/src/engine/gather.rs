@@ -1,0 +1,272 @@
+//! Round-level gather planning: resolve-once collective assembly
+//! (paper §4.2).
+//!
+//! The seed prefill path assembled each agent's composite donor cache
+//! independently, re-paying every shared cost per agent: a round of N
+//! agents whose prompts carry the same K shared output blocks performed
+//! N·K store lookups (and, symmetrically, would re-materialize any
+//! mirror donor per reference). The paper's claim is the opposite: "the
+//! cost of reusing a shared block is paid once regardless of agent
+//! count."
+//!
+//! [`GatherPlan`] makes that collective step explicit. While one
+//! admitted batch's composites are assembled — the whole round, unless
+//! pool pressure splits admission, in which case each sub-batch gets
+//! its own plan — every distinct [`StoreKey`] is resolved against the
+//! store **exactly once**: one `get`, one mirror materialization, and
+//! the resolved rows (shared `Rc` payloads, no tensor clones) fan out
+//! to every agent that references them. The fan-out memcpys are
+//! inherently per-agent (each composite places the rows at its own
+//! offsets); the key-resolution work is not, and stops scaling with
+//! agent count. Two costs deliberately stay per-request: the
+//! similarity-fallback *election* (`find_similar_master` scans for the
+//! best donor for one cold prompt's tokens; distinct prompts are
+//! distinct queries, so only the elected key's fetch is memoized) and
+//! the fan-out copies themselves.
+//!
+//! The plan's counters flow into `RunMetrics` (`assembly_lookups`,
+//! `assembly_restores`, `assembly_dedup_hits`) so the once-per-round
+//! property is *measured*, not asserted: the engine tests pin
+//! lookups-per-distinct-key to 1 at 8/32/64 agents and
+//! `benches/bench_round_assembly.rs` sweeps the same curve.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::prefill::{common_prefix, SIMILARITY_FALLBACK_MIN};
+use super::{Engine, Pending, Policy};
+use crate::collector::ReuseTask;
+use crate::restore::{materialize_mirror, RestoreMode};
+use crate::runtime::{KvBuf, ModelRuntime};
+use crate::store::{CacheStore, DenseEntry, Fetched, Role, StoreKey};
+
+/// One resolved cache source, shared by every agent that references it.
+#[derive(Clone)]
+pub(super) enum Resolved {
+    /// Resident dense entry (segment donor, retained cache, or
+    /// similarity-fallback donor) — a shared view of the stored tensor.
+    Dense(Rc<DenseEntry>),
+    /// Retained Mirror materialized once for the round: padded [L, S, d]
+    /// rows plus the donor token stream.
+    Restored { tokens: Rc<Vec<u32>>, kv: Rc<KvBuf> },
+    /// Nothing usable at this key (missing, or a Mirror where only dense
+    /// donors apply).
+    Missing,
+}
+
+/// Memoized key resolutions + traffic counters for one round's assembly.
+#[derive(Default)]
+pub(super) struct GatherPlan {
+    sources: HashMap<StoreKey, Resolved>,
+    /// Store lookups performed (== distinct keys referenced).
+    pub lookups: u64,
+    /// Mirror materializations performed (== distinct mirror donors).
+    pub restores: u64,
+    /// References served from the memo instead of the store.
+    pub dedup_hits: u64,
+    /// Wall time of each mirror materialization.
+    pub restore_secs: Vec<f64>,
+}
+
+impl GatherPlan {
+    /// Resolve `key`, hitting the store only on first reference.
+    /// `materialize_mirrors` is true for retained-cache keys (their
+    /// Mirrors restore through `mode`) and false for dense-only sources
+    /// (segment donors, similarity donors), mirroring the per-agent
+    /// path's `Fetched::Dense` filters.
+    fn resolve(
+        &mut self,
+        store: &mut CacheStore,
+        rt: &dyn ModelRuntime,
+        model: &str,
+        mode: RestoreMode,
+        key: StoreKey,
+        materialize_mirrors: bool,
+    ) -> Result<Resolved> {
+        if let Some(r) = self.sources.get(&key) {
+            self.dedup_hits += 1;
+            return Ok(r.clone());
+        }
+        self.lookups += 1;
+        let resolved = match store.get(&key) {
+            Some(Fetched::Dense(e)) => Resolved::Dense(e),
+            Some(Fetched::Mirror(h)) if materialize_mirrors => {
+                let t0 = Instant::now();
+                let (kv, _) = materialize_mirror(rt, model, &h, mode)?;
+                self.restores += 1;
+                self.restore_secs.push(t0.elapsed().as_secs_f64());
+                Resolved::Restored {
+                    tokens: Rc::new(h.mirror.tokens.clone()),
+                    kv: Rc::new(kv),
+                }
+            }
+            Some(Fetched::Mirror(_)) | None => Resolved::Missing,
+        };
+        self.sources.insert(key, resolved.clone());
+        Ok(resolved)
+    }
+}
+
+impl Engine {
+    /// Collective round assembly: resolve every distinct store key once
+    /// through `plan`, then fan the resolved rows out to each agent's
+    /// composite. Produces bitwise-identical `ReuseTask`s to the
+    /// per-agent path ([`Engine::assemble_composite`]); only the store
+    /// traffic differs.
+    pub(super) fn assemble_round(
+        &mut self,
+        batch: &[Pending],
+        plan: &mut GatherPlan,
+    ) -> Result<Vec<(ReuseTask, usize)>> {
+        let spec = self.spec.clone();
+        let s = spec.max_seq;
+        let mode = self.cfg.restore_mode();
+        let model = self.cfg.model.clone();
+        let rt = self.rt.clone();
+        let mut out = Vec::with_capacity(batch.len());
+
+        for p in batch {
+            let mut kv = self.scratch.checkout();
+            let mut old_pos: Vec<i32> = (0..s as i32).collect();
+            let mut valid = vec![0u8; s];
+            let mut reused = 0usize;
+
+            // (1) retained-cache prefix donor
+            let key = self
+                .agents
+                .get(&p.req.agent)
+                .and_then(|st| st.store_key);
+            let mut covered_upto = 0usize;
+            if let Some(key) = key {
+                let r = plan.resolve(
+                    &mut self.store,
+                    rt.as_ref(),
+                    &model,
+                    mode,
+                    key,
+                    true,
+                )?;
+                let donor: Option<(&[u32], &KvBuf)> = match &r {
+                    Resolved::Dense(e) => Some((&e.tokens, &e.kv)),
+                    Resolved::Restored { tokens, kv } => {
+                        Some((tokens, kv))
+                    }
+                    Resolved::Missing => None,
+                };
+                if let Some((donor_tokens, donor_kv)) = donor {
+                    let lcp = common_prefix(&p.tokens, donor_tokens)
+                        .min(p.tokens.len().saturating_sub(1));
+                    if lcp > 0 {
+                        kv.copy_rows_from(donor_kv, 0, 0, lcp);
+                        for slot in 0..lcp {
+                            valid[slot] = 1;
+                            old_pos[slot] = slot as i32;
+                        }
+                        reused += lcp;
+                        covered_upto = lcp;
+                    }
+                }
+            }
+
+            // (2) segment donors (shared blocks at arbitrary offsets)
+            for seg in &p.seg.segments {
+                if seg.is_empty() || seg.start < covered_upto {
+                    continue;
+                }
+                if seg.end > p.tokens.len() {
+                    continue;
+                }
+                let seg_tokens = &p.tokens[seg.start..seg.end];
+                let skey = Engine::segment_key(seg_tokens);
+                let r = plan.resolve(
+                    &mut self.store,
+                    rt.as_ref(),
+                    &model,
+                    mode,
+                    skey,
+                    false,
+                )?;
+                if let Resolved::Dense(e) = r {
+                    if e.tokens.len() != seg.len() {
+                        continue;
+                    }
+                    let n = seg.len();
+                    let d = spec.d_model;
+                    for l in 0..spec.n_layers {
+                        let so = e.kv.off(l, 0);
+                        let dst = kv.off(l, seg.start);
+                        kv.k[dst..dst + n * d]
+                            .copy_from_slice(&e.kv.k[so..so + n * d]);
+                        kv.v[dst..dst + n * d]
+                            .copy_from_slice(&e.kv.v[so..so + n * d]);
+                    }
+                    for i in 0..n {
+                        valid[seg.start + i] = 1;
+                        old_pos[seg.start + i] = e.positions[i];
+                    }
+                    reused += n;
+                }
+            }
+
+            // (3) token-similarity fallback (paper §4.3) — TokenDance
+            // only, matching the per-agent path
+            if reused == 0 && self.cfg.policy == Policy::TokenDance {
+                let found = self.store.find_similar_master(
+                    Role::AgentCache { agent: p.req.agent },
+                    &p.tokens,
+                    SIMILARITY_FALLBACK_MIN,
+                );
+                if let Some((skey, _sim)) = found {
+                    let r = plan.resolve(
+                        &mut self.store,
+                        rt.as_ref(),
+                        &model,
+                        mode,
+                        skey,
+                        false,
+                    )?;
+                    if let Resolved::Dense(e) = r {
+                        // never mark the last position (fresh logits rule)
+                        let n = e
+                            .tokens
+                            .len()
+                            .min(p.tokens.len().saturating_sub(1));
+                        for slot in 0..n {
+                            if p.tokens[slot] == e.tokens[slot] {
+                                kv.copy_rows_from(&e.kv, slot, slot, 1);
+                                valid[slot] = 1;
+                                old_pos[slot] = e.positions[slot];
+                                reused += 1;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // never reuse the last position: fresh logits required
+            let last = p.tokens.len() - 1;
+            valid[last] = 0;
+            if valid[..p.tokens.len()].iter().all(|&v| v == 0) {
+                reused = 0;
+            }
+
+            let mut tokens = p.tokens.clone();
+            tokens.resize(s, 0);
+            out.push((
+                ReuseTask {
+                    id: p.id,
+                    tokens,
+                    valid_len: p.tokens.len(),
+                    old_pos,
+                    valid,
+                    kv,
+                },
+                reused,
+            ));
+        }
+        Ok(out)
+    }
+}

@@ -18,6 +18,7 @@
 //! rounds enter atomically through `Engine::submit_round`, and all
 //! per-request/round observability flows out of `Engine::poll_events`.
 
+mod gather;
 mod prefill;
 
 use std::collections::{HashMap, VecDeque};
@@ -32,7 +33,9 @@ use crate::metrics::{RequestTrace, RunMetrics, UsageSample};
 use crate::model::ModelSpec;
 use crate::restore::RestoreMode;
 use crate::rounds::{segment_blocks, DetectorConfig, SegmentedPrompt};
-use crate::runtime::{argmax, DecodeSeq, KvBuf, ModelRuntime};
+use crate::runtime::{
+    argmax, DecodeSeq, KvBuf, KvScratch, ModelRuntime, ScratchCounters,
+};
 use crate::scheduler::{decode_batches, AdmissionQueue, QueuedRequest};
 use crate::serve::EngineEvent;
 use crate::store::{CacheStore, Role, StoreCounters, StoreKey};
@@ -102,6 +105,11 @@ pub struct EngineConfig {
     /// Override the restore path (default: fused for TokenDance, dense
     /// otherwise) — the Fig-13 ablation knob.
     pub restore_mode: Option<RestoreMode>,
+    /// Assemble PIC composites through the round-level gather plan
+    /// (resolve each distinct store key once per round). `false` falls
+    /// back to the seed per-agent path — numerically identical, kept as
+    /// the equivalence baseline and the bench's "before" arm.
+    pub gather_plan: bool,
 }
 
 impl EngineConfig {
@@ -119,6 +127,7 @@ impl EngineConfig {
             },
             detector: DetectorConfig::default(),
             restore_mode: None,
+            gather_plan: true,
         }
     }
 
@@ -213,6 +222,9 @@ pub struct Engine {
     spec: ModelSpec,
     pool: KvPool,
     store: CacheStore,
+    /// Recycling arena for max_seq working buffers (composites, cold
+    /// prefills, encode padding) — the prefill hot path's allocator.
+    scratch: KvScratch,
     queue: AdmissionQueue,
     pending: HashMap<u64, Pending>,
     running: Vec<Running>,
@@ -248,12 +260,14 @@ impl Engine {
         // the runtime; without this, the store could only promote
         // identity-rotation mirrors
         store.attach_runtime(rt.clone(), cfg.model.clone());
+        let scratch = KvScratch::for_spec(&spec);
         Ok(Engine {
             rt,
             cfg,
             spec,
             pool,
             store,
+            scratch,
             queue: AdmissionQueue::new(),
             pending: HashMap::new(),
             running: Vec::new(),
@@ -284,6 +298,12 @@ impl Engine {
 
     pub fn store_mut(&mut self) -> &mut CacheStore {
         &mut self.store
+    }
+
+    /// Lifecycle counters of the scratch-buffer arena (bench/diagnostic
+    /// observability for the recycling win).
+    pub fn scratch_counters(&self) -> ScratchCounters {
+        self.scratch.counters()
     }
 
     /// Validate a subrequest without registering it: non-empty prompt,
@@ -338,7 +358,7 @@ impl Engine {
         *self.round_outstanding.entry(req.round).or_insert(0) += 1;
         let mut trace = RequestTrace::new(id, req.agent, req.round, arrived);
         trace.prompt_tokens = tokens.len();
-        self.metrics.requests.push(trace);
+        self.metrics.push_request(trace);
         self.queue.push(QueuedRequest {
             id,
             arrived,
@@ -406,9 +426,7 @@ impl Engine {
                 .map(|q| self.pending.remove(&q.id).unwrap())
                 .collect();
             for p in &batch {
-                if let Some(t) =
-                    self.metrics.requests.iter_mut().find(|t| t.id == p.id)
-                {
+                if let Some(t) = self.metrics.request_mut(p.id) {
                     t.admitted = Some(now);
                 }
                 self.push_event(EngineEvent::Admitted {

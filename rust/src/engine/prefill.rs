@@ -15,10 +15,12 @@
 //! slots. PIC paths are approximate only at reused-but-unselected
 //! positions, exactly as CacheBlend is.
 
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use super::gather::GatherPlan;
 use super::{Completion, Engine, Pending, Policy, Running, StagedCache};
 use crate::collector::{run_reuse, selective_chunked, CollectorConfig, ReuseTask};
 use crate::restore::materialize_mirror;
@@ -42,10 +44,10 @@ const DIFF_TOL: f32 = 5e-4;
 /// pressure), a same-length dense cache of the same role class with at
 /// least this overlap donates its position-wise matching rows (mismatched
 /// slots stay invalid and are selectively recomputed).
-const SIMILARITY_FALLBACK_MIN: f64 = 0.9;
+pub(super) const SIMILARITY_FALLBACK_MIN: f64 = 0.9;
 
 /// Longest common prefix of two token streams.
-fn common_prefix(a: &[u32], b: &[u32]) -> usize {
+pub(super) fn common_prefix(a: &[u32], b: &[u32]) -> usize {
     a.iter().zip(b).take_while(|(x, y)| x == y).count()
 }
 
@@ -108,10 +110,13 @@ impl Engine {
                 if shared_blocks > 0 {
                     shared_ids =
                         table.blocks[..shared_blocks].to_vec();
-                    // working copy of the shared prefix rows
-                    let mut tmp = table.clone();
-                    tmp.len = shared_blocks * bt;
-                    prefix_kv = Some(self.pool.gather(&tmp));
+                    // range gather of the shared prefix rows into a
+                    // recycled buffer: no BlockTable clone, no fresh
+                    // max_seq allocation
+                    let mut buf = self.scratch.checkout();
+                    self.pool
+                        .gather_range_into(table, shared_blocks, &mut buf);
+                    prefix_kv = Some(buf);
                 }
             }
         }
@@ -171,13 +176,12 @@ impl Engine {
         let mut prefix_kv: Option<KvBuf> = None;
         let mut prefix_len = 0usize;
         if let Some(key) = key {
-            let spec = self.spec.clone();
             if let Some(Fetched::Dense(e)) = self.store.get(&key) {
                 let lcp = common_prefix(&p.tokens, &e.tokens)
                     .min(p.tokens.len().saturating_sub(1));
                 if lcp > 0 {
                     let t0 = Instant::now();
-                    let mut buf = KvBuf::for_spec(&spec);
+                    let mut buf = self.scratch.checkout();
                     buf.copy_rows_from(&e.kv, 0, 0, lcp);
                     prefix_kv = Some(buf);
                     prefix_len = lcp;
@@ -227,7 +231,7 @@ impl Engine {
         let len = p.tokens.len();
         if prefix_len == 0 || prefix_kv.is_none() {
             let out = self.rt.prefill(&model, &p.tokens, len)?;
-            let mut kv = KvBuf::for_spec(&self.spec);
+            let mut kv = self.scratch.checkout();
             kv.copy_rows_from(&out.kv, 0, 0, len.min(out.kv.seq));
             return Ok((kv, out.logits, 0));
         }
@@ -254,10 +258,37 @@ impl Engine {
         let mut cold: Vec<usize> = Vec::new();
         let mut reused_tokens: Vec<usize> = vec![0; batch.len()];
 
-        for (i, p) in batch.iter().enumerate() {
-            let (task, reused) = self.assemble_composite(p)?;
+        // composite assembly: the gather plan resolves every distinct
+        // store key once for the whole round (the collective step); the
+        // per-agent path is the seed baseline, kept for equivalence tests
+        // and the bench's "before" arm
+        let t0 = Instant::now();
+        let assembled: Vec<(ReuseTask, usize)> = if self.cfg.gather_plan {
+            let mut plan = GatherPlan::default();
+            let out = self.assemble_round(&batch, &mut plan)?;
+            self.metrics.assembly_lookups += plan.lookups;
+            self.metrics.assembly_restores += plan.restores;
+            self.metrics.assembly_dedup_hits += plan.dedup_hits;
+            self.metrics.restores += plan.restores;
+            for s in plan.restore_secs.drain(..) {
+                self.metrics.restore_secs.push(s);
+            }
+            out
+        } else {
+            let mut out = Vec::with_capacity(batch.len());
+            for p in &batch {
+                out.push(self.assemble_composite(p)?);
+            }
+            out
+        };
+        self.metrics.assembly_secs.push(t0.elapsed().as_secs_f64());
+
+        for (i, (task, reused)) in assembled.into_iter().enumerate() {
             reused_tokens[i] = reused;
             if reused == 0 {
+                // nothing reused: the composite never reaches the
+                // collector — recycle it now
+                self.scratch.checkin(task.kv, task.valid_len);
                 cold.push(i);
             } else {
                 reuse_idx.push(i);
@@ -278,21 +309,20 @@ impl Engine {
                 run_reuse(self.rt.as_ref(), &model, &tasks, &cfg)?;
             self.metrics.reuse_secs.push(t0.elapsed().as_secs_f64());
             for (ri, res) in reuse_idx.iter().zip(results) {
-                let mut tr = self
-                    .metrics
-                    .requests
-                    .iter_mut()
-                    .find(|t| t.id == batch[*ri].id);
-                if let Some(t) = tr.as_deref_mut() {
+                if let Some(t) = self.metrics.request_mut(batch[*ri].id) {
                     t.recomputed_tokens = res.recomputed;
                 }
                 outputs[*ri] = Some((res.kv, res.logits, res.deviation));
+            }
+            // composite donors are dead after the reuse pass: recycle
+            for task in tasks {
+                self.scratch.checkin(task.kv, task.valid_len);
             }
         }
         for ci in cold {
             let p = &batch[ci];
             let out = self.rt.prefill(&model, &p.tokens, p.tokens.len())?;
-            let mut kv = KvBuf::for_spec(&self.spec);
+            let mut kv = self.scratch.checkout();
             kv.copy_rows_from(&out.kv, 0, 0, p.tokens.len().min(out.kv.seq));
             outputs[ci] = Some((kv, out.logits, f64::MAX));
         }
@@ -335,9 +365,23 @@ impl Engine {
     /// retained cache covers the prompt prefix (restored fused for
     /// TokenDance, dense otherwise), and segment donors cover shared
     /// blocks at arbitrary offsets. Returns the ReuseTask + reused tokens.
-    fn assemble_composite(&mut self, p: &Pending)
+    ///
+    /// This is the seed per-agent path: every key reference pays its own
+    /// store lookup (and mirror restore), so a round's shared work scales
+    /// with agent count. The default path, [`Engine::assemble_round`]
+    /// (engine/gather.rs), hoists that work into one collective step per
+    /// round; this one is retained as its numerical-equivalence baseline
+    /// and the bench's "before" arm (`EngineConfig::gather_plan = false`).
+    pub(super) fn assemble_composite(&mut self, p: &Pending)
         -> Result<(ReuseTask, usize)>
     {
+        /// Prefix donor rows: a shared store payload (zero-copy) or a
+        /// mirror materialized for this request.
+        enum Donor {
+            Dense(Rc<DenseEntry>),
+            Restored(KvBuf, Vec<u32>),
+        }
+
         let spec = self.spec.clone();
         let s = spec.max_seq;
         let mut kv = KvBuf::for_spec(&spec);
@@ -354,29 +398,33 @@ impl Engine {
         if let Some(key) = key {
             let mode = self.cfg.restore_mode();
             let model = self.cfg.model.clone();
-            let restored: Option<(KvBuf, Vec<u32>)> =
-                match self.store.get(&key) {
-                    Some(Fetched::Dense(e)) => {
-                        Some((e.kv.clone(), e.tokens.clone()))
-                    }
-                    Some(Fetched::Mirror(h)) => {
-                        let t0 = Instant::now();
-                        let out = materialize_mirror(
-                            self.rt.as_ref(), &model, &h, mode,
-                        )?;
-                        self.metrics.restores += 1;
-                        self.metrics
-                            .restore_secs
-                            .push(t0.elapsed().as_secs_f64());
-                        Some((out.0, h.mirror.tokens.clone()))
-                    }
-                    None => None,
-                };
-            if let Some((donor_kv, donor_tokens)) = restored {
-                let lcp = common_prefix(&p.tokens, &donor_tokens)
+            self.metrics.assembly_lookups += 1;
+            let restored: Option<Donor> = match self.store.get(&key) {
+                Some(Fetched::Dense(e)) => Some(Donor::Dense(e)),
+                Some(Fetched::Mirror(h)) => {
+                    let t0 = Instant::now();
+                    let out = materialize_mirror(
+                        self.rt.as_ref(), &model, &h, mode,
+                    )?;
+                    self.metrics.restores += 1;
+                    self.metrics.assembly_restores += 1;
+                    self.metrics
+                        .restore_secs
+                        .push(t0.elapsed().as_secs_f64());
+                    Some(Donor::Restored(out.0, h.mirror.tokens.clone()))
+                }
+                None => None,
+            };
+            if let Some(donor) = restored {
+                let (donor_kv, donor_tokens): (&KvBuf, &[u32]) =
+                    match &donor {
+                        Donor::Dense(e) => (&e.kv, &e.tokens),
+                        Donor::Restored(kv, toks) => (kv, toks),
+                    };
+                let lcp = common_prefix(&p.tokens, donor_tokens)
                     .min(p.tokens.len().saturating_sub(1));
                 if lcp > 0 {
-                    kv.copy_rows_from(&donor_kv, 0, 0, lcp);
+                    kv.copy_rows_from(donor_kv, 0, 0, lcp);
                     for slot in 0..lcp {
                         valid[slot] = 1;
                         old_pos[slot] = slot as i32;
@@ -398,6 +446,7 @@ impl Engine {
             let seg_tokens = &p.tokens[seg.start..seg.end];
             let skey = Engine::segment_key(seg_tokens);
             let spec_d = spec.d_model;
+            self.metrics.assembly_lookups += 1;
             if let Some(Fetched::Dense(e)) = self.store.get(&skey) {
                 if e.tokens.len() != seg.len() {
                     continue;
@@ -433,6 +482,7 @@ impl Engine {
                 SIMILARITY_FALLBACK_MIN,
             );
             if let Some((skey, _sim)) = found {
+                self.metrics.assembly_lookups += 1;
                 if let Some(Fetched::Dense(e)) = self.store.get(&skey) {
                     // never mark the last position (fresh logits rule)
                     let n = e
@@ -476,9 +526,7 @@ impl Engine {
     fn mark_prefill_done(&mut self, id: u64, reused: usize, _fresh: usize) {
         let now = Instant::now();
         let mut round = None;
-        if let Some(t) =
-            self.metrics.requests.iter_mut().find(|t| t.id == id)
-        {
+        if let Some(t) = self.metrics.request_mut(id) {
             t.prefill_done = Some(now);
             t.reused_tokens = reused;
             round = Some(t.round);
@@ -537,38 +585,41 @@ impl Engine {
 
     pub(super) fn finalize_one(&mut self, r: Running) -> Result<()> {
         let now = Instant::now();
-        if let Some(t) =
-            self.metrics.requests.iter_mut().find(|t| t.id == r.id)
-        {
+        if let Some(t) = self.metrics.request_mut(r.id) {
             t.completed = Some(now);
             t.generated_tokens = r.generated.len();
         }
 
         // donor extraction: the agent's generated output block (next
-        // round's shared block for every other agent) + prompt segments
+        // round's shared block for every other agent) + prompt segments.
+        // PIC policies only — nothing else ever reads Segment-role
+        // entries, so storing them under vLLM / CacheBlend-ordinary is
+        // dead store traffic that evicts useful agent caches and skews
+        // cross-policy comparisons
         let full_len = r.table.len;
-        if !r.generated.is_empty() {
-            let out_kv = r.kv.extract_rows(r.prompt_len, r.generated.len());
-            let positions: Vec<i32> = (r.prompt_len as i32
-                ..(r.prompt_len + r.generated.len()) as i32)
-                .collect();
-            // capacity-honest: an oversize donor is rejected (counted by
-            // the store) and the round proceeds without it
-            self.store
-                .put_dense(
-                    Engine::segment_key(&r.generated),
-                    DenseEntry {
-                        tokens: r.generated.clone(),
-                        positions,
-                        kv: out_kv,
-                    },
-                )
-                .ok();
-        }
         if matches!(
             self.cfg.policy,
             Policy::CacheBlendFull | Policy::TokenDance
         ) {
+            if !r.generated.is_empty() {
+                let out_kv =
+                    r.kv.extract_rows(r.prompt_len, r.generated.len());
+                let positions: Vec<i32> = (r.prompt_len as i32
+                    ..(r.prompt_len + r.generated.len()) as i32)
+                    .collect();
+                // capacity-honest: an oversize donor is rejected (counted
+                // by the store) and the round proceeds without it
+                self.store
+                    .put_dense(
+                        Engine::segment_key(&r.generated),
+                        DenseEntry {
+                            tokens: r.generated.clone(),
+                            positions,
+                            kv: out_kv,
+                        },
+                    )
+                    .ok();
+            }
             for seg in &r.seg.segments {
                 if seg.is_empty() || seg.end > r.prompt_len {
                     continue;
@@ -650,39 +701,37 @@ impl Engine {
     }
 
     fn complete_bookkeeping(&mut self, r: Running) -> Result<()> {
+        let Running { id, agent, round, generated, kv, table, .. } = r;
+        // the working cache is dead once the request finalizes (retention
+        // already extracted its rows): recycle it for the next round's
+        // composites; `table.len` bounds every row prefill/decode wrote
+        self.scratch.checkin(kv, table.len);
         let e2e = self
             .metrics
-            .requests
-            .iter()
-            .find(|t| t.id == r.id)
+            .request(id)
             .and_then(|t| t.e2e_secs())
             .unwrap_or(0.0);
         self.push_event(crate::serve::EngineEvent::Finished {
-            id: r.id,
-            agent: r.agent,
-            round: r.round,
-            generated: r.generated.clone(),
+            id,
+            agent,
+            round,
+            generated: generated.clone(),
             e2e_secs: e2e,
         });
-        self.finished.push(Completion {
-            id: r.id,
-            agent: r.agent,
-            round: r.round,
-            generated: r.generated,
-        });
+        self.finished.push(Completion { id, agent, round, generated });
 
         // round bookkeeping: the engine owns the round lifecycle; callers
         // observe it through the RoundClosed event
-        if let Some(c) = self.round_outstanding.get_mut(&r.round) {
+        if let Some(c) = self.round_outstanding.get_mut(&round) {
             *c -= 1;
             if *c == 0 {
-                self.round_outstanding.remove(&r.round);
+                self.round_outstanding.remove(&round);
                 let staged =
-                    self.round_staging.get(&r.round).map_or(0, Vec::len);
+                    self.round_staging.get(&round).map_or(0, Vec::len);
                 let mut mirror_bytes = 0;
                 if self.cfg.policy == Policy::TokenDance {
                     let t0 = Instant::now();
-                    mirror_bytes = self.encode_round(r.round)?;
+                    mirror_bytes = self.encode_round(round)?;
                     self.metrics
                         .encode_secs
                         .push(t0.elapsed().as_secs_f64());
@@ -696,7 +745,7 @@ impl Engine {
                     c.promotions - self.store_mark.promotions;
                 self.store_mark = c;
                 self.push_event(crate::serve::EngineEvent::RoundClosed {
-                    round: r.round,
+                    round,
                     staged,
                     mirror_bytes,
                     store_evictions,
@@ -769,9 +818,10 @@ impl Engine {
                 ^ (round as u64),
             role: crate::store::Role::AgentCache { agent: master.agent },
         };
-        // padded master for diffing
-        let mut master_padded = KvBuf::for_spec(&spec);
-        master_padded.copy_rows_from(&master.kv, 0, 0, master.kv.seq);
+        // padded master for diffing (recycled scratch buffer)
+        let master_len = master.kv.seq;
+        let mut master_padded = self.scratch.checkout();
+        master_padded.copy_rows_from(&master.kv, 0, 0, master_len);
         let master_stored = self
             .store
             .put_dense(
@@ -790,6 +840,7 @@ impl Engine {
             // the elected master itself does not fit the store: no family
             // encoding is possible this round — retain each sibling dense
             // best-effort and keep previous pointers where even that fails
+            self.scratch.checkin(master_padded, master_len);
             for s in staged {
                 self.retain_dense(round, s.agent, s.tokens, s.kv);
             }
@@ -807,9 +858,6 @@ impl Engine {
 
         for s in staged {
             let len = s.kv.seq;
-            let mut padded = KvBuf::for_spec(&spec);
-            padded.copy_rows_from(&s.kv, 0, 0, len);
-
             // align mirror blocks to master blocks by segment identity
             // (chunk-content matching collides on repetitive outputs —
             // see match_blocks_by_segments), then find the blocks the
@@ -819,11 +867,13 @@ impl Engine {
             );
             // short-circuit: nothing aligned (e.g. a cold round) — the
             // whole cache would be one big correction; store dense without
-            // paying two rope passes (§Perf)
+            // paying two rope passes or a padding buffer (§Perf)
             if src_block.iter().all(|&b| b < 0) {
                 self.retain_dense(round, s.agent, s.tokens, s.kv);
                 continue;
             }
+            let mut padded = self.scratch.checkout();
+            padded.copy_rows_from(&s.kv, 0, 0, len);
             let (permuted, src_pos) = gather_permuted_master(
                 &master_padded,
                 &master_positions,
@@ -850,6 +900,10 @@ impl Engine {
             };
             let changed =
                 diff_blocks_tol(&expected, &padded, len, bt, DIFF_TOL);
+            // the expectation buffer is dead after the diff; adopt it
+            // into the arena (full-width watermark: the rope pass may
+            // have touched every slot)
+            self.scratch.checkin(expected, spec.max_seq);
 
             let key = crate::store::StoreKey {
                 content: crate::util::fnv1a_tokens(&s.tokens)
@@ -867,6 +921,7 @@ impl Engine {
                 // compression would not pay off — store dense (paper:
                 // "if requests diverge more strongly ... the storage
                 // benefit diminishes")
+                self.scratch.checkin(padded, len);
                 self.retain_dense(round, s.agent, s.tokens, s.kv);
                 continue;
             }
@@ -885,6 +940,11 @@ impl Engine {
             let corrections = extract_blocks(
                 &unrot, &changed.block_ids, len, bt,
             );
+            // the padding buffer (possibly un-rotated in place) is dead:
+            // an identity un-rotation touched only `len` rows, a real one
+            // rewrote the K plane across all slots
+            let dirty = if identity { len } else { spec.max_seq };
+            self.scratch.checkin(unrot, dirty);
             let entry = MirrorEntry {
                 master: master_key,
                 tokens: s.tokens.clone(),
@@ -911,6 +971,7 @@ impl Engine {
                 }
             }
         }
+        self.scratch.checkin(master_padded, master_len);
         Ok(mirror_bytes)
     }
 }

@@ -408,6 +408,290 @@ fn similarity_fallback_reuses_close_cache_when_retention_lost() {
 }
 
 #[test]
+fn gather_plan_outputs_match_per_agent_baseline() {
+    // full-run numerical equivalence: the collective gather plan and the
+    // seed per-agent assembly produce identical greedy streams across a
+    // 3-round All-Gather run
+    let mut a = engine(Policy::TokenDance, 256);
+    let mut b = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(256)
+        .gather_plan(false)
+        .mock()
+        .build()
+        .unwrap();
+    assert_eq!(run_rounds(&mut a, 3, 3), run_rounds(&mut b, 3, 3));
+    assert!(
+        a.metrics.assembly_dedup_hits > 0,
+        "plan path must have deduplicated shared keys"
+    );
+    assert_eq!(
+        b.metrics.assembly_dedup_hits, 0,
+        "baseline path never consults a plan memo"
+    );
+    assert!(
+        b.metrics.assembly_lookups > a.metrics.assembly_lookups,
+        "per-agent path pays more store lookups: {} !> {}",
+        b.metrics.assembly_lookups,
+        a.metrics.assembly_lookups
+    );
+}
+
+#[test]
+fn gather_plan_assembly_is_bitwise_identical_to_per_agent() {
+    use super::gather::GatherPlan;
+    use crate::collector::{run_reuse, CollectorConfig};
+
+    let mk_engine = || {
+        Engine::builder(MODEL)
+            .policy(Policy::TokenDance)
+            .pool_blocks(512)
+            .mock()
+            .build()
+            .unwrap()
+    };
+    let mut a = mk_engine();
+    let mut b = mk_engine();
+    // round 0 warms retention + segment donors identically in both
+    let warm = |eng: &mut Engine| -> Vec<(usize, Vec<u32>)> {
+        let mut sub = RoundSubmission::new(0);
+        for agent in 0..4 {
+            sub.push(AgentRequest {
+                agent,
+                round: 0,
+                prompt: prompt(
+                    agent,
+                    &[String::from("persona data")],
+                    &[],
+                    "round 0: act",
+                ),
+                max_new_tokens: 8,
+                retain: true,
+            });
+        }
+        eng.submit_round(sub).unwrap();
+        let mut outs: Vec<(usize, Vec<u32>)> = eng
+            .drain()
+            .unwrap()
+            .iter()
+            .map(|c| (c.agent, c.generated.clone()))
+            .collect();
+        outs.sort_by_key(|(x, _)| *x);
+        outs
+    };
+    let sa = warm(&mut a);
+    let sb = warm(&mut b);
+    assert_eq!(sa, sb, "identical engines must warm identically");
+
+    // identical round-1 requests, assembled planned (a) vs per-agent (b)
+    let reqs: Vec<AgentRequest> = (0..4)
+        .map(|agent| AgentRequest {
+            agent,
+            round: 1,
+            prompt: prompt(
+                agent,
+                &[String::from("persona data")],
+                &sa,
+                "round 1: act",
+            ),
+            max_new_tokens: 8,
+            retain: true,
+        })
+        .collect();
+    let mk_pending = |eng: &Engine| -> Vec<Pending> {
+        reqs.iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let (tokens, seg) = eng.prepare(r).unwrap();
+                Pending { id: 100 + i as u64, req: r.clone(), tokens, seg }
+            })
+            .collect()
+    };
+    let pa = mk_pending(&a);
+    let pb = mk_pending(&b);
+    let mut plan = GatherPlan::default();
+    let planned = a.assemble_round(&pa, &mut plan).unwrap();
+    let legacy: Vec<_> = pb
+        .iter()
+        .map(|p| b.assemble_composite(p).unwrap())
+        .collect();
+    assert_eq!(planned.len(), legacy.len());
+    for ((ta, ra), (tb, rb)) in planned.iter().zip(&legacy) {
+        assert_eq!(ra, rb, "reused token counts match");
+        assert_eq!(ta.id, tb.id);
+        assert_eq!(ta.tokens, tb.tokens);
+        assert_eq!(ta.valid_len, tb.valid_len);
+        assert_eq!(ta.old_pos, tb.old_pos);
+        assert_eq!(ta.valid, tb.valid);
+        assert_eq!(ta.kv, tb.kv, "bitwise-identical composite donors");
+    }
+    assert!(plan.dedup_hits > 0, "shared segments resolved once");
+
+    // and identical logits + recovered caches through the collector
+    let cfg = CollectorConfig::default();
+    let ta: Vec<_> = planned
+        .into_iter()
+        .filter(|(_, r)| *r > 0)
+        .map(|(t, _)| t)
+        .collect();
+    let tb: Vec<_> = legacy
+        .into_iter()
+        .filter(|(_, r)| *r > 0)
+        .map(|(t, _)| t)
+        .collect();
+    assert!(!ta.is_empty());
+    let (res_a, _) = run_reuse(a.rt.as_ref(), MODEL, &ta, &cfg).unwrap();
+    let (res_b, _) = run_reuse(b.rt.as_ref(), MODEL, &tb, &cfg).unwrap();
+    for (x, y) in res_a.iter().zip(&res_b) {
+        assert_eq!(x.logits, y.logits, "logits bitwise-identical");
+        assert_eq!(x.kv, y.kv, "recovered caches bitwise-identical");
+    }
+}
+
+#[test]
+fn store_lookups_per_distinct_segment_constant_in_agent_count() {
+    // the paper's collective claim, counter-verified: one store lookup
+    // per distinct shared segment per round, at 8, 32, and 64 agents
+    for agents in [8usize, 32, 64] {
+        let mut eng = engine(Policy::TokenDance, 4096);
+        // fixed shared-block set: 4 donor segments of one block each
+        let shared: Vec<Vec<u32>> = (0..4u32)
+            .map(|i| (0..16u32).map(|t| 4 + (i * 31 + t) % 200).collect())
+            .collect();
+        for toks in &shared {
+            let kv = eng
+                .rt
+                .prefill(MODEL, toks, toks.len())
+                .unwrap()
+                .kv
+                .extract_rows(0, toks.len());
+            eng.store_mut()
+                .put_dense(
+                    Engine::segment_key(toks),
+                    crate::store::DenseEntry {
+                        tokens: toks.clone(),
+                        positions: (0..toks.len() as i32).collect(),
+                        kv,
+                    },
+                )
+                .unwrap();
+        }
+        let before = eng.store().counters();
+        assert_eq!(eng.metrics.assembly_lookups, 0);
+
+        let mut sub = RoundSubmission::new(0);
+        for a in 0..agents {
+            let mut p = RoundAwarePrompt::new();
+            let n = shared.len();
+            for i in 0..n {
+                let producer = (i + a) % n;
+                p.push(
+                    BlockKind::SharedOutput { producer, round: 0 },
+                    shared[producer].clone(),
+                );
+            }
+            sub.push(AgentRequest {
+                agent: a,
+                round: 0,
+                prompt: p,
+                max_new_tokens: 4,
+                retain: false,
+            });
+        }
+        eng.submit_round(sub).unwrap();
+        eng.drain().unwrap();
+
+        assert_eq!(
+            eng.metrics.assembly_lookups, 4,
+            "agents={agents}: one lookup per distinct segment"
+        );
+        assert_eq!(
+            eng.metrics.assembly_dedup_hits,
+            (4 * agents - 4) as u64,
+            "agents={agents}: every other reference served by the memo"
+        );
+        let after = eng.store().counters();
+        assert_eq!(
+            (after.hits + after.misses) - (before.hits + before.misses),
+            4,
+            "agents={agents}: the store itself saw exactly 4 gets"
+        );
+        assert_eq!(eng.metrics.assembly_restores, 0);
+        assert!(
+            eng.metrics.reuse_fraction() > 0.9,
+            "agents={agents}: shared blocks actually reused"
+        );
+    }
+}
+
+#[test]
+fn gather_plan_materializes_each_retained_mirror_once() {
+    let mut eng = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(512)
+        .recompute_frac(0.05)
+        .min_recompute(1)
+        .mock()
+        .build()
+        .unwrap();
+    run_shared_heavy(&mut eng, 8, 2);
+    // count agents whose retention is a Mirror going into the next round
+    let mirror_agents = (0..8)
+        .filter(|a| {
+            eng.agent_store_key(*a).is_some_and(|k| {
+                eng.store().kind(&k)
+                    == Some(crate::store::EntryKind::Mirror)
+            })
+        })
+        .count() as u64;
+    assert!(
+        mirror_agents >= 4,
+        "premise: most siblings retained as mirrors ({mirror_agents})"
+    );
+    let restores_before = eng.metrics.assembly_restores;
+    run_shared_heavy(&mut eng, 8, 1);
+    assert_eq!(
+        eng.metrics.assembly_restores - restores_before,
+        mirror_agents,
+        "each retained mirror materialized exactly once"
+    );
+}
+
+#[test]
+fn scratch_arena_recycles_across_rounds() {
+    let mut eng = engine(Policy::TokenDance, 256);
+    run_rounds(&mut eng, 3, 3);
+    let c = eng.scratch_counters();
+    assert!(
+        c.recycled > 0,
+        "later rounds must reuse earlier rounds' buffers: {c:?}"
+    );
+    assert!(c.checkins > 0, "finalized caches return to the arena");
+}
+
+#[test]
+fn non_pic_policies_store_no_segment_donors() {
+    // donor extraction is gated on the PIC policies: under vLLM and
+    // CacheBlend-ordinary nothing ever reads Segment-role entries, so
+    // none may be written (dead store traffic skews comparisons)
+    for policy in [Policy::VllmPrefix, Policy::CacheBlendOrdinary] {
+        let mut eng = engine(policy, 256);
+        run_rounds(&mut eng, 3, 2);
+        let st = eng.store().stats();
+        let segment_bytes = st.dense_bytes - st.agent_dense_bytes;
+        assert_eq!(
+            segment_bytes, 0,
+            "{policy:?} wrote Segment-role entries"
+        );
+    }
+    // and the PIC policies still do extract donors
+    let mut eng = engine(Policy::TokenDance, 256);
+    run_rounds(&mut eng, 3, 2);
+    let st = eng.store().stats();
+    assert!(st.dense_bytes > st.agent_dense_bytes);
+}
+
+#[test]
 fn rejects_oversize_prompts() {
     let mut eng = engine(Policy::TokenDance, 256);
     let mut p = RoundAwarePrompt::new();

@@ -34,6 +34,10 @@ struct PressurePoint {
     rehomed: u64,
     evictions: u64,
     rejections: u64,
+    /// Assembly store lookups (distinct keys, once per round each).
+    asm_lookups: u64,
+    /// Assembly references served by the gather-plan memo.
+    asm_dedup: u64,
 }
 
 fn run_once(
@@ -87,6 +91,8 @@ fn run_once(
         rehomed: c.rehomed_mirrors,
         evictions: c.evictions,
         rejections: c.rejected_inserts,
+        asm_lookups: eng.metrics.assembly_lookups,
+        asm_dedup: eng.metrics.assembly_dedup_hits,
     })
 }
 
@@ -106,6 +112,11 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
         fmt_bytes(ws),
         probe.compression,
         100.0 * probe.reuse
+    );
+    println!(
+        "collective assembly: {} store lookups, {} deduplicated by the \
+         gather plan",
+        probe.asm_lookups, probe.asm_dedup
     );
 
     let mut rows = Vec::new();

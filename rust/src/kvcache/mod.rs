@@ -226,6 +226,42 @@ impl KvPool {
         out
     }
 
+    /// Gather only the first `n_blocks` blocks of a table (a shared-prefix
+    /// read) into a fresh padded KvBuf — no `BlockTable` clone, no
+    /// gather-then-truncate.
+    pub fn gather_range(&self, table: &BlockTable, n_blocks: usize) -> KvBuf {
+        let mut out = KvBuf::for_spec(&self.spec);
+        self.gather_range_into(table, n_blocks, &mut out);
+        out
+    }
+
+    /// [`KvPool::gather_range`] into an existing buffer (hot-path variant:
+    /// the engine feeds it recycled scratch buffers). Rows past the prefix
+    /// are left untouched, so the buffer must arrive zeroed if the caller
+    /// relies on padding.
+    pub fn gather_range_into(
+        &self,
+        table: &BlockTable,
+        n_blocks: usize,
+        out: &mut KvBuf,
+    ) {
+        let bt = self.spec.block_tokens;
+        let d = self.spec.d_model;
+        let l_total = self.spec.n_layers;
+        for (bi, &b) in table.blocks.iter().take(n_blocks).enumerate() {
+            let tok0 = bi * bt;
+            let base = b as usize * self.block_elems();
+            for l in 0..l_total {
+                let src = base + l * bt * d;
+                let o = out.off(l, tok0);
+                out.k[o..o + bt * d]
+                    .copy_from_slice(&self.arena_k[src..src + bt * d]);
+                out.v[o..o + bt * d]
+                    .copy_from_slice(&self.arena_v[src..src + bt * d]);
+            }
+        }
+    }
+
     /// Gather into an existing buffer (hot-path variant, no allocation).
     pub fn gather_into(&self, table: &BlockTable, out: &mut KvBuf) {
         let bt = self.spec.block_tokens;
@@ -373,6 +409,24 @@ mod tests {
                 assert_eq!(got.k_row(l, s), src.k_row(l, s));
             }
         }
+    }
+
+    #[test]
+    fn gather_range_matches_truncated_gather() {
+        let sp = spec();
+        let mut pool = KvPool::for_seqs(&sp, 2);
+        let src = filled(&sp, 48);
+        let mut t = pool.allocate(48).unwrap();
+        t.len = 48;
+        pool.scatter(&t, &src, 48);
+        // the old path: clone the table, truncate, full gather
+        let mut tmp = t.clone();
+        tmp.len = 2 * sp.block_tokens;
+        let old = pool.gather(&tmp);
+        let new = pool.gather_range(&t, 2);
+        assert_eq!(old, new, "gather_range must match the clone path");
+        // rows past the range stay zero (padding contract)
+        assert!(new.k_row(0, 2 * sp.block_tokens).iter().all(|&x| x == 0.0));
     }
 
     #[test]

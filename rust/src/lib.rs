@@ -14,7 +14,7 @@
 //! |---|---|
 //! | [`tokenizer`] | byte-level tokenizer + `<TTSEP>` round-aware prompts |
 //! | [`model`] | model specs, shape buckets, artifact manifest |
-//! | [`runtime`] | PJRT execution of the AOT artifacts (+ mock for tests) |
+//! | [`runtime`] | PJRT execution of the AOT artifacts (+ mock for tests), KV buffers + scratch arena |
 //! | [`kvcache`] | paged GPU-pool analog: block allocator, block tables |
 //! | [`store`] | CPU-side cache store: dense + Master-Mirror diff entries, O(1) LRU, master re-election, capacity-honest accounting |
 //! | [`rounds`] | segment hashing, All-Gather round detection |
@@ -23,6 +23,7 @@
 //! | [`restore`] | fused / dense Mirror restore (paper §4.4, Algorithm 1) |
 //! | [`scheduler`] | continuous batching, admission, preemption |
 //! | [`engine`] | the serving engine tying every subsystem together |
+//! | `engine::gather` | round-level gather plans: resolve-once collective assembly (§4.2) |
 //! | [`serve`] | round-native public API: builder, round handles, events |
 //! | [`workload`] | GenerativeAgents / AgentSociety trace synthesizers |
 //! | [`metrics`] | latency/usage recorders and table emitters |

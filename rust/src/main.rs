@@ -140,10 +140,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_secs(eng.metrics.restore_secs.mean()),
     );
     println!(
-        "phase means:        reuse {} | restore {} | encode {}",
+        "phase means:        assembly {} | reuse {} | restore {} | \
+         encode {}",
+        fmt_secs(eng.metrics.assembly_secs.mean()),
         fmt_secs(eng.metrics.reuse_secs.mean()),
         fmt_secs(eng.metrics.restore_secs.mean()),
         fmt_secs(eng.metrics.encode_secs.mean()),
+    );
+    println!(
+        "assembly:           {} store lookups, {} plan dedup hits, \
+         {} mirror restores",
+        eng.metrics.assembly_lookups,
+        eng.metrics.assembly_dedup_hits,
+        eng.metrics.assembly_restores,
     );
     println!("runtime calls:      {}", eng.rt.calls());
     Ok(())

@@ -1,6 +1,7 @@
 //! Metrics: per-request latency phases, KV-pool usage timelines, and the
 //! table/series emitters the experiment drivers print (paper-style rows).
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::util::stats::Samples;
@@ -71,11 +72,26 @@ pub struct UsageSample {
 #[derive(Debug, Default)]
 pub struct RunMetrics {
     pub requests: Vec<RequestTrace>,
+    /// id -> index into `requests` (hot-path lookups were O(n) linear
+    /// scans, O(n²) per run; push through [`RunMetrics::push_request`]).
+    index: HashMap<u64, usize>,
     pub usage: Vec<UsageSample>,
     pub runtime_calls: u64,
     pub restores: u64,
     pub restore_secs: Samples,
     pub reuse_secs: Samples,
+    /// Wall time of each round's composite assembly (gather-plan build +
+    /// fan-out, or the per-agent path when the plan is disabled).
+    pub assembly_secs: Samples,
+    /// Store-key resolutions performed during assembly: one per *distinct*
+    /// key per round on the gather-plan path, one per reference on the
+    /// per-agent path.
+    pub assembly_lookups: u64,
+    /// Mirror materializations performed during assembly.
+    pub assembly_restores: u64,
+    /// Assembly key references served from the round's gather plan memo
+    /// instead of a store lookup (the collective dedup win).
+    pub assembly_dedup_hits: u64,
     /// Round-end Master-Mirror encode cost (off the serving critical path
     /// in principle; measured to keep it honest).
     pub encode_secs: Samples,
@@ -92,6 +108,27 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    /// Register a trace, maintaining the id -> index map. All engine
+    /// inserts go through here; `requests` stays public for read-side
+    /// iteration by the experiment drivers.
+    pub fn push_request(&mut self, t: RequestTrace) {
+        self.index.insert(t.id, self.requests.len());
+        self.requests.push(t);
+    }
+
+    /// O(1) trace lookup by request id.
+    pub fn request(&self, id: u64) -> Option<&RequestTrace> {
+        self.index.get(&id).map(|&i| &self.requests[i])
+    }
+
+    /// O(1) mutable trace lookup by request id.
+    pub fn request_mut(&mut self, id: u64) -> Option<&mut RequestTrace> {
+        match self.index.get(&id) {
+            Some(&i) => Some(&mut self.requests[i]),
+            None => None,
+        }
+    }
+
     /// End-to-end latency samples of completed requests.
     pub fn e2e(&self) -> Samples {
         let mut s = Samples::new();
@@ -233,6 +270,20 @@ mod tests {
         b.reused_tokens = 20;
         m.requests.extend([a, b]);
         assert!((m.reuse_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn request_index_resolves_ids_out_of_order() {
+        let t0 = Instant::now();
+        let mut m = RunMetrics::default();
+        for id in [7u64, 3, 99] {
+            m.push_request(RequestTrace::new(id, 0, 0, t0));
+        }
+        assert_eq!(m.request(3).unwrap().id, 3);
+        assert_eq!(m.request(99).unwrap().id, 99);
+        assert!(m.request(4).is_none());
+        m.request_mut(7).unwrap().generated_tokens = 11;
+        assert_eq!(m.requests[0].generated_tokens, 11);
     }
 
     #[test]

@@ -322,7 +322,9 @@ mod tests {
         let spec = rt.spec("sim-7b").unwrap().clone();
         {
             let m = match store.get(&sk) {
-                Some(crate::store::Fetched::Mirror(h)) => h.mirror.clone(),
+                Some(crate::store::Fetched::Mirror(h)) => {
+                    (*h.mirror).clone()
+                }
                 _ => panic!(),
             };
             let mut m = m;
@@ -353,7 +355,9 @@ mod tests {
         // restore to slots 0..64 (RoPE recovery shifts by -10)
         {
             let handle = match store.get(&sk) {
-                Some(crate::store::Fetched::Mirror(h)) => h.mirror.clone(),
+                Some(crate::store::Fetched::Mirror(h)) => {
+                    (*h.mirror).clone()
+                }
                 _ => panic!(),
             };
             let mut m = handle;

@@ -124,6 +124,111 @@ impl KvBuf {
     }
 }
 
+/// Upper bound on idle buffers the arena keeps resident. Steady-state
+/// serving needs at most (running sequences + one round of composites)
+/// buffers; the cap only matters after a burst drains.
+const SCRATCH_MAX_FREE: usize = 64;
+
+/// Lifecycle counters of a [`KvScratch`] arena (bench/test observability).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScratchCounters {
+    pub checkouts: u64,
+    /// Checkouts served by a fresh heap allocation (pool was empty).
+    pub fresh_allocs: u64,
+    /// Checkouts served from the free pool (the recycling win).
+    pub recycled: u64,
+    pub checkins: u64,
+    /// Buffers refused at checkin because their shape does not match the
+    /// arena (e.g. a bucket-sized runtime output).
+    pub rejected: u64,
+}
+
+/// Recycling arena for max_seq-padded working buffers.
+///
+/// The prefill hot path burns a fresh `KvBuf::for_spec` — two `L*S*d` f32
+/// planes, malloc'd and fully zeroed — per composite donor, per cold
+/// prefill, and per encode-round padding. The arena recycles those
+/// buffers instead: [`KvScratch::checkout`] hands out an all-zero buffer
+/// (from the free pool when one is available), and
+/// [`KvScratch::checkin`] takes a dead buffer back, re-zeroing only the
+/// token rows the caller actually dirtied (the valid-rows watermark)
+/// rather than the whole plane.
+///
+/// Invariant: every buffer `checkout` returns is entirely zero. Callers
+/// must state a watermark at `checkin` covering every row they may have
+/// written since checkout — under-reporting would leak stale rows into a
+/// later composite (debug builds verify cleanliness at checkout, and the
+/// scratch proptest hammers the invariant).
+pub struct KvScratch {
+    layers: usize,
+    seq: usize,
+    d: usize,
+    free: Vec<KvBuf>,
+    counters: ScratchCounters,
+}
+
+impl KvScratch {
+    pub fn new(layers: usize, seq: usize, d: usize) -> Self {
+        KvScratch { layers, seq, d, free: Vec::new(), counters: ScratchCounters::default() }
+    }
+
+    pub fn for_spec(spec: &ModelSpec) -> Self {
+        Self::new(spec.n_layers, spec.max_seq, spec.d_model)
+    }
+
+    /// An all-zero [L, S, d] buffer: recycled when the pool has one,
+    /// freshly allocated otherwise.
+    pub fn checkout(&mut self) -> KvBuf {
+        self.counters.checkouts += 1;
+        match self.free.pop() {
+            Some(buf) => {
+                self.counters.recycled += 1;
+                debug_assert!(
+                    buf.k.iter().all(|&x| x == 0.0) && buf.v.iter().all(|&x| x == 0.0),
+                    "scratch buffer leaked stale rows past a checkin watermark"
+                );
+                buf
+            }
+            None => {
+                self.counters.fresh_allocs += 1;
+                KvBuf::zeroed(self.layers, self.seq, self.d)
+            }
+        }
+    }
+
+    /// Return a dead buffer to the pool. `dirty_rows` must cover every
+    /// token row the caller may have written since checkout; only those
+    /// rows are re-zeroed (the lazy-zeroing watermark). Foreign-shaped
+    /// buffers are dropped (counted) — any [L, S, d] working buffer may
+    /// be fed back, even one allocated outside the arena.
+    pub fn checkin(&mut self, mut buf: KvBuf, dirty_rows: usize) {
+        if buf.layers != self.layers || buf.seq != self.seq || buf.d != self.d {
+            self.counters.rejected += 1;
+            return;
+        }
+        self.counters.checkins += 1;
+        if self.free.len() >= SCRATCH_MAX_FREE {
+            return;
+        }
+        let n = dirty_rows.min(self.seq) * self.d;
+        for l in 0..self.layers {
+            let o = buf.off(l, 0);
+            buf.k[o..o + n].fill(0.0);
+            buf.v[o..o + n].fill(0.0);
+        }
+        self.free.push(buf);
+    }
+
+    pub fn counters(&self) -> ScratchCounters {
+        self.counters
+    }
+
+    /// Idle buffers currently pooled.
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,5 +284,37 @@ mod tests {
     fn bytes_accounting() {
         let b = KvBuf::zeroed(4, 512, 128);
         assert_eq!(b.bytes(), 4 * 512 * 128 * 4 * 2);
+    }
+
+    #[test]
+    fn scratch_recycles_and_rezeroes() {
+        let mut sc = KvScratch::new(2, 8, 4);
+        let mut a = sc.checkout();
+        assert!(a.k.iter().all(|&x| x == 0.0));
+        // dirty the first 3 rows, check in with an exact watermark
+        for slot in 0..3 {
+            a.set_row(0, slot, &[1.0; 4], &[2.0; 4]);
+            a.set_row(1, slot, &[3.0; 4], &[4.0; 4]);
+        }
+        sc.checkin(a, 3);
+        let b = sc.checkout();
+        assert!(b.k.iter().all(|&x| x == 0.0), "stale K rows leaked");
+        assert!(b.v.iter().all(|&x| x == 0.0), "stale V rows leaked");
+        let c = sc.counters();
+        assert_eq!(c.checkouts, 2);
+        assert_eq!(c.recycled, 1);
+        assert_eq!(c.fresh_allocs, 1);
+        assert_eq!(c.checkins, 1);
+    }
+
+    #[test]
+    fn scratch_rejects_foreign_shapes() {
+        let mut sc = KvScratch::new(2, 8, 4);
+        sc.checkin(KvBuf::zeroed(2, 16, 4), 0);
+        assert_eq!(sc.free_len(), 0);
+        assert_eq!(sc.counters().rejected, 1);
+        // a correctly shaped buffer allocated elsewhere is adopted
+        sc.checkin(KvBuf::zeroed(2, 8, 4), 0);
+        assert_eq!(sc.free_len(), 1);
     }
 }

@@ -255,6 +255,7 @@ pub struct EngineBuilder {
     min_recompute: Option<usize>,
     detector: Option<DetectorConfig>,
     restore_mode: Option<RestoreMode>,
+    gather_plan: Option<bool>,
 }
 
 impl EngineBuilder {
@@ -271,6 +272,7 @@ impl EngineBuilder {
             min_recompute: None,
             detector: None,
             restore_mode: None,
+            gather_plan: None,
         }
     }
 
@@ -345,6 +347,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Assemble PIC composites through the round-level gather plan
+    /// (default true: each distinct store key resolves once per round).
+    /// `false` selects the per-agent baseline — numerically identical,
+    /// used by the equivalence tests and `bench_round_assembly`.
+    pub fn gather_plan(mut self, on: bool) -> Self {
+        self.gather_plan = Some(on);
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let rt: Rc<dyn ModelRuntime> = match (self.runtime, self.artifacts)
         {
@@ -382,6 +393,9 @@ impl EngineBuilder {
         }
         if let Some(m) = self.restore_mode {
             cfg.restore_mode = Some(m);
+        }
+        if let Some(g) = self.gather_plan {
+            cfg.gather_plan = g;
         }
         Engine::new(rt, cfg)
     }

@@ -111,17 +111,31 @@ pub struct MirrorEntry {
     pub diff: AlignedDiff,
 }
 
+/// Resident entry. Payloads are `Rc`-backed so reads are zero-copy: a
+/// fetch hands out a shared reference to the stored tensor instead of
+/// cloning the full [L, len, d] planes (the engine's gather plan holds
+/// many of these across one round's assembly).
 #[derive(Clone, Debug)]
 pub enum Entry {
-    Dense(DenseEntry),
-    Mirror(MirrorEntry),
+    Dense(Rc<DenseEntry>),
+    Mirror(Rc<MirrorEntry>),
+}
+
+/// What class of entry sits at a key — a non-counting, non-touching peek
+/// (diagnostics and tests; does not perturb LRU order or hit counters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryKind {
+    Dense,
+    Mirror,
 }
 
 /// Lazy read handle for a Mirror: everything the restore path needs without
 /// materializing a dense tensor (paper: "a lightweight mirror object").
-pub struct MirrorHandle<'a> {
-    pub master: &'a DenseEntry,
-    pub mirror: &'a MirrorEntry,
+/// Owned (`Rc`-backed), so holding a handle does not borrow the store.
+#[derive(Clone)]
+pub struct MirrorHandle {
+    pub master: Rc<DenseEntry>,
+    pub mirror: Rc<MirrorEntry>,
 }
 
 /// Storage accounting for the Fig-12 compression analysis, plus the
@@ -368,8 +382,8 @@ impl CacheStore {
 
     fn entry_bytes(e: &Entry) -> usize {
         match e {
-            Entry::Dense(d) => dense_bytes(d),
-            Entry::Mirror(m) => mirror_bytes(m),
+            Entry::Dense(d) => dense_bytes(d.as_ref()),
+            Entry::Mirror(m) => mirror_bytes(m.as_ref()),
         }
     }
 
@@ -444,7 +458,8 @@ impl CacheStore {
                     .runtime
                     .as_ref()
                     .map(|(r, name)| (r.as_ref(), name.as_str()));
-                let handle = MirrorHandle { master: md, mirror: m };
+                let handle =
+                    MirrorHandle { master: md.clone(), mirror: m.clone() };
                 crate::restore::materialize_for_promotion(
                     &self.spec, rt, &handle,
                 )
@@ -502,11 +517,11 @@ impl CacheStore {
         master_padded.copy_rows_from(&promoted.kv, 0, 0, plen);
         self.insert_resident(
             promoted.key,
-            Entry::Dense(DenseEntry {
+            Entry::Dense(Rc::new(DenseEntry {
                 tokens: promoted.tokens,
                 positions: (0..plen as i32).collect(),
                 kv: promoted.kv,
-            }),
+            })),
         );
         self.counters.promotions += 1;
 
@@ -526,12 +541,12 @@ impl CacheStore {
             if mb < dense_cost {
                 self.insert_resident(
                     key,
-                    Entry::Mirror(MirrorEntry {
+                    Entry::Mirror(Rc::new(MirrorEntry {
                         master: promoted.key,
                         tokens,
                         positions,
                         diff,
-                    }),
+                    })),
                 );
                 self.counters.rehomed_mirrors += 1;
             } else if dense_cost <= self.capacity_bytes {
@@ -539,7 +554,7 @@ impl CacheStore {
                 // mirror to pay off: keep it dense
                 self.insert_resident(
                     key,
-                    Entry::Dense(DenseEntry { tokens, positions, kv }),
+                    Entry::Dense(Rc::new(DenseEntry { tokens, positions, kv })),
                 );
                 self.counters.rehomed_mirrors += 1;
             } else {
@@ -617,7 +632,7 @@ impl CacheStore {
         }
         self.remove_existing(key);
         self.evict_for(nb, None);
-        self.insert_resident(key, Entry::Dense(entry));
+        self.insert_resident(key, Entry::Dense(Rc::new(entry)));
         #[cfg(debug_assertions)]
         self.assert_invariants();
         Ok(())
@@ -666,7 +681,7 @@ impl CacheStore {
                 self.capacity_bytes
             );
         }
-        self.insert_resident(key, Entry::Mirror(entry));
+        self.insert_resident(key, Entry::Mirror(Rc::new(entry)));
         #[cfg(debug_assertions)]
         self.assert_invariants();
         Ok(())
@@ -676,43 +691,55 @@ impl CacheStore {
         self.entries.contains_key(key)
     }
 
-    /// Fetch an entry. Dense entries come back directly; mirrors come back
-    /// as lazy handles. Reading a mirror touches its Master too, so a
-    /// Master is never LRU-colder than its hottest Mirror.
-    pub fn get(&mut self, key: &StoreKey) -> Option<Fetched<'_>> {
-        let master_key = match self.entries.get(key).map(|r| &r.entry) {
-            None => {
-                self.counters.misses += 1;
-                return None;
-            }
-            Some(Entry::Dense(_)) => None,
-            Some(Entry::Mirror(m)) => Some(m.master),
-        };
+    /// Peek at the class of entry at `key` without touching LRU order or
+    /// the hit/miss counters.
+    pub fn kind(&self, key: &StoreKey) -> Option<EntryKind> {
+        self.entries.get(key).map(|r| match r.entry {
+            Entry::Dense(_) => EntryKind::Dense,
+            Entry::Mirror(_) => EntryKind::Mirror,
+        })
+    }
+
+    /// Fetch an entry. Dense entries come back as shared (`Rc`) payloads —
+    /// zero-copy, no tensor clone — and mirrors as owned lazy handles, so
+    /// the caller can hold many fetches at once (the gather plan does).
+    /// Reading a mirror touches its Master too, so a Master is never
+    /// LRU-colder than its hottest Mirror.
+    pub fn get(&mut self, key: &StoreKey) -> Option<Fetched> {
+        let (fetched, master_key) =
+            match self.entries.get(key).map(|r| &r.entry) {
+                None => {
+                    self.counters.misses += 1;
+                    return None;
+                }
+                Some(Entry::Dense(d)) => (Fetched::Dense(d.clone()), None),
+                Some(Entry::Mirror(m)) => {
+                    let master = match self
+                        .entries
+                        .get(&m.master)
+                        .map(|r| &r.entry)
+                    {
+                        Some(Entry::Dense(d)) => d.clone(),
+                        _ => unreachable!(
+                            "store invariant violated: resident mirror's \
+                             master is missing or not dense"
+                        ),
+                    };
+                    (
+                        Fetched::Mirror(MirrorHandle {
+                            master,
+                            mirror: m.clone(),
+                        }),
+                        Some(m.master),
+                    )
+                }
+            };
         self.counters.hits += 1;
         self.touch(*key);
         if let Some(mk) = master_key {
             self.touch(mk);
         }
-        match master_key {
-            None => match &self.entries.get(key).unwrap().entry {
-                Entry::Dense(d) => Some(Fetched::Dense(d)),
-                Entry::Mirror(_) => unreachable!(),
-            },
-            Some(mk) => {
-                let mirror = match &self.entries.get(key).unwrap().entry {
-                    Entry::Mirror(m) => m,
-                    Entry::Dense(_) => unreachable!(),
-                };
-                let master = match self.entries.get(&mk).map(|r| &r.entry) {
-                    Some(Entry::Dense(d)) => d,
-                    _ => unreachable!(
-                        "store invariant violated: resident mirror's \
-                         master is missing or not dense"
-                    ),
-                };
-                Some(Fetched::Mirror(MirrorHandle { master, mirror }))
-            }
-        }
+        Some(fetched)
     }
 
     /// Token-similarity fallback (paper §4.3): among dense entries of the
@@ -759,14 +786,14 @@ impl CacheStore {
             match &r.entry {
                 Entry::Dense(d) => {
                     st.dense_entries += 1;
-                    st.dense_bytes += dense_bytes(d);
+                    st.dense_bytes += dense_bytes(d.as_ref());
                     if matches!(k.role, Role::AgentCache { .. }) {
-                        st.agent_dense_bytes += dense_bytes(d);
+                        st.agent_dense_bytes += dense_bytes(d.as_ref());
                     }
                 }
                 Entry::Mirror(m) => {
                     st.mirror_entries += 1;
-                    st.mirror_bytes += mirror_bytes(m);
+                    st.mirror_bytes += mirror_bytes(m.as_ref());
                     st.mirror_diff_blocks += m.diff.n_blocks();
                     // dense-equivalent: a full [L, len, d] K+V copy
                     st.mirror_dense_equiv_bytes += m.tokens.len()
@@ -859,9 +886,12 @@ impl CacheStore {
     }
 }
 
-pub enum Fetched<'a> {
-    Dense(&'a DenseEntry),
-    Mirror(MirrorHandle<'a>),
+/// The result of a fetch: shared, owned views (holding one does not
+/// borrow the store, and cloning one never copies tensor data).
+#[derive(Clone)]
+pub enum Fetched {
+    Dense(Rc<DenseEntry>),
+    Mirror(MirrorHandle),
 }
 
 /// Wrap a positionally-aligned BlockSparseDiff into an AlignedDiff with the

@@ -198,6 +198,54 @@ fn prop_scatter_gather_identity() {
 }
 
 // ---------------------------------------------------------------------
+// scratch arena
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_scratch_checkout_is_always_zero() {
+    use tokendance::runtime::KvScratch;
+    forall(60, |rng| {
+        let sp = spec();
+        let mut sc = KvScratch::for_spec(&sp);
+        let mut live: Vec<(KvBuf, usize)> = Vec::new();
+        for _ in 0..rng.range(5, 40) {
+            if rng.f64() < 0.5 || live.is_empty() {
+                let mut buf = sc.checkout();
+                assert!(
+                    buf.k.iter().all(|&x| x == 0.0)
+                        && buf.v.iter().all(|&x| x == 0.0),
+                    "checkout leaked stale rows between checkins"
+                );
+                // dirty a random prefix of rows on both planes
+                let rows = rng.below(sp.max_seq + 1);
+                for l in 0..sp.n_layers {
+                    for s in 0..rows {
+                        let o = buf.off(l, s);
+                        buf.k[o] = 1.0 + s as f32;
+                        buf.v[o + sp.d_model - 1] = -2.0;
+                    }
+                }
+                live.push((buf, rows));
+            } else {
+                let i = rng.below(live.len());
+                let (buf, rows) = live.swap_remove(i);
+                sc.checkin(buf, rows);
+            }
+        }
+        for (buf, rows) in live {
+            sc.checkin(buf, rows);
+        }
+        // drain the pool: every recycled buffer must come back clean
+        let pooled = sc.free_len();
+        for _ in 0..pooled {
+            let buf = sc.checkout();
+            assert!(buf.k.iter().all(|&x| x == 0.0), "stale K in pool");
+            assert!(buf.v.iter().all(|&x| x == 0.0), "stale V in pool");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
 // diff encoding
 // ---------------------------------------------------------------------
 
