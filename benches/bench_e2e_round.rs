@@ -45,7 +45,7 @@ fn main() {
                             .iter()
                             .map(|c| (c.agent, c.generated.clone()))
                             .collect();
-                        session.absorb(&outs);
+                        session.absorb(&outs).unwrap();
                     }
                 });
                 b.report();

@@ -9,12 +9,19 @@
 //! twice: per-agent assembly time stays flat (within 1.5x) across the
 //! sweep, and store lookups per round stop scaling with agent count
 //! while the per-agent path's grow linearly in it.
+//!
+//! A second table sweeps the *sharing topology* at fixed agent count
+//! (full / teams / neighborhood rounds): clustered rounds form one
+//! cohort per sub-team, each with its own gather plan, so lookups scale
+//! with cohorts x distinct-keys-per-cohort instead of collapsing to the
+//! per-agent path.
 
 include!("harness.rs");
 
 use tokendance::engine::{AgentRequest, Engine, Policy};
 use tokendance::serve::RoundSubmission;
 use tokendance::tokenizer::{BlockKind, RoundAwarePrompt};
+use tokendance::workload::{Session, Topology, WorkloadConfig};
 
 const SHARED_BLOCKS: usize = 8;
 const BLOCK_TOKENS: usize = 16;
@@ -138,4 +145,55 @@ fn main() {
         "flatness (gather path): worst per-agent cost / 8-agent cost = \
          {worst:.2}x (target <= 1.5x)"
     );
+
+    println!("\n-- topology sweep (16 agents, 3 rounds, session-driven) --");
+    println!(
+        "{:>16}  {:>6}  {:>10}  {:>8}  {:>11}  {:>9}",
+        "topology", "share", "asm/agent", "cohorts", "lookups/rnd",
+        "dedup/rnd"
+    );
+    const TOPO_AGENTS: usize = 16;
+    for topo in [
+        Topology::Teams { size: 4 },
+        Topology::Neighborhood { k: 2 },
+        Topology::Full,
+    ] {
+        let mut eng = Engine::builder(model)
+            .policy(Policy::TokenDance)
+            .pool_blocks(4096)
+            .runtime(rt.clone())
+            .build()
+            .unwrap();
+        // 16-token outputs keep the all-to-all round inside max_seq
+        let mut cfg =
+            WorkloadConfig::generative_agents(1, TOPO_AGENTS, ROUNDS)
+                .with_topology(topo);
+        cfg.max_new_tokens = 16;
+        let mut session = Session::new(cfg, 0);
+        let mut subrequests = 0usize;
+        while !session.done() {
+            let sub = RoundSubmission::new(session.global_round())
+                .requests(session.next_round());
+            eng.submit_round(sub).unwrap();
+            let done = eng.drain().unwrap();
+            subrequests += done.len();
+            let outs: Vec<(usize, Vec<u32>)> = done
+                .iter()
+                .map(|c| (c.agent, c.generated.clone()))
+                .collect();
+            session.absorb(&outs).unwrap();
+        }
+        let m = &eng.metrics;
+        let rounds = m.assembly_secs.len().max(1) as f64;
+        let asm_total = m.assembly_secs.mean() * m.assembly_secs.len() as f64;
+        println!(
+            "{:>16}  {:>5.0}%  {:>10}  {:>8}  {:>11.1}  {:>9.1}",
+            topo.label(),
+            100.0 * topo.sharing_fraction(TOPO_AGENTS),
+            fmt(asm_total / subrequests.max(1) as f64),
+            m.cohorts_collective,
+            m.assembly_lookups as f64 / rounds,
+            m.assembly_dedup_hits as f64 / rounds,
+        );
+    }
 }

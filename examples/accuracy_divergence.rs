@@ -37,7 +37,7 @@ fn run(rt: Rc<PjrtRuntime>, policy: Policy, rounds: usize)
             .collect();
         outs.sort_by_key(|(a, _)| *a);
         out.push(outs.clone());
-        session.absorb(&outs);
+        session.absorb(&outs)?;
     }
     Ok(out)
 }

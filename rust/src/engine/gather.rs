@@ -1,4 +1,4 @@
-//! Round-level gather planning: resolve-once collective assembly
+//! Cohort-level gather planning: resolve-once collective assembly
 //! (paper §4.2).
 //!
 //! The seed prefill path assembled each agent's composite donor cache
@@ -9,20 +9,29 @@
 //! cost of reusing a shared block is paid once regardless of agent
 //! count."
 //!
-//! [`GatherPlan`] makes that collective step explicit. While one
-//! admitted batch's composites are assembled — the whole round, unless
-//! pool pressure splits admission, in which case each sub-batch gets
-//! its own plan — every distinct [`StoreKey`] is resolved against the
-//! store **exactly once**: one `get`, one mirror materialization, and
-//! the resolved rows (shared `Rc` payloads, no tensor clones) fan out
-//! to every agent that references them. The fan-out memcpys are
-//! inherently per-agent (each composite places the rows at its own
-//! offsets); the key-resolution work is not, and stops scaling with
-//! agent count. Two costs deliberately stay per-request: the
-//! similarity-fallback *election* (`find_similar_master` scans for the
-//! best donor for one cold prompt's tokens; distinct prompts are
-//! distinct queries, so only the elected key's fetch is memoized) and
-//! the fan-out copies themselves.
+//! [`GatherPlan`] makes that collective step explicit. The unit of
+//! planning is the **sharing cohort** (rounds/): each collective cohort
+//! of an admitted batch gets its own plan — the whole batch when the
+//! round is a true All-Gather, one per sub-team under Teams/Neighborhood
+//! topologies — and the batch's singleton-path requests pool into one
+//! further plan of their own (no master sharing, but the lookup memo
+//! survives, so a round landing just under the detector threshold never
+//! pays per-agent store traffic).
+//! (When pool pressure splits a round's admission, each sub-batch is
+//! clustered and planned independently.) Within one plan, every distinct
+//! [`StoreKey`] the cohort references is resolved against the store
+//! **exactly once**: one `get`, one mirror materialization, and the
+//! resolved rows (shared `Rc` payloads, no tensor clones) fan out to
+//! every cohort member that references them. A key referenced by two
+//! *different* cohorts resolves once per cohort — cohorts never share a
+//! memo, so an unrelated cohort's fetches can never alias into this
+//! one's. The fan-out memcpys are inherently per-agent (each composite
+//! places the rows at its own offsets); the key-resolution work is not,
+//! and stops scaling with cohort size. Two costs deliberately stay
+//! per-request: the similarity-fallback *election* (`find_similar_master`
+//! scans for the best donor for one cold prompt's tokens; distinct
+//! prompts are distinct queries, so only the elected key's fetch is
+//! memoized) and the fan-out copies themselves.
 //!
 //! The plan's counters flow into `RunMetrics` (`assembly_lookups`,
 //! `assembly_restores`, `assembly_dedup_hits`) so the once-per-round
@@ -111,14 +120,14 @@ impl GatherPlan {
 }
 
 impl Engine {
-    /// Collective round assembly: resolve every distinct store key once
-    /// through `plan`, then fan the resolved rows out to each agent's
-    /// composite. Produces bitwise-identical `ReuseTask`s to the
-    /// per-agent path ([`Engine::assemble_composite`]); only the store
-    /// traffic differs.
+    /// Collective cohort assembly: resolve every distinct store key the
+    /// cohort references once through `plan`, then fan the resolved rows
+    /// out to each member's composite. Produces bitwise-identical
+    /// `ReuseTask`s (in `batch` order) to the per-agent path
+    /// ([`Engine::assemble_composite`]); only the store traffic differs.
     pub(super) fn assemble_round(
         &mut self,
-        batch: &[Pending],
+        batch: &[&Pending],
         plan: &mut GatherPlan,
     ) -> Result<Vec<(ReuseTask, usize)>> {
         let spec = self.spec.clone();

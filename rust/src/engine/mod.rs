@@ -183,6 +183,11 @@ struct Running {
     /// Check-layer deviation from reuse (f64::MAX when not on a PIC path)
     /// — Master election input for round-end Mirror encoding.
     deviation: f64,
+    /// Sharing-cohort id assigned at prefill (engine-unique). Round-end
+    /// Master-Mirror encoding is keyed by it: mirrors only ever diff
+    /// against their own cohort's master. 0 on the non-PIC paths, which
+    /// never stage caches for encoding.
+    cohort: u64,
     retain: bool,
 }
 
@@ -197,9 +202,12 @@ struct AgentState {
 }
 
 /// A completed cache staged for round-end Master-Mirror encoding
-/// (TokenDance policy only).
+/// (TokenDance policy only). Encoding elects one Master *per cohort*:
+/// caches from different sharing cohorts never diff against each other.
 struct StagedCache {
     agent: usize,
+    /// Sharing-cohort id the request was prefilled under.
+    cohort: u64,
     tokens: Vec<u32>,
     /// Prompt segments (for segment-identity block alignment at encode).
     segments: Vec<crate::rounds::Segment>,
@@ -244,6 +252,9 @@ pub struct Engine {
     /// each closing round reports).
     store_mark: StoreCounters,
     next_id: u64,
+    /// Next sharing-cohort id (engine-unique, never reused; cohort ids
+    /// are assigned per admitted batch at prefill).
+    next_cohort: u64,
     started: Instant,
 }
 
@@ -280,8 +291,16 @@ impl Engine {
             metrics: RunMetrics::default(),
             store_mark: StoreCounters::default(),
             next_id: 0,
+            next_cohort: 1, // 0 is reserved for the non-PIC paths
             started: Instant::now(),
         })
+    }
+
+    /// Allocate a fresh sharing-cohort id.
+    pub(crate) fn alloc_cohort(&mut self) -> u64 {
+        let c = self.next_cohort;
+        self.next_cohort += 1;
+        c
     }
 
     pub fn spec(&self) -> &ModelSpec {

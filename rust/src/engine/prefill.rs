@@ -15,6 +15,7 @@
 //! slots. PIC paths are approximate only at reused-but-unselected
 //! positions, exactly as CacheBlend is.
 
+use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -24,7 +25,7 @@ use super::gather::GatherPlan;
 use super::{Completion, Engine, Pending, Policy, Running, StagedCache};
 use crate::collector::{run_reuse, selective_chunked, CollectorConfig, ReuseTask};
 use crate::restore::materialize_mirror;
-use crate::rounds::{detect_pattern, PatternVerdict};
+use crate::rounds::{detect_pattern, CohortPartition};
 use crate::runtime::{argmax, KvBuf};
 use crate::store::{
     diff_blocks_tol, extract_blocks, gather_permuted_master,
@@ -67,21 +68,23 @@ impl Engine {
                 }
             }
             Policy::CacheBlendFull => {
+                // per-request PIC: every request is its own singleton
+                // cohort (no collective grouping — the paper's baseline)
                 for p in batch {
-                    let r = self.pic_path(vec![p], false)?;
+                    let r = self
+                        .pic_path(vec![p], CohortPartition::singletons(1))?;
                     self.running.extend(r);
                 }
             }
             Policy::TokenDance => {
-                // round detection gates the collective path; independent
-                // traffic falls back to per-request processing
+                // cohort clustering gates the collective path: each
+                // sharing cohort gets its own gather plan, collector
+                // pass, and round-end master; singleton cohorts fall
+                // back to per-request processing
                 let segs: Vec<&crate::rounds::SegmentedPrompt> =
                     batch.iter().map(|p| &p.seg).collect();
-                let collective = matches!(
-                    detect_pattern(&segs, &self.cfg.detector),
-                    PatternVerdict::AllGather { .. }
-                ) && self.cfg.collector.collective;
-                let r = self.pic_path(batch, collective)?;
+                let partition = detect_pattern(&segs, &self.cfg.detector);
+                let r = self.pic_path(batch, partition)?;
                 self.running.extend(r);
             }
         }
@@ -156,6 +159,7 @@ impl Engine {
             generated: Vec::new(),
             seg: p.seg,
             deviation: f64::MAX,
+            cohort: 0,
             retain: p.req.retain,
         })
     }
@@ -215,6 +219,7 @@ impl Engine {
             generated: Vec::new(),
             seg: p.seg,
             deviation: f64::MAX,
+            cohort: 0,
             retain: p.req.retain,
         })
     }
@@ -249,75 +254,167 @@ impl Engine {
     // PIC paths (CacheBlend full + TokenDance)
     // -----------------------------------------------------------------
 
-    fn pic_path(&mut self, batch: Vec<Pending>, collective: bool)
+    /// PIC prefill over one admitted batch, structured by its sharing
+    /// cohorts: each collective cohort (>= `DetectorConfig::min_cohort`
+    /// members) is assembled through its own [`GatherPlan`] — the
+    /// cohort's distinct store keys resolve exactly once — run through
+    /// one collector pass, and tagged with a fresh cohort id that keys
+    /// its round-end Master-Mirror encoding. Sub-threshold cohorts
+    /// dissolve into singletons: no shared master, serial collector,
+    /// but still one pooled lookup plan (see the assembly comment
+    /// below). Cohort scope is the admitted batch: when pool pressure
+    /// splits a round's admission, each sub-batch is clustered (and
+    /// mastered) independently, exactly like the gather plan before it.
+    fn pic_path(&mut self, batch: Vec<Pending>, partition: CohortPartition)
         -> Result<Vec<Running>>
     {
         let model = self.cfg.model.clone();
-        let mut tasks: Vec<ReuseTask> = Vec::new();
-        let mut reuse_idx: Vec<usize> = Vec::new();
-        let mut cold: Vec<usize> = Vec::new();
-        let mut reused_tokens: Vec<usize> = vec![0; batch.len()];
+        let min = self.cfg.detector.min_cohort();
 
-        // composite assembly: the gather plan resolves every distinct
-        // store key once for the whole round (the collective step); the
-        // per-agent path is the seed baseline, kept for equivalence tests
-        // and the bench's "before" arm
-        let t0 = Instant::now();
-        let assembled: Vec<(ReuseTask, usize)> = if self.cfg.gather_plan {
-            let mut plan = GatherPlan::default();
-            let out = self.assemble_round(&batch, &mut plan)?;
-            self.metrics.assembly_lookups += plan.lookups;
-            self.metrics.assembly_restores += plan.restores;
-            self.metrics.assembly_dedup_hits += plan.dedup_hits;
-            self.metrics.restores += plan.restores;
-            for s in plan.restore_secs.drain(..) {
-                self.metrics.restore_secs.push(s);
-            }
-            out
-        } else {
-            let mut out = Vec::with_capacity(batch.len());
-            for p in &batch {
-                out.push(self.assemble_composite(p)?);
-            }
-            out
-        };
-        self.metrics.assembly_secs.push(t0.elapsed().as_secs_f64());
-
-        for (i, (task, reused)) in assembled.into_iter().enumerate() {
-            reused_tokens[i] = reused;
-            if reused == 0 {
-                // nothing reused: the composite never reaches the
-                // collector — recycle it now
-                self.scratch.checkin(task.kv, task.valid_len);
-                cold.push(i);
+        // cohort routing: (cohort id, member indices, collective?)
+        let mut groups: Vec<(u64, Vec<usize>, bool)> = Vec::new();
+        for c in &partition.cohorts {
+            if c.members.len() >= min {
+                groups.push((self.alloc_cohort(), c.members.clone(), true));
+                self.metrics.cohorts_collective += 1;
             } else {
-                reuse_idx.push(i);
-                tasks.push(task);
+                for &m in &c.members {
+                    groups.push((self.alloc_cohort(), vec![m], false));
+                    self.metrics.cohorts_singleton += 1;
+                }
             }
         }
+        let mut cohort_of: Vec<u64> = vec![0; batch.len()];
+        for (id, members, _) in &groups {
+            for &m in members {
+                cohort_of[m] = *id;
+            }
+        }
+
+        // composite assembly: one gather plan per collective cohort
+        // (each cohort's distinct keys resolve once; unrelated cohorts
+        // never share a memo). Singleton-path requests lose *collective*
+        // treatment (no shared master, serial collector) but keep the
+        // batch-level lookup memo through one pooled plan of their own —
+        // otherwise a round landing just under the overlap threshold
+        // would pay N store lookups per shared key, a cliff PR 3's
+        // resolve-once guarantee removed. The true per-agent path for
+        // everything is the seed baseline, kept behind
+        // `gather_plan = false` for equivalence tests and the bench's
+        // "before" arm.
+        let t0 = Instant::now();
+        let mut assembled: Vec<Option<(ReuseTask, usize)>> =
+            (0..batch.len()).map(|_| None).collect();
+        let plan_group = |eng: &mut Self,
+                              members: &[usize],
+                              assembled: &mut Vec<Option<(ReuseTask, usize)>>|
+         -> Result<()> {
+            let refs: Vec<&Pending> =
+                members.iter().map(|&m| &batch[m]).collect();
+            let mut plan = GatherPlan::default();
+            let out = eng.assemble_round(&refs, &mut plan)?;
+            eng.metrics.assembly_lookups += plan.lookups;
+            eng.metrics.assembly_restores += plan.restores;
+            eng.metrics.assembly_dedup_hits += plan.dedup_hits;
+            eng.metrics.restores += plan.restores;
+            for s in plan.restore_secs.drain(..) {
+                eng.metrics.restore_secs.push(s);
+            }
+            for (&m, t) in members.iter().zip(out) {
+                assembled[m] = Some(t);
+            }
+            Ok(())
+        };
+        if self.cfg.gather_plan {
+            let mut singles: Vec<usize> = Vec::new();
+            for (_, members, collective) in &groups {
+                if *collective {
+                    plan_group(self, members, &mut assembled)?;
+                } else {
+                    singles.extend(members.iter().copied());
+                }
+            }
+            if !singles.is_empty() {
+                singles.sort_unstable();
+                plan_group(self, &singles, &mut assembled)?;
+            }
+        } else {
+            for (_, members, _) in &groups {
+                for &m in members {
+                    assembled[m] =
+                        Some(self.assemble_composite(&batch[m])?);
+                }
+            }
+        }
+        self.metrics.assembly_secs.push(t0.elapsed().as_secs_f64());
+
+        // classify per cohort: cold requests (nothing reused) skip the
+        // collector; reuse tasks run one collective pass per cohort.
+        // Singleton-path tasks pool into a single *serial* pass — the
+        // serial collector processes each task independently, so this is
+        // identical to per-task calls.
+        let mut reused_tokens: Vec<usize> = vec![0; batch.len()];
+        let mut cold: Vec<usize> = Vec::new();
+        let mut passes: Vec<(bool, Vec<usize>, Vec<ReuseTask>)> =
+            Vec::new();
+        let mut serial_idx: Vec<usize> = Vec::new();
+        let mut serial_tasks: Vec<ReuseTask> = Vec::new();
+        for (_, members, collective) in &groups {
+            let mut idxs = Vec::new();
+            let mut tasks = Vec::new();
+            for &m in members {
+                let (task, reused) = assembled[m].take().unwrap();
+                reused_tokens[m] = reused;
+                if reused == 0 {
+                    // nothing reused: the composite never reaches the
+                    // collector — recycle it now
+                    self.scratch.checkin(task.kv, task.valid_len);
+                    cold.push(m);
+                } else if *collective {
+                    idxs.push(m);
+                    tasks.push(task);
+                } else {
+                    serial_idx.push(m);
+                    serial_tasks.push(task);
+                }
+            }
+            if !tasks.is_empty() {
+                passes.push((true, idxs, tasks));
+            }
+        }
+        if !serial_tasks.is_empty() {
+            passes.push((false, serial_idx, serial_tasks));
+        }
+        cold.sort_unstable();
 
         let mut outputs: Vec<Option<(KvBuf, Vec<f32>, f64)>> =
             (0..batch.len()).map(|_| None).collect();
 
-        if !tasks.is_empty() {
+        if !passes.is_empty() {
             let t0 = Instant::now();
-            let cfg = CollectorConfig {
-                collective,
-                importance: self.cfg.collector.importance.clone(),
-            };
-            let (results, _plan) =
-                run_reuse(self.rt.as_ref(), &model, &tasks, &cfg)?;
-            self.metrics.reuse_secs.push(t0.elapsed().as_secs_f64());
-            for (ri, res) in reuse_idx.iter().zip(results) {
-                if let Some(t) = self.metrics.request_mut(batch[*ri].id) {
-                    t.recomputed_tokens = res.recomputed;
+            for (collective, idxs, tasks) in passes {
+                let cfg = CollectorConfig {
+                    collective: collective
+                        && self.cfg.collector.collective,
+                    importance: self.cfg.collector.importance.clone(),
+                };
+                let (results, _plan) =
+                    run_reuse(self.rt.as_ref(), &model, &tasks, &cfg)?;
+                for (ri, res) in idxs.iter().zip(results) {
+                    if let Some(t) =
+                        self.metrics.request_mut(batch[*ri].id)
+                    {
+                        t.recomputed_tokens = res.recomputed;
+                    }
+                    outputs[*ri] =
+                        Some((res.kv, res.logits, res.deviation));
                 }
-                outputs[*ri] = Some((res.kv, res.logits, res.deviation));
+                // composite donors are dead after the reuse pass: recycle
+                for task in tasks {
+                    self.scratch.checkin(task.kv, task.valid_len);
+                }
             }
-            // composite donors are dead after the reuse pass: recycle
-            for task in tasks {
-                self.scratch.checkin(task.kv, task.valid_len);
-            }
+            self.metrics.reuse_secs.push(t0.elapsed().as_secs_f64());
         }
         for ci in cold {
             let p = &batch[ci];
@@ -355,6 +452,7 @@ impl Engine {
                 generated: Vec::new(),
                 seg: p.seg,
                 deviation,
+                cohort: cohort_of[i],
                 retain: p.req.retain,
             });
         }
@@ -384,7 +482,10 @@ impl Engine {
 
         let spec = self.spec.clone();
         let s = spec.max_seq;
-        let mut kv = KvBuf::for_spec(&spec);
+        // recycled zeroed buffer — identical content to a fresh
+        // KvBuf::for_spec (the bitwise-equivalence tests depend on that),
+        // but singleton-cohort traffic no longer allocates per request
+        let mut kv = self.scratch.checkout();
         let mut old_pos: Vec<i32> = (0..s as i32).collect();
         let mut valid = vec![0u8; s];
         let mut reused = 0usize;
@@ -683,10 +784,12 @@ impl Engine {
                 self.pool.release(&r.table);
             }
             Policy::TokenDance => {
-                // stage for round-end Master-Mirror encoding
+                // stage for round-end Master-Mirror encoding (keyed by
+                // sharing cohort: each cohort elects its own master)
                 self.round_staging.entry(r.round).or_default().push(
                     StagedCache {
                         agent: r.agent,
+                        cohort: r.cohort,
                         tokens: r.tokens.clone(),
                         segments: r.seg.segments.clone(),
                         kv: r.kv.extract_rows(0, full_len),
@@ -756,20 +859,20 @@ impl Engine {
         Ok(())
     }
 
-    /// Dense retention fallback shared by every encode-round path that
-    /// cannot (or should not) mirror a staged cache: store it dense under
-    /// its per-round key, updating the agent's retention pointer only on
-    /// success (a rejected oversize cache keeps the previous pointer).
+    /// Dense retention fallback shared by every encode path that cannot
+    /// (or should not) mirror a staged cache: store it dense under its
+    /// salted per-round key, updating the agent's retention pointer only
+    /// on success (a rejected oversize cache keeps the previous pointer).
     fn retain_dense(
         &mut self,
-        round: usize,
+        salt: u64,
         agent: usize,
         tokens: Vec<u32>,
         kv: KvBuf,
     ) {
         let len = kv.seq;
         let key = crate::store::StoreKey {
-            content: crate::util::fnv1a_tokens(&tokens) ^ (round as u64),
+            content: crate::util::fnv1a_tokens(&tokens) ^ salt,
             role: crate::store::Role::AgentCache { agent },
         };
         if self
@@ -788,19 +891,48 @@ impl Engine {
         }
     }
 
-    /// Round-end Master-Mirror encoding (paper §4.3): elect the Master
-    /// (lowest reuse deviation; ties broken by longest context), store it
-    /// dense, and encode every sibling as a block-sparse diff against it.
-    /// Returns the store bytes of the mirrors inserted for this round
-    /// (measured per entry, so concurrent store eviction cannot skew it).
+    /// Round-end Master-Mirror encoding (paper §4.3), per sharing
+    /// cohort: the round's staged caches are grouped by the cohort id
+    /// they prefilled under, and each cohort elects its own Master —
+    /// mirrors never diff against an unrelated cohort's master (a
+    /// Neighborhood or Teams round produces one master *per cohort*, and
+    /// singleton-cohort caches are simply retained dense). Returns the
+    /// store bytes of the mirrors inserted for this round (measured per
+    /// entry, so concurrent store eviction cannot skew it).
     fn encode_round(&mut self, round: usize) -> Result<usize> {
         let mut mirror_bytes = 0usize;
-        let Some(mut staged) = self.round_staging.remove(&round) else {
+        let Some(staged) = self.round_staging.remove(&round) else {
             return Ok(mirror_bytes);
         };
+        // group by cohort; BTreeMap keeps the encode order deterministic
+        let mut by_cohort: BTreeMap<u64, Vec<StagedCache>> =
+            BTreeMap::new();
+        for s in staged {
+            by_cohort.entry(s.cohort).or_default().push(s);
+        }
+        for (cohort, group) in by_cohort {
+            mirror_bytes += self.encode_cohort(round, cohort, group)?;
+        }
+        Ok(mirror_bytes)
+    }
+
+    /// Elect one cohort's Master (lowest reuse deviation; ties broken by
+    /// longest context), store it dense, and encode every sibling as a
+    /// block-sparse diff against it. Store keys are salted with (round,
+    /// cohort) so two cohorts retaining identical token streams in the
+    /// same round can never collide onto one key.
+    fn encode_cohort(
+        &mut self,
+        round: usize,
+        cohort: u64,
+        mut staged: Vec<StagedCache>,
+    ) -> Result<usize> {
+        let mut mirror_bytes = 0usize;
         if staged.is_empty() {
             return Ok(mirror_bytes);
         }
+        let salt = (round as u64)
+            ^ cohort.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let spec = self.spec.clone();
         // elect: min deviation, tie-break longer context
         let mut master_i = 0usize;
@@ -814,8 +946,7 @@ impl Engine {
         }
         let master = staged.swap_remove(master_i);
         let master_key = crate::store::StoreKey {
-            content: crate::util::fnv1a_tokens(&master.tokens)
-                ^ (round as u64),
+            content: crate::util::fnv1a_tokens(&master.tokens) ^ salt,
             role: crate::store::Role::AgentCache { agent: master.agent },
         };
         // padded master for diffing (recycled scratch buffer)
@@ -838,11 +969,11 @@ impl Engine {
                 Some(master_key);
         } else {
             // the elected master itself does not fit the store: no family
-            // encoding is possible this round — retain each sibling dense
-            // best-effort and keep previous pointers where even that fails
+            // encoding is possible for this cohort — retain each sibling
+            // dense best-effort, keep previous pointers where that fails
             self.scratch.checkin(master_padded, master_len);
             for s in staged {
-                self.retain_dense(round, s.agent, s.tokens, s.kv);
+                self.retain_dense(salt, s.agent, s.tokens, s.kv);
             }
             return Ok(0);
         }
@@ -869,7 +1000,7 @@ impl Engine {
             // whole cache would be one big correction; store dense without
             // paying two rope passes or a padding buffer (§Perf)
             if src_block.iter().all(|&b| b < 0) {
-                self.retain_dense(round, s.agent, s.tokens, s.kv);
+                self.retain_dense(salt, s.agent, s.tokens, s.kv);
                 continue;
             }
             let mut padded = self.scratch.checkout();
@@ -906,8 +1037,7 @@ impl Engine {
             self.scratch.checkin(expected, spec.max_seq);
 
             let key = crate::store::StoreKey {
-                content: crate::util::fnv1a_tokens(&s.tokens)
-                    ^ (round as u64),
+                content: crate::util::fnv1a_tokens(&s.tokens) ^ salt,
                 role: crate::store::Role::AgentCache { agent: s.agent },
             };
             let used_blocks = len.div_ceil(bt);
@@ -922,7 +1052,7 @@ impl Engine {
                 // "if requests diverge more strongly ... the storage
                 // benefit diminishes")
                 self.scratch.checkin(padded, len);
-                self.retain_dense(round, s.agent, s.tokens, s.kv);
+                self.retain_dense(salt, s.agent, s.tokens, s.kv);
                 continue;
             }
             // correction values must live in the *source* frame so the
@@ -967,7 +1097,7 @@ impl Engine {
                 // master, or the master was evicted by an intervening
                 // sibling insert): dense retention keeps the cache usable
                 Err(_) => {
-                    self.retain_dense(round, s.agent, s.tokens, s.kv);
+                    self.retain_dense(salt, s.agent, s.tokens, s.kv);
                 }
             }
         }

@@ -87,7 +87,12 @@ fn run_rounds(
         }
         shared.sort_by_key(|(a, _)| *a);
         for a in 0..n_agents {
-            histories[a].push(format!("r{round} out: {:?}", outs[a]));
+            // short digest lines (like Session::absorb): long debug dumps
+            // would dilute the shared fraction below the cohort threshold
+            histories[a].push(format!(
+                "r{round} a{a}: {:04x}",
+                crate::util::fnv1a_tokens(&outs[a]) & 0xFFFF
+            ));
         }
         all_outputs.push(outs);
     }
@@ -509,8 +514,9 @@ fn gather_plan_assembly_is_bitwise_identical_to_per_agent() {
     };
     let pa = mk_pending(&a);
     let pb = mk_pending(&b);
+    let pa_refs: Vec<&Pending> = pa.iter().collect();
     let mut plan = GatherPlan::default();
-    let planned = a.assemble_round(&pa, &mut plan).unwrap();
+    let planned = a.assemble_round(&pa_refs, &mut plan).unwrap();
     let legacy: Vec<_> = pb
         .iter()
         .map(|p| b.assemble_composite(p).unwrap())
@@ -706,5 +712,326 @@ fn rejects_oversize_prompts() {
         },
     ));
     assert!(err.is_err());
+}
+
+// ---------------------------------------------------------------------
+// sharing cohorts
+// ---------------------------------------------------------------------
+
+/// One deterministic 16-token content block.
+fn content_block(seed: u32) -> Vec<u32> {
+    (0..16u32).map(|t| 4 + (seed * 31 + t * 7) % 200).collect()
+}
+
+fn seed_segment_donor(eng: &mut Engine, toks: &[u32]) {
+    let kv = eng
+        .rt
+        .prefill(MODEL, toks, toks.len())
+        .unwrap()
+        .kv
+        .extract_rows(0, toks.len());
+    eng.store_mut()
+        .put_dense(
+            Engine::segment_key(toks),
+            crate::store::DenseEntry {
+                tokens: toks.to_vec(),
+                positions: (0..toks.len() as i32).collect(),
+                kv,
+            },
+        )
+        .unwrap();
+}
+
+#[test]
+fn teams_round_resolves_each_shared_segment_once_per_cohort() {
+    // the acceptance criterion: a Teams{size:4} shaped 32-agent round
+    // forms 8 cohorts, and store lookups per distinct shared segment are
+    // exactly 1 *per cohort* — the broadcast segment every team carries
+    // resolves once per team (8 total), never once per agent (32)
+    const TEAM: usize = 4;
+    const AGENTS: usize = 32;
+    const TEAMS: usize = AGENTS / TEAM;
+    let mut eng = engine(Policy::TokenDance, 4096);
+    let broadcast = content_block(9_999);
+    let team_blocks: Vec<Vec<Vec<u32>>> = (0..TEAMS)
+        .map(|t| {
+            (0..TEAM)
+                .map(|i| content_block((t * TEAM + i) as u32))
+                .collect()
+        })
+        .collect();
+    for team in &team_blocks {
+        for b in team {
+            seed_segment_donor(&mut eng, b);
+        }
+    }
+    seed_segment_donor(&mut eng, &broadcast);
+    let before = eng.store().counters();
+    assert_eq!(eng.metrics.assembly_lookups, 0);
+
+    let mut sub = RoundSubmission::new(0);
+    for a in 0..AGENTS {
+        let team = a / TEAM;
+        let mut p = RoundAwarePrompt::new();
+        for i in 0..TEAM {
+            let producer = (i + a) % TEAM; // rotate within the team
+            p.push(
+                BlockKind::SharedOutput { producer, round: 0 },
+                team_blocks[team][producer].clone(),
+            );
+        }
+        // the global broadcast segment: 16 of 80 tokens (0.2 overlap
+        // across teams, under the 0.3 threshold — teams stay separate)
+        p.push(
+            BlockKind::SharedOutput { producer: AGENTS, round: 0 },
+            broadcast.clone(),
+        );
+        sub.push(AgentRequest {
+            agent: a,
+            round: 0,
+            prompt: p,
+            max_new_tokens: 4,
+            retain: false,
+        });
+    }
+    eng.submit_round(sub).unwrap();
+    eng.drain().unwrap();
+
+    assert_eq!(eng.metrics.cohorts_collective, TEAMS as u64);
+    assert_eq!(eng.metrics.cohorts_singleton, 0);
+    // 5 distinct shared segments per cohort (4 team blocks + broadcast),
+    // each resolved exactly once per cohort
+    assert_eq!(
+        eng.metrics.assembly_lookups,
+        (TEAMS * (TEAM + 1)) as u64,
+        "one lookup per distinct segment per cohort"
+    );
+    // every other reference served by the cohort's memo
+    assert_eq!(
+        eng.metrics.assembly_dedup_hits,
+        (AGENTS * (TEAM + 1) - TEAMS * (TEAM + 1)) as u64
+    );
+    // the store itself saw exactly that many gets
+    let after = eng.store().counters();
+    assert_eq!(
+        (after.hits + after.misses) - (before.hits + before.misses),
+        (TEAMS * (TEAM + 1)) as u64
+    );
+    assert!(
+        eng.metrics.reuse_fraction() > 0.9,
+        "team + broadcast blocks actually reused"
+    );
+}
+
+#[test]
+fn mixed_round_routes_cohorts_collective_and_singleton_pooled() {
+    // 2 cohorts of 2 + 1 singleton in one admitted batch: the cohorts
+    // get their own gather plans (each shared key resolves once per
+    // cohort); the singleton gets no collective treatment but resolves
+    // through the batch's pooled singleton plan
+    let mut eng = engine(Policy::TokenDance, 512);
+    let alpha = content_block(1);
+    let beta = content_block(2);
+    let mk = |agent: usize, shared: Option<&Vec<u32>>| {
+        let mut p = RoundAwarePrompt::new();
+        p.push(
+            BlockKind::PrivateHistory,
+            content_block(100 + agent as u32),
+        );
+        if let Some(s) = shared {
+            p.push(
+                BlockKind::SharedOutput { producer: agent, round: 0 },
+                s.clone(),
+            );
+        }
+        AgentRequest {
+            agent,
+            round: 0,
+            prompt: p,
+            max_new_tokens: 4,
+            retain: false,
+        }
+    };
+    // order interleaved on purpose: cohorts are index sets, not ranges
+    let sub = RoundSubmission::new(0)
+        .request(mk(0, Some(&alpha)))
+        .request(mk(1, Some(&beta)))
+        .request(mk(2, None))
+        .request(mk(3, Some(&alpha)))
+        .request(mk(4, Some(&beta)));
+    eng.submit_round(sub).unwrap();
+    let done = eng.drain().unwrap();
+    assert_eq!(done.len(), 5);
+
+    assert_eq!(eng.metrics.cohorts_collective, 2, "alpha + beta cohorts");
+    assert_eq!(eng.metrics.cohorts_singleton, 1, "the private-only agent");
+    // per cohort: 2 distinct private segments + the shared block = 3
+    // lookups, and the shared block's second reference is memoized; the
+    // singleton probes its private segment once through the pooled
+    // singleton plan (no collective treatment, but the memo survives)
+    assert_eq!(eng.metrics.assembly_lookups, 3 + 3 + 1);
+    assert_eq!(eng.metrics.assembly_dedup_hits, 2);
+}
+
+#[test]
+fn cohort_masters_never_cross_cohorts() {
+    // Teams-shaped retention: mirrors must reference a master from their
+    // own team's cohort, never another team's. Round 0 (private-only
+    // prompts) extracts each agent's output block as a segment donor;
+    // round 1 shares those outputs within teams, so siblings' staged
+    // caches agree at donated rows and mirror-encode per cohort.
+    const TEAM: usize = 4;
+    const AGENTS: usize = 8;
+    let mut eng = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(1024)
+        .recompute_frac(0.05)
+        .min_recompute(1)
+        .mock()
+        .build()
+        .unwrap();
+    let mut sub = RoundSubmission::new(0);
+    for a in 0..AGENTS {
+        let mut p = RoundAwarePrompt::new();
+        p.push(
+            BlockKind::PrivateHistory,
+            content_block(900 + a as u32),
+        );
+        sub.push(AgentRequest {
+            agent: a,
+            round: 0,
+            prompt: p,
+            max_new_tokens: 32,
+            retain: true,
+        });
+    }
+    eng.submit_round(sub).unwrap();
+    let mut outs: Vec<(usize, Vec<u32>)> = eng
+        .drain()
+        .unwrap()
+        .iter()
+        .map(|c| (c.agent, c.generated.clone()))
+        .collect();
+    outs.sort_by_key(|(a, _)| *a);
+    assert_eq!(eng.metrics.cohorts_singleton, AGENTS as u64);
+    assert_eq!(eng.metrics.cohorts_collective, 0);
+
+    // round 1: each agent shares its *team's* round-0 outputs
+    let mut sub = RoundSubmission::new(1);
+    for a in 0..AGENTS {
+        let team = a / TEAM;
+        let mut p = RoundAwarePrompt::new();
+        p.push(
+            BlockKind::PrivateHistory,
+            content_block(900 + a as u32),
+        );
+        for t in team * TEAM..(team + 1) * TEAM {
+            p.push(
+                BlockKind::SharedOutput { producer: t, round: 1 },
+                outs[t].1.clone(),
+            );
+        }
+        sub.push(AgentRequest {
+            agent: a,
+            round: 1,
+            prompt: p,
+            max_new_tokens: 32,
+            retain: true,
+        });
+    }
+    eng.submit_round(sub).unwrap();
+    eng.drain().unwrap();
+
+    assert_eq!(eng.metrics.cohorts_collective, 2, "one cohort per team");
+    let mut mirrors = 0;
+    for a in 0..AGENTS {
+        let key = eng.agent_store_key(a).expect("retention kept");
+        if let Some(Fetched::Mirror(h)) = eng.store_mut().get(&key) {
+            mirrors += 1;
+            let crate::store::Role::AgentCache { agent: master_agent } =
+                h.mirror.master.role
+            else {
+                panic!("master of an agent cache must be an agent cache");
+            };
+            assert_eq!(
+                master_agent / TEAM,
+                a / TEAM,
+                "agent {a}'s mirror diffs against another team's master"
+            );
+        }
+    }
+    assert!(mirrors >= 2, "premise: teams actually encoded mirrors");
+}
+
+#[test]
+fn full_topology_round_is_one_cohort_equal_to_pre_cohort_plan() {
+    use super::gather::GatherPlan;
+    use crate::rounds::detect_pattern;
+    use crate::workload::{Session, Topology, WorkloadConfig};
+
+    let mk = || engine(Policy::TokenDance, 512);
+    let mut a = mk();
+    let mut b = mk();
+    let cfg = WorkloadConfig::generative_agents(1, 4, 2)
+        .with_topology(Topology::Full);
+    let mut sa = Session::new(cfg.clone(), 0);
+    let mut sb = Session::new(cfg, 0);
+    let warm = |eng: &mut Engine, s: &mut Session| {
+        let sub = RoundSubmission::new(s.global_round())
+            .requests(s.next_round());
+        eng.submit_round(sub).unwrap();
+        let outs: Vec<(usize, Vec<u32>)> = eng
+            .drain()
+            .unwrap()
+            .iter()
+            .map(|c| (c.agent, c.generated.clone()))
+            .collect();
+        s.absorb(&outs).unwrap();
+    };
+    warm(&mut a, &mut sa);
+    warm(&mut b, &mut sb);
+
+    let reqs_a = sa.next_round();
+    let reqs_b = sb.next_round();
+    let mk_pending = |eng: &Engine, reqs: &[AgentRequest]| -> Vec<Pending> {
+        reqs.iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let (tokens, seg) = eng.prepare(r).unwrap();
+                Pending { id: 100 + i as u64, req: r.clone(), tokens, seg }
+            })
+            .collect()
+    };
+    let pa = mk_pending(&a, &reqs_a);
+    let pb = mk_pending(&b, &reqs_b);
+
+    // Topology::Full always yields exactly one cohort spanning the round
+    let segs: Vec<&crate::rounds::SegmentedPrompt> =
+        pa.iter().map(|p| &p.seg).collect();
+    let part = detect_pattern(&segs, &a.cfg.detector);
+    assert!(part.is_all_gather(&a.cfg.detector));
+    assert_eq!(part.cohorts[0].members, vec![0, 1, 2, 3]);
+
+    // cohort-ordered assembly == the pre-cohort whole-batch GatherPlan,
+    // bitwise (ReuseTasks and plan traffic)
+    let cohort: Vec<&Pending> =
+        part.cohorts[0].members.iter().map(|&m| &pa[m]).collect();
+    let mut plan_a = GatherPlan::default();
+    let out_a = a.assemble_round(&cohort, &mut plan_a).unwrap();
+    let whole: Vec<&Pending> = pb.iter().collect();
+    let mut plan_b = GatherPlan::default();
+    let out_b = b.assemble_round(&whole, &mut plan_b).unwrap();
+    assert_eq!(out_a.len(), out_b.len());
+    for ((ta, ra), (tb, rb)) in out_a.iter().zip(&out_b) {
+        assert_eq!(ra, rb, "reused counts match");
+        assert_eq!(ta.id, tb.id);
+        assert_eq!(ta.tokens, tb.tokens);
+        assert_eq!(ta.old_pos, tb.old_pos);
+        assert_eq!(ta.valid, tb.valid);
+        assert_eq!(ta.kv, tb.kv, "bitwise-equal composites");
+    }
+    assert_eq!(plan_a.lookups, plan_b.lookups);
+    assert_eq!(plan_a.dedup_hits, plan_b.dedup_hits);
+    assert!(plan_a.dedup_hits > 0, "shared keys were actually memoized");
 }
 

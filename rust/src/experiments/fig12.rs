@@ -47,7 +47,7 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
                 .iter()
                 .map(|c| (c.agent, c.generated.clone()))
                 .collect();
-            session.absorb(&outs);
+            session.absorb(&outs)?;
         }
         let st = eng.store().stats();
         let ratio = st.family_compression_ratio();

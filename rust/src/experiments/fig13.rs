@@ -50,7 +50,7 @@ fn restore_latency(
             .iter()
             .map(|c| (c.agent, c.generated.clone()))
             .collect();
-        session.absorb(&outs);
+        session.absorb(&outs)?;
         let spacing = agents as f64 / qps;
         let elapsed = now.elapsed().as_secs_f64();
         if !session.done() && elapsed < spacing {

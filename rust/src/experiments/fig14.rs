@@ -32,7 +32,7 @@ fn run_scenario(
             .collect();
         outs.sort_by_key(|(a, _)| *a);
         rounds.push(outs.clone());
-        session.absorb(&outs);
+        session.absorb(&outs)?;
     }
     Ok(rounds)
 }

@@ -108,7 +108,7 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
                 caches.push((a, tokens, kv));
             }
         }
-        session.absorb(&outs);
+        session.absorb(&outs)?;
     }
 
     let mut rows = Vec::new();

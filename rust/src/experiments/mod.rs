@@ -12,6 +12,9 @@
 //! | [`fig14`] | rounds before greedy divergence (8 scenarios) |
 //! | [`pressure`] | (beyond the paper) compression + hit rate + master
 //!   re-elections with the store capacity swept below the working set |
+//! | [`topology`] | (beyond the paper) reuse hit rate + per-agent
+//!   assembly time as the sharing fraction varies (Full / Neighborhood /
+//!   Teams cohort topologies) |
 
 pub mod common;
 pub mod fig10;
@@ -22,5 +25,6 @@ pub mod fig14;
 pub mod fig2;
 pub mod fig3;
 pub mod pressure;
+pub mod topology;
 
 pub use common::ExpContext;

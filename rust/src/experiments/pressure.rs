@@ -69,7 +69,7 @@ fn run_once(
             .iter()
             .map(|c| (c.agent, c.generated.clone()))
             .collect();
-        session.absorb(&outs);
+        session.absorb(&outs)?;
     }
     ensure!(
         eng.store().bytes() <= store_bytes,

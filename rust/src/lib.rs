@@ -17,17 +17,18 @@
 //! | [`runtime`] | PJRT execution of the AOT artifacts (+ mock for tests), KV buffers + scratch arena |
 //! | [`kvcache`] | paged GPU-pool analog: block allocator, block tables |
 //! | [`store`] | CPU-side cache store: dense + Master-Mirror diff entries, O(1) LRU, master re-election, capacity-honest accounting |
-//! | [`rounds`] | segment hashing, All-Gather round detection |
+//! | [`rounds`] | segment hashing, sharing-cohort clustering (All-Gather = one cohort) |
 //! | [`pic`] | position-independent caching: importance selection, plans |
 //! | [`collector`] | KV Collector: grouping + collective reuse (paper §4.2) |
 //! | [`restore`] | fused / dense Mirror restore (paper §4.4, Algorithm 1) |
 //! | [`scheduler`] | continuous batching, admission, preemption |
 //! | [`engine`] | the serving engine tying every subsystem together |
-//! | `engine::gather` | round-level gather plans: resolve-once collective assembly (§4.2) |
+//! | `engine::gather` | cohort-level gather plans: resolve-once collective assembly (§4.2) |
 //! | [`serve`] | round-native public API: builder, round handles, events |
 //! | [`workload`] | GenerativeAgents / AgentSociety trace synthesizers |
+//! | `workload::topology` | sharing topologies: Full / Neighborhood / Teams cohort shapes |
 //! | [`metrics`] | latency/usage recorders and table emitters |
-//! | [`experiments`] | one driver per paper figure (2, 3, 10–14) |
+//! | [`experiments`] | one driver per paper figure (2, 3, 10–14) + pressure/topology sweeps |
 //! | [`util`] | offline-environment stand-ins: PRNG, JSON, stats, CLI |
 
 pub mod collector;

@@ -2,9 +2,10 @@
 //! experiment reproductions.
 //!
 //! ```text
-//! tokendance serve        [--model M] [--policy P] [--agents N] ...
+//! tokendance serve        [--model M] [--policy P] [--agents N]
+//!                         [--topology T] ...
 //! tokendance experiments  <fig2|fig3|fig10|fig11|fig12|fig13|fig14
-//!                          |pressure|all>
+//!                          |pressure|topology|all>
 //!                         [--quick] [--mock] [--artifacts DIR] [--out DIR]
 //! tokendance info         [--artifacts DIR]
 //! ```
@@ -16,7 +17,7 @@ use tokendance::experiments::{self, ExpContext};
 use tokendance::util::cli::Args;
 use tokendance::util::stats::{fmt_bytes, fmt_secs, Samples};
 use tokendance::workload::driver::drive_sessions;
-use tokendance::workload::{Family, WorkloadConfig};
+use tokendance::workload::{Family, Topology, WorkloadConfig};
 
 const USAGE: &str = "\
 tokendance — collective KV cache sharing for multi-agent LLM serving
@@ -25,7 +26,7 @@ USAGE:
   tokendance serve [options]        run a multi-agent serving session
   tokendance experiments <FIG...>   reproduce paper figures
                                     (fig2 fig3 fig10 fig11 fig12 fig13
-                                     fig14 pressure | all)
+                                     fig14 pressure topology | all)
   tokendance info [options]         show artifacts / models / buckets
 
 COMMON OPTIONS:
@@ -38,6 +39,7 @@ SERVE OPTIONS:
   --model M         sim-7b | sim-14b             [sim-7b]
   --policy P        vllm | cb-ord | cb | tokendance  [tokendance]
   --family F        generative-agents | agent-society
+  --topology T      full | neighborhood:K | teams:S  [full]
   --agents N        agents per round             [5]
   --rounds N        rounds per session           [3]
   --sessions N      concurrent sessions          [1]
@@ -57,6 +59,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "agent-society" => Family::AgentSociety,
         _ => Family::GenerativeAgents,
     };
+    let topology: Topology = args.get_or("topology", "full").parse()?;
     let spec = ctx.rt.spec(&model)?.clone();
     let pool = args.usize_or(
         "pool-blocks",
@@ -64,17 +67,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
 
     println!(
-        "serving {model} policy={} family={} agents={agents} \
+        "serving {model} policy={} family={} topology={} agents={agents} \
          rounds={rounds} sessions={sessions} qps={qps}",
         policy.label(),
-        family.label()
+        family.label(),
+        topology.label()
     );
     let mut eng = Engine::builder(&model)
         .policy(policy)
         .pool_blocks(pool)
         .runtime(ctx.rt.clone())
         .build()?;
-    let cfg = WorkloadConfig::for_family(family, 1, agents, rounds);
+    let cfg = WorkloadConfig::for_family(family, 1, agents, rounds)
+        .with_topology(topology);
     let report = drive_sessions(&mut eng, &cfg, sessions, qps, 0x5E12)?;
 
     let mut rl = Samples::new();
@@ -154,6 +159,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eng.metrics.assembly_dedup_hits,
         eng.metrics.assembly_restores,
     );
+    println!(
+        "cohorts:            {} collective (one gather plan + master \
+         each), {} singleton-path requests",
+        eng.metrics.cohorts_collective,
+        eng.metrics.cohorts_singleton,
+    );
     println!("runtime calls:      {}", eng.rt.calls());
     Ok(())
 }
@@ -198,6 +209,10 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     }
     if want("pressure") {
         experiments::pressure::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("topology") {
+        experiments::topology::run(&ctx, args)?;
         ran += 1;
     }
     if ran == 0 {

@@ -95,6 +95,14 @@ pub struct RunMetrics {
     /// Round-end Master-Mirror encode cost (off the serving critical path
     /// in principle; measured to keep it honest).
     pub encode_secs: Samples,
+    /// Collective sharing cohorts formed across all prefilled batches
+    /// (cohorts meeting `DetectorConfig::min_requests`, each assembled
+    /// through its own gather plan and mirror-encoded against its own
+    /// master).
+    pub cohorts_collective: u64,
+    /// Requests routed to the per-agent path because their cohort was a
+    /// singleton (or below `min_requests`).
+    pub cohorts_singleton: u64,
     pub prefill_full: u64,
     pub prefill_reused: u64,
     pub store_evictions: u64,

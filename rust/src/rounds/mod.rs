@@ -1,4 +1,4 @@
-//! Round-aware segment indexing and All-Gather round detection (paper
+//! Round-aware segment indexing and sharing-cohort detection (paper
 //! §4.1 / §5 "Round-Aware Segment Indexing").
 //!
 //! The runtime receives prompts as `<TTSEP>`-delimited token streams. This
@@ -7,10 +7,18 @@
 //! its token ids, so two requests containing the same shared output block
 //! map to the same cache object regardless of the block's absolute offset.
 //!
-//! [`detect_pattern`] then groups concurrently-arriving requests whose
-//! segment sets overlap into All-Gather rounds — the unit the KV Collector
-//! (collector/) optimizes over. Requests that share no segments fall back
-//! to the single-request path, as the paper requires.
+//! [`detect_pattern`] then partitions a batch of concurrently-arriving
+//! requests into **sharing cohorts**: maximal groups whose segment sets
+//! overlap above the [`DetectorConfig`] threshold (transitively — cohort
+//! membership is the connected component of the pairwise-overlap graph).
+//! The paper's All-Gather round is the best case — one cohort spanning
+//! the batch — but real multi-agent traffic is often *clustered*:
+//! AgentSociety agents gossip within social neighborhoods and
+//! TokenCake/KVFlow-style workflows share per sub-team, so one divergent
+//! request must not collapse the whole batch to the per-request path.
+//! Each multi-member cohort is the unit the KV Collector (collector/)
+//! and the engine's per-cohort gather plan optimize over; singleton
+//! cohorts fall back to the single-request path, as the paper requires.
 
 use std::collections::HashMap;
 
@@ -98,23 +106,93 @@ pub fn shared_segment_tokens(a: &SegmentedPrompt, b: &SegmentedPrompt)
         .sum()
 }
 
-/// Detection verdict for a batch of requests.
+/// One sharing cohort of a batch: the requests (as indices into the
+/// analyzed prompt slice) whose segment sets overlap above the detector
+/// threshold, directly or transitively.
 #[derive(Clone, Debug, PartialEq, Eq)]
-pub enum PatternVerdict {
-    /// Requests form an All-Gather round: >= `min_requests` requests
-    /// sharing >= `min_shared_frac` of their tokens on average.
-    AllGather { shared_hashes: Vec<u64> },
-    /// No exploitable round structure; use the single-request path.
-    Independent,
+pub struct Cohort {
+    /// Ascending indices into the batch. Never empty.
+    pub members: Vec<usize>,
+    /// Segment hashes present in at least two cohort members (the
+    /// cohort's shared set), sorted. Empty for singletons.
+    pub shared_hashes: Vec<u64>,
+}
+
+impl Cohort {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// The cohort partition of one batch: every request index appears in
+/// exactly one cohort. Cohorts are canonically ordered by smallest
+/// member index, members ascending — the partition is therefore
+/// invariant under permutation of the input prompts (up to the same
+/// index relabeling).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CohortPartition {
+    pub cohorts: Vec<Cohort>,
+}
+
+impl CohortPartition {
+    /// A partition of `n` requests into `n` singleton cohorts (the
+    /// no-sharing / per-request verdict).
+    pub fn singletons(n: usize) -> Self {
+        CohortPartition {
+            cohorts: (0..n)
+                .map(|i| Cohort { members: vec![i], shared_hashes: Vec::new() })
+                .collect(),
+        }
+    }
+
+    /// Cohorts large enough for collective treatment under `cfg`
+    /// ([`DetectorConfig::min_cohort`]).
+    pub fn collective<'a>(
+        &'a self,
+        cfg: &DetectorConfig,
+    ) -> impl Iterator<Item = &'a Cohort> {
+        let min = cfg.min_cohort();
+        self.cohorts.iter().filter(move |c| c.members.len() >= min)
+    }
+
+    /// True when the partition has no collective cohort — the old
+    /// `Independent` verdict: every request takes the per-request path.
+    pub fn is_independent(&self, cfg: &DetectorConfig) -> bool {
+        self.collective(cfg).next().is_none()
+    }
+
+    /// True when one collective cohort spans the whole batch — the
+    /// paper's All-Gather best case.
+    pub fn is_all_gather(&self, cfg: &DetectorConfig) -> bool {
+        self.cohorts.len() == 1
+            && self.cohorts[0].members.len() >= cfg.min_cohort()
+    }
 }
 
 /// Round-detection configuration.
 #[derive(Clone, Debug)]
 pub struct DetectorConfig {
+    /// Minimum cohort size for collective treatment (smaller cohorts
+    /// take the per-request path; values below 2 behave as 2).
     pub min_requests: usize,
-    /// Minimum fraction of a prompt's tokens that must belong to segments
-    /// shared with the rest of the candidate round.
+    /// Pairwise overlap threshold for cohort membership: two prompts
+    /// join the same cohort when the mean of their shared-token
+    /// fractions ([`pair_overlap`]) reaches this value.
     pub min_shared_frac: f64,
+}
+
+impl DetectorConfig {
+    /// Effective minimum collective-cohort size: `min_requests` floored
+    /// at 2 (a "cohort" of one request has nothing to share
+    /// collectively). The single source of the rule — the partition
+    /// helpers and the engine's cohort routing all consult it.
+    pub fn min_cohort(&self) -> usize {
+        self.min_requests.max(2)
+    }
 }
 
 impl Default for DetectorConfig {
@@ -123,56 +201,160 @@ impl Default for DetectorConfig {
     }
 }
 
-/// Detect the All-Gather pattern over a set of segmented prompts: find the
-/// segment hashes present in at least `min_requests` prompts and check the
-/// shared fraction. This is what lets TokenDance "fall back to the standard
-/// single-request path with no performance loss" for non-round traffic.
+/// Precomputed per-prompt overlap inputs: (hash, len) per segment, the
+/// hash set, and the token total. [`detect_pattern`] builds one per
+/// prompt up front so the O(candidate pairs) overlap checks never
+/// rebuild hash maps — the detector runs on the submit hot path.
+struct OverlapProfile {
+    segs: Vec<(u64, usize)>,
+    total: usize,
+    /// Distinct segment hashes, sorted — membership probes are binary
+    /// searches; also feeds the inverted index and the per-cohort
+    /// shared-set count.
+    uniq: Vec<u64>,
+}
+
+impl OverlapProfile {
+    fn new(p: &SegmentedPrompt) -> Self {
+        let segs: Vec<(u64, usize)> =
+            p.segments.iter().map(|s| (s.hash, s.len())).collect();
+        let total = segs.iter().map(|&(_, l)| l).sum();
+        let mut uniq: Vec<u64> =
+            segs.iter().map(|&(h, _)| h).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        OverlapProfile { segs, total, uniq }
+    }
+
+    /// Fraction of this prompt's tokens lying in segments `other` also
+    /// carries. Integer sum then one division — bit-identical to the
+    /// [`pair_overlap`] arithmetic.
+    fn frac_shared_with(&self, other: &OverlapProfile) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let shared: usize = self
+            .segs
+            .iter()
+            .filter(|(h, _)| other.uniq.binary_search(h).is_ok())
+            .map(|&(_, l)| l)
+            .sum();
+        shared as f64 / self.total as f64
+    }
+
+    fn overlap(&self, other: &OverlapProfile) -> f64 {
+        0.5 * (self.frac_shared_with(other) + other.frac_shared_with(self))
+    }
+}
+
+/// Symmetric overlap metric between two prompts: the mean of the two
+/// directed shared-token fractions (shared tokens / own tokens). 1.0 for
+/// identical segment multisets, 0.0 for disjoint (or empty) prompts.
+pub fn pair_overlap(a: &SegmentedPrompt, b: &SegmentedPrompt) -> f64 {
+    OverlapProfile::new(a).overlap(&OverlapProfile::new(b))
+}
+
+/// Partition a batch of segmented prompts into sharing cohorts: the
+/// connected components of the graph whose edges are prompt pairs that
+/// share at least one segment *and* have [`pair_overlap`] >=
+/// `cfg.min_shared_frac`. Candidate pairs are found through an inverted
+/// segment-hash index, so prompts sharing no segment are never compared
+/// (and never cohere — even at a threshold of 0.0, segment-disjoint
+/// prompts stay singletons). The partition covers every prompt exactly
+/// once;
+/// cohorts below `cfg.min_requests` (or singletons) are reported too —
+/// the engine routes them to the per-request path. This is what lets
+/// TokenDance "fall back to the standard single-request path with no
+/// performance loss" for non-round traffic, without forfeiting the
+/// collective path for the sub-groups that *do* share.
 pub fn detect_pattern(
     prompts: &[&SegmentedPrompt],
     cfg: &DetectorConfig,
-) -> PatternVerdict {
-    if prompts.len() < cfg.min_requests {
-        return PatternVerdict::Independent;
+) -> CohortPartition {
+    let n = prompts.len();
+    if n == 0 {
+        return CohortPartition { cohorts: Vec::new() };
     }
-    // count which segment hashes appear in how many prompts
-    let mut seen: HashMap<u64, usize> = HashMap::new();
-    for p in prompts {
-        let mut uniq: Vec<u64> = p.segments.iter().map(|s| s.hash).collect();
-        uniq.sort_unstable();
-        uniq.dedup();
-        for h in uniq {
-            *seen.entry(h).or_insert(0) += 1;
+    // per-prompt overlap inputs, built exactly once
+    let profiles: Vec<OverlapProfile> =
+        prompts.iter().map(|p| OverlapProfile::new(p)).collect();
+    // inverted index: segment hash -> prompts containing it
+    let mut by_hash: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (i, prof) in profiles.iter().enumerate() {
+        for &h in &prof.uniq {
+            by_hash.entry(h).or_default().push(i);
         }
     }
-    let shared: Vec<u64> = seen
-        .iter()
-        .filter(|(_, &c)| c >= cfg.min_requests)
-        .map(|(&h, _)| h)
+
+    // union-find over prompts; merge candidate pairs that clear the
+    // overlap threshold (merge order cannot affect the components, so
+    // HashMap iteration order never leaks into the result)
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut [usize], mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    let mut seen_pairs: std::collections::HashSet<(usize, usize)> =
+        std::collections::HashSet::new();
+    for members in by_hash.values() {
+        for (ai, &a) in members.iter().enumerate() {
+            for &b in &members[ai + 1..] {
+                // already one component: nothing this pair could add —
+                // skip before even touching the dedup set (components
+                // only grow, so a skipped pair stays skippable; on an
+                // all-to-all round this elides almost all pair work)
+                let ra = find(&mut parent, a);
+                let rb = find(&mut parent, b);
+                if ra == rb {
+                    continue;
+                }
+                // memoize only pairs that reached the overlap check, so
+                // failed-threshold pairs are never re-scanned
+                if !seen_pairs.insert((a, b)) {
+                    continue;
+                }
+                if profiles[a].overlap(&profiles[b])
+                    >= cfg.min_shared_frac
+                {
+                    parent[ra.max(rb)] = ra.min(rb);
+                }
+            }
+        }
+    }
+
+    // canonical partition: cohorts keyed by root, ordered by smallest
+    // member; members ascend because we scan indices in order
+    let mut groups: HashMap<usize, Vec<usize>> = HashMap::new();
+    for i in 0..n {
+        let r = find(&mut parent, i);
+        groups.entry(r).or_default().push(i);
+    }
+    let mut cohorts: Vec<Cohort> = groups
+        .into_values()
+        .map(|members| {
+            // the cohort's shared set: hashes present in >= 2 members
+            let mut count: HashMap<u64, usize> = HashMap::new();
+            for &m in &members {
+                for &h in &profiles[m].uniq {
+                    *count.entry(h).or_insert(0) += 1;
+                }
+            }
+            // c >= 2 can only arise from two distinct members (each
+            // member contributes each hash once, via its deduped set)
+            let mut shared_hashes: Vec<u64> = count
+                .into_iter()
+                .filter(|&(_, c)| c >= 2)
+                .map(|(h, _)| h)
+                .collect();
+            shared_hashes.sort_unstable();
+            Cohort { members, shared_hashes }
+        })
         .collect();
-    if shared.is_empty() {
-        return PatternVerdict::Independent;
-    }
-    // shared token fraction per prompt
-    let sharedset: std::collections::HashSet<u64> =
-        shared.iter().copied().collect();
-    let mut total_frac = 0.0;
-    for p in prompts {
-        let total: usize = p.segments.iter().map(Segment::len).sum();
-        let sh: usize = p
-            .segments
-            .iter()
-            .filter(|s| sharedset.contains(&s.hash))
-            .map(Segment::len)
-            .sum();
-        total_frac += if total == 0 { 0.0 } else { sh as f64 / total as f64 };
-    }
-    if total_frac / prompts.len() as f64 >= cfg.min_shared_frac {
-        let mut sh = shared;
-        sh.sort_unstable();
-        PatternVerdict::AllGather { shared_hashes: sh }
-    } else {
-        PatternVerdict::Independent
-    }
+    cohorts.sort_by_key(|c| c.members[0]);
+    CohortPartition { cohorts }
 }
 
 /// Count the `<TTSEP>` separators in a prompt (diagnostics).
@@ -220,34 +402,34 @@ mod tests {
     }
 
     #[test]
-    fn detects_all_gather_round() {
+    fn detects_all_gather_round_as_single_cohort() {
         let shared = ["agent0 did X", "agent1 did Y", "agent2 did Z"];
         let a = prompt("history of a", &shared);
         let b = prompt("much longer history of b", &shared);
         let c = prompt("c", &shared);
-        let verdict =
-            detect_pattern(&[&a, &b, &c], &DetectorConfig::default());
-        match verdict {
-            PatternVerdict::AllGather { shared_hashes } => {
-                assert_eq!(shared_hashes.len(), 3);
-            }
-            _ => panic!("expected AllGather"),
-        }
+        let cfg = DetectorConfig::default();
+        let part = detect_pattern(&[&a, &b, &c], &cfg);
+        assert!(part.is_all_gather(&cfg));
+        assert_eq!(part.cohorts.len(), 1);
+        assert_eq!(part.cohorts[0].members, vec![0, 1, 2]);
+        // the shared set is exactly the 3 shared blocks (histories are
+        // unique per prompt)
+        assert_eq!(part.cohorts[0].shared_hashes.len(), 3);
     }
 
     #[test]
     fn independent_requests_fall_back() {
         let a = prompt("history a", &["only a's content"]);
         let b = prompt("history b", &["completely different content"]);
-        assert_eq!(
-            detect_pattern(&[&a, &b], &DetectorConfig::default()),
-            PatternVerdict::Independent
-        );
-        // single request is never a round
-        assert_eq!(
-            detect_pattern(&[&a], &DetectorConfig::default()),
-            PatternVerdict::Independent
-        );
+        let cfg = DetectorConfig::default();
+        let part = detect_pattern(&[&a, &b], &cfg);
+        assert!(part.is_independent(&cfg));
+        assert_eq!(part.cohorts.len(), 2, "two singleton cohorts");
+        // single request is never a collective round
+        let part = detect_pattern(&[&a], &cfg);
+        assert!(part.is_independent(&cfg));
+        assert_eq!(part.cohorts.len(), 1);
+        assert!(part.cohorts[0].shared_hashes.is_empty());
     }
 
     #[test]
@@ -256,10 +438,8 @@ mod tests {
         let shared = ["x"];
         let a = prompt(&"a".repeat(500), &shared);
         let b = prompt(&"b".repeat(500), &shared);
-        assert_eq!(
-            detect_pattern(&[&a, &b], &DetectorConfig::default()),
-            PatternVerdict::Independent
-        );
+        let cfg = DetectorConfig::default();
+        assert!(detect_pattern(&[&a, &b], &cfg).is_independent(&cfg));
     }
 
     #[test]
@@ -270,41 +450,148 @@ mod tests {
     }
 
     #[test]
-    fn detector_empty_prompt_slice_is_independent() {
+    fn detector_empty_prompt_slice_yields_empty_partition() {
         // no prompts at all must not panic, for any min_requests
         for min_requests in [0, 1, 2] {
             let cfg = DetectorConfig { min_requests, min_shared_frac: 0.3 };
-            assert_eq!(
-                detect_pattern(&[], &cfg),
-                PatternVerdict::Independent
-            );
+            let part = detect_pattern(&[], &cfg);
+            assert!(part.cohorts.is_empty());
+            assert!(part.is_independent(&cfg));
         }
     }
 
     #[test]
-    fn detector_min_requests_one_does_not_panic() {
+    fn detector_min_requests_below_two_behaves_as_two() {
         let cfg = DetectorConfig { min_requests: 1, min_shared_frac: 0.3 };
-        // a single prompt trivially "shares" all its segments with itself
+        // a single prompt can never be collective: nothing to share with
         let p = prompt("solo history", &["solo shared"]);
-        assert!(matches!(
-            detect_pattern(&[&p], &cfg),
-            PatternVerdict::AllGather { .. }
-        ));
+        let part = detect_pattern(&[&p], &cfg);
+        assert!(part.is_independent(&cfg));
+        // but a genuine pair is, even at min_requests = 1
+        let q = prompt("other history", &["solo shared", "more shared"]);
+        let p2 = prompt("solo history", &["solo shared", "more shared"]);
+        let part = detect_pattern(&[&p2, &q], &cfg);
+        assert!(part.is_all_gather(&cfg));
         // a prompt with no tokens (empty segment set) stays independent
         let empty = segment_prompt(&[]);
-        assert_eq!(
-            detect_pattern(&[&empty], &cfg),
-            PatternVerdict::Independent
-        );
+        let part = detect_pattern(&[&empty], &cfg);
+        assert!(part.is_independent(&cfg));
     }
 
     #[test]
     fn detector_zero_length_segments_do_not_divide_by_zero() {
         let cfg = DetectorConfig { min_requests: 2, min_shared_frac: 0.3 };
         // two prompts that are only separators: every segment is empty, so
-        // total token counts are 0 — the shared fraction must not NaN-trip
+        // total token counts are 0 — the overlap must not NaN-trip
         let a = segment_prompt(&[crate::tokenizer::TTSEP_ID]);
         let b = segment_prompt(&[crate::tokenizer::TTSEP_ID]);
-        let _ = detect_pattern(&[&a, &b], &cfg); // must not panic
+        let part = detect_pattern(&[&a, &b], &cfg); // must not panic
+        assert!(part.is_independent(&cfg), "empty prompts never cohere");
+    }
+
+    // -----------------------------------------------------------------
+    // boundary configs (cohort clustering)
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn overlap_exactly_at_threshold_joins_cohort() {
+        // two prompts of 2 equal-sized blocks sharing exactly one:
+        // pair_overlap == 0.5 on the nose; >= semantics must include it
+        let a = prompt("private block aaaa", &["the shared half"]);
+        let b = prompt("private block bbbb", &["the shared half"]);
+        // make both directed fractions exactly 0.5 by equalizing totals
+        let ta: usize = a.segments.iter().map(Segment::len).sum();
+        let tb: usize = b.segments.iter().map(Segment::len).sum();
+        assert_eq!(ta, tb, "test premise: equal prompt sizes");
+        let shared = shared_segment_tokens(&a, &b) as f64 / ta as f64;
+        let cfg =
+            DetectorConfig { min_requests: 2, min_shared_frac: shared };
+        let part = detect_pattern(&[&a, &b], &cfg);
+        assert!(
+            part.is_all_gather(&cfg),
+            "overlap exactly at the threshold must cluster \
+             (overlap {shared})"
+        );
+        // one epsilon above the threshold must not
+        let cfg = DetectorConfig {
+            min_requests: 2,
+            min_shared_frac: shared + 1e-9,
+        };
+        assert!(detect_pattern(&[&a, &b], &cfg).is_independent(&cfg));
+    }
+
+    #[test]
+    fn round_exactly_at_min_requests_is_collective() {
+        let shared = ["common ground here"];
+        let mk = |h: &str| prompt(h, &shared);
+        let (a, b, c) = (mk("ha"), mk("hb"), mk("hc"));
+        let cfg = DetectorConfig { min_requests: 3, min_shared_frac: 0.3 };
+        // exactly min_requests members: collective
+        let part = detect_pattern(&[&a, &b, &c], &cfg);
+        assert_eq!(part.cohorts.len(), 1);
+        assert_eq!(part.collective(&cfg).count(), 1);
+        // one below: the pair still clusters structurally but is not
+        // collective — the engine routes it per-request
+        let part = detect_pattern(&[&a, &b], &cfg);
+        assert_eq!(part.cohorts.len(), 1);
+        assert_eq!(part.cohorts[0].members, vec![0, 1]);
+        assert!(part.is_independent(&cfg));
+    }
+
+    #[test]
+    fn duplicate_prompts_form_one_cohort() {
+        let a = prompt("same history", &["same shared"]);
+        let b = prompt("same history", &["same shared"]);
+        let c = prompt("same history", &["same shared"]);
+        assert_eq!(pair_overlap(&a, &b), 1.0);
+        let cfg = DetectorConfig::default();
+        let part = detect_pattern(&[&a, &b, &c], &cfg);
+        assert!(part.is_all_gather(&cfg));
+        // duplicates share *everything*, private history included
+        assert_eq!(part.cohorts[0].shared_hashes.len(), 2);
+    }
+
+    #[test]
+    fn mixed_round_partitions_into_cohorts_and_singleton() {
+        // 2 cohorts of 2 + 1 singleton: cohort A shares "alpha", cohort B
+        // shares "beta", the fifth prompt shares nothing
+        let a0 = prompt("a0 history", &["alpha block content"]);
+        let a1 = prompt("a1 history", &["alpha block content"]);
+        let b0 = prompt("b0 history", &["beta block content x"]);
+        let b1 = prompt("b1 history", &["beta block content x"]);
+        let solo = prompt("nothing in common with anyone at all", &[]);
+        let cfg = DetectorConfig::default();
+        let part = detect_pattern(&[&a0, &b0, &solo, &a1, &b1], &cfg);
+        assert_eq!(part.cohorts.len(), 3);
+        assert_eq!(part.cohorts[0].members, vec![0, 3], "alpha cohort");
+        assert_eq!(part.cohorts[1].members, vec![1, 4], "beta cohort");
+        assert_eq!(part.cohorts[2].members, vec![2], "singleton");
+        assert_eq!(part.collective(&cfg).count(), 2);
+        assert!(!part.is_all_gather(&cfg));
+        assert!(!part.is_independent(&cfg));
+    }
+
+    #[test]
+    fn transitive_overlap_chains_into_one_cohort() {
+        // a-b share X, b-c share Y, a-c share nothing: still one cohort
+        // (connected component), with X and Y both in the shared set
+        let a = prompt("ha", &["block X contents"]);
+        let mut b = RoundAwarePrompt::new();
+        b.push(BlockKind::PrivateHistory, encode("hb"));
+        b.push(
+            BlockKind::SharedOutput { producer: 0, round: 0 },
+            encode("block X contents"),
+        );
+        b.push(
+            BlockKind::SharedOutput { producer: 1, round: 0 },
+            encode("block Y contents"),
+        );
+        let b = segment_prompt(&b.serialize());
+        let c = prompt("hc", &["block Y contents"]);
+        let cfg = DetectorConfig { min_requests: 2, min_shared_frac: 0.25 };
+        let part = detect_pattern(&[&a, &b, &c], &cfg);
+        assert_eq!(part.cohorts.len(), 1);
+        assert_eq!(part.cohorts[0].members, vec![0, 1, 2]);
+        assert_eq!(part.cohorts[0].shared_hashes.len(), 2, "X and Y");
     }
 }

@@ -119,7 +119,7 @@ pub fn drive_sessions(
                             .as_secs_f64(),
                     ));
                     let outs = std::mem::take(&mut outputs[s]);
-                    live[s].absorb(&outs);
+                    live[s].absorb(&outs)?;
                     // next round offered relative to this one's arrival
                     due[s] = (h.offered_at()
                         + Duration::from_secs_f64(rng.exp(round_rate)))

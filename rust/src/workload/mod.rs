@@ -1,12 +1,20 @@
-//! Workload synthesis: All-Gather multi-agent sessions in the style of
+//! Workload synthesis: multi-agent sessions in the style of
 //! GenerativeAgents and AgentSociety, plus the independent-request control
 //! workload of Fig 2. Deterministic (seeded) so every experiment is
 //! reproducible; outputs of round t feed round t+1's shared blocks, so the
 //! engine's real generated tokens drive the trace exactly as in a live
-//! serving deployment.
+//! serving deployment. The *sharing topology* ([`Topology`]) decides
+//! which producers' outputs each agent consumes — all-to-all (the
+//! paper's All-Gather regime), ring neighborhoods, or sub-teams with a
+//! global broadcast segment.
 
 pub mod driver;
 pub mod text;
+pub mod topology;
+
+use anyhow::{bail, Result};
+
+pub use topology::Topology;
 
 use crate::engine::AgentRequest;
 use crate::tokenizer::{encode, BlockKind, RoundAwarePrompt};
@@ -64,9 +72,13 @@ pub struct WorkloadConfig {
     pub max_new_tokens: usize,
     /// Alignment (storage block size).
     pub align: usize,
-    /// Cap on shared output blocks per prompt (None = all agents'
-    /// outputs). Fig 11 varies consumer count against a fixed shared set.
+    /// Cap on shared output blocks per prompt (None = all visible
+    /// producers). Fig 11 varies consumer count against a fixed shared
+    /// set. Applied after the topology filter.
     pub shared_producers: Option<usize>,
+    /// Who shares with whom: all-to-all (`Full`, the paper's regime),
+    /// ring gossip, or sub-teams with a global broadcast segment.
+    pub topology: Topology,
     pub seed: u64,
 }
 
@@ -86,6 +98,7 @@ impl WorkloadConfig {
             max_new_tokens: 32,
             align: 16,
             shared_producers: None,
+            topology: Topology::Full,
             seed: 0xDA0CE ^ (scenario as u64),
         }
     }
@@ -105,6 +118,7 @@ impl WorkloadConfig {
             max_new_tokens: 16,
             align: 16,
             shared_producers: None,
+            topology: Topology::Full,
             seed: 0x50C1E7 ^ (scenario as u64),
         }
     }
@@ -121,12 +135,19 @@ impl WorkloadConfig {
         }
     }
 
+    /// Replace the sharing topology (builder-style).
+    pub fn with_topology(mut self, t: Topology) -> Self {
+        self.topology = t;
+        self
+    }
+
     /// Upper bound on a round's prompt+generation length (tokens, after
     /// padding) — used to size pools and validate against max_seq.
     pub fn max_context(&self) -> usize {
         let pad = |b: usize| b.div_ceil(self.align) * self.align;
+        let visible = self.topology.max_producers(self.n_agents);
         let producers =
-            self.shared_producers.unwrap_or(self.n_agents).min(self.n_agents);
+            self.shared_producers.unwrap_or(visible).min(visible);
         pad(self.sys_bytes + 24)
             + self.keep_turns * pad(self.turn_bytes + 16)
             + producers * pad(self.max_new_tokens)
@@ -135,8 +156,8 @@ impl WorkloadConfig {
     }
 }
 
-/// One live All-Gather session: agent histories + the previous round's
-/// shared output blocks.
+/// One live multi-agent session: agent histories + the previous round's
+/// shared output blocks, distributed per the configured [`Topology`].
 pub struct Session {
     pub cfg: WorkloadConfig,
     pub session_id: usize,
@@ -147,6 +168,9 @@ pub struct Session {
     turns: Vec<Vec<String>>,
     /// (producer agent, output tokens) of the previous round.
     shared: Vec<(usize, Vec<u32>)>,
+    /// True between `next_round` and its matching `absorb` — guards
+    /// against double-absorb and absorb-before-build.
+    round_open: bool,
     pub round: usize,
 }
 
@@ -162,6 +186,7 @@ impl Session {
             personas,
             turns: vec![Vec::new(); cfg.n_agents],
             shared: Vec::new(),
+            round_open: false,
             round: 0,
             rng,
             cfg,
@@ -174,17 +199,26 @@ impl Session {
     }
 
     /// Build this round's subrequests (one per agent). Shared blocks are
-    /// the previous round's outputs, in per-agent rotated order (paper
-    /// Figure 1: "may use a different block order").
+    /// the previous round's outputs of the producers the topology makes
+    /// visible to each agent, in per-agent rotated order (paper Figure 1:
+    /// "may use a different block order").
     pub fn next_round(&mut self) -> Vec<AgentRequest> {
         let cfg = &self.cfg;
-        let task = text::paragraph(
+        let body = text::paragraph(
             &mut self.rng.fork(0x7A5C ^ self.round as u64),
             cfg.task_bytes,
         );
-        let task = format!("r{} {}", self.round, task);
         let mut out = Vec::new();
         for a in 0..cfg.n_agents {
+            // hierarchical teams work on per-team tasks (the sub-team is
+            // the unit of collaboration); everything else shares one
+            // global round task
+            let task = match cfg.topology {
+                Topology::Teams { size } => {
+                    format!("r{} t{} {body}", self.round, a / size.max(1))
+                }
+                _ => format!("r{} {body}", self.round),
+            };
             let mut p = RoundAwarePrompt::new();
             p.push(BlockKind::PrivateHistory, encode(&self.personas[a]));
             let keep = cfg.keep_turns.min(self.turns[a].len());
@@ -192,14 +226,22 @@ impl Session {
             for t in &self.turns[a][start..] {
                 p.push(BlockKind::PrivateHistory, encode(t));
             }
+            // topology filter first (who is visible at all), then the
+            // Fig-11 producer cap
+            let visible = cfg.topology.producers_for(a, cfg.n_agents);
+            let pool: Vec<&(usize, Vec<u32>)> = self
+                .shared
+                .iter()
+                .filter(|(pr, _)| visible.binary_search(pr).is_ok())
+                .collect();
             let cap = cfg
                 .shared_producers
-                .unwrap_or(self.shared.len())
-                .min(self.shared.len());
-            let pool = &self.shared[..cap];
+                .unwrap_or(pool.len())
+                .min(pool.len());
+            let pool = &pool[..cap];
             let n = pool.len().max(1);
             for i in 0..pool.len() {
-                let (producer, toks) = &pool[(i + a) % n];
+                let (producer, toks) = pool[(i + a) % n];
                 p.push(
                     BlockKind::SharedOutput {
                         producer: *producer,
@@ -218,6 +260,7 @@ impl Session {
                 retain: true,
             });
         }
+        self.round_open = true;
         out
     }
 
@@ -233,11 +276,48 @@ impl Session {
 
     /// Feed the round's completions back: outputs become the next round's
     /// shared blocks and extend each agent's private history.
-    pub fn absorb(&mut self, outputs: &[(usize, Vec<u32>)]) {
-        let mut shared: Vec<(usize, Vec<u32>)> = outputs
-            .iter()
-            .map(|(agent, toks)| (agent % 1000, toks.clone()))
-            .collect();
+    ///
+    /// Rejects (loudly, instead of silently corrupting the session):
+    /// * outputs whose agent id does not belong to this session — these
+    ///   used to be remapped by `% 1000` and absorbed into the wrong
+    ///   agent's history (or panic past `n_agents`);
+    /// * the same agent appearing twice in one round's outputs;
+    /// * absorbing twice for one `next_round` (double-absorb), or
+    ///   absorbing before any round was built.
+    pub fn absorb(&mut self, outputs: &[(usize, Vec<u32>)]) -> Result<()> {
+        if !self.round_open {
+            bail!(
+                "session {}: absorb without an open round (double-absorb, \
+                 or absorb before next_round) at round {}",
+                self.session_id,
+                self.round
+            );
+        }
+        let base = self.session_id * 1000;
+        let mut shared: Vec<(usize, Vec<u32>)> = Vec::new();
+        for (agent, toks) in outputs {
+            let local = agent.checked_sub(base).filter(|&a| {
+                a < self.cfg.n_agents
+            });
+            let Some(local) = local else {
+                bail!(
+                    "session {}: output from agent {agent} does not \
+                     belong to this session ({} agents, ids {base}..{})",
+                    self.session_id,
+                    self.cfg.n_agents,
+                    base + self.cfg.n_agents
+                );
+            };
+            if shared.iter().any(|(a, _)| *a == local) {
+                bail!(
+                    "session {}: duplicate output for agent {agent} in \
+                     round {}",
+                    self.session_id,
+                    self.round
+                );
+            }
+            shared.push((local, toks.clone()));
+        }
         shared.sort_by_key(|(a, _)| *a);
         for (a, toks) in &shared {
             let summary = format!(
@@ -255,6 +335,8 @@ impl Session {
         }
         self.shared = shared;
         self.round += 1;
+        self.round_open = false;
+        Ok(())
     }
 }
 
@@ -335,7 +417,7 @@ mod tests {
         let outs: Vec<(usize, Vec<u32>)> = (0..4)
             .map(|a| (a, vec![10 + a as u32; 32]))
             .collect();
-        s.absorb(&outs);
+        s.absorb(&outs).unwrap();
         let r1 = s.next_round();
         // every agent's prompt contains all 4 shared blocks (order rotated)
         for (a, req) in r1.iter().enumerate() {
@@ -389,7 +471,7 @@ mod tests {
             let _ = s.next_round();
             let outs: Vec<(usize, Vec<u32>)> =
                 (0..2).map(|a| (a, vec![20 + round; 32])).collect();
-            s.absorb(&outs);
+            s.absorb(&outs).unwrap();
         }
         let reqs = s.next_round();
         // private blocks: persona + at most keep_turns turns
@@ -427,5 +509,133 @@ mod tests {
                 .count(),
             4
         );
+    }
+
+    fn round_outputs(n: usize, salt: u32) -> Vec<(usize, Vec<u32>)> {
+        (0..n).map(|a| (a, vec![10 + salt + a as u32; 32])).collect()
+    }
+
+    #[test]
+    fn absorb_rejects_foreign_agent_ids() {
+        let cfg = WorkloadConfig::generative_agents(1, 3, 3);
+        // session 1's agents are 1000..1003
+        let mut s = Session::new(cfg, 1);
+        let _ = s.next_round();
+        // agent 2 belongs to session 0 — the old code remapped it via
+        // `% 1000` and silently credited session 1's agent 2
+        let err = s.absorb(&[(2, vec![1; 8])]).unwrap_err();
+        assert!(format!("{err}").contains("does not belong"));
+        // an id past the agent count is rejected too (used to panic)
+        let err = s.absorb(&[(1007, vec![1; 8])]).unwrap_err();
+        assert!(format!("{err}").contains("does not belong"));
+        // the round is still open: a correct absorb succeeds after
+        s.absorb(&[(1000, vec![1; 8]), (1001, vec![2; 8])]).unwrap();
+        assert_eq!(s.round, 1);
+    }
+
+    #[test]
+    fn absorb_rejects_double_absorb_and_duplicates() {
+        let cfg = WorkloadConfig::generative_agents(1, 2, 3);
+        let mut s = Session::new(cfg, 0);
+        // absorb before any round was built
+        assert!(s.absorb(&round_outputs(2, 0)).is_err());
+        let _ = s.next_round();
+        // the same agent twice in one round's outputs
+        let err =
+            s.absorb(&[(0, vec![1; 8]), (0, vec![2; 8])]).unwrap_err();
+        assert!(format!("{err}").contains("duplicate"));
+        s.absorb(&round_outputs(2, 0)).unwrap();
+        // absorbing the same round again must fail loudly
+        let err = s.absorb(&round_outputs(2, 1)).unwrap_err();
+        assert!(format!("{err}").contains("absorb"));
+        assert_eq!(s.round, 1, "failed absorb must not advance the round");
+    }
+
+    #[test]
+    fn teams_topology_limits_shared_blocks_to_team_plus_broadcast() {
+        let cfg = WorkloadConfig::generative_agents(1, 8, 3)
+            .with_topology(Topology::Teams { size: 4 });
+        let mut s = Session::new(cfg, 0);
+        let _ = s.next_round();
+        s.absorb(&round_outputs(8, 0)).unwrap();
+        let r1 = s.next_round();
+        for (a, req) in r1.iter().enumerate() {
+            let producers: Vec<usize> = req
+                .prompt
+                .blocks
+                .iter()
+                .filter_map(|b| match b.kind {
+                    BlockKind::SharedOutput { producer, .. } => {
+                        Some(producer)
+                    }
+                    _ => None,
+                })
+                .collect();
+            let mut sorted = producers.clone();
+            sorted.sort_unstable();
+            let want =
+                Topology::Teams { size: 4 }.producers_for(a, 8);
+            assert_eq!(sorted, want, "agent {a} sees team + broadcast");
+            // second team carries the broadcast (agent 0's output)
+            if a >= 4 {
+                assert!(producers.contains(&0));
+                assert_eq!(producers.len(), 5);
+            } else {
+                assert_eq!(producers.len(), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn neighborhood_topology_wraps_and_fits_context() {
+        let cfg = WorkloadConfig::agent_society(5, 6, 2)
+            .with_topology(Topology::Neighborhood { k: 1 });
+        assert!(cfg.max_context() <= 512);
+        let mut s = Session::new(cfg, 0);
+        let _ = s.next_round();
+        s.absorb(&round_outputs(6, 3)).unwrap();
+        let r1 = s.next_round();
+        let producers = |req: &AgentRequest| -> Vec<usize> {
+            let mut p: Vec<usize> = req
+                .prompt
+                .blocks
+                .iter()
+                .filter_map(|b| match b.kind {
+                    BlockKind::SharedOutput { producer, .. } => {
+                        Some(producer)
+                    }
+                    _ => None,
+                })
+                .collect();
+            p.sort_unstable();
+            p
+        };
+        assert_eq!(producers(&r1[0]), vec![0, 1, 5], "ring wraps");
+        assert_eq!(producers(&r1[3]), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn full_topology_is_the_seed_behavior() {
+        // Topology::Full must produce byte-identical prompts to the
+        // pre-topology workload (the default constructors)
+        let cfg = WorkloadConfig::generative_agents(1, 4, 2);
+        assert_eq!(cfg.topology, Topology::Full);
+        let mut s = Session::new(cfg.clone(), 0);
+        let mut t = Session::new(
+            cfg.with_topology(Topology::Full),
+            0,
+        );
+        let _ = s.next_round();
+        let _ = t.next_round();
+        s.absorb(&round_outputs(4, 7)).unwrap();
+        t.absorb(&round_outputs(4, 7)).unwrap();
+        let rs = s.next_round();
+        let rt = t.next_round();
+        for (x, y) in rs.iter().zip(&rt) {
+            assert_eq!(
+                x.prompt.serialize_plain(),
+                y.prompt.serialize_plain()
+            );
+        }
     }
 }

@@ -1,0 +1,214 @@
+//! Sharing topologies: *who shares with whom* within a round.
+//!
+//! The paper's two workloads are both all-to-all (every agent's round-t+1
+//! prompt carries every agent's round-t output), but its own scenario
+//! sources are not uniformly so: AgentSociety agents gossip within social
+//! neighborhoods, and TokenCake / KVFlow-style agent workflows (PAPERS.md)
+//! share per sub-team. [`Topology`] makes that axis explicit: it decides
+//! which producers' outputs enter each agent's prompt, which in turn
+//! shapes the sharing cohorts the engine detects (rounds/) — `Full`
+//! yields one All-Gather cohort, `Teams` one cohort per sub-team, and
+//! `Neighborhood` overlapping gossip whose threshold-clearing links
+//! chain (transitively, by connected component) into one cohort per
+//! gossip component — a fully-connected ring clusters into a single
+//! round-spanning cohort with *partial* internal sharing, splitting
+//! only where neighbor overlap falls below the detector threshold.
+
+use anyhow::{anyhow, Result};
+
+/// Which round-t outputs each agent consumes in round t+1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// All-to-all (the paper's regime): every agent consumes every
+    /// agent's output. One sharing cohort per round.
+    Full,
+    /// Ring gossip (AgentSociety-style social neighborhoods): agent `a`
+    /// consumes the outputs of agents within ring distance `k` (its own
+    /// included) — `2k + 1` producers, all agents when `2k + 1 >= n`.
+    Neighborhood { k: usize },
+    /// Hierarchical sub-teams (TokenCake / KVFlow-style workflows):
+    /// agents are partitioned into teams of `size` (the last team may be
+    /// smaller); each agent consumes its teammates' outputs plus agent
+    /// 0's output — the *global broadcast segment* every team shares.
+    Teams { size: usize },
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::Full
+    }
+}
+
+impl Topology {
+    pub fn label(&self) -> String {
+        match self {
+            Topology::Full => "full".to_string(),
+            Topology::Neighborhood { k } => format!("neighborhood:{k}"),
+            Topology::Teams { size } => format!("teams:{size}"),
+        }
+    }
+
+    /// Producer ids (local, ascending) whose round-t outputs enter agent
+    /// `agent`'s round-t+1 prompt, in a session of `n` agents.
+    pub fn producers_for(&self, agent: usize, n: usize) -> Vec<usize> {
+        if n == 0 {
+            return Vec::new();
+        }
+        match *self {
+            Topology::Full => (0..n).collect(),
+            Topology::Neighborhood { k } => {
+                if 2 * k + 1 >= n {
+                    return (0..n).collect();
+                }
+                let mut out: Vec<usize> = (0..=2 * k)
+                    .map(|i| (agent + n + i - k) % n)
+                    .collect();
+                out.sort_unstable();
+                out.dedup();
+                out
+            }
+            Topology::Teams { size } => {
+                let size = size.max(1);
+                let team = agent / size;
+                let lo = team * size;
+                let hi = ((team + 1) * size).min(n);
+                let mut out: Vec<usize> = (lo..hi).collect();
+                // global broadcast segment: agent 0's output reaches
+                // every team (team 0 already contains it)
+                if lo > 0 {
+                    out.insert(0, 0);
+                }
+                out
+            }
+        }
+    }
+
+    /// Largest producer count any agent sees (sizes prompt budgets).
+    pub fn max_producers(&self, n: usize) -> usize {
+        (0..n)
+            .map(|a| self.producers_for(a, n).len())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mean fraction of the round's outputs each agent consumes — the
+    /// sharing fraction the topology sweep varies (1.0 for `Full`).
+    pub fn sharing_fraction(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let total: usize =
+            (0..n).map(|a| self.producers_for(a, n).len()).sum();
+        total as f64 / (n * n) as f64
+    }
+}
+
+impl std::str::FromStr for Topology {
+    type Err = anyhow::Error;
+
+    /// Parse the CLI forms: `full`, `neighborhood:K` (alias `ring:K`),
+    /// `teams:S`.
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.to_ascii_lowercase();
+        if s == "full" {
+            return Ok(Topology::Full);
+        }
+        let parse_arg = |spec: &str| -> Result<usize> {
+            spec.parse::<usize>()
+                .map_err(|_| anyhow!("bad topology parameter {spec:?}"))
+        };
+        match s.split_once(':') {
+            Some(("neighborhood" | "ring", k)) => {
+                Ok(Topology::Neighborhood { k: parse_arg(k)? })
+            }
+            Some(("teams", size)) => {
+                let size = parse_arg(size)?;
+                if size == 0 {
+                    return Err(anyhow!("teams size must be >= 1"));
+                }
+                Ok(Topology::Teams { size })
+            }
+            _ => Err(anyhow!(
+                "unknown topology {s:?} (expected full | neighborhood:K \
+                 | teams:S)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_covers_everyone() {
+        assert_eq!(Topology::Full.producers_for(2, 4), vec![0, 1, 2, 3]);
+        assert_eq!(Topology::Full.sharing_fraction(4), 1.0);
+        assert_eq!(Topology::Full.max_producers(4), 4);
+    }
+
+    #[test]
+    fn neighborhood_wraps_the_ring() {
+        let t = Topology::Neighborhood { k: 1 };
+        assert_eq!(t.producers_for(0, 5), vec![0, 1, 4]);
+        assert_eq!(t.producers_for(4, 5), vec![0, 3, 4]);
+        assert_eq!(t.producers_for(2, 5), vec![1, 2, 3]);
+        assert!((t.sharing_fraction(5) - 0.6).abs() < 1e-12);
+        // a neighborhood at least the ring size degenerates to Full
+        let wide = Topology::Neighborhood { k: 3 };
+        assert_eq!(wide.producers_for(1, 5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn teams_partition_with_broadcast() {
+        let t = Topology::Teams { size: 2 };
+        // team 0 = {0, 1}; broadcast (agent 0) already inside
+        assert_eq!(t.producers_for(0, 6), vec![0, 1]);
+        assert_eq!(t.producers_for(1, 6), vec![0, 1]);
+        // team 1 = {2, 3} + broadcast
+        assert_eq!(t.producers_for(2, 6), vec![0, 2, 3]);
+        assert_eq!(t.producers_for(3, 6), vec![0, 2, 3]);
+        // ragged last team when size does not divide n
+        let t3 = Topology::Teams { size: 4 };
+        assert_eq!(t3.producers_for(5, 6), vec![0, 4, 5]);
+        assert_eq!(t3.max_producers(6), 4);
+    }
+
+    #[test]
+    fn teams_of_32_by_4_form_8_groups() {
+        let t = Topology::Teams { size: 4 };
+        for a in 0..32 {
+            let p = t.producers_for(a, 32);
+            let team = a / 4;
+            let mut want: Vec<usize> =
+                (team * 4..team * 4 + 4).collect();
+            if team != 0 {
+                want.insert(0, 0);
+            }
+            assert_eq!(p, want, "agent {a}");
+        }
+        // 4 own + (1 broadcast for 28 agents) => (32*4 + 28)/1024
+        let frac = t.sharing_fraction(32);
+        assert!((frac - (128.0 + 28.0) / 1024.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_cli_forms() {
+        assert_eq!("full".parse::<Topology>().unwrap(), Topology::Full);
+        assert_eq!(
+            "neighborhood:2".parse::<Topology>().unwrap(),
+            Topology::Neighborhood { k: 2 }
+        );
+        assert_eq!(
+            "ring:1".parse::<Topology>().unwrap(),
+            Topology::Neighborhood { k: 1 }
+        );
+        assert_eq!(
+            "teams:4".parse::<Topology>().unwrap(),
+            Topology::Teams { size: 4 }
+        );
+        assert!("teams:0".parse::<Topology>().is_err());
+        assert!("mesh".parse::<Topology>().is_err());
+        assert!("teams:x".parse::<Topology>().is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Deterministic golden-run harness: a fixed-seed 3-round session per
+//! policy × topology on the mock runtime, digested into one u64 per
+//! config over every generated token stream plus the key logical
+//! counters (store lookups, gather-plan dedup hits, mirror restores,
+//! cohort formation, store hits/misses/evictions/promotions). Wall-clock
+//! metrics are deliberately excluded — everything digested is logical
+//! and must be bit-stable across runs and machines.
+//!
+//! Two layers of protection:
+//!
+//! * [`golden_runs_are_deterministic_in_process`] runs every config
+//!   twice with fresh engines and requires identical digests — any
+//!   nondeterminism (hash-map iteration order leaking into behavior,
+//!   uninitialized buffer reads, time-dependent control flow) fails
+//!   tier-1 immediately.
+//! * [`golden_run_digests_match_pinned`] compares against the pinned
+//!   digest file `rust/tests/golden/digests.txt` — once that file is
+//!   committed, any *silent behavior change* fails tier-1. The file is
+//!   written on first run (this build container has no Rust toolchain
+//!   to pre-compute it), and CI runs the test suite twice back to back
+//!   so the second invocation always verifies against the first. Until
+//!   the file is committed the pin only covers same-workspace
+//!   invocations, so CI emits a warning annotation on every run and
+//!   uploads the generated file as the `golden-digests` artifact for a
+//!   maintainer to commit. Regenerate deliberately with
+//!   `GOLDEN_BLESS=1 cargo test --test golden_runs`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use tokendance::engine::{Engine, Policy};
+use tokendance::serve::RoundSubmission;
+use tokendance::util::fnv1a;
+use tokendance::workload::{Session, Topology, WorkloadConfig};
+
+const AGENTS: usize = 4;
+const ROUNDS: usize = 3;
+
+/// The golden grid: every policy × a representative topology per class.
+fn configs() -> Vec<(Policy, Topology)> {
+    let mut out = Vec::new();
+    for policy in Policy::all() {
+        for topology in [
+            Topology::Full,
+            Topology::Neighborhood { k: 1 },
+            Topology::Teams { size: 2 },
+        ] {
+            out.push((policy, topology));
+        }
+    }
+    out
+}
+
+/// Drive one fixed-seed session and return (transcript, digest). The
+/// transcript covers every output token of every agent in every round
+/// plus the logical counters, so any behavior change moves the digest.
+fn run_config(policy: Policy, topology: Topology) -> (String, u64) {
+    let mut eng = Engine::builder("sim-7b")
+        .policy(policy)
+        .pool_blocks(1024)
+        .mock()
+        .build()
+        .unwrap();
+    let cfg = WorkloadConfig::generative_agents(1, AGENTS, ROUNDS)
+        .with_topology(topology);
+    let mut session = Session::new(cfg, 0);
+    let mut t = String::new();
+    while !session.done() {
+        let sub = RoundSubmission::new(session.global_round())
+            .requests(session.next_round());
+        eng.submit_round(sub).unwrap();
+        let mut outs: Vec<(usize, Vec<u32>)> = eng
+            .drain()
+            .unwrap()
+            .iter()
+            .map(|c| (c.agent, c.generated.clone()))
+            .collect();
+        outs.sort_by_key(|(a, _)| *a);
+        for (a, toks) in &outs {
+            writeln!(t, "r{} a{a} {toks:?}", session.round).unwrap();
+        }
+        session.absorb(&outs).unwrap();
+    }
+    let m = &eng.metrics;
+    let c = eng.store().counters();
+    writeln!(
+        t,
+        "lookups={} dedup={} restores={} reused={} full={} \
+         cohorts={} singletons={} hits={} misses={} evictions={} \
+         promotions={} rejections={}",
+        m.assembly_lookups,
+        m.assembly_dedup_hits,
+        m.assembly_restores,
+        m.prefill_reused,
+        m.prefill_full,
+        m.cohorts_collective,
+        m.cohorts_singleton,
+        c.hits,
+        c.misses,
+        c.evictions,
+        c.promotions,
+        c.rejected_inserts
+    )
+    .unwrap();
+    let digest = fnv1a(t.as_bytes());
+    (t, digest)
+}
+
+#[test]
+fn golden_runs_are_deterministic_in_process() {
+    for (policy, topology) in configs() {
+        let (t1, d1) = run_config(policy, topology);
+        let (t2, d2) = run_config(policy, topology);
+        assert_eq!(
+            d1,
+            d2,
+            "{policy:?}/{} nondeterministic between two fresh engines:\n\
+             --- first ---\n{t1}\n--- second ---\n{t2}",
+            topology.label()
+        );
+    }
+}
+
+#[test]
+fn golden_run_digests_match_pinned() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/digests.txt");
+    let mut current = String::from(
+        "# golden-run digests: one fixed-seed 3-round session per\n\
+         # policy x topology on the mock runtime (see golden_runs.rs).\n\
+         # Regenerate deliberately with:\n\
+         #   GOLDEN_BLESS=1 cargo test --test golden_runs\n",
+    );
+    for (policy, topology) in configs() {
+        let (_, d) = run_config(policy, topology);
+        writeln!(current, "{policy:?} {} {d:016x}", topology.label())
+            .unwrap();
+    }
+    let bless = std::env::var("GOLDEN_BLESS").is_ok();
+    match std::fs::read_to_string(&path) {
+        Ok(pinned) if !bless => {
+            assert_eq!(
+                pinned, current,
+                "golden digests changed. If the behavior change is \
+                 intentional, regenerate with `GOLDEN_BLESS=1 cargo test \
+                 --test golden_runs` and commit the updated \
+                 rust/tests/golden/digests.txt; otherwise this is a \
+                 silent behavior regression."
+            );
+        }
+        _ => {
+            // first run (no pinned file yet) or explicit bless: write the
+            // digests so the next invocation verifies against them
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &current).unwrap();
+            eprintln!(
+                "golden_runs: wrote {} ({}); commit it to pin digests",
+                path.display(),
+                if bless { "GOLDEN_BLESS=1" } else { "first run" }
+            );
+        }
+    }
+}

@@ -127,7 +127,7 @@ fn oversize_round_rejected_cleanly() {
     let done = e.drain().unwrap();
     let outs: Vec<(usize, Vec<u32>)> =
         done.iter().map(|c| (c.agent, c.generated.clone())).collect();
-    s.absorb(&outs);
+    s.absorb(&outs).unwrap();
     // round 1 prompts exceed max_seq -> the whole round must be rejected
     // atomically, leaving the engine clean
     let sub = RoundSubmission::new(s.global_round())
