@@ -1,0 +1,156 @@
+//! Bench: per-agent round-end encode cost vs agent count (paper §4.3 —
+//! the write half of "the cost of reusing a shared block is paid once
+//! regardless of agent count").
+//!
+//! Sweeps 8/16/32/64 agents over a *fixed* shared-block set and reports,
+//! for the collective encode path (expectation buffers memoized per
+//! alignment signature, provenance-clean blocks skipped by the diff
+//! scan) against the exhaustive per-mirror baseline
+//! (`EngineBuilder::collective_encode(false)`): encode wall time per
+//! round and per agent, expectation-memo hits, provenance-skipped
+//! blocks, and rope passes per round. The collective property shows up
+//! as a flat-to-falling per-agent encode time across the sweep while
+//! the baseline's stays linear in the full-cache scan work, and as
+//! memo-hit / skipped-block counters growing with the cohort size.
+//!
+//! With `BENCH_JSON=<path>` each row also appends machine-readable
+//! `{"bench","metric","value"}` lines for cross-PR tracking.
+
+include!("harness.rs");
+
+use tokendance::engine::{AgentRequest, Engine, Policy};
+use tokendance::serve::RoundSubmission;
+use tokendance::tokenizer::{BlockKind, RoundAwarePrompt};
+
+const SHARED_BLOCKS: usize = 8;
+const BLOCK_TOKENS: usize = 16;
+const ROUNDS: usize = 3;
+
+fn block(seed: u32) -> Vec<u32> {
+    (0..BLOCK_TOKENS as u32).map(|t| 4 + (seed + t * 3) % 200).collect()
+}
+
+struct Row {
+    agents: usize,
+    path: &'static str,
+    enc_per_round: f64,
+    per_agent: f64,
+    memo_hits_per_round: f64,
+    skipped_per_round: f64,
+    ropes_per_round: f64,
+}
+
+fn run_case(
+    rt: &std::rc::Rc<dyn tokendance::runtime::ModelRuntime>,
+    model: &str,
+    agents: usize,
+    collective: bool,
+) -> Row {
+    let shared: Vec<Vec<u32>> =
+        (0..SHARED_BLOCKS as u32).map(|i| block(i * 37)).collect();
+    let mut eng = Engine::builder(model)
+        .policy(Policy::TokenDance)
+        .pool_blocks(4096)
+        .recompute_frac(0.05)
+        .min_recompute(1)
+        .collective_encode(collective)
+        .runtime(rt.clone())
+        .build()
+        .unwrap();
+    for round in 0..ROUNDS {
+        let mut sub = RoundSubmission::new(round);
+        for a in 0..agents {
+            let mut p = RoundAwarePrompt::new();
+            // private history varies per (agent, round); the shared set
+            // and the round task are identical across agents, so every
+            // round is one cohort with one alignment signature
+            p.push(
+                BlockKind::PrivateHistory,
+                block(1000 + (a * ROUNDS + round) as u32),
+            );
+            for (i, s) in shared.iter().enumerate() {
+                p.push(
+                    BlockKind::SharedOutput { producer: i, round: 0 },
+                    s.clone(),
+                );
+            }
+            p.push(BlockKind::RoundTask, block(5000 + round as u32));
+            sub.push(AgentRequest {
+                agent: a,
+                round,
+                prompt: p,
+                max_new_tokens: 8,
+                retain: true,
+            });
+        }
+        eng.submit_round(sub).unwrap();
+        eng.drain().unwrap();
+    }
+    let m = &eng.metrics;
+    let rounds = m.encode_secs.len().max(1) as f64;
+    Row {
+        agents,
+        path: if collective { "collective" } else { "per-mirror" },
+        enc_per_round: m.encode_secs.mean(),
+        per_agent: m.encode_secs.mean() / agents as f64,
+        memo_hits_per_round: m.expected_memo_hits as f64 / rounds,
+        skipped_per_round: m.encode_skipped_blocks as f64 / rounds,
+        ropes_per_round: m.encode_rope_recovers as f64 / rounds,
+    }
+}
+
+fn main() {
+    let (rt, real) = bench_runtime();
+    let model = "sim-7b";
+    println!("== bench_encode_round (collective round-end encode, §4.3) ==");
+    println!(
+        "fixed shared set: {SHARED_BLOCKS} blocks x {BLOCK_TOKENS} tokens; \
+         {ROUNDS} rounds, retain=true, runtime={}",
+        if real { "pjrt" } else { "mock" }
+    );
+    println!(
+        "{:>6}  {:<10}  {:>10}  {:>10}  {:>9}  {:>11}  {:>9}",
+        "agents",
+        "path",
+        "enc/round",
+        "per-agent",
+        "memo/rnd",
+        "skipped/rnd",
+        "ropes/rnd"
+    );
+    let mut flat: Vec<(usize, f64)> = Vec::new();
+    for &agents in &[8usize, 16, 32, 64] {
+        for &collective in &[false, true] {
+            let r = run_case(&rt, model, agents, collective);
+            if collective {
+                flat.push((agents, r.per_agent));
+            }
+            println!(
+                "{:>6}  {:<10}  {:>10}  {:>10}  {:>9.1}  {:>11.1}  {:>9.1}",
+                r.agents,
+                r.path,
+                fmt(r.enc_per_round),
+                fmt(r.per_agent),
+                r.memo_hits_per_round,
+                r.skipped_per_round,
+                r.ropes_per_round
+            );
+            let name = format!("encode_round/{}agents/{}", agents, r.path);
+            bench_json(&name, "encode_per_round_secs", r.enc_per_round);
+            bench_json(&name, "encode_per_agent_secs", r.per_agent);
+            bench_json(&name, "memo_hits_per_round", r.memo_hits_per_round);
+            bench_json(&name, "skipped_blocks_per_round", r.skipped_per_round);
+            bench_json(&name, "rope_passes_per_round", r.ropes_per_round);
+        }
+    }
+    let base = flat.first().map(|&(_, t)| t).unwrap_or(f64::NAN);
+    let worst = flat
+        .iter()
+        .map(|&(_, t)| t / base)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "flatness (collective path): worst per-agent cost / 8-agent cost \
+         = {worst:.2}x (target <= 1.5x)"
+    );
+    bench_json("encode_round/flatness", "worst_over_8agent", worst);
+}

@@ -64,6 +64,36 @@ pub fn fmt(s: f64) -> String {
     }
 }
 
+/// Append one machine-readable result line to the file named by the
+/// `BENCH_JSON` env var (created if absent); silently a no-op without it.
+/// Each line is a standalone JSON object — `{"bench": "...", "metric":
+/// "...", "value": ...}` — so downstream tooling can track perf deltas
+/// across PRs by concatenating files (format documented in README
+/// "Benchmarks"). Values are seconds for timings, plain counts for
+/// counters; non-finite values are skipped.
+#[allow(dead_code)] // not every bench target emits JSON yet
+pub fn bench_json(bench: &str, metric: &str, value: f64) {
+    let Ok(path) = std::env::var("BENCH_JSON") else { return };
+    if !value.is_finite() {
+        return;
+    }
+    // keep every emitted line valid JSON even if a name carries the two
+    // string metachars
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let (bench, metric) = (esc(bench), esc(metric));
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+    {
+        let _ = writeln!(
+            f,
+            "{{\"bench\":\"{bench}\",\"metric\":\"{metric}\",\"value\":{value}}}"
+        );
+    }
+}
+
 /// Runtime selection for benches: real artifacts when present unless
 /// BENCH_MOCK=1; iterations scale down on the real runtime.
 pub fn bench_runtime() -> (std::rc::Rc<dyn tokendance::runtime::ModelRuntime>, bool) {

@@ -47,6 +47,11 @@ pub struct ReuseResult {
     pub deviation: f64,
     /// Number of recomputed positions.
     pub recomputed: usize,
+    /// The recomputed slots themselves (selection + the always-refreshed
+    /// last position): these rows no longer hold donor-copied values, so
+    /// the engine dirties their blocks' provenance before round-end
+    /// encoding.
+    pub recomputed_slots: Vec<i32>,
 }
 
 #[derive(Clone, Debug)]
@@ -167,12 +172,20 @@ pub fn run_reuse(
             let (logits, kv, recomputed) = selective_chunked(
                 rt, model, &task.tokens, &sel, blended, task.valid_len,
             )?;
+            // selective_chunked always refreshes the last position even
+            // when the selection missed it — report the full rewritten set
+            let mut recomputed_slots = sel;
+            let last = (task.valid_len - 1) as i32;
+            if !recomputed_slots.contains(&last) {
+                recomputed_slots.push(last);
+            }
             results[ti] = Some(ReuseResult {
                 id: task.id,
                 logits,
                 kv,
                 deviation,
                 recomputed,
+                recomputed_slots,
             });
         }
     }

@@ -49,7 +49,7 @@ use super::prefill::{common_prefix, SIMILARITY_FALLBACK_MIN};
 use super::{Engine, Pending, Policy};
 use crate::collector::ReuseTask;
 use crate::restore::{materialize_mirror, RestoreMode};
-use crate::runtime::{KvBuf, ModelRuntime};
+use crate::runtime::{BlockProvenance, KvBuf, ModelRuntime};
 use crate::store::{CacheStore, DenseEntry, Fetched, Role, StoreKey};
 
 /// One resolved cache source, shared by every agent that references it.
@@ -125,13 +125,17 @@ impl Engine {
     /// out to each member's composite. Produces bitwise-identical
     /// `ReuseTask`s (in `batch` order) to the per-agent path
     /// ([`Engine::assemble_composite`]); only the store traffic differs.
+    /// The returned [`BlockProvenance`] records, per block, which store
+    /// entry rows were copied verbatim — round-end encoding uses it to
+    /// skip provably-clean blocks without scanning them.
     pub(super) fn assemble_round(
         &mut self,
         batch: &[&Pending],
         plan: &mut GatherPlan,
-    ) -> Result<Vec<(ReuseTask, usize)>> {
+    ) -> Result<Vec<(ReuseTask, usize, BlockProvenance)>> {
         let spec = self.spec.clone();
         let s = spec.max_seq;
+        let bt = spec.block_tokens;
         let mode = self.cfg.restore_mode();
         let model = self.cfg.model.clone();
         let rt = self.rt.clone();
@@ -142,6 +146,7 @@ impl Engine {
             let mut old_pos: Vec<i32> = (0..s as i32).collect();
             let mut valid = vec![0u8; s];
             let mut reused = 0usize;
+            let mut prov = BlockProvenance::dirty(s.div_ceil(bt), bt);
 
             // (1) retained-cache prefix donor
             let key = self
@@ -176,6 +181,9 @@ impl Engine {
                         }
                         reused += lcp;
                         covered_upto = lcp;
+                        // prefix rows sit at their donor positions
+                        // (identity ramp): positions == row indices
+                        prov.record_copy(0, lcp, key, 0, None);
                     }
                 }
             }
@@ -217,6 +225,9 @@ impl Engine {
                         old_pos[seg.start + i] = e.positions[i];
                     }
                     reused += n;
+                    prov.record_copy(
+                        seg.start, n, skey, 0, Some(&e.positions),
+                    );
                 }
             }
 
@@ -274,6 +285,7 @@ impl Engine {
                     kv,
                 },
                 reused,
+                prov,
             ));
         }
         Ok(out)

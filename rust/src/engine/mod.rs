@@ -34,7 +34,8 @@ use crate::model::ModelSpec;
 use crate::restore::RestoreMode;
 use crate::rounds::{segment_blocks, DetectorConfig, SegmentedPrompt};
 use crate::runtime::{
-    argmax, DecodeSeq, KvBuf, KvScratch, ModelRuntime, ScratchCounters,
+    argmax, BlockProvenance, DecodeSeq, KvBuf, KvScratch, ModelRuntime,
+    ScratchCounters,
 };
 use crate::scheduler::{decode_batches, AdmissionQueue, QueuedRequest};
 use crate::serve::EngineEvent;
@@ -110,6 +111,14 @@ pub struct EngineConfig {
     /// back to the seed per-agent path — numerically identical, kept as
     /// the equivalence baseline and the bench's "before" arm.
     pub gather_plan: bool,
+    /// Round-end Master-Mirror encoding pays its shared costs once per
+    /// cohort: the permuted-master + RoPE-recovered expectation buffer is
+    /// built once per distinct alignment signature and the diff scan
+    /// skips provenance-clean blocks. `false` falls back to the
+    /// exhaustive per-mirror path — identical `AlignedDiff` output, kept
+    /// as the equivalence baseline and `bench_encode_round`'s "before"
+    /// arm.
+    pub collective_encode: bool,
 }
 
 impl EngineConfig {
@@ -128,6 +137,7 @@ impl EngineConfig {
             detector: DetectorConfig::default(),
             restore_mode: None,
             gather_plan: true,
+            collective_encode: true,
         }
     }
 
@@ -188,6 +198,10 @@ struct Running {
     /// against their own cohort's master. 0 on the non-PIC paths, which
     /// never stage caches for encoding.
     cohort: u64,
+    /// Block provenance of the working cache, recorded at composite
+    /// assembly and dirtied by selective recomputation; decode-written
+    /// blocks are dirtied at staging. Empty (all-dirty) on non-PIC paths.
+    provenance: BlockProvenance,
     retain: bool,
 }
 
@@ -214,6 +228,10 @@ struct StagedCache {
     /// Compact [L, len, d] planes.
     kv: KvBuf,
     deviation: f64,
+    /// Block provenance of `kv` (decode-written blocks already dirtied):
+    /// the encode diff skips blocks whose provenance matches the
+    /// master's — same source entry, same rows — without scanning them.
+    provenance: BlockProvenance,
 }
 
 /// A request waiting for admission (prompt already segmented).
@@ -233,6 +251,10 @@ pub struct Engine {
     /// Recycling arena for max_seq working buffers (composites, cold
     /// prefills, encode padding) — the prefill hot path's allocator.
     scratch: KvScratch,
+    /// Cached 0..max_seq position ramp: the encode path's `slots` array
+    /// and every per-entry `positions` ramp are slices/copies of this
+    /// instead of per-call `(0..n).collect()` allocations.
+    pos_ramp: Vec<i32>,
     queue: AdmissionQueue,
     pending: HashMap<u64, Pending>,
     running: Vec<Running>,
@@ -272,6 +294,7 @@ impl Engine {
         // identity-rotation mirrors
         store.attach_runtime(rt.clone(), cfg.model.clone());
         let scratch = KvScratch::for_spec(&spec);
+        let pos_ramp: Vec<i32> = (0..spec.max_seq as i32).collect();
         Ok(Engine {
             rt,
             cfg,
@@ -279,6 +302,7 @@ impl Engine {
             pool,
             store,
             scratch,
+            pos_ramp,
             queue: AdmissionQueue::new(),
             pending: HashMap::new(),
             running: Vec::new(),

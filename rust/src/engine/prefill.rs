@@ -15,7 +15,8 @@
 //! slots. PIC paths are approximate only at reused-but-unselected
 //! positions, exactly as CacheBlend is.
 
-use std::collections::BTreeMap;
+use std::collections::hash_map::Entry;
+use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -26,9 +27,9 @@ use super::{Completion, Engine, Pending, Policy, Running, StagedCache};
 use crate::collector::{run_reuse, selective_chunked, CollectorConfig, ReuseTask};
 use crate::restore::materialize_mirror;
 use crate::rounds::{detect_pattern, CohortPartition};
-use crate::runtime::{argmax, KvBuf};
+use crate::runtime::{argmax, BlockProvenance, KvBuf};
 use crate::store::{
-    diff_blocks_tol, extract_blocks, gather_permuted_master,
+    diff_blocks_tol_masked, extract_blocks, gather_permuted_master_into,
     match_blocks_by_segments, AlignedDiff, DenseEntry, Fetched, MirrorEntry,
 };
 
@@ -160,6 +161,7 @@ impl Engine {
             seg: p.seg,
             deviation: f64::MAX,
             cohort: 0,
+            provenance: BlockProvenance::default(),
             retain: p.req.retain,
         })
     }
@@ -220,6 +222,7 @@ impl Engine {
             seg: p.seg,
             deviation: f64::MAX,
             cohort: 0,
+            provenance: BlockProvenance::default(),
             retain: p.req.retain,
         })
     }
@@ -303,11 +306,12 @@ impl Engine {
         // `gather_plan = false` for equivalence tests and the bench's
         // "before" arm.
         let t0 = Instant::now();
-        let mut assembled: Vec<Option<(ReuseTask, usize)>> =
+        type Assembled = (ReuseTask, usize, BlockProvenance);
+        let mut assembled: Vec<Option<Assembled>> =
             (0..batch.len()).map(|_| None).collect();
         let plan_group = |eng: &mut Self,
                               members: &[usize],
-                              assembled: &mut Vec<Option<(ReuseTask, usize)>>|
+                              assembled: &mut Vec<Option<Assembled>>|
          -> Result<()> {
             let refs: Vec<&Pending> =
                 members.iter().map(|&m| &batch[m]).collect();
@@ -354,6 +358,8 @@ impl Engine {
         // serial collector processes each task independently, so this is
         // identical to per-task calls.
         let mut reused_tokens: Vec<usize> = vec![0; batch.len()];
+        let mut provs: Vec<Option<BlockProvenance>> =
+            (0..batch.len()).map(|_| None).collect();
         let mut cold: Vec<usize> = Vec::new();
         let mut passes: Vec<(bool, Vec<usize>, Vec<ReuseTask>)> =
             Vec::new();
@@ -363,17 +369,20 @@ impl Engine {
             let mut idxs = Vec::new();
             let mut tasks = Vec::new();
             for &m in members {
-                let (task, reused) = assembled[m].take().unwrap();
+                let (task, reused, prov) = assembled[m].take().unwrap();
                 reused_tokens[m] = reused;
                 if reused == 0 {
                     // nothing reused: the composite never reaches the
-                    // collector — recycle it now
+                    // collector — recycle it now (cold prefills keep the
+                    // default all-dirty provenance)
                     self.scratch.checkin(task.kv, task.valid_len);
                     cold.push(m);
                 } else if *collective {
+                    provs[m] = Some(prov);
                     idxs.push(m);
                     tasks.push(task);
                 } else {
+                    provs[m] = Some(prov);
                     serial_idx.push(m);
                     serial_tasks.push(task);
                 }
@@ -405,6 +414,13 @@ impl Engine {
                         self.metrics.request_mut(batch[*ri].id)
                     {
                         t.recomputed_tokens = res.recomputed;
+                    }
+                    // recomputed rows no longer hold donor-copied values:
+                    // dirty their blocks so encode never skips them
+                    if let Some(prov) = provs[*ri].as_mut() {
+                        for &slot in &res.recomputed_slots {
+                            prov.mark_dirty_slot(slot as usize);
+                        }
                     }
                     outputs[*ri] =
                         Some((res.kv, res.logits, res.deviation));
@@ -453,6 +469,7 @@ impl Engine {
                 seg: p.seg,
                 deviation,
                 cohort: cohort_of[i],
+                provenance: provs[i].take().unwrap_or_default(),
                 retain: p.req.retain,
             });
         }
@@ -470,8 +487,9 @@ impl Engine {
     /// (engine/gather.rs), hoists that work into one collective step per
     /// round; this one is retained as its numerical-equivalence baseline
     /// and the bench's "before" arm (`EngineConfig::gather_plan = false`).
+    /// Both paths record identical [`BlockProvenance`].
     pub(super) fn assemble_composite(&mut self, p: &Pending)
-        -> Result<(ReuseTask, usize)>
+        -> Result<(ReuseTask, usize, BlockProvenance)>
     {
         /// Prefix donor rows: a shared store payload (zero-copy) or a
         /// mirror materialized for this request.
@@ -482,6 +500,7 @@ impl Engine {
 
         let spec = self.spec.clone();
         let s = spec.max_seq;
+        let bt = spec.block_tokens;
         // recycled zeroed buffer — identical content to a fresh
         // KvBuf::for_spec (the bitwise-equivalence tests depend on that),
         // but singleton-cohort traffic no longer allocates per request
@@ -489,6 +508,7 @@ impl Engine {
         let mut old_pos: Vec<i32> = (0..s as i32).collect();
         let mut valid = vec![0u8; s];
         let mut reused = 0usize;
+        let mut prov = BlockProvenance::dirty(s.div_ceil(bt), bt);
 
         // (1) retained-cache prefix donor
         let key = self
@@ -532,6 +552,7 @@ impl Engine {
                     }
                     reused += lcp;
                     covered_upto = lcp;
+                    prov.record_copy(0, lcp, key, 0, None);
                 }
             }
         }
@@ -566,6 +587,7 @@ impl Engine {
                     old_pos[seg.start + i] = e.positions[i];
                 }
                 reused += n;
+                prov.record_copy(seg.start, n, skey, 0, Some(&e.positions));
             }
         }
 
@@ -621,6 +643,7 @@ impl Engine {
                 kv,
             },
             reused,
+            prov,
         ))
     }
 
@@ -684,7 +707,7 @@ impl Engine {
     // finalization + round-end Master-Mirror encoding
     // -----------------------------------------------------------------
 
-    pub(super) fn finalize_one(&mut self, r: Running) -> Result<()> {
+    pub(super) fn finalize_one(&mut self, mut r: Running) -> Result<()> {
         let now = Instant::now();
         if let Some(t) = self.metrics.request_mut(r.id) {
             t.completed = Some(now);
@@ -785,7 +808,12 @@ impl Engine {
             }
             Policy::TokenDance => {
                 // stage for round-end Master-Mirror encoding (keyed by
-                // sharing cohort: each cohort elects its own master)
+                // sharing cohort: each cohort elects its own master).
+                // Decode wrote every row past the prompt: dirty those
+                // blocks so provenance never vouches for generated
+                // content
+                let mut provenance = std::mem::take(&mut r.provenance);
+                provenance.mark_dirty_slots(r.prompt_len, full_len);
                 self.round_staging.entry(r.round).or_default().push(
                     StagedCache {
                         agent: r.agent,
@@ -794,6 +822,7 @@ impl Engine {
                         segments: r.seg.segments.clone(),
                         kv: r.kv.extract_rows(0, full_len),
                         deviation: r.deviation,
+                        provenance,
                     },
                 );
                 self.pool.release(&r.table);
@@ -880,7 +909,7 @@ impl Engine {
             .put_dense(
                 key,
                 DenseEntry {
-                    positions: (0..len as i32).collect(),
+                    positions: self.pos_ramp[..len].to_vec(),
                     tokens,
                     kv,
                 },
@@ -916,11 +945,67 @@ impl Engine {
         Ok(mirror_bytes)
     }
 
+    /// Build one expectation buffer for an alignment signature: the
+    /// permuted master gathered into the mirror's block layout and, when
+    /// the source positions differ from the slots, RoPE-recovered into
+    /// the mirror frame. One of these serves *every* mirror sharing the
+    /// signature on the collective path.
+    fn build_expected(
+        &mut self,
+        master_padded: &KvBuf,
+        master_len: usize,
+        src_block: &[i32],
+        len: usize,
+        bt: usize,
+        model: &str,
+    ) -> Result<Expected> {
+        let mut buf = self.scratch.checkout();
+        let src_pos = gather_permuted_master_into(
+            master_padded,
+            &self.pos_ramp[..master_len],
+            src_block,
+            len,
+            bt,
+            &mut buf,
+        );
+        // when the source positions already equal the slots (aligned
+        // offsets, the common All-Gather case) the rotation is the
+        // identity and the rope pass is skipped (§Perf)
+        let identity =
+            src_pos.iter().enumerate().all(|(i, &p)| p == i as i32);
+        if !identity {
+            self.rt
+                .rope_recover(model, &mut buf, &src_pos, &self.pos_ramp)?;
+            self.metrics.encode_rope_recovers += 1;
+        }
+        Ok(Expected {
+            identity,
+            dirty_rows: if identity { len } else { self.spec.max_seq },
+            kv: buf,
+            src_pos,
+        })
+    }
+
     /// Elect one cohort's Master (lowest reuse deviation; ties broken by
     /// longest context), store it dense, and encode every sibling as a
     /// block-sparse diff against it. Store keys are salted with (round,
     /// cohort) so two cohorts retaining identical token streams in the
     /// same round can never collide onto one key.
+    ///
+    /// The encode itself is collective (`EngineConfig::collective_encode`,
+    /// default on): siblings are grouped by **alignment signature**
+    /// `(len, src_block)` — in the aligned All-Gather case there is
+    /// exactly one — and the permuted-master + RoPE-recovered expectation
+    /// buffer is built once per distinct signature, not once per mirror
+    /// (`expected_memo_hits` counts the sharing). The diff scan then
+    /// consults each mirror's [`BlockProvenance`]: blocks copied verbatim
+    /// from the same store entry rows as the master's aligned block are
+    /// provably reproduced by gather+rotate and are skipped without
+    /// touching a float (`encode_skipped_blocks`), making the scan
+    /// O(changed blocks). The exhaustive per-mirror path survives behind
+    /// `collective_encode(false)` as the equivalence baseline and
+    /// `bench_encode_round`'s "before" arm; both paths emit bitwise-
+    /// identical `AlignedDiff`s.
     fn encode_cohort(
         &mut self,
         round: usize,
@@ -934,6 +1019,7 @@ impl Engine {
         let salt = (round as u64)
             ^ cohort.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let spec = self.spec.clone();
+        let collective = self.cfg.collective_encode;
         // elect: min deviation, tie-break longer context
         let mut master_i = 0usize;
         for (i, s) in staged.iter().enumerate() {
@@ -944,7 +1030,8 @@ impl Engine {
                 master_i = i;
             }
         }
-        let master = staged.swap_remove(master_i);
+        let mut master = staged.swap_remove(master_i);
+        let master_prov = std::mem::take(&mut master.provenance);
         let master_key = crate::store::StoreKey {
             content: crate::util::fnv1a_tokens(&master.tokens) ^ salt,
             role: crate::store::Role::AgentCache { agent: master.agent },
@@ -958,7 +1045,7 @@ impl Engine {
             .put_dense(
                 master_key,
                 DenseEntry {
-                    positions: (0..master.kv.seq as i32).collect(),
+                    positions: self.pos_ramp[..master.kv.seq].to_vec(),
                     tokens: master.tokens.clone(),
                     kv: master.kv,
                 },
@@ -981,11 +1068,11 @@ impl Engine {
         let max_nb = self.rt.buckets().max_diff();
         let model = self.cfg.model.clone();
         let bt = spec.block_tokens;
-        let slots: Vec<i32> = (0..spec.max_seq as i32).collect();
         let master_tokens = master.tokens.clone();
         let master_segments = master.segments.clone();
-        let master_positions: Vec<i32> =
-            (0..master_tokens.len() as i32).collect();
+        // expectation memo, keyed by alignment signature: all mirrors
+        // with the same (len, src_block) share one buffer
+        let mut memo: HashMap<(usize, Vec<i32>), Expected> = HashMap::new();
 
         for s in staged {
             let len = s.kv.seq;
@@ -1005,36 +1092,55 @@ impl Engine {
             }
             let mut padded = self.scratch.checkout();
             padded.copy_rows_from(&s.kv, 0, 0, len);
-            let (permuted, src_pos) = gather_permuted_master(
-                &master_padded,
-                &master_positions,
-                &src_block,
-                len,
-                bt,
-                spec.max_seq,
-            );
-            // expected mirror = rotate(permuted, src -> slot); when the
-            // source positions already equal the slots (aligned offsets,
-            // the common All-Gather case) the rotation is the identity and
-            // the rope pass is skipped (§Perf)
-            let identity = src_pos
-                .iter()
-                .enumerate()
-                .all(|(i, &p)| p == i as i32);
-            let expected = if identity {
-                permuted
+
+            // resolve the expectation: memoized per signature on the
+            // collective path, rebuilt per mirror on the baseline arm
+            self.metrics.encode_lookups += 1;
+            let mut fresh: Option<Expected> = None;
+            let exp: &Expected = if collective {
+                match memo.entry((len, src_block.clone())) {
+                    Entry::Occupied(o) => {
+                        self.metrics.expected_memo_hits += 1;
+                        o.into_mut()
+                    }
+                    Entry::Vacant(v) => {
+                        let e = self.build_expected(
+                            &master_padded,
+                            master_tokens.len(),
+                            &src_block,
+                            len,
+                            bt,
+                            &model,
+                        )?;
+                        v.insert(e)
+                    }
+                }
             } else {
-                let mut e = permuted;
-                self.rt
-                    .rope_recover(&model, &mut e, &src_pos, &slots)?;
-                e
+                fresh.insert(self.build_expected(
+                    &master_padded,
+                    master_tokens.len(),
+                    &src_block,
+                    len,
+                    bt,
+                    &model,
+                )?)
             };
-            let changed =
-                diff_blocks_tol(&expected, &padded, len, bt, DIFF_TOL);
-            // the expectation buffer is dead after the diff; adopt it
-            // into the arena (full-width watermark: the rope pass may
-            // have touched every slot)
-            self.scratch.checkin(expected, spec.max_seq);
+
+            // provenance fast path: blocks whose rows both sides copied
+            // verbatim from the same store entry are provably clean —
+            // the scan is O(changed blocks), not O(all blocks)
+            let skip: Option<Vec<bool>> = if collective {
+                Some(s.provenance.skip_mask(&master_prov, &src_block, len))
+            } else {
+                None
+            };
+            if let Some(m) = &skip {
+                self.metrics.encode_skipped_blocks +=
+                    m.iter().filter(|&&x| x).count() as u64;
+            }
+            let changed = diff_blocks_tol_masked(
+                &exp.kv, &padded, len, bt, DIFF_TOL, skip.as_deref(),
+            );
 
             let key = crate::store::StoreKey {
                 content: crate::util::fnv1a_tokens(&s.tokens) ^ salt,
@@ -1053,35 +1159,42 @@ impl Engine {
                 // benefit diminishes")
                 self.scratch.checkin(padded, len);
                 self.retain_dense(salt, s.agent, s.tokens, s.kv);
+                if let Some(e) = fresh {
+                    self.scratch.checkin(e.kv, e.dirty_rows);
+                }
                 continue;
             }
+            let identity = exp.identity;
             // correction values must live in the *source* frame so the
             // restore path can scatter before its single RoPE pass:
             // un-rotate the mirror (slot -> src) and extract blocks —
-            // skipped entirely when the rotation is the identity
-            let unrot = if identity {
-                padded
+            // skipped entirely when the rotation is the identity, and
+            // (collective path) when there are no blocks to extract
+            let skip_unrot = identity
+                || (collective && changed.block_ids.is_empty());
+            let (unrot, dirty) = if skip_unrot {
+                // an identity (or elided) un-rotation leaves only the
+                // mirror's own rows written
+                (padded, len)
             } else {
                 let mut u = padded;
-                self.rt
-                    .rope_recover(&model, &mut u, &slots, &src_pos)?;
-                u
+                self.rt.rope_recover(
+                    &model, &mut u, &self.pos_ramp, &exp.src_pos,
+                )?;
+                // a real un-rotation rewrote the K plane across all slots
+                (u, spec.max_seq)
             };
             let corrections = extract_blocks(
                 &unrot, &changed.block_ids, len, bt,
             );
-            // the padding buffer (possibly un-rotated in place) is dead:
-            // an identity un-rotation touched only `len` rows, a real one
-            // rewrote the K plane across all slots
-            let dirty = if identity { len } else { spec.max_seq };
             self.scratch.checkin(unrot, dirty);
             let entry = MirrorEntry {
                 master: master_key,
                 tokens: s.tokens.clone(),
-                positions: (0..len as i32).collect(),
+                positions: self.pos_ramp[..len].to_vec(),
                 diff: AlignedDiff {
                     src_block,
-                    src_pos: src_pos[..len].to_vec(),
+                    src_pos: exp.src_pos[..len].to_vec(),
                     corrections,
                 },
             };
@@ -1100,10 +1213,34 @@ impl Engine {
                     self.retain_dense(salt, s.agent, s.tokens, s.kv);
                 }
             }
+            // baseline arm: the per-mirror expectation dies here; the
+            // collective memo survives the whole cohort and drains below
+            if let Some(e) = fresh {
+                self.scratch.checkin(e.kv, e.dirty_rows);
+            }
+        }
+        for (_, e) in memo.drain() {
+            self.scratch.checkin(e.kv, e.dirty_rows);
         }
         self.scratch.checkin(master_padded, master_len);
         Ok(mirror_bytes)
     }
+}
+
+/// One memoized round-end expectation buffer (see
+/// [`Engine::build_expected`]): `rotate(gather(master, src_block),
+/// src_pos -> slots)`, plus the metadata every sibling diff against it
+/// needs.
+struct Expected {
+    kv: KvBuf,
+    src_pos: Vec<i32>,
+    /// The src -> slot rotation was the identity (aligned offsets):
+    /// neither the expectation nor the correction extraction needs a
+    /// rope pass.
+    identity: bool,
+    /// Checkin watermark: a rope pass touches every slot, a bare gather
+    /// only the mirror's rows.
+    dirty_rows: usize,
 }
 
 fn _assert_engine_send() {

@@ -522,7 +522,7 @@ fn gather_plan_assembly_is_bitwise_identical_to_per_agent() {
         .map(|p| b.assemble_composite(p).unwrap())
         .collect();
     assert_eq!(planned.len(), legacy.len());
-    for ((ta, ra), (tb, rb)) in planned.iter().zip(&legacy) {
+    for ((ta, ra, pva), (tb, rb, pvb)) in planned.iter().zip(&legacy) {
         assert_eq!(ra, rb, "reused token counts match");
         assert_eq!(ta.id, tb.id);
         assert_eq!(ta.tokens, tb.tokens);
@@ -530,6 +530,7 @@ fn gather_plan_assembly_is_bitwise_identical_to_per_agent() {
         assert_eq!(ta.old_pos, tb.old_pos);
         assert_eq!(ta.valid, tb.valid);
         assert_eq!(ta.kv, tb.kv, "bitwise-identical composite donors");
+        assert_eq!(pva, pvb, "identical block provenance");
     }
     assert!(plan.dedup_hits > 0, "shared segments resolved once");
 
@@ -537,13 +538,13 @@ fn gather_plan_assembly_is_bitwise_identical_to_per_agent() {
     let cfg = CollectorConfig::default();
     let ta: Vec<_> = planned
         .into_iter()
-        .filter(|(_, r)| *r > 0)
-        .map(|(t, _)| t)
+        .filter(|(_, r, _)| *r > 0)
+        .map(|(t, _, _)| t)
         .collect();
     let tb: Vec<_> = legacy
         .into_iter()
-        .filter(|(_, r)| *r > 0)
-        .map(|(t, _)| t)
+        .filter(|(_, r, _)| *r > 0)
+        .map(|(t, _, _)| t)
         .collect();
     assert!(!ta.is_empty());
     let (res_a, _) = run_reuse(a.rt.as_ref(), MODEL, &ta, &cfg).unwrap();
@@ -963,6 +964,301 @@ fn cohort_masters_never_cross_cohorts() {
     assert!(mirrors >= 2, "premise: teams actually encoded mirrors");
 }
 
+// ---------------------------------------------------------------------
+// collective round-end encoding
+// ---------------------------------------------------------------------
+
+/// Drive one aligned two-round All-Gather: round 0 seeds each agent's
+/// output as a segment donor, round 1 consumes the first 8 producers'
+/// outputs *in the same producer order for every agent* (a fixed shared
+/// set, so 64 agents still fit max_seq), so all siblings share one
+/// alignment signature at identical offsets.
+fn run_aligned_all_gather(eng: &mut Engine, agents: usize) {
+    let mut sub = RoundSubmission::new(0);
+    for a in 0..agents {
+        let mut p = RoundAwarePrompt::new();
+        p.push(BlockKind::PrivateHistory, content_block(700 + a as u32));
+        sub.push(AgentRequest {
+            agent: a,
+            round: 0,
+            prompt: p,
+            max_new_tokens: 16,
+            retain: true,
+        });
+    }
+    eng.submit_round(sub).unwrap();
+    let mut outs: Vec<(usize, Vec<u32>)> = eng
+        .drain()
+        .unwrap()
+        .iter()
+        .map(|c| (c.agent, c.generated.clone()))
+        .collect();
+    outs.sort_by_key(|(a, _)| *a);
+
+    let mut sub = RoundSubmission::new(1);
+    for a in 0..agents {
+        let mut p = RoundAwarePrompt::new();
+        p.push(BlockKind::PrivateHistory, content_block(700 + a as u32));
+        for (prod, toks) in outs.iter().take(8) {
+            p.push(
+                BlockKind::SharedOutput { producer: *prod, round: 1 },
+                toks.clone(),
+            );
+        }
+        sub.push(AgentRequest {
+            agent: a,
+            round: 1,
+            prompt: p,
+            max_new_tokens: 16,
+            retain: true,
+        });
+    }
+    eng.submit_round(sub).unwrap();
+    eng.drain().unwrap();
+}
+
+#[test]
+fn aligned_all_gather_builds_one_expectation_and_zero_rope_passes() {
+    // the acceptance pin: in the aligned All-Gather case the whole
+    // cohort shares ONE alignment signature, so gather_permuted_master
+    // runs once (encode_lookups - expected_memo_hits == 1) and — since
+    // aligned offsets make the rotation the identity — rope_recover runs
+    // zero times; the diff scan skips the provenance-clean shared blocks
+    for agents in [8usize, 64] {
+        let mut eng = Engine::builder(MODEL)
+            .policy(Policy::TokenDance)
+            .pool_blocks(8192)
+            .recompute_frac(0.05)
+            .min_recompute(1)
+            .mock()
+            .build()
+            .unwrap();
+        run_aligned_all_gather(&mut eng, agents);
+        let m = &eng.metrics;
+        assert_eq!(
+            m.cohorts_collective, 1,
+            "agents={agents}: round 1 is one cohort"
+        );
+        assert_eq!(
+            m.encode_lookups,
+            agents as u64 - 1,
+            "agents={agents}: every sibling reached the diff stage"
+        );
+        assert_eq!(
+            m.encode_lookups - m.expected_memo_hits,
+            1,
+            "agents={agents}: one expectation built for the whole cohort"
+        );
+        assert_eq!(
+            m.encode_rope_recovers, 0,
+            "agents={agents}: identity alignment never pays a rope pass"
+        );
+        assert!(
+            m.encode_skipped_blocks > 0,
+            "agents={agents}: provenance-clean shared blocks skipped"
+        );
+        // and the encoding actually produced a mirror family
+        let st = eng.store().stats();
+        assert!(
+            st.mirror_entries as usize >= agents / 2,
+            "agents={agents}: siblings became mirrors ({})",
+            st.mirror_entries
+        );
+    }
+}
+
+#[test]
+fn shifted_alignments_pay_one_rope_pass_per_distinct_signature() {
+    // two private-history lengths (one vs two blocks) inside one cohort:
+    // the group aligned with the elected master keeps the identity
+    // rotation (no rope), the shifted group forms exactly one distinct
+    // non-identity signature — one gather + ONE rope pass serves all of
+    // its members, never one per mirror
+    const AGENTS: usize = 6;
+    let mut eng = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(4096)
+        .recompute_frac(0.05)
+        .min_recompute(1)
+        .mock()
+        .build()
+        .unwrap();
+    let private = |a: usize| -> Vec<Vec<u32>> {
+        if a < 3 {
+            vec![content_block(800 + a as u32)]
+        } else {
+            vec![
+                content_block(800 + a as u32),
+                content_block(850 + a as u32),
+            ]
+        }
+    };
+    let mut sub = RoundSubmission::new(0);
+    for a in 0..AGENTS {
+        let mut p = RoundAwarePrompt::new();
+        for blk in private(a) {
+            p.push(BlockKind::PrivateHistory, blk);
+        }
+        sub.push(AgentRequest {
+            agent: a,
+            round: 0,
+            prompt: p,
+            max_new_tokens: 16,
+            retain: true,
+        });
+    }
+    eng.submit_round(sub).unwrap();
+    let mut outs: Vec<(usize, Vec<u32>)> = eng
+        .drain()
+        .unwrap()
+        .iter()
+        .map(|c| (c.agent, c.generated.clone()))
+        .collect();
+    outs.sort_by_key(|(a, _)| *a);
+
+    let mut sub = RoundSubmission::new(1);
+    for a in 0..AGENTS {
+        let mut p = RoundAwarePrompt::new();
+        for blk in private(a) {
+            p.push(BlockKind::PrivateHistory, blk);
+        }
+        for (prod, toks) in &outs {
+            p.push(
+                BlockKind::SharedOutput { producer: *prod, round: 1 },
+                toks.clone(),
+            );
+        }
+        sub.push(AgentRequest {
+            agent: a,
+            round: 1,
+            prompt: p,
+            max_new_tokens: 16,
+            retain: true,
+        });
+    }
+    eng.submit_round(sub).unwrap();
+    eng.drain().unwrap();
+
+    let m = &eng.metrics;
+    assert_eq!(m.cohorts_collective, 1, "shared blocks dominate: 1 cohort");
+    assert_eq!(m.encode_lookups, AGENTS as u64 - 1);
+    // whichever group the master came from: two distinct signatures
+    // (aligned + shifted), so exactly two expectation builds...
+    assert_eq!(
+        m.encode_lookups - m.expected_memo_hits,
+        2,
+        "one expectation per distinct signature"
+    );
+    // ...of which exactly one is non-identity — the pinned rope count
+    assert_eq!(
+        m.encode_rope_recovers, 1,
+        "one rope pass per distinct non-identity signature"
+    );
+}
+
+#[test]
+fn collective_encode_is_bitwise_identical_to_per_mirror_baseline() {
+    // the acceptance criterion: with collective_encode on (memoized
+    // expectations + provenance-skipped scans) every retained entry —
+    // mirror AlignedDiffs included — is bitwise-identical to the
+    // exhaustive per-mirror baseline, across warmed 3-round Full and
+    // Teams topology sessions
+    use crate::workload::{Session, Topology, WorkloadConfig};
+    for topology in [Topology::Full, Topology::Teams { size: 2 }] {
+        let mk = |collective: bool| {
+            Engine::builder(MODEL)
+                .policy(Policy::TokenDance)
+                .pool_blocks(1024)
+                .recompute_frac(0.05)
+                .min_recompute(1)
+                .collective_encode(collective)
+                .mock()
+                .build()
+                .unwrap()
+        };
+        let mut a = mk(true);
+        let mut b = mk(false);
+        let run = |eng: &mut Engine| -> Vec<Vec<(usize, Vec<u32>)>> {
+            let cfg = WorkloadConfig::generative_agents(1, 4, 3)
+                .with_topology(topology);
+            let mut session = Session::new(cfg, 0);
+            let mut all = Vec::new();
+            while !session.done() {
+                let sub = RoundSubmission::new(session.global_round())
+                    .requests(session.next_round());
+                eng.submit_round(sub).unwrap();
+                let mut outs: Vec<(usize, Vec<u32>)> = eng
+                    .drain()
+                    .unwrap()
+                    .iter()
+                    .map(|c| (c.agent, c.generated.clone()))
+                    .collect();
+                outs.sort_by_key(|(x, _)| *x);
+                all.push(outs.clone());
+                session.absorb(&outs).unwrap();
+            }
+            all
+        };
+        let outs_a = run(&mut a);
+        let outs_b = run(&mut b);
+        assert_eq!(outs_a, outs_b, "{}: identical outputs", topology.label());
+        assert_eq!(
+            a.store().bytes(),
+            b.store().bytes(),
+            "{}: identical store bytes",
+            topology.label()
+        );
+        for agent in 0..4 {
+            let ka = a.agent_store_key(agent);
+            let kb = b.agent_store_key(agent);
+            assert_eq!(ka, kb, "{}: retention keys", topology.label());
+            let Some(key) = ka else { continue };
+            match (a.store_mut().get(&key), b.store_mut().get(&key)) {
+                (
+                    Some(Fetched::Mirror(ha)),
+                    Some(Fetched::Mirror(hb)),
+                ) => {
+                    assert_eq!(ha.mirror.tokens, hb.mirror.tokens);
+                    assert_eq!(ha.mirror.positions, hb.mirror.positions);
+                    assert_eq!(ha.mirror.master, hb.mirror.master);
+                    assert_eq!(
+                        ha.mirror.diff, hb.mirror.diff,
+                        "{}: agent {agent} AlignedDiff bitwise-identical",
+                        topology.label()
+                    );
+                }
+                (Some(Fetched::Dense(da)), Some(Fetched::Dense(db))) => {
+                    assert_eq!(da.tokens, db.tokens);
+                    assert_eq!(
+                        da.kv, db.kv,
+                        "{}: agent {agent} dense bytes identical",
+                        topology.label()
+                    );
+                }
+                (x, y) => panic!(
+                    "{}: agent {agent} entry kinds differ: {:?} vs {:?}",
+                    topology.label(),
+                    x.is_some(),
+                    y.is_some()
+                ),
+            }
+        }
+        // the collective arm actually exercised its fast paths; the
+        // baseline arm must never touch them
+        assert!(
+            a.metrics.encode_skipped_blocks > 0,
+            "{}: provenance skips happened",
+            topology.label()
+        );
+        assert_eq!(b.metrics.expected_memo_hits, 0);
+        assert_eq!(b.metrics.encode_skipped_blocks, 0);
+        assert_eq!(
+            a.metrics.encode_lookups, b.metrics.encode_lookups,
+            "both arms encode the same sibling set"
+        );
+    }
+}
+
 #[test]
 fn full_topology_round_is_one_cohort_equal_to_pre_cohort_plan() {
     use super::gather::GatherPlan;
@@ -1022,13 +1318,14 @@ fn full_topology_round_is_one_cohort_equal_to_pre_cohort_plan() {
     let mut plan_b = GatherPlan::default();
     let out_b = b.assemble_round(&whole, &mut plan_b).unwrap();
     assert_eq!(out_a.len(), out_b.len());
-    for ((ta, ra), (tb, rb)) in out_a.iter().zip(&out_b) {
+    for ((ta, ra, pva), (tb, rb, pvb)) in out_a.iter().zip(&out_b) {
         assert_eq!(ra, rb, "reused counts match");
         assert_eq!(ta.id, tb.id);
         assert_eq!(ta.tokens, tb.tokens);
         assert_eq!(ta.old_pos, tb.old_pos);
         assert_eq!(ta.valid, tb.valid);
         assert_eq!(ta.kv, tb.kv, "bitwise-equal composites");
+        assert_eq!(pva, pvb, "identical block provenance");
     }
     assert_eq!(plan_a.lookups, plan_b.lookups);
     assert_eq!(plan_a.dedup_hits, plan_b.dedup_hits);

@@ -165,6 +165,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eng.metrics.cohorts_collective,
         eng.metrics.cohorts_singleton,
     );
+    println!(
+        "encode:             {} mirror encodes, {} expectation memo hits, \
+         {} blocks provenance-skipped, {} rope passes",
+        eng.metrics.encode_lookups,
+        eng.metrics.expected_memo_hits,
+        eng.metrics.encode_skipped_blocks,
+        eng.metrics.encode_rope_recovers,
+    );
     println!("runtime calls:      {}", eng.rt.calls());
     Ok(())
 }

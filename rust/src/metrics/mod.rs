@@ -95,6 +95,22 @@ pub struct RunMetrics {
     /// Round-end Master-Mirror encode cost (off the serving critical path
     /// in principle; measured to keep it honest).
     pub encode_secs: Samples,
+    /// Mirror encodes that consulted the round-end expectation memo (one
+    /// per sibling reaching the diff stage, on both encode paths).
+    pub encode_lookups: u64,
+    /// Encode-memo consultations served by an already-built expectation
+    /// buffer (same alignment signature as an earlier sibling) instead of
+    /// a fresh gather + rope pass — the collective-encode dedup win. In
+    /// the aligned All-Gather case this is (siblings - 1) per cohort.
+    pub expected_memo_hits: u64,
+    /// Diff-scan blocks skipped because mirror and master provenance
+    /// named the same store entry rows (provably clean — never scanned).
+    pub encode_skipped_blocks: u64,
+    /// RoPE-recovery passes spent building expectation buffers. On the
+    /// collective path: one per distinct *non-identity* alignment
+    /// signature per cohort (0 in the aligned All-Gather case); on the
+    /// baseline arm: one per non-identity mirror.
+    pub encode_rope_recovers: u64,
     /// Collective sharing cohorts formed across all prefilled batches
     /// (cohorts meeting `DetectorConfig::min_requests`, each assembled
     /// through its own gather plan and mirror-encoded against its own

@@ -124,6 +124,161 @@ impl KvBuf {
     }
 }
 
+/// Where one token-block of a working cache came from.
+///
+/// Assembly records a [`BlockOrigin::Copied`] for every block whose rows
+/// were copied *verbatim and in full* from one store entry; everything
+/// else — computed rows, partial coverage, per-slot scatter — stays
+/// [`BlockOrigin::Dirty`]. Round-end encoding uses the record to prove
+/// blocks clean without scanning them: when a mirror block and the master
+/// block it is aligned to were both copied from the same entry rows, the
+/// expected-buffer construction reproduces the mirror at that block by
+/// construction (same source values, same claimed source positions, and a
+/// composed RoPE rotation that differs from the direct one only by the
+/// roundoff `DIFF_TOL` already absorbs), so the diff scan can skip it
+/// without touching a float.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockOrigin {
+    /// All rows of the block were copied from one store entry.
+    Copied {
+        /// The entry the rows came from.
+        src: crate::store::StoreKey,
+        /// First source row of the block within that entry.
+        src_start: usize,
+        /// Donor position claimed for the block's first row (the
+        /// entry's `positions[src_start]`) — defensive: equality is
+        /// implied by (src, src_start), but recording it keeps the
+        /// skip proof self-contained.
+        src_pos_start: i32,
+    },
+    /// Written by compute (prefill, selective recomputation, decode),
+    /// only partially covered by a copy, or never written at all.
+    Dirty,
+}
+
+/// Per-request block provenance of a working cache, recorded at composite
+/// assembly and carried through `Running`/`StagedCache` into round-end
+/// encoding. The default value (no blocks) reads as all-dirty, which is
+/// always safe: a dirty block is merely scanned like before.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BlockProvenance {
+    pub block_tokens: usize,
+    pub blocks: Vec<BlockOrigin>,
+}
+
+impl BlockProvenance {
+    /// An all-dirty record covering `n_blocks` blocks.
+    pub fn dirty(n_blocks: usize, block_tokens: usize) -> Self {
+        BlockProvenance {
+            block_tokens,
+            blocks: vec![BlockOrigin::Dirty; n_blocks],
+        }
+    }
+
+    /// Origin of block `b` (out-of-range reads as dirty).
+    pub fn origin(&self, b: usize) -> BlockOrigin {
+        self.blocks.get(b).copied().unwrap_or(BlockOrigin::Dirty)
+    }
+
+    /// Record a contiguous copy of `len` rows from `src` into slots
+    /// `dst_start..dst_start + len` (source row 0 of the copy is
+    /// `src_row0`). Only blocks *entirely* inside the copied range are
+    /// marked; boundary blocks stay dirty — conservative, never wrong.
+    /// `positions` is the entry's per-row position array (None when the
+    /// donor's positions are its own row indices, e.g. retained-cache
+    /// prefixes).
+    pub fn record_copy(
+        &mut self,
+        dst_start: usize,
+        len: usize,
+        src: crate::store::StoreKey,
+        src_row0: usize,
+        positions: Option<&[i32]>,
+    ) {
+        let bt = self.block_tokens;
+        if bt == 0 || len == 0 {
+            return;
+        }
+        let first = dst_start.div_ceil(bt);
+        let last = (dst_start + len) / bt; // exclusive
+        for b in first..last.min(self.blocks.len()) {
+            let i0 = b * bt - dst_start;
+            let sr = src_row0 + i0;
+            let p0 = match positions {
+                Some(p) => match p.get(sr) {
+                    Some(&x) => x,
+                    None => continue, // positions don't cover the copy
+                },
+                None => sr as i32,
+            };
+            self.blocks[b] = BlockOrigin::Copied {
+                src,
+                src_start: sr,
+                src_pos_start: p0,
+            };
+        }
+    }
+
+    /// Dirty every block overlapping slots `start..end` (selective
+    /// recomputation, decode-written rows).
+    pub fn mark_dirty_slots(&mut self, start: usize, end: usize) {
+        let bt = self.block_tokens;
+        if bt == 0 || end <= start {
+            return;
+        }
+        let last = (end - 1) / bt;
+        for b in (start / bt)..=last.min(self.blocks.len().saturating_sub(1))
+        {
+            if b < self.blocks.len() {
+                self.blocks[b] = BlockOrigin::Dirty;
+            }
+        }
+    }
+
+    /// Dirty the block containing `slot`.
+    pub fn mark_dirty_slot(&mut self, slot: usize) {
+        self.mark_dirty_slots(slot, slot + 1);
+    }
+
+    /// Per mirror block: can the encode diff skip the scan? True iff the
+    /// block is fully inside `valid_len`, aligned to a master block
+    /// (`src_block[b] >= 0`), and both sides were copied verbatim from
+    /// the *same* store entry rows — then gather+rotate provably
+    /// reproduces the mirror within the encode tolerance.
+    pub fn skip_mask(
+        &self,
+        master: &BlockProvenance,
+        src_block: &[i32],
+        valid_len: usize,
+    ) -> Vec<bool> {
+        let bt = self.block_tokens;
+        src_block
+            .iter()
+            .enumerate()
+            .map(|(b, &mb)| {
+                if mb < 0 || bt == 0 || (b + 1) * bt > valid_len {
+                    return false;
+                }
+                match (self.origin(b), master.origin(mb as usize)) {
+                    (
+                        BlockOrigin::Copied {
+                            src: a,
+                            src_start: sa,
+                            src_pos_start: pa,
+                        },
+                        BlockOrigin::Copied {
+                            src: c,
+                            src_start: sc,
+                            src_pos_start: pc,
+                        },
+                    ) => a == c && sa == sc && pa == pc,
+                    _ => false,
+                }
+            })
+            .collect()
+    }
+}
+
 /// Upper bound on idle buffers the arena keeps resident. Steady-state
 /// serving needs at most (running sequences + one round of composites)
 /// buffers; the cap only matters after a burst drains.
@@ -305,6 +460,75 @@ mod tests {
         assert_eq!(c.recycled, 1);
         assert_eq!(c.fresh_allocs, 1);
         assert_eq!(c.checkins, 1);
+    }
+
+    fn skey(content: u64) -> crate::store::StoreKey {
+        crate::store::StoreKey {
+            content,
+            role: crate::store::Role::Segment,
+        }
+    }
+
+    #[test]
+    fn provenance_records_only_fully_covered_blocks() {
+        let mut p = BlockProvenance::dirty(8, 16);
+        // copy of rows 8..56: blocks 1 and 2 are fully inside, 0 and 3
+        // only partially — boundary blocks must stay dirty
+        p.record_copy(8, 48, skey(7), 0, None);
+        assert_eq!(p.origin(0), BlockOrigin::Dirty);
+        assert_eq!(
+            p.origin(1),
+            BlockOrigin::Copied { src: skey(7), src_start: 8, src_pos_start: 8 }
+        );
+        assert_eq!(
+            p.origin(2),
+            BlockOrigin::Copied { src: skey(7), src_start: 24, src_pos_start: 24 }
+        );
+        assert_eq!(p.origin(3), BlockOrigin::Dirty);
+        // out-of-range blocks read as dirty
+        assert_eq!(p.origin(99), BlockOrigin::Dirty);
+    }
+
+    #[test]
+    fn provenance_uses_entry_positions_and_dirty_marks() {
+        let mut p = BlockProvenance::dirty(4, 16);
+        let positions: Vec<i32> = (100..164).collect();
+        p.record_copy(16, 32, skey(3), 0, Some(&positions));
+        assert_eq!(
+            p.origin(1),
+            BlockOrigin::Copied { src: skey(3), src_start: 0, src_pos_start: 100 }
+        );
+        assert_eq!(
+            p.origin(2),
+            BlockOrigin::Copied { src: skey(3), src_start: 16, src_pos_start: 116 }
+        );
+        p.mark_dirty_slot(20); // slot 20 -> block 1
+        assert_eq!(p.origin(1), BlockOrigin::Dirty);
+        p.mark_dirty_slots(32, 48);
+        assert_eq!(p.origin(2), BlockOrigin::Dirty);
+    }
+
+    #[test]
+    fn skip_mask_requires_matching_sources_both_sides() {
+        let mut mirror = BlockProvenance::dirty(4, 16);
+        let mut master = BlockProvenance::dirty(4, 16);
+        // mirror block 1 and master block 2 both copied from entry 9 row 0
+        mirror.record_copy(16, 16, skey(9), 0, None);
+        master.record_copy(32, 16, skey(9), 0, None);
+        // mirror block 2 copied from a different entry
+        mirror.record_copy(32, 16, skey(8), 0, None);
+        let src_block = vec![-1, 2, 2, 0];
+        let mask = mirror.skip_mask(&master, &src_block, 64);
+        assert_eq!(mask, vec![false, true, false, false]);
+        // partial tail block is never skipped even when provenance matches
+        let mask = mirror.skip_mask(&master, &src_block, 30);
+        assert_eq!(mask[1], false, "block 1 extends past valid_len 30");
+        // the default (empty) provenance skips nothing
+        let empty = BlockProvenance::default();
+        assert!(empty
+            .skip_mask(&master, &src_block, 64)
+            .iter()
+            .all(|&x| !x));
     }
 
     #[test]

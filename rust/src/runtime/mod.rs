@@ -13,7 +13,7 @@ pub mod pjrt;
 pub mod pjrt;
 pub mod traits;
 
-pub use kv::{KvBuf, KvScratch, ScratchCounters};
+pub use kv::{BlockOrigin, BlockProvenance, KvBuf, KvScratch, ScratchCounters};
 pub use mock::MockRuntime;
 pub use pjrt::PjrtRuntime;
 pub use traits::{

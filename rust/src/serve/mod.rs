@@ -256,6 +256,7 @@ pub struct EngineBuilder {
     detector: Option<DetectorConfig>,
     restore_mode: Option<RestoreMode>,
     gather_plan: Option<bool>,
+    collective_encode: Option<bool>,
 }
 
 impl EngineBuilder {
@@ -273,6 +274,7 @@ impl EngineBuilder {
             detector: None,
             restore_mode: None,
             gather_plan: None,
+            collective_encode: None,
         }
     }
 
@@ -356,6 +358,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Round-end Master-Mirror encoding pays its shared work once per
+    /// cohort (default true: expectation buffers memoized per alignment
+    /// signature, provenance-clean blocks skipped by the diff scan).
+    /// `false` selects the exhaustive per-mirror baseline — identical
+    /// `AlignedDiff` output, used by the equivalence tests and
+    /// `bench_encode_round`'s "before" arm.
+    pub fn collective_encode(mut self, on: bool) -> Self {
+        self.collective_encode = Some(on);
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let rt: Rc<dyn ModelRuntime> = match (self.runtime, self.artifacts)
         {
@@ -396,6 +409,9 @@ impl EngineBuilder {
         }
         if let Some(g) = self.gather_plan {
             cfg.gather_plan = g;
+        }
+        if let Some(c) = self.collective_encode {
+            cfg.collective_encode = c;
         }
         Engine::new(rt, cfg)
     }

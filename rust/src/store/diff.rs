@@ -105,11 +105,30 @@ impl AlignedDiff {
     }
 }
 
+/// True when any element pair differs by more than `tol`. Compares in
+/// fixed-width chunks: the per-chunk max-abs-diff reduction carries no
+/// early-exit branch (so it vectorizes), while the chunk-level compare
+/// keeps the early-out for blocks that differ immediately.
+#[inline]
+fn exceeds_tol(a: &[f32], b: &[f32], tol: f32) -> bool {
+    const CHUNK: usize = 64;
+    for (ca, cb) in a.chunks(CHUNK).zip(b.chunks(CHUNK)) {
+        let mut m = 0.0f32;
+        for (x, y) in ca.iter().zip(cb) {
+            m = m.max((x - y).abs());
+        }
+        if m > tol {
+            return true;
+        }
+    }
+    false
+}
+
 /// Compute the block-sparse diff of `mirror` against `master` over the
 /// first `valid_len` tokens. Buffers may be padded (seq >= valid_len);
 /// both must share layout. `tol` is the per-element tolerance: 0.0 for
-/// bitwise diffs, a small epsilon when comparing across composed RoPE
-/// rotations (float roundoff).
+/// bitwise diffs (slice-equality fast path), a small epsilon when
+/// comparing across composed RoPE rotations (float roundoff).
 pub fn diff_blocks_tol(
     master: &KvBuf,
     mirror: &KvBuf,
@@ -117,11 +136,29 @@ pub fn diff_blocks_tol(
     block_tokens: usize,
     tol: f32,
 ) -> BlockSparseDiff {
+    diff_blocks_tol_masked(master, mirror, valid_len, block_tokens, tol, None)
+}
+
+/// [`diff_blocks_tol`] with an optional per-block skip mask: blocks whose
+/// mask entry is true are *asserted clean* and excluded without scanning a
+/// single element — the provenance-skip fast path of round-end encoding
+/// (callers must only mask blocks that are provably within tolerance; a
+/// wrong mask silently drops a correction, which the golden-run encode
+/// digests would catch).
+pub fn diff_blocks_tol_masked(
+    master: &KvBuf,
+    mirror: &KvBuf,
+    valid_len: usize,
+    block_tokens: usize,
+    tol: f32,
+    skip: Option<&[bool]>,
+) -> BlockSparseDiff {
     debug_assert_eq!(master.layers, mirror.layers);
     debug_assert_eq!(master.d, mirror.d);
     let layers = master.layers;
     let d = master.d;
     let nb = valid_len.div_ceil(block_tokens);
+    let block_elems = layers * block_tokens * d;
     let mut out = BlockSparseDiff {
         block_ids: Vec::new(),
         k: Vec::new(),
@@ -131,34 +168,42 @@ pub fn diff_blocks_tol(
         d,
     };
     for b in 0..nb {
+        if skip.and_then(|m| m.get(b)).copied().unwrap_or(false) {
+            continue;
+        }
         let tok0 = b * block_tokens;
         let ntok = block_tokens.min(valid_len - tok0);
         let mut differs = false;
-        'scan: for l in 0..layers {
+        for l in 0..layers {
             let mo = master.off(l, tok0);
             let ro = mirror.off(l, tok0);
-            for i in 0..ntok * d {
-                if (master.k[mo + i] - mirror.k[ro + i]).abs() > tol
-                    || (master.v[mo + i] - mirror.v[ro + i]).abs() > tol
-                {
+            let n = ntok * d;
+            let (mk, rk) = (&master.k[mo..mo + n], &mirror.k[ro..ro + n]);
+            let (mv, rv) = (&master.v[mo..mo + n], &mirror.v[ro..ro + n]);
+            if tol == 0.0 {
+                // bitwise diff: plain slice equality (memcmp-shaped)
+                if mk != rk || mv != rv {
                     differs = true;
-                    break 'scan;
+                    break;
                 }
+            } else if exceeds_tol(mk, rk, tol) || exceeds_tol(mv, rv, tol) {
+                differs = true;
+                break;
             }
         }
         if differs {
             out.block_ids.push(b as i32);
-            // store the mirror's full block (padded region copied as-is so
+            // store the mirror's full block (padded region zero-filled so
             // the restore scatter is branch-free)
+            out.k.reserve(block_elems);
+            out.v.reserve(block_elems);
             for l in 0..layers {
                 let ro = mirror.off(l, tok0);
                 let take = ntok * d;
                 out.k.extend_from_slice(&mirror.k[ro..ro + take]);
-                out.k.extend(std::iter::repeat(0.0)
-                    .take((block_tokens - ntok) * d));
+                out.k.resize(out.k.len() + (block_tokens - ntok) * d, 0.0);
                 out.v.extend_from_slice(&mirror.v[ro..ro + take]);
-                out.v.extend(std::iter::repeat(0.0)
-                    .take((block_tokens - ntok) * d));
+                out.v.resize(out.v.len() + (block_tokens - ntok) * d, 0.0);
             }
         }
     }
@@ -174,10 +219,12 @@ pub fn extract_blocks(
     valid_len: usize,
     block_tokens: usize,
 ) -> BlockSparseDiff {
+    // exact output size is known up front: one full block per id
+    let total = block_ids.len() * src.layers * block_tokens * src.d;
     let mut out = BlockSparseDiff {
         block_ids: block_ids.to_vec(),
-        k: Vec::new(),
-        v: Vec::new(),
+        k: Vec::with_capacity(total),
+        v: Vec::with_capacity(total),
         block_tokens,
         layers: src.layers,
         d: src.d,
@@ -189,13 +236,9 @@ pub fn extract_blocks(
             let so = src.off(l, tok0);
             let take = ntok * src.d;
             out.k.extend_from_slice(&src.k[so..so + take]);
-            out.k.extend(
-                std::iter::repeat(0.0).take((block_tokens - ntok) * src.d),
-            );
+            out.k.resize(out.k.len() + (block_tokens - ntok) * src.d, 0.0);
             out.v.extend_from_slice(&src.v[so..so + take]);
-            out.v.extend(
-                std::iter::repeat(0.0).take((block_tokens - ntok) * src.d),
-            );
+            out.v.resize(out.v.len() + (block_tokens - ntok) * src.d, 0.0);
         }
     }
     out
@@ -335,6 +378,30 @@ pub fn gather_permuted_master(
     padded_seq: usize,
 ) -> (KvBuf, Vec<i32>) {
     let mut out = KvBuf::zeroed(master.layers, padded_seq, master.d);
+    let src_pos = gather_permuted_master_into(
+        master,
+        master_positions,
+        src_block,
+        mirror_len,
+        block_tokens,
+        &mut out,
+    );
+    (out, src_pos)
+}
+
+/// [`gather_permuted_master`] into a caller-provided **all-zero** buffer
+/// whose `seq` is the padded length — the encode path passes recycled
+/// scratch buffers here instead of allocating two fresh [L, S, d] planes
+/// per expectation. Returns the per-slot source positions.
+pub fn gather_permuted_master_into(
+    master: &KvBuf,
+    master_positions: &[i32],
+    src_block: &[i32],
+    mirror_len: usize,
+    block_tokens: usize,
+    out: &mut KvBuf,
+) -> Vec<i32> {
+    let padded_seq = out.seq;
     let mut src_pos: Vec<i32> = (0..padded_seq as i32).collect();
     for (b, &src) in src_block.iter().enumerate() {
         let lo = b * block_tokens;
@@ -357,7 +424,7 @@ pub fn gather_permuted_master(
                 .unwrap_or((mlo + i) as i32);
         }
     }
-    (out, src_pos)
+    src_pos
 }
 
 #[cfg(test)]
@@ -523,6 +590,48 @@ mod tests {
                 assert_eq!(rebuilt.k_row(l, s), sib.k_row(l, s));
             }
         }
+    }
+
+    #[test]
+    fn masked_diff_skips_exactly_the_masked_blocks() {
+        let a = buf(2, 64, 8);
+        let mut b = a.clone();
+        for blk in [0usize, 2] {
+            let o = b.off(0, blk * 16);
+            b.k[o] += 1.0;
+        }
+        // mask block 1 (genuinely clean): identical output to the full scan
+        let full = diff_blocks_tol(&a, &b, 64, 16, 0.0);
+        let masked = diff_blocks_tol_masked(
+            &a, &b, 64, 16, 0.0,
+            Some(&[false, true, false, false]),
+        );
+        assert_eq!(masked, full);
+        // masking a dirty block suppresses it without scanning — the
+        // caller's proof obligation, exercised to pin the semantics
+        let masked = diff_blocks_tol_masked(
+            &a, &b, 64, 16, 0.0,
+            Some(&[true, false, false, false]),
+        );
+        assert_eq!(masked.block_ids, vec![2]);
+        // a short mask leaves uncovered blocks scanned
+        let masked =
+            diff_blocks_tol_masked(&a, &b, 64, 16, 0.0, Some(&[true]));
+        assert_eq!(masked.block_ids, vec![2]);
+    }
+
+    #[test]
+    fn gather_into_matches_allocating_gather() {
+        let master = buf(2, 32, 4);
+        let pos: Vec<i32> = (0..32).collect();
+        let (out, sp) =
+            gather_permuted_master(&master, &pos, &[1, -1, 0], 48, 16, 64);
+        let mut out2 = KvBuf::zeroed(2, 64, 4);
+        let sp2 = gather_permuted_master_into(
+            &master, &pos, &[1, -1, 0], 48, 16, &mut out2,
+        );
+        assert_eq!(out, out2);
+        assert_eq!(sp, sp2);
     }
 
     #[test]

@@ -55,7 +55,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::model::ModelSpec;
 use crate::runtime::{KvBuf, ModelRuntime};
 pub use diff::{
-    diff_blocks, diff_blocks_tol, extract_blocks, gather_permuted_master,
+    diff_blocks, diff_blocks_tol, diff_blocks_tol_masked, extract_blocks,
+    gather_permuted_master, gather_permuted_master_into,
     match_blocks_by_content, match_blocks_by_segments, rediff_identity,
     AlignedDiff, BlockSparseDiff,
 };

@@ -2,9 +2,11 @@
 //! policy × topology on the mock runtime, digested into one u64 per
 //! config over every generated token stream plus the key logical
 //! counters (store lookups, gather-plan dedup hits, mirror restores,
-//! cohort formation, store hits/misses/evictions/promotions). Wall-clock
-//! metrics are deliberately excluded — everything digested is logical
-//! and must be bit-stable across runs and machines.
+//! cohort formation, store hits/misses/evictions/promotions, and the
+//! round-end encode counters — expectation-memo traffic, provenance-
+//! skipped blocks, rope passes). Wall-clock metrics are deliberately
+//! excluded — everything digested is logical and must be bit-stable
+//! across runs and machines.
 //!
 //! Two layers of protection:
 //!
@@ -100,6 +102,18 @@ fn run_config(policy: Policy, topology: Topology) -> (String, u64) {
         c.evictions,
         c.promotions,
         c.rejected_inserts
+    )
+    .unwrap();
+    // round-end encode counters: a provenance regression (silently
+    // scanning everything, or skipping a genuinely dirty block and
+    // thereby changing a mirror's diff) moves these and flips the pin
+    writeln!(
+        t,
+        "enc_lookups={} enc_memo_hits={} enc_skipped={} enc_ropes={}",
+        m.encode_lookups,
+        m.expected_memo_hits,
+        m.encode_skipped_blocks,
+        m.encode_rope_recovers
     )
     .unwrap();
     let digest = fnv1a(t.as_bytes());

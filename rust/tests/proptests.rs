@@ -11,11 +11,13 @@ use tokendance::model::{Buckets, ModelSpec};
 use tokendance::pic::{select_important_blocks, ImportanceConfig, INVALID_SCORE};
 use tokendance::rounds::{detect_pattern, pair_overlap, segment_blocks,
                          segment_prompt, DetectorConfig, SegmentedPrompt};
-use tokendance::runtime::{KvBuf, MockRuntime, ModelRuntime};
+use tokendance::runtime::{BlockProvenance, KvBuf, MockRuntime,
+                          ModelRuntime};
 use tokendance::store::{diff_blocks, diff_blocks_tol,
-                        gather_permuted_master, identity_aligned,
-                        match_blocks_by_content, CacheStore, DenseEntry,
-                        Fetched, MirrorEntry, Role, StoreKey};
+                        diff_blocks_tol_masked, gather_permuted_master,
+                        identity_aligned, match_blocks_by_content,
+                        CacheStore, DenseEntry, Fetched, MirrorEntry,
+                        Role, StoreKey};
 use tokendance::tokenizer::{encode, split_segments, BlockKind,
                             RoundAwarePrompt, TTSEP_ID};
 use tokendance::util::rng::Rng;
@@ -483,6 +485,65 @@ fn prop_diff_roundtrip_reconstructs_mirror() {
         let mut rebuilt = master.clone();
         d.apply_to(&mut rebuilt);
         assert_eq!(rebuilt, mirror);
+    });
+}
+
+#[test]
+fn prop_provenance_skip_diff_equals_full_scan() {
+    // the collective-encode invariant: a diff whose scan skips blocks the
+    // provenance proves clean is bitwise-identical to the exhaustive
+    // full scan, across random dirty patterns and partial tail blocks
+    forall(120, |rng| {
+        let bt = 16usize;
+        let layers = rng.range(1, 4);
+        let d = rng.range(4, 12);
+        let nb = rng.range(1, 9);
+        // partial tails: valid_len lands anywhere inside the last block
+        let valid_len = (nb - 1) * bt + rng.range(1, bt + 1);
+        let seq = nb * bt + rng.below(33);
+        let mut master = KvBuf::zeroed(layers, seq, d);
+        for (i, x) in master.k.iter_mut().enumerate() {
+            *x = ((i * 31) % 97) as f32 * 0.01;
+        }
+        for (i, x) in master.v.iter_mut().enumerate() {
+            *x = -(((i * 17) % 89) as f32) * 0.01;
+        }
+        let mut mirror = master.clone();
+
+        // random dirty pattern: perturbed blocks get a real change and an
+        // all-dirty provenance; clean blocks get matching Copied records
+        // on both sides (same synthetic entry, same rows)
+        let key = StoreKey { content: 0xC0FFEE, role: Role::Segment };
+        let mut mirror_prov = BlockProvenance::dirty(nb, bt);
+        let mut master_prov = BlockProvenance::dirty(nb, bt);
+        for b in 0..nb {
+            if rng.below(2) == 0 {
+                let slot = (b * bt + rng.below(bt)).min(valid_len - 1);
+                let l = rng.below(layers);
+                let o = mirror.off(l, slot) + rng.below(d);
+                if rng.below(2) == 0 {
+                    mirror.k[o] += 5.0;
+                } else {
+                    mirror.v[o] += 5.0;
+                }
+            } else {
+                mirror_prov.record_copy(b * bt, bt, key, b * bt, None);
+                master_prov.record_copy(b * bt, bt, key, b * bt, None);
+            }
+        }
+        let src_block: Vec<i32> = (0..nb as i32).collect();
+        let mask =
+            mirror_prov.skip_mask(&master_prov, &src_block, valid_len);
+        // sanity: the mask never covers a perturbed block (perturbed
+        // blocks carry dirty provenance by construction)
+        let full = diff_blocks_tol(&master, &mirror, valid_len, bt, 0.0);
+        for &bid in &full.block_ids {
+            assert!(!mask[bid as usize], "mask covers a dirty block");
+        }
+        let masked = diff_blocks_tol_masked(
+            &master, &mirror, valid_len, bt, 0.0, Some(&mask),
+        );
+        assert_eq!(masked, full, "skip path must equal the full scan");
     });
 }
 
