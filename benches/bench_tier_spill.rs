@@ -1,0 +1,200 @@
+//! Bench: cold-tier spill/restore throughput (`store/tier.rs`).
+//!
+//! Measures the disk hierarchy the `pressure` experiment leans on:
+//! per-entry spill + restore churn with exact payloads vs int8/q4
+//! quantization (serialize + write vs read + dequantize), the batched
+//! round-aware prefetch path, and the master-chain restore a spilled
+//! mirror family pays (mirror restore forces its cold master hot first).
+
+include!("harness.rs");
+
+use tokendance::runtime::{KvBuf, MockRuntime, ModelRuntime};
+use tokendance::store::{
+    diff_blocks, identity_aligned, CacheStore, DenseEntry, MirrorEntry,
+    QuantFormat, Role, StoreKey, TierConfig,
+};
+
+fn key(c: u64) -> StoreKey {
+    StoreKey { content: c, role: Role::Segment }
+}
+
+fn akey(c: u64, agent: usize) -> StoreKey {
+    StoreKey { content: c, role: Role::AgentCache { agent } }
+}
+
+fn dense(spec: &tokendance::model::ModelSpec, len: usize, salt: u32)
+    -> DenseEntry
+{
+    let mut kv = KvBuf::zeroed(spec.n_layers, len, spec.d_model);
+    for (i, x) in kv.k.iter_mut().enumerate() {
+        *x = ((i as u32) ^ salt) as f32 / 1000.0;
+    }
+    DenseEntry {
+        tokens: (0..len as u32).map(|i| 4 + ((i ^ salt) % 200)).collect(),
+        positions: (0..len as i32).collect(),
+        kv,
+    }
+}
+
+fn tier_store(
+    spec: &tokendance::model::ModelSpec,
+    hot_bytes: usize,
+    dir: &std::path::Path,
+    quantize: bool,
+    format: QuantFormat,
+) -> CacheStore {
+    let mut st = CacheStore::new(spec, hot_bytes);
+    st.configure_tier(TierConfig {
+        cold_bytes: 1 << 30,
+        spill_dir: dir.to_path_buf(),
+        quantize,
+        format,
+    })
+    .unwrap();
+    st
+}
+
+fn main() {
+    let rt = MockRuntime::new();
+    let spec = rt.spec("sim-7b").unwrap().clone();
+    let len = 64usize;
+    let template = dense(&spec, len, 0);
+    let ebytes = template.kv.bytes() + len * 8;
+    let dir = std::env::temp_dir()
+        .join(format!("td-bench-tier-{}", std::process::id()));
+    println!("== bench_tier_spill (cold tier spill/restore) ==");
+
+    // 1. spill+restore churn: hot holds n entries out of a 2n working
+    // set; the sequential scan makes every get a cold miss, so each op
+    // pays one restore (read + decode) and one spill (encode + write).
+    let n = 16u64;
+    for (label, quantize, format) in [
+        ("exact", false, QuantFormat::Int8),
+        ("int8", true, QuantFormat::Int8),
+        ("q4", true, QuantFormat::Q4),
+    ] {
+        let mut st = tier_store(
+            &spec,
+            ebytes * n as usize + ebytes / 2,
+            &dir.join(label),
+            quantize,
+            format,
+        );
+        for i in 0..2 * n {
+            st.put_dense(key(i), dense(&spec, len, i as u32)).unwrap();
+        }
+        let ops = 2 * n;
+        let mut i = 0u64;
+        let b = Bencher::run(
+            &format!("spill+restore churn {label} ({ops} ops/iter)"),
+            10,
+            2,
+            || {
+                for _ in 0..ops {
+                    assert!(st.get(&key(i % (2 * n))).is_some());
+                    i += 1;
+                }
+            },
+        );
+        b.report();
+        let per = b.mean() / ops as f64;
+        println!("    -> {} per restore cycle", fmt(per));
+        bench_json(
+            "tier_spill",
+            &format!("restore_cycle_{label}_secs"),
+            per,
+        );
+        let c = st.counters();
+        assert!(c.stall_restores > 0);
+        assert_eq!(c.evicted_to_nothing, 0);
+    }
+
+    // 2. round-aware prefetch: restore one hot-store's worth of cold
+    // keys in a single batch (the round-open path). Halves alternate so
+    // every iteration finds its whole batch cold.
+    {
+        let mut st = tier_store(
+            &spec,
+            ebytes * n as usize + ebytes / 2,
+            &dir.join("prefetch"),
+            false,
+            QuantFormat::Int8,
+        );
+        for i in 0..2 * n {
+            st.put_dense(key(i), dense(&spec, len, i as u32)).unwrap();
+        }
+        let mut half = 0u64;
+        let b = Bencher::run(
+            &format!("prefetch batch of {n} cold keys"),
+            10,
+            2,
+            || {
+                let keys: Vec<StoreKey> =
+                    (half * n..(half + 1) * n).map(key).collect();
+                st.prefetch(&keys);
+                half ^= 1;
+            },
+        );
+        b.report();
+        let per = b.mean() / n as f64;
+        println!("    -> {} per prefetched key", fmt(per));
+        bench_json("tier_spill", "prefetch_restore_secs", per);
+        assert!(st.counters().prefetch_restores > 0);
+    }
+
+    // 3. family spill + chained restore: the two dense puts force the
+    // pinned master's family cold (mirror + master spill); the mirror
+    // get then restores the master first, the mirror second.
+    {
+        let mut st = tier_store(
+            &spec,
+            ebytes * 5 / 2,
+            &dir.join("family"),
+            false,
+            QuantFormat::Int8,
+        );
+        let mk = akey(0, 0);
+        st.put_dense(mk, dense(&spec, len, 1)).unwrap();
+        let (master_kv, toks) = match st.get(&mk) {
+            Some(tokendance::store::Fetched::Dense(d)) => {
+                (d.kv.clone(), d.tokens.clone())
+            }
+            _ => unreachable!(),
+        };
+        let mut mkv = master_kv.clone();
+        let o = mkv.off(0, 17);
+        mkv.k[o] += 3.0;
+        let d = diff_blocks(&master_kv, &mkv, len, spec.block_tokens);
+        let d = identity_aligned(d, len.div_ceil(spec.block_tokens), len);
+        st.put_mirror(
+            akey(1, 1),
+            MirrorEntry {
+                master: mk,
+                tokens: toks,
+                positions: (0..len as i32).collect(),
+                diff: d,
+            },
+        )
+        .unwrap();
+        let mut i = 10u64;
+        let b = Bencher::run(
+            "family spill + chained mirror restore",
+            20,
+            2,
+            || {
+                st.put_dense(key(i), dense(&spec, len, i as u32)).unwrap();
+                st.put_dense(key(i + 1), dense(&spec, len, i as u32 + 1))
+                    .unwrap();
+                assert!(st.get(&akey(1, 1)).is_some());
+                i += 2;
+            },
+        );
+        b.report();
+        bench_json("tier_spill", "family_restore_secs", b.mean());
+        let c = st.counters();
+        assert!(c.spills > 0);
+        assert_eq!(c.cold_dead_drops, 0);
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -38,6 +38,13 @@
 //! property is *measured*, not asserted: the engine tests pin
 //! lookups-per-distinct-key to 1 at 8/32/64 agents and
 //! `benches/bench_round_assembly.rs` sweeps the same curve.
+//!
+//! **Storage tiers:** the plan itself needs no tier awareness — every
+//! `store.get` transparently restores a spilled key (counted as a stall
+//! restore). The round-aware prefetch hooks in `serve::submit_round` and
+//! the round-close path exist so that, in steady state, the keys a plan
+//! resolves are already hot by the time the fetch stage runs and the
+//! stall-restore count stays near zero (`store/tier.rs`).
 
 use std::collections::HashMap;
 use std::rc::Rc;

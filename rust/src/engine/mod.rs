@@ -22,7 +22,9 @@ mod gather;
 mod prefill;
 
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -39,7 +41,9 @@ use crate::runtime::{
 };
 use crate::scheduler::{decode_batches, AdmissionQueue, QueuedRequest};
 use crate::serve::EngineEvent;
-use crate::store::{CacheStore, Role, StoreCounters, StoreKey};
+use crate::store::{
+    CacheStore, QuantFormat, Role, StoreCounters, StoreKey, TierConfig,
+};
 use crate::tokenizer::{RoundAwarePrompt, EOS_ID};
 use crate::util::fnv1a_tokens;
 
@@ -119,6 +123,21 @@ pub struct EngineConfig {
     /// as the equivalence baseline and `bench_encode_round`'s "before"
     /// arm.
     pub collective_encode: bool,
+    /// Cold-tier capacity in bytes; 0 (the default) keeps the store flat
+    /// — no spill files, no priority eviction, behavior bit-identical to
+    /// the pre-tier engine (pinned by the golden digests).
+    pub cold_bytes: usize,
+    /// Spill directory for the cold tier; `None` picks a per-engine
+    /// directory under the system temp dir (removed when the store
+    /// drops).
+    pub spill_dir: Option<PathBuf>,
+    /// Quantize dense payloads on spill (mirrors always keep their exact
+    /// diff form). `false` spills dense payloads exactly — the
+    /// bitwise-equivalence baseline, same discipline as
+    /// `gather_plan`/`collective_encode`.
+    pub quantize: bool,
+    /// Quantization format for dense spills when `quantize` is on.
+    pub quant_format: QuantFormat,
 }
 
 impl EngineConfig {
@@ -138,6 +157,10 @@ impl EngineConfig {
             restore_mode: None,
             gather_plan: true,
             collective_encode: true,
+            cold_bytes: 0,
+            spill_dir: None,
+            quantize: true,
+            quant_format: QuantFormat::Int8,
         }
     }
 
@@ -293,6 +316,24 @@ impl Engine {
         // the runtime; without this, the store could only promote
         // identity-rotation mirrors
         store.attach_runtime(rt.clone(), cfg.model.clone());
+        if cfg.cold_bytes > 0 {
+            // distinct default spill dirs keep engines in one process
+            // (tests, benches, A/B experiment arms) from sharing files
+            static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+            let dir = cfg.spill_dir.clone().unwrap_or_else(|| {
+                std::env::temp_dir().join(format!(
+                    "tokendance-spill-{}-{}",
+                    std::process::id(),
+                    SPILL_SEQ.fetch_add(1, Ordering::Relaxed),
+                ))
+            });
+            store.configure_tier(TierConfig {
+                cold_bytes: cfg.cold_bytes,
+                spill_dir: dir,
+                quantize: cfg.quantize,
+                format: cfg.quant_format,
+            })?;
+        }
         let scratch = KvScratch::for_spec(&spec);
         let pos_ramp: Vec<i32> = (0..spec.max_seq as i32).collect();
         Ok(Engine {
@@ -398,6 +439,9 @@ impl Engine {
         let total = tokens.len() + req.max_new_tokens;
         let id = self.next_id;
         self.next_id += 1;
+        // advance the store's round clock: steps-to-next-use eviction
+        // priority is measured against the latest submitted round
+        self.store.note_round(req.round as u64);
         *self.round_outstanding.entry(req.round).or_insert(0) += 1;
         let mut trace = RequestTrace::new(id, req.agent, req.round, arrived);
         trace.prompt_tokens = tokens.len();
@@ -565,12 +609,62 @@ impl Engine {
             pool_used_blocks: st.used_blocks,
             pool_total_blocks: st.total_blocks,
             store_bytes: self.store.bytes(),
+            store_cold_bytes: self.store.cold_bytes(),
         });
         self.metrics.runtime_calls = self.rt.calls();
         let c = self.store.counters();
         self.metrics.store_evictions = c.evictions;
         self.metrics.store_promotions = c.promotions;
         self.metrics.store_rejections = c.rejected_inserts;
+        self.metrics.store_spills = c.spills;
+        self.metrics.store_stall_restores = c.stall_restores;
+        self.metrics.store_prefetch_restores = c.prefetch_restores;
+        self.metrics.store_prefetch_hits = c.prefetch_hits;
+        self.metrics.store_cold_evictions = c.cold_evictions;
+        self.metrics.store_cold_dead_drops = c.cold_dead_drops;
+        self.metrics.store_evicted_to_nothing = c.evicted_to_nothing;
+        for s in self.store.take_restore_samples() {
+            self.metrics.tier_restore_secs.push(s);
+        }
+    }
+
+    /// Round-aware prefetch at submission time: the submitted requests
+    /// name every retained agent cache and prompt segment the round's
+    /// gather plan will fetch, so spilled entries restore *now* — while
+    /// the caller is still queueing work — instead of stalling composite
+    /// assembly inside `get`. A no-op when the cold tier is off.
+    pub(crate) fn prefetch_for_submission(
+        &mut self,
+        round: usize,
+        requests: &[AgentRequest],
+        prepared: &[(Vec<u32>, SegmentedPrompt)],
+    ) {
+        if !self.store.tier_enabled() {
+            return;
+        }
+        self.store.note_round(round as u64);
+        let mut keys: Vec<StoreKey> = Vec::new();
+        for req in requests {
+            if let Some(k) =
+                self.agents.get(&req.agent).and_then(|s| s.store_key)
+            {
+                keys.push(k);
+            }
+        }
+        for (tokens, seg) in prepared {
+            for s in &seg.segments {
+                if s.is_empty() || s.end > tokens.len() {
+                    continue;
+                }
+                keys.push(Engine::segment_key(&tokens[s.start..s.end]));
+            }
+        }
+        keys.sort_unstable();
+        keys.dedup();
+        for k in &keys {
+            self.store.hint_next_use(k, round as u64);
+        }
+        self.store.prefetch(&keys);
     }
 
     /// Key for a donor segment entry.

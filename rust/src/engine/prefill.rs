@@ -733,16 +733,22 @@ impl Engine {
                     .collect();
                 // capacity-honest: an oversize donor is rejected (counted
                 // by the store) and the round proceeds without it
-                self.store
+                let gkey = Engine::segment_key(&r.generated);
+                if self
+                    .store
                     .put_dense(
-                        Engine::segment_key(&r.generated),
+                        gkey,
                         DenseEntry {
                             tokens: r.generated.clone(),
                             positions,
                             kv: out_kv,
                         },
                     )
-                    .ok();
+                    .is_ok()
+                {
+                    // next round's shared block for every other agent
+                    self.store.hint_next_use(&gkey, r.round as u64 + 1);
+                }
             }
             for seg in &r.seg.segments {
                 if seg.is_empty() || seg.end > r.prompt_len {
@@ -750,7 +756,13 @@ impl Engine {
                 }
                 let seg_tokens = &r.tokens[seg.start..seg.end];
                 let skey = Engine::segment_key(seg_tokens);
-                if !self.store.contains(&skey) {
+                // a spilled copy counts as present: re-inserting would
+                // purge the exact cold payload and replace it with this
+                // request's *reused* (PIC-approximate) rows, diverging
+                // from what the flat store would keep
+                if !self.store.contains(&skey)
+                    && !self.store.is_spilled(&skey)
+                {
                     self.store
                         .put_dense(
                             skey,
@@ -764,6 +776,7 @@ impl Engine {
                         )
                         .ok();
                 }
+                self.store.hint_next_use(&skey, r.round as u64 + 1);
             }
         }
 
@@ -883,6 +896,26 @@ impl Engine {
                     store_evictions,
                     store_promotions,
                 });
+                // round-aware prefetch: with the round closed (and its
+                // Master-Mirror encoding done), every retained agent key
+                // the next round's gather plan will fetch is known —
+                // restore the spilled ones now, during the tail of this
+                // submission, instead of stalling the next assembly
+                if self.cfg.policy == Policy::TokenDance
+                    && self.store.tier_enabled()
+                {
+                    let mut keys: Vec<crate::store::StoreKey> = self
+                        .agents
+                        .values()
+                        .filter_map(|s| s.store_key)
+                        .collect();
+                    keys.sort_unstable();
+                    keys.dedup();
+                    for k in &keys {
+                        self.store.hint_next_use(k, round as u64 + 1);
+                    }
+                    self.store.prefetch(&keys);
+                }
             }
         }
         Ok(())
@@ -895,6 +928,7 @@ impl Engine {
     fn retain_dense(
         &mut self,
         salt: u64,
+        round: usize,
         agent: usize,
         tokens: Vec<u32>,
         kv: KvBuf,
@@ -917,6 +951,8 @@ impl Engine {
             .is_ok()
         {
             self.agents.entry(agent).or_default().store_key = Some(key);
+            // a retained cache is read back by the next round's gather
+            self.store.hint_next_use(&key, round as u64 + 1);
         }
     }
 
@@ -1054,13 +1090,16 @@ impl Engine {
         if master_stored {
             self.agents.entry(master.agent).or_default().store_key =
                 Some(master_key);
+            // the master is read both by the next round's gather and by
+            // every fused mirror restore
+            self.store.hint_next_use(&master_key, round as u64 + 1);
         } else {
             // the elected master itself does not fit the store: no family
             // encoding is possible for this cohort — retain each sibling
             // dense best-effort, keep previous pointers where that fails
             self.scratch.checkin(master_padded, master_len);
             for s in staged {
-                self.retain_dense(salt, s.agent, s.tokens, s.kv);
+                self.retain_dense(salt, round, s.agent, s.tokens, s.kv);
             }
             return Ok(0);
         }
@@ -1087,7 +1126,7 @@ impl Engine {
             // whole cache would be one big correction; store dense without
             // paying two rope passes or a padding buffer (§Perf)
             if src_block.iter().all(|&b| b < 0) {
-                self.retain_dense(salt, s.agent, s.tokens, s.kv);
+                self.retain_dense(salt, round, s.agent, s.tokens, s.kv);
                 continue;
             }
             let mut padded = self.scratch.checkout();
@@ -1158,7 +1197,7 @@ impl Engine {
                 // "if requests diverge more strongly ... the storage
                 // benefit diminishes")
                 self.scratch.checkin(padded, len);
-                self.retain_dense(salt, s.agent, s.tokens, s.kv);
+                self.retain_dense(salt, round, s.agent, s.tokens, s.kv);
                 if let Some(e) = fresh {
                     self.scratch.checkin(e.kv, e.dirty_rows);
                 }
@@ -1205,12 +1244,13 @@ impl Engine {
                     mirror_bytes += entry_bytes;
                     self.agents.entry(s.agent).or_default().store_key =
                         Some(key);
+                    self.store.hint_next_use(&key, round as u64 + 1);
                 }
                 // the store refused the mirror (no room beside its pinned
                 // master, or the master was evicted by an intervening
                 // sibling insert): dense retention keeps the cache usable
                 Err(_) => {
-                    self.retain_dense(salt, s.agent, s.tokens, s.kv);
+                    self.retain_dense(salt, round, s.agent, s.tokens, s.kv);
                 }
             }
             // baseline arm: the per-mirror expectation dies here; the

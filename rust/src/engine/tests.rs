@@ -145,6 +145,51 @@ fn determinism() {
 }
 
 #[test]
+fn tiered_small_hot_store_matches_flat_baseline() {
+    // flat baseline: effectively unconstrained hot store — every donor
+    // stays resident, so this is the exact reference stream
+    let mut flat = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(256)
+        .store_bytes(256 << 20)
+        .mock()
+        .build()
+        .unwrap();
+    let of = run_rounds(&mut flat, 4, 3);
+    let ws = flat.metrics.peak_store_bytes().max(1);
+    assert_eq!(flat.store().counters().rejected_inserts, 0);
+
+    // tier arm: hot capacity half the working set (small enough to churn
+    // through spills every round, large enough that no single insert is
+    // infeasible), ample cold tier, exact (unquantized) spills. The tier
+    // only changes where bytes live, never their values: same stream.
+    let mut tiered = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(256)
+        .store_bytes(ws / 2)
+        .cold_tier(4 * ws)
+        .quantize(false)
+        .mock()
+        .build()
+        .unwrap();
+    let ot = run_rounds(&mut tiered, 4, 3);
+    assert_eq!(of, ot, "exact spill tier must be bitwise-transparent");
+
+    let c = tiered.store().counters();
+    assert!(c.spills > 0, "hot store at WS/2 must spill");
+    assert!(
+        c.stall_restores + c.prefetch_restores > 0,
+        "spilled entries must come back hot"
+    );
+    assert_eq!(
+        c.evicted_to_nothing, 0,
+        "with an ample cold tier, spills replace drops"
+    );
+    assert_eq!(c.rejected_inserts, 0);
+    tiered.store().assert_invariants();
+}
+
+#[test]
 fn vllm_retains_gpu_caches_tokendance_frees() {
     let mut v = engine(Policy::VllmPrefix, 256);
     run_rounds(&mut v, 3, 2);

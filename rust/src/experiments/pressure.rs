@@ -10,6 +10,14 @@
 //! inserts) at each point. Capacity honesty is asserted at every point:
 //! `bytes() <= capacity` after the run, with the store's structural
 //! invariants intact.
+//!
+//! The second sweep is the **storage-tier regime** (`store/tier.rs`):
+//! hot capacity pinned to 10x–100x *below* the working set with a cold
+//! spill tier underneath, so every round's retained caches churn through
+//! spill → prefetch/stall-restore cycles. Reported per arm: hit rates,
+//! spill/restore traffic (prefetch- vs stall-restores), entries lost
+//! outright, and the restore-latency p50/p99 — the tier sweep is
+//! meaningless without the latency cost of a cold hit next to its count.
 
 use anyhow::{ensure, Result};
 
@@ -18,8 +26,16 @@ use crate::engine::Policy;
 use crate::metrics::render_table;
 use crate::serve::RoundSubmission;
 use crate::util::cli::Args;
-use crate::util::stats::fmt_bytes;
+use crate::util::stats::{fmt_bytes, fmt_secs};
 use crate::workload::{Session, WorkloadConfig};
+
+/// Cold-tier arm of a pressure point: capacity and whether dense
+/// payloads are quantized on spill (int8) or kept bitwise (`false`).
+#[derive(Clone, Copy)]
+struct TierArm {
+    cold_bytes: usize,
+    quantize: bool,
+}
 
 struct PressurePoint {
     cap: usize,
@@ -38,6 +54,21 @@ struct PressurePoint {
     asm_lookups: u64,
     /// Assembly references served by the gather-plan memo.
     asm_dedup: u64,
+    /// Hot victims spilled to the cold tier instead of dropped.
+    spills: u64,
+    /// Cold→hot restores paid inside a `get` (assembly stalled on disk).
+    stall_restores: u64,
+    /// Cold→hot restores done ahead of need by round-aware prefetch.
+    prefetch_restores: u64,
+    /// `get` hits served by a prefetch-restored entry.
+    prefetch_hits: u64,
+    /// Hot victims lost outright (cold tier refused or absent).
+    lost: u64,
+    /// Peak serialized bytes resident in the cold tier.
+    cold_peak: usize,
+    /// Restore latency percentiles (NaN when no restores happened).
+    restore_p50: f64,
+    restore_p99: f64,
 }
 
 fn run_once(
@@ -46,16 +77,20 @@ fn run_once(
     agents: usize,
     rounds: usize,
     store_bytes: usize,
+    tier: Option<TierArm>,
 ) -> Result<PressurePoint> {
     let spec = ctx.rt.spec(model)?.clone();
-    let mut eng = ctx
+    let mut b = ctx
         .builder(model)
         .policy(Policy::TokenDance)
         .pool_blocks(2 * agents * spec.n_blocks())
         .store_bytes(store_bytes)
         .recompute_frac(0.08)
-        .min_recompute(spec.block_tokens)
-        .build()?;
+        .min_recompute(spec.block_tokens);
+    if let Some(t) = tier {
+        b = b.cold_tier(t.cold_bytes).quantize(t.quantize);
+    }
+    let mut eng = b.build()?;
     let mut session = Session::new(
         WorkloadConfig::generative_agents(1, agents, rounds),
         0,
@@ -77,9 +112,19 @@ fn run_once(
         eng.store().bytes(),
         store_bytes
     );
+    if let Some(t) = tier {
+        ensure!(
+            eng.store().cold_bytes() <= t.cold_bytes,
+            "cold capacity violated: {} > {}",
+            eng.store().cold_bytes(),
+            t.cold_bytes
+        );
+    }
     eng.store().assert_invariants();
     let st = eng.store().stats();
     let c = eng.store().counters();
+    let restore_p50 = eng.metrics.tier_restore_secs.p50();
+    let restore_p99 = eng.metrics.tier_restore_secs.p99();
     Ok(PressurePoint {
         cap: store_bytes,
         peak: eng.metrics.peak_store_bytes(),
@@ -93,6 +138,14 @@ fn run_once(
         rejections: c.rejected_inserts,
         asm_lookups: eng.metrics.assembly_lookups,
         asm_dedup: eng.metrics.assembly_dedup_hits,
+        spills: c.spills,
+        stall_restores: c.stall_restores,
+        prefetch_restores: c.prefetch_restores,
+        prefetch_hits: c.prefetch_hits,
+        lost: c.evicted_to_nothing,
+        cold_peak: eng.metrics.peak_cold_bytes(),
+        restore_p50,
+        restore_p99,
     })
 }
 
@@ -105,7 +158,7 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
               (GenerativeAgents)");
 
     // probe the unconstrained working set first
-    let probe = run_once(ctx, &model, agents, rounds, 512 << 20)?;
+    let probe = run_once(ctx, &model, agents, rounds, 512 << 20, None)?;
     let ws = probe.peak.max(1);
     println!(
         "unconstrained working set: {} (compression {:.2}x, reuse {:.0}%)",
@@ -123,7 +176,7 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
     let mut summary = String::new();
     for frac in [1.0f64, 0.75, 0.5, 0.35, 0.25] {
         let cap = ((ws as f64) * frac) as usize;
-        let p = run_once(ctx, &model, agents, rounds, cap)?;
+        let p = run_once(ctx, &model, agents, rounds, cap, None)?;
         rows.push(vec![
             format!("{:.0}%", 100.0 * frac),
             fmt_bytes(p.cap),
@@ -171,12 +224,92 @@ pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
          should degrade gracefully — never a dangling mirror, never an \
          over-budget store)"
     );
+
+    // Storage-tier regime: hot capacity 10x–100x below the working set,
+    // cold tier sized to hold everything the hot store spills. Without
+    // the tier these points would live on drops and recomputes; with it,
+    // retained keys survive as serialized cold entries and come back via
+    // prefetch (round-aware) or stall restores (demand misses).
+    println!();
+    println!("== Storage tiers: working set 10x-100x the hot capacity ==");
+    let cold_cap = 2 * ws;
+    let mut trows = Vec::new();
+    let mut tsummary = String::new();
+    for (frac, quantize) in
+        [(0.1f64, false), (0.03, false), (0.01, false), (0.1, true)]
+    {
+        let hot = ((ws as f64) * frac) as usize;
+        let arm = TierArm { cold_bytes: cold_cap, quantize };
+        let p = run_once(ctx, &model, agents, rounds, hot, Some(arm))?;
+        trows.push(vec![
+            format!(
+                "{:.0}%{}",
+                100.0 * frac,
+                if quantize { " int8" } else { "" }
+            ),
+            fmt_bytes(hot),
+            format!("{:.0}%", 100.0 * p.reuse),
+            p.store_hit
+                .map_or("n/a".into(), |h| format!("{:.0}%", 100.0 * h)),
+            format!("{}", p.spills),
+            format!("{}", p.prefetch_restores),
+            format!("{}", p.stall_restores),
+            format!("{}", p.prefetch_hits),
+            format!("{}", p.lost),
+            format!("{}", p.rejections),
+            fmt_secs(p.restore_p50),
+            fmt_secs(p.restore_p99),
+            fmt_bytes(p.cold_peak),
+        ]);
+        tsummary.push_str(&format!(
+            "hot {:>9} ({:>3.0}% of WS{}): reuse {:>3.0}%, {} spills, \
+             {} prefetch vs {} stall restores, {} lost, restore p99 {}\n",
+            fmt_bytes(hot),
+            100.0 * frac,
+            if quantize { ", int8" } else { "" },
+            100.0 * p.reuse,
+            p.spills,
+            p.prefetch_restores,
+            p.stall_restores,
+            p.lost,
+            fmt_secs(p.restore_p99)
+        ));
+    }
+    let ttable = render_table(
+        &[
+            "hot/WS",
+            "hot cap",
+            "reuse",
+            "store hit",
+            "spills",
+            "pf-restore",
+            "stall-restore",
+            "pf-hits",
+            "lost",
+            "rejected",
+            "restore p50",
+            "restore p99",
+            "cold peak",
+        ],
+        &trows,
+    );
+    println!("{ttable}");
+    println!("{tsummary}");
+    println!(
+        "(cold tier {}: spilled entries replace drops — \"lost\" should \
+         sit near zero where the flat sweep above was shedding entries, \
+         and prefetch restores should dominate stall restores once the \
+         round-aware hints warm up)",
+        fmt_bytes(cold_cap)
+    );
     ctx.save(
         "pressure.md",
         &format!(
             "# Eviction pressure: compression under store capacity \
-             limits\n\nworking set: {}\n\n{table}\n{summary}",
-            fmt_bytes(ws)
+             limits\n\nworking set: {}\n\n{table}\n{summary}\n\
+             ## Storage tiers (cold {})\n\n{ttable}\n{tsummary}",
+            fmt_bytes(ws),
+            fmt_bytes(cold_cap)
         ),
     )?;
     Ok(())

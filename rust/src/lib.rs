@@ -18,6 +18,7 @@
 //! | `runtime::kv` | `KvBuf`/`KvScratch` + `BlockProvenance`: per-block copy origins that let round-end encode skip provably-clean blocks |
 //! | [`kvcache`] | paged GPU-pool analog: block allocator, block tables |
 //! | [`store`] | CPU-side cache store: dense + Master-Mirror diff entries, O(1) LRU, master re-election, capacity-honest accounting |
+//! | `store::tier` | cold storage tier: serialized disk spill (optionally int8/q4-quantized), steps-to-next-use eviction, round-aware prefetch |
 //! | [`rounds`] | segment hashing, sharing-cohort clustering (All-Gather = one cohort) |
 //! | [`pic`] | position-independent caching: importance selection, plans |
 //! | [`collector`] | KV Collector: grouping + collective reuse (paper §4.2) |

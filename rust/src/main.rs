@@ -13,6 +13,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use tokendance::engine::{Engine, Policy};
+use tokendance::store::QuantFormat;
 use tokendance::experiments::{self, ExpContext};
 use tokendance::util::cli::Args;
 use tokendance::util::stats::{fmt_bytes, fmt_secs, Samples};
@@ -45,6 +46,10 @@ SERVE OPTIONS:
   --sessions N      concurrent sessions          [1]
   --qps Q           offered subrequests/sec      [8]
   --pool-blocks N   KV pool capacity in blocks   [auto]
+  --store-mb N      hot CPU store capacity, MiB  [builder default]
+  --cold-mb N       cold spill-tier capacity, MiB (0 = tier off)  [0]
+  --spill-dir DIR   cold-tier spill directory    [temp dir]
+  --quant Q         dense spill payloads: off | int8 | q4  [int8]
 ";
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -73,11 +78,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         family.label(),
         topology.label()
     );
-    let mut eng = Engine::builder(&model)
+    let mut b = Engine::builder(&model)
         .policy(policy)
         .pool_blocks(pool)
-        .runtime(ctx.rt.clone())
-        .build()?;
+        .runtime(ctx.rt.clone());
+    if let Some(mb) = args.get("store-mb") {
+        let mb: usize = mb
+            .parse()
+            .map_err(|_| anyhow!("--store-mb expects an integer"))?;
+        b = b.store_bytes(mb << 20);
+    }
+    let cold_mb = args.usize_or("cold-mb", 0);
+    if cold_mb > 0 {
+        b = b.cold_tier(cold_mb << 20);
+        if let Some(dir) = args.get("spill-dir") {
+            b = b.spill_dir(std::path::PathBuf::from(dir));
+        }
+        match args.get_or("quant", "int8") {
+            "off" => b = b.quantize(false),
+            "int8" => b = b.quant_format(QuantFormat::Int8),
+            "q4" => b = b.quant_format(QuantFormat::Q4),
+            other => bail!("unknown --quant {other:?} (off|int8|q4)"),
+        }
+    }
+    let mut eng = b.build()?;
     let cfg = WorkloadConfig::for_family(family, 1, agents, rounds)
         .with_topology(topology);
     let report = drive_sessions(&mut eng, &cfg, sessions, qps, 0x5E12)?;
@@ -137,6 +161,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sc.hit_rate()
             .map_or("n/a".into(), |h| format!("{:.0}%", 100.0 * h))
     );
+    println!(
+        "store residency:    hot {} dense + {} mirror; cold {} dense + \
+         {} mirror + {} quantized ({} cold entries)",
+        fmt_bytes(st.dense_bytes),
+        fmt_bytes(st.mirror_bytes),
+        fmt_bytes(st.cold_dense_bytes),
+        fmt_bytes(st.cold_mirror_bytes),
+        fmt_bytes(st.cold_quantized_bytes),
+        st.cold_entries
+    );
+    if eng.store().tier_enabled() {
+        println!(
+            "storage tiers:      {} spills, {} prefetch vs {} stall \
+             restores, {} prefetch hits, {} lost, restore p50 {} p99 {}",
+            sc.spills,
+            sc.prefetch_restores,
+            sc.stall_restores,
+            sc.prefetch_hits,
+            sc.evicted_to_nothing,
+            fmt_secs(eng.metrics.tier_restore_secs.p50()),
+            fmt_secs(eng.metrics.tier_restore_secs.p99()),
+        );
+    }
     println!(
         "reuse:              {:.0}% of prompt tokens served from cache; \
          {} restores ({} mean)",

@@ -66,6 +66,9 @@ pub struct UsageSample {
     pub pool_used_blocks: usize,
     pub pool_total_blocks: usize,
     pub store_bytes: usize,
+    /// Serialized bytes resident in the cold storage tier (0 when the
+    /// tier is off).
+    pub store_cold_bytes: usize,
 }
 
 /// Collected engine metrics for one run.
@@ -129,6 +132,25 @@ pub struct RunMetrics {
     /// the store never holds more than its budget, so oversize entries
     /// are turned away and counted instead of silently overcommitting).
     pub store_rejections: u64,
+    /// Hot-store victims spilled to the cold tier instead of dropped.
+    pub store_spills: u64,
+    /// Cold→hot restores performed inside a `get` (assembly stalled).
+    pub store_stall_restores: u64,
+    /// Cold→hot restores performed ahead of need by round-aware prefetch.
+    pub store_prefetch_restores: u64,
+    /// `get` hits served by a prefetch-restored entry (the prefetch paid
+    /// off before any stall).
+    pub store_prefetch_hits: u64,
+    /// Entries evicted out of the cold tier (left the hierarchy).
+    pub store_cold_evictions: u64,
+    /// Cold entries dropped as unreadable (corrupt spill or broken
+    /// master chain).
+    pub store_cold_dead_drops: u64,
+    /// Hot victims lost outright because the cold tier refused them.
+    pub store_evicted_to_nothing: u64,
+    /// Wall time of each cold→hot restore (decode + dequantize + insert;
+    /// the `pressure` experiment reports its p50/p99 per tier regime).
+    pub tier_restore_secs: Samples,
 }
 
 impl RunMetrics {
@@ -203,6 +225,15 @@ impl RunMetrics {
 
     pub fn peak_store_bytes(&self) -> usize {
         self.usage.iter().map(|u| u.store_bytes).max().unwrap_or(0)
+    }
+
+    /// Peak serialized bytes resident in the cold tier (0 when off).
+    pub fn peak_cold_bytes(&self) -> usize {
+        self.usage
+            .iter()
+            .map(|u| u.store_cold_bytes)
+            .max()
+            .unwrap_or(0)
     }
 
     /// Fraction of prompt tokens served from cache across requests.

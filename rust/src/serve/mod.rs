@@ -31,6 +31,7 @@ use crate::engine::{AgentRequest, Engine, EngineConfig, Policy};
 use crate::restore::RestoreMode;
 use crate::rounds::DetectorConfig;
 use crate::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
+use crate::store::QuantFormat;
 
 // ---------------------------------------------------------------------
 // Events
@@ -200,6 +201,11 @@ impl Engine {
                 format!("round {round}, agent {}", r.agent)
             })?);
         }
+        // round-aware prefetch: the validated submission names every
+        // retained cache and prompt segment this round's gather plan will
+        // fetch — restore spilled entries before prefill needs them (a
+        // no-op unless the cold storage tier is enabled)
+        self.prefetch_for_submission(round, &requests, &prepared);
         let arrived = offered_at.unwrap_or_else(Instant::now);
         let mut ids = Vec::with_capacity(requests.len());
         for (r, (tokens, seg)) in requests.into_iter().zip(prepared) {
@@ -257,6 +263,10 @@ pub struct EngineBuilder {
     restore_mode: Option<RestoreMode>,
     gather_plan: Option<bool>,
     collective_encode: Option<bool>,
+    cold_bytes: Option<usize>,
+    spill_dir: Option<PathBuf>,
+    quantize: Option<bool>,
+    quant_format: Option<QuantFormat>,
 }
 
 impl EngineBuilder {
@@ -275,6 +285,10 @@ impl EngineBuilder {
             restore_mode: None,
             gather_plan: None,
             collective_encode: None,
+            cold_bytes: None,
+            spill_dir: None,
+            quantize: None,
+            quant_format: None,
         }
     }
 
@@ -369,6 +383,37 @@ impl EngineBuilder {
         self
     }
 
+    /// Enable the cold storage tier with this many bytes of spill
+    /// capacity (default 0 = flat store, no spilling). Under hot-capacity
+    /// pressure the store spills entries to disk and restores them on
+    /// demand or by round-aware prefetch, instead of dropping them.
+    pub fn cold_tier(mut self, bytes: usize) -> Self {
+        self.cold_bytes = Some(bytes);
+        self
+    }
+
+    /// Directory for cold-tier spill files (default: a per-engine
+    /// directory under the system temp dir, removed with the store).
+    pub fn spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// Quantize dense payloads on spill (default true when the tier is
+    /// on; mirrors always spill in their exact diff form). `false` is the
+    /// bitwise-equivalence baseline: spill → restore round-trips exactly,
+    /// same discipline as `gather_plan`/`collective_encode`.
+    pub fn quantize(mut self, on: bool) -> Self {
+        self.quantize = Some(on);
+        self
+    }
+
+    /// Quantization format for dense spills (default int8).
+    pub fn quant_format(mut self, f: QuantFormat) -> Self {
+        self.quant_format = Some(f);
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let rt: Rc<dyn ModelRuntime> = match (self.runtime, self.artifacts)
         {
@@ -412,6 +457,18 @@ impl EngineBuilder {
         }
         if let Some(c) = self.collective_encode {
             cfg.collective_encode = c;
+        }
+        if let Some(b) = self.cold_bytes {
+            cfg.cold_bytes = b;
+        }
+        if let Some(d) = self.spill_dir {
+            cfg.spill_dir = Some(d);
+        }
+        if let Some(q) = self.quantize {
+            cfg.quantize = q;
+        }
+        if let Some(f) = self.quant_format {
+            cfg.quant_format = f;
         }
         Engine::new(rt, cfg)
     }

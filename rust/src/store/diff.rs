@@ -427,6 +427,173 @@ pub fn gather_permuted_master_into(
     src_pos
 }
 
+// ---------------------------------------------------------------------
+// wire codec — the storage tier's on-disk spill format (store/tier.rs)
+// ---------------------------------------------------------------------
+
+/// Minimal little-endian wire helpers shared by the spill codec. f32s
+/// travel as raw bit patterns (`to_bits`/`from_bits`) so a spill →
+/// restore round trip is bitwise, not merely approximately equal.
+pub(crate) mod wire {
+    use anyhow::{bail, Result};
+
+    pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+        out.push(v);
+    }
+
+    pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+        put_u64(out, xs.len() as u64);
+        for &x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_i32s(out: &mut Vec<u8>, xs: &[i32]) {
+        put_u64(out, xs.len() as u64);
+        for &x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+        put_u64(out, xs.len() as u64);
+        for &x in xs {
+            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn put_bytes(out: &mut Vec<u8>, xs: &[u8]) {
+        put_u64(out, xs.len() as u64);
+        out.extend_from_slice(xs);
+    }
+
+    /// Bounds-checked sequential reader over one serialized payload —
+    /// corrupt or truncated spill files surface as errors, never panics
+    /// or over-reads.
+    pub struct Reader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Reader<'a> {
+        pub fn new(buf: &'a [u8]) -> Self {
+            Reader { buf, pos: 0 }
+        }
+
+        /// Take `n` raw bytes.
+        pub fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
+            if n > self.buf.len() - self.pos {
+                bail!(
+                    "truncated spill payload: need {n} bytes at offset \
+                     {}, have {}",
+                    self.pos,
+                    self.buf.len() - self.pos
+                );
+            }
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+
+        pub fn u8(&mut self) -> Result<u8> {
+            Ok(self.raw(1)?[0])
+        }
+
+        pub fn u64(&mut self) -> Result<u64> {
+            Ok(u64::from_le_bytes(self.raw(8)?.try_into().unwrap()))
+        }
+
+        /// Read a vector length and sanity-cap it against the remaining
+        /// bytes (every element is at least one byte on the wire), so a
+        /// corrupt length can't drive a huge allocation.
+        fn len(&mut self) -> Result<usize> {
+            let n = self.u64()? as usize;
+            if n > self.buf.len() - self.pos {
+                bail!("corrupt spill payload: length {n} exceeds buffer");
+            }
+            Ok(n)
+        }
+
+        pub fn u32s(&mut self) -> Result<Vec<u32>> {
+            let n = self.len()?;
+            Ok(self
+                .raw(n * 4)?
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        }
+
+        pub fn i32s(&mut self) -> Result<Vec<i32>> {
+            let n = self.len()?;
+            Ok(self
+                .raw(n * 4)?
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        }
+
+        pub fn f32s(&mut self) -> Result<Vec<f32>> {
+            let n = self.len()?;
+            Ok(self
+                .raw(n * 4)?
+                .chunks_exact(4)
+                .map(|c| {
+                    f32::from_bits(u32::from_le_bytes(c.try_into().unwrap()))
+                })
+                .collect())
+        }
+
+        pub fn bytes(&mut self) -> Result<Vec<u8>> {
+            let n = self.len()?;
+            Ok(self.raw(n)?.to_vec())
+        }
+    }
+}
+
+impl BlockSparseDiff {
+    /// Serialize for the spill tier (little-endian, f32s as raw bits).
+    pub(crate) fn write_le(&self, out: &mut Vec<u8>) {
+        wire::put_i32s(out, &self.block_ids);
+        wire::put_f32s(out, &self.k);
+        wire::put_f32s(out, &self.v);
+        wire::put_u64(out, self.block_tokens as u64);
+        wire::put_u64(out, self.layers as u64);
+        wire::put_u64(out, self.d as u64);
+    }
+
+    pub(crate) fn read_le(r: &mut wire::Reader) -> anyhow::Result<Self> {
+        Ok(BlockSparseDiff {
+            block_ids: r.i32s()?,
+            k: r.f32s()?,
+            v: r.f32s()?,
+            block_tokens: r.u64()? as usize,
+            layers: r.u64()? as usize,
+            d: r.u64()? as usize,
+        })
+    }
+}
+
+impl AlignedDiff {
+    /// Serialize for the spill tier (little-endian, f32s as raw bits).
+    pub(crate) fn write_le(&self, out: &mut Vec<u8>) {
+        wire::put_i32s(out, &self.src_block);
+        wire::put_i32s(out, &self.src_pos);
+        self.corrections.write_le(out);
+    }
+
+    pub(crate) fn read_le(r: &mut wire::Reader) -> anyhow::Result<Self> {
+        Ok(AlignedDiff {
+            src_block: r.i32s()?,
+            src_pos: r.i32s()?,
+            corrections: BlockSparseDiff::read_le(r)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -645,5 +812,34 @@ mod tests {
         let d = diff_blocks(&a, &b, 64, 16);
         assert_eq!(d.n_blocks(), 2);
         assert_eq!(d.bytes(), 2 * (2 * 16 * 8 * 4 * 2) + 2 * 4);
+    }
+
+    #[test]
+    fn aligned_diff_wire_codec_round_trips_bitwise() {
+        let a = buf(2, 64, 8);
+        let mut b = a.clone();
+        let o = b.off(1, 20);
+        b.k[o] += 3.0;
+        b.k[o + 1] = f32::from_bits(0x7fc0_0001); // NaN payload survives
+        let d = rediff_identity(&a, &b, 64, 64, 16, 0.0);
+        let mut out = Vec::new();
+        d.write_le(&mut out);
+        let mut r = wire::Reader::new(&out);
+        let back = AlignedDiff::read_le(&mut r).unwrap();
+        assert_eq!(back.src_block, d.src_block);
+        assert_eq!(back.src_pos, d.src_pos);
+        assert_eq!(back.corrections.block_ids, d.corrections.block_ids);
+        // f32 bit patterns are preserved exactly (PartialEq would reject
+        // NaN even when the bits match, so compare the raw bits)
+        let bits = |xs: &[f32]| -> Vec<u32> {
+            xs.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&back.corrections.k), bits(&d.corrections.k));
+        assert_eq!(bits(&back.corrections.v), bits(&d.corrections.v));
+        // truncation is an error, not a panic
+        assert!(AlignedDiff::read_le(&mut wire::Reader::new(
+            &out[..out.len() / 3]
+        ))
+        .is_err());
     }
 }

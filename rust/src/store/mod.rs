@@ -44,10 +44,27 @@
 //!   drops, rejections, hits/misses) is counted in [`StoreCounters`] and
 //!   surfaced through [`StoreStats`], `EngineEvent::RoundClosed`, and the
 //!   metrics layer.
+//!
+//! ## Storage tiers (optional cold tier, see [`tier`])
+//!
+//! With [`CacheStore::configure_tier`] the flat store becomes the *hot*
+//! tier of a two-level hierarchy. Under capacity pressure, victims are
+//! **spilled** to an on-disk cold tier instead of dropped: mirrors keep
+//! their block-sparse diff form, dense payloads spill exact or quantized
+//! (int8/Q4, per-block scales). Spilled keys restore transparently inside
+//! [`CacheStore::get`] (a *stall restore*) or ahead of time via
+//! [`CacheStore::prefetch`] when the round scheduler announces the keys
+//! the next round's gather plan will read. Hot eviction switches from
+//! pure LRU to KVFlow-style steps-to-next-use priority (fed by
+//! [`CacheStore::hint_next_use`]), and a pinned Master victim spills with
+//! its whole mirror family instead of forcing a lossy re-election. With
+//! the tier off (the default) none of these paths exist and behavior is
+//! bit-identical to the flat store — the golden-run digests pin that.
 
 pub mod diff;
+pub mod tier;
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
@@ -59,6 +76,9 @@ pub use diff::{
     gather_permuted_master, gather_permuted_master_into,
     match_blocks_by_content, match_blocks_by_segments, rediff_identity,
     AlignedDiff, BlockSparseDiff,
+};
+pub use tier::{
+    ColdKind, QuantFormat, QuantizedDense, SpillPayload, TierConfig,
 };
 
 /// Key of a stored cache object.
@@ -154,6 +174,14 @@ pub struct StoreStats {
     pub agent_dense_bytes: usize,
     /// Total diff blocks across mirrors (Fig-12 right panel).
     pub mirror_diff_blocks: usize,
+    /// Cold-tier entries (serialized on disk; 0 when the tier is off).
+    pub cold_entries: usize,
+    /// Serialized cold bytes held by exact dense payloads.
+    pub cold_dense_bytes: usize,
+    /// Serialized cold bytes held by mirror (diff-form) payloads.
+    pub cold_mirror_bytes: usize,
+    /// Serialized cold bytes held by quantized dense payloads.
+    pub cold_quantized_bytes: usize,
     /// Cumulative lifecycle counters since store creation.
     pub counters: StoreCounters,
 }
@@ -178,6 +206,27 @@ pub struct StoreCounters {
     pub hits: u64,
     /// `get` calls that missed.
     pub misses: u64,
+    /// Hot victims spilled to the cold tier instead of dropped (every
+    /// spill is also counted in `evictions`, which tracks hot removals
+    /// under pressure regardless of destination).
+    pub spills: u64,
+    /// Cold→hot restores performed inside a `get` — assembly stalled on
+    /// them (the restores round-aware prefetch exists to avoid).
+    pub stall_restores: u64,
+    /// Cold→hot restores performed ahead of need by prefetch.
+    pub prefetch_restores: u64,
+    /// `get` hits served by an entry a prefetch restored — the prefetch
+    /// paid off before any stall.
+    pub prefetch_hits: u64,
+    /// Cold-tier evictions: entries that left the hierarchy entirely to
+    /// make room for newer spills.
+    pub cold_evictions: u64,
+    /// Cold entries dropped because they became unreadable (spill file
+    /// corrupt, or their master chain broke and no re-home was possible).
+    pub cold_dead_drops: u64,
+    /// Hot victims that could not spill (cold tier full beside a
+    /// protected master, or the write failed) and were lost outright.
+    pub evicted_to_nothing: u64,
 }
 
 impl StoreStats {
@@ -245,6 +294,10 @@ struct Resident {
     prev: Option<StoreKey>,
     /// LRU neighbor toward the tail (newer).
     next: Option<StoreKey>,
+    /// Scheduler hint: the round expected to read this key next (feeds
+    /// the steps-to-next-use eviction priority when the tier is on;
+    /// ignored by the flat store's pure LRU).
+    next_use: Option<u64>,
 }
 
 /// The store itself. `capacity_bytes` bounds resident data; inserting past
@@ -266,6 +319,16 @@ pub struct CacheStore {
     /// Runtime used to materialize position-shifted mirrors during master
     /// re-election; identity mirrors promote host-side without it.
     runtime: Option<(Rc<dyn ModelRuntime>, String)>,
+    /// Optional cold tier (disk spill + quantization). None = flat store,
+    /// the bit-pinned default.
+    tier: Option<tier::ColdTier>,
+    /// Monotonic round clock steps-to-next-use is measured against.
+    clock_round: u64,
+    /// Keys restored by prefetch and not yet read (prefetch-hit
+    /// attribution; always a subset of the resident keys).
+    prefetched: HashSet<StoreKey>,
+    /// Cold→hot restore latencies (seconds) since the last drain.
+    restore_samples: Vec<f64>,
 }
 
 fn dense_bytes(e: &DenseEntry) -> usize {
@@ -298,7 +361,85 @@ impl CacheStore {
             master_refs: HashMap::new(),
             counters: StoreCounters::default(),
             runtime: None,
+            tier: None,
+            clock_round: 0,
+            prefetched: HashSet::new(),
+            restore_samples: Vec::new(),
         }
+    }
+
+    /// Enable the cold tier (creates the spill directory). The engine
+    /// calls this once at construction when a cold capacity is set.
+    pub fn configure_tier(&mut self, cfg: TierConfig) -> Result<()> {
+        self.tier = Some(tier::ColdTier::new(cfg)?);
+        Ok(())
+    }
+
+    pub fn tier_enabled(&self) -> bool {
+        self.tier.is_some()
+    }
+
+    /// Serialized bytes resident in the cold tier (0 when off).
+    pub fn cold_bytes(&self) -> usize {
+        self.tier.as_ref().map_or(0, |t| t.bytes())
+    }
+
+    /// Cold-tier entry count (0 when off).
+    pub fn cold_len(&self) -> usize {
+        self.tier.as_ref().map_or(0, |t| t.len())
+    }
+
+    /// Is `key` currently spilled cold (and not hot)?
+    pub fn is_spilled(&self, key: &StoreKey) -> bool {
+        self.tier.as_ref().is_some_and(|t| t.contains(key))
+    }
+
+    /// Advance the scheduler clock (monotonic). The engine calls this
+    /// with every submitted round; steps-to-next-use is measured against
+    /// it.
+    pub fn note_round(&mut self, round: u64) {
+        self.clock_round = self.clock_round.max(round);
+    }
+
+    /// Record that the round scheduler expects `key` to be read at
+    /// `round` — the KVFlow-style priority feed for both tiers. A no-op
+    /// for unknown keys, and when the tier is off (the flat store stays
+    /// pure LRU, preserving baseline behavior bit-for-bit).
+    pub fn hint_next_use(&mut self, key: &StoreKey, round: u64) {
+        if self.tier.is_none() {
+            return;
+        }
+        if let Some(r) = self.entries.get_mut(key) {
+            r.next_use = Some(round);
+        } else if let Some(t) = self.tier.as_mut() {
+            t.hint_next_use(key, round);
+        }
+    }
+
+    /// Restore the given spilled keys ahead of the round that will read
+    /// them (round-aware prefetch; keys already hot or unknown are
+    /// skipped). Restores triggered here never evict hot entries with a
+    /// live next-use hint — a prefetch must not displace keys the same
+    /// upcoming round needs. Later `get` hits on restored keys count as
+    /// prefetch hits.
+    pub fn prefetch(&mut self, keys: &[StoreKey]) {
+        if self.tier.is_none() {
+            return;
+        }
+        for k in keys {
+            if self.entries.contains_key(k) {
+                continue;
+            }
+            if self.tier.as_ref().is_some_and(|t| t.contains(k)) {
+                self.restore_from_cold(*k, true);
+            }
+        }
+    }
+
+    /// Drain the cold→hot restore latency samples (seconds) recorded
+    /// since the last call.
+    pub fn take_restore_samples(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.restore_samples)
     }
 
     /// Attach the runtime master re-election uses to materialize
@@ -403,7 +544,13 @@ impl CacheStore {
         self.bytes += nb;
         self.entries.insert(
             key,
-            Resident { entry, bytes: nb, prev: None, next: None },
+            Resident {
+                entry,
+                bytes: nb,
+                prev: None,
+                next: None,
+                next_use: None,
+            },
         );
         self.push_back(key);
     }
@@ -416,6 +563,7 @@ impl CacheStore {
             return None;
         }
         debug_assert!(!self.is_pinned(&key), "removing a pinned master");
+        self.prefetched.remove(&key);
         self.unlink(key);
         let r = self.entries.remove(&key).unwrap();
         self.bytes -= r.bytes;
@@ -443,6 +591,15 @@ impl CacheStore {
     /// left dangling. On return `old_key` is either removed (promotion
     /// happened) or unpinned (every mirror was dropped).
     fn reelect_master(&mut self, old_key: StoreKey) {
+        // cold mirrors of the outgoing master re-home first, while its
+        // payload is still resident dense to materialize against
+        if self
+            .tier
+            .as_ref()
+            .is_some_and(|t| !t.mirrors_of(&old_key).is_empty())
+        {
+            self.detach_cold_mirrors(old_key);
+        }
         let Some(refs) = self.master_refs.get(&old_key) else { return };
         let mirror_keys: Vec<StoreKey> = refs.iter().copied().collect();
 
@@ -566,31 +723,87 @@ impl CacheStore {
     }
 
     // -----------------------------------------------------------------
-    // eviction
+    // eviction (and, with the tier on, spill / restore)
     // -----------------------------------------------------------------
 
-    /// Evict LRU-first until `need` more bytes fit. A pinned Master chosen
-    /// as the victim is not skipped: a new Master is re-elected from its
-    /// Mirrors, after which the loop continues. `protect` is never evicted
-    /// or re-elected (the Master a Mirror insert is about to reference).
-    fn evict_for(&mut self, need: usize, protect: Option<StoreKey>) {
-        // every iteration either evicts an entry or resolves a pin
-        // (re-election removes the old master), so the loop terminates;
-        // the guard is belt-and-braces, not load-bearing
-        let mut guard = 4 * self.entries.len() + 8;
-        while self.bytes + need > self.capacity_bytes && guard > 0 {
-            guard -= 1;
-            let mut victim = None;
+    /// Choose the next hot eviction victim. With the tier off this is
+    /// pure LRU: the head-most key other than `protect`. With the tier on
+    /// it is the KVFlow-style priority: the entry with the largest
+    /// steps-to-next-use at the current round clock (unhinted or stale =
+    /// infinity), walking the LRU chain head→tail so ties resolve to the
+    /// least-recently-used — deterministic regardless of map iteration
+    /// order. With `hold_hinted` (prefetch restores) entries carrying a
+    /// live hint are never victims.
+    fn pick_victim(
+        &self,
+        protect: Option<StoreKey>,
+        hold_hinted: bool,
+    ) -> Option<StoreKey> {
+        if self.tier.is_none() {
             let mut cur = self.head;
             while let Some(k) = cur {
                 if Some(k) != protect {
-                    victim = Some(k);
-                    break;
+                    return Some(k);
                 }
                 cur = self.entries.get(&k).and_then(|r| r.next);
             }
-            let Some(victim) = victim else { break };
-            if self.is_pinned(&victim) {
+            return None;
+        }
+        let clock = self.clock_round;
+        let mut best: Option<(u64, StoreKey)> = None;
+        let mut cur = self.head;
+        while let Some(k) = cur {
+            let r = self.entries.get(&k).expect("LRU chain broken");
+            cur = r.next;
+            if Some(k) == protect {
+                continue;
+            }
+            let steps = match r.next_use {
+                Some(n) if n >= clock => n - clock,
+                _ => u64::MAX,
+            };
+            if hold_hinted && steps != u64::MAX {
+                continue;
+            }
+            // strict > keeps the first-encountered (LRU-oldest) on ties
+            if best.map_or(true, |(bs, _)| steps > bs) {
+                best = Some((steps, k));
+            }
+        }
+        best.map(|(_, k)| k)
+    }
+
+    /// Evict hot entries until `need` more bytes fit. With the tier on,
+    /// victims are spilled cold instead of dropped, and a pinned Master
+    /// victim spills together with its whole mirror family (mirrors
+    /// first) rather than forcing a lossy re-election — with a cold tier
+    /// available nothing needs to be thrown away. With the tier off this
+    /// is the original behavior: LRU drop, pinned victims re-elect.
+    /// `protect` is never evicted or re-elected (the Master a Mirror
+    /// insert or restore is about to reference).
+    fn evict_some(
+        &mut self,
+        need: usize,
+        protect: Option<StoreKey>,
+        hold_hinted: bool,
+    ) {
+        // every iteration removes at least one hot entry (spills remove
+        // even when the cold write fails) or resolves a pin, so the loop
+        // terminates; the guard is belt-and-braces, not load-bearing
+        let mut guard = 4 * self.entries.len() + 8;
+        while self.bytes + need > self.capacity_bytes && guard > 0 {
+            guard -= 1;
+            let Some(victim) = self.pick_victim(protect, hold_hinted)
+            else {
+                break;
+            };
+            if self.tier.is_some() {
+                if self.is_pinned(&victim) {
+                    self.spill_family(victim);
+                } else {
+                    self.spill_entry(victim);
+                }
+            } else if self.is_pinned(&victim) {
                 self.reelect_master(victim);
                 // if every mirror was dropped the master is now unpinned
                 // and the next iteration evicts it
@@ -601,14 +814,288 @@ impl CacheStore {
         }
     }
 
+    /// [`Self::evict_some`] without the prefetch hold — the shape every
+    /// put path uses.
+    fn evict_for(&mut self, need: usize, protect: Option<StoreKey>) {
+        self.evict_some(need, protect, false);
+    }
+
+    /// Spill one unpinned hot entry cold (or lose it, counted, when the
+    /// cold tier refuses). Mirrors spill in diff form; dense entries
+    /// exact or quantized per the tier config.
+    fn spill_entry(&mut self, key: StoreKey) {
+        let next_use = self.entries.get(&key).and_then(|r| r.next_use);
+        let Some(entry) = self.remove_resident(key) else { return };
+        self.counters.evictions += 1;
+        let tier = self.tier.as_mut().expect("spill without a tier");
+        let payload = match &entry {
+            Entry::Mirror(m) => SpillPayload::Mirror(m.as_ref().clone()),
+            Entry::Dense(d) => {
+                if tier.quantize_dense() {
+                    SpillPayload::Quantized(QuantizedDense::quantize(
+                        d.as_ref(),
+                        self.spec.block_tokens,
+                        tier.format(),
+                    ))
+                } else {
+                    SpillPayload::Dense(d.as_ref().clone())
+                }
+            }
+        };
+        let clock = self.clock_round;
+        match tier.insert(key, &payload, next_use, clock, &mut self.counters)
+        {
+            Ok(()) => self.counters.spills += 1,
+            Err(_) => {
+                self.counters.evicted_to_nothing += 1;
+                // the entry is gone for good; cold mirrors that diffed
+                // against it (a dense base) are dead too
+                if matches!(entry, Entry::Dense(_)) {
+                    if let Some(t) = self.tier.as_mut() {
+                        t.drop_mirrors_of(&key, &mut self.counters);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Spill a pinned Master victim with its hot mirror family: mirrors
+    /// first (each spill unpins one edge), then the master itself. The
+    /// cold mirrors keep referencing the master's key — readable again
+    /// once the master restores (hot-dense) or directly while it sits
+    /// cold in dense form.
+    fn spill_family(&mut self, master_key: StoreKey) {
+        let mirrors: Vec<StoreKey> = self
+            .master_refs
+            .get(&master_key)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default();
+        for mk in mirrors {
+            self.spill_entry(mk);
+        }
+        if !self.is_pinned(&master_key) {
+            self.spill_entry(master_key);
+        }
+    }
+
+    /// Restore a spilled key into the hot tier. A cold mirror needs its
+    /// master readable first: already hot-dense, or itself cold in dense
+    /// form (restored recursively — cold masters are never mirrors, so
+    /// the recursion is depth one). Returns whether `key` ended hot.
+    fn restore_from_cold(&mut self, key: StoreKey, prefetch: bool) -> bool {
+        if self.entries.contains_key(&key) {
+            return true;
+        }
+        let Some(master) = self
+            .tier
+            .as_ref()
+            .and_then(|t| t.meta(&key).map(|m| m.master))
+        else {
+            return false;
+        };
+        if let Some(mk) = master {
+            let hot_dense = matches!(
+                self.entries.get(&mk).map(|r| &r.entry),
+                Some(Entry::Dense(_))
+            );
+            if !hot_dense {
+                let cold_base = self.tier.as_ref().is_some_and(|t| {
+                    t.meta(&mk).is_some_and(|m| m.master.is_none())
+                });
+                if !(cold_base && self.restore_from_cold(mk, prefetch)) {
+                    // the mirror's base is gone — dead-drop it
+                    if self.tier.as_mut().is_some_and(|t| t.remove(&key)) {
+                        self.counters.cold_dead_drops += 1;
+                    }
+                    return false;
+                }
+            }
+        }
+        self.restore_one(key, prefetch)
+    }
+
+    /// Materialize one cold entry hot (its master, if any, is already
+    /// hot-dense). On a fit failure the payload goes back cold instead of
+    /// being lost. Counts the restore as prefetch or stall and records
+    /// its latency.
+    fn restore_one(&mut self, key: StoreKey, prefetch: bool) -> bool {
+        let t0 = std::time::Instant::now();
+        let next_use = self
+            .tier
+            .as_ref()
+            .and_then(|t| t.meta(&key))
+            .and_then(|m| m.next_use);
+        let payload = match self.tier.as_mut().and_then(|t| t.take(&key)) {
+            Some(Ok(p)) => p,
+            Some(Err(_)) => {
+                // unreadable spill file: the entry is lost
+                self.counters.cold_dead_drops += 1;
+                return false;
+            }
+            None => return false,
+        };
+        let (nb, master) = match &payload {
+            SpillPayload::Dense(d) => (dense_bytes(d), None),
+            SpillPayload::Quantized(q) => (q.dense_bytes(), None),
+            SpillPayload::Mirror(m) => (mirror_bytes(m), Some(m.master)),
+        };
+        if let Some(mk) = master {
+            if !matches!(
+                self.entries.get(&mk).map(|r| &r.entry),
+                Some(Entry::Dense(_))
+            ) {
+                self.counters.cold_dead_drops += 1;
+                return false;
+            }
+        }
+        self.evict_some(nb, master, prefetch);
+        if nb > self.capacity_bytes
+            || self.bytes + nb > self.capacity_bytes
+        {
+            // cannot fit right now (e.g. a prefetch refusing to displace
+            // hinted entries): re-spill instead of losing the payload
+            let clock = self.clock_round;
+            if self
+                .tier
+                .as_mut()
+                .expect("restore without a tier")
+                .insert(key, &payload, next_use, clock, &mut self.counters)
+                .is_err()
+            {
+                self.counters.evicted_to_nothing += 1;
+            }
+            return false;
+        }
+        let entry = match payload {
+            SpillPayload::Dense(d) => Entry::Dense(Rc::new(d)),
+            SpillPayload::Quantized(q) => {
+                Entry::Dense(Rc::new(q.dequantize()))
+            }
+            SpillPayload::Mirror(m) => Entry::Mirror(Rc::new(m)),
+        };
+        self.insert_resident(key, entry);
+        self.entries.get_mut(&key).unwrap().next_use = next_use;
+        if prefetch {
+            self.counters.prefetch_restores += 1;
+            self.prefetched.insert(key);
+        } else {
+            self.counters.stall_restores += 1;
+        }
+        self.restore_samples.push(t0.elapsed().as_secs_f64());
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
+        true
+    }
+
+    /// Re-home the *cold* mirrors of `master_key` before its payload
+    /// changes or disappears: each is materialized against the current
+    /// hot master and re-spilled as a self-contained dense (or quantized)
+    /// payload, keeping its next-use hint. Mirrors that cannot be
+    /// materialized or re-spilled are dead-dropped (counted).
+    fn detach_cold_mirrors(&mut self, master_key: StoreKey) {
+        let cold: Vec<StoreKey> = self
+            .tier
+            .as_ref()
+            .map(|t| t.mirrors_of(&master_key))
+            .unwrap_or_default();
+        if cold.is_empty() {
+            return;
+        }
+        let master_rc = match self.entries.get(&master_key).map(|r| &r.entry)
+        {
+            Some(Entry::Dense(d)) => d.clone(),
+            _ => {
+                // base unreadable: nothing to materialize against
+                if let Some(t) = self.tier.as_mut() {
+                    t.drop_mirrors_of(&master_key, &mut self.counters);
+                }
+                return;
+            }
+        };
+        for mk in cold {
+            let next_use = self
+                .tier
+                .as_ref()
+                .and_then(|t| t.meta(&mk))
+                .and_then(|m| m.next_use);
+            let taken = self.tier.as_mut().and_then(|t| t.take(&mk));
+            let Some(Ok(SpillPayload::Mirror(m))) = taken else {
+                self.counters.cold_dead_drops += 1;
+                continue;
+            };
+            let len = m.tokens.len();
+            let rt = self
+                .runtime
+                .as_ref()
+                .map(|(r, name)| (r.as_ref(), name.as_str()));
+            let handle = MirrorHandle {
+                master: master_rc.clone(),
+                mirror: Rc::new(m),
+            };
+            let Ok(padded) = crate::restore::materialize_for_promotion(
+                &self.spec, rt, &handle,
+            ) else {
+                self.counters.cold_dead_drops += 1;
+                continue;
+            };
+            let dense = DenseEntry {
+                tokens: handle.mirror.tokens.clone(),
+                positions: (0..len as i32).collect(),
+                kv: padded.extract_rows(0, len),
+            };
+            let tier = self.tier.as_mut().expect("detach without a tier");
+            let payload = if tier.quantize_dense() {
+                SpillPayload::Quantized(QuantizedDense::quantize(
+                    &dense,
+                    self.spec.block_tokens,
+                    tier.format(),
+                ))
+            } else {
+                SpillPayload::Dense(dense)
+            };
+            let clock = self.clock_round;
+            match tier.insert(
+                mk,
+                &payload,
+                next_use,
+                clock,
+                &mut self.counters,
+            ) {
+                Ok(()) => self.counters.rehomed_mirrors += 1,
+                Err(_) => self.counters.cold_dead_drops += 1,
+            }
+        }
+    }
+
     /// Remove whatever currently sits at `key` (replacement path): a
-    /// pinned Master re-elects first so its Mirrors never dangle.
+    /// pinned Master re-elects first so its Mirrors never dangle, cold
+    /// mirrors of a replaced base are re-homed (or dead-dropped when the
+    /// base is unreadable), and any stale cold copy of `key` is purged so
+    /// it cannot shadow the incoming entry.
     fn remove_existing(&mut self, key: StoreKey) {
         if self.is_pinned(&key) {
             self.reelect_master(key);
+        } else if self
+            .tier
+            .as_ref()
+            .is_some_and(|t| !t.mirrors_of(&key).is_empty())
+        {
+            if matches!(
+                self.entries.get(&key).map(|r| &r.entry),
+                Some(Entry::Dense(_))
+            ) {
+                self.detach_cold_mirrors(key);
+            } else if let Some(t) = self.tier.as_mut() {
+                // the cold base is being replaced while unreadable (cold
+                // itself): its cold mirrors cannot be re-homed
+                t.drop_mirrors_of(&key, &mut self.counters);
+            }
         }
         if self.entries.contains_key(&key) {
             self.remove_resident(key);
+        }
+        if let Some(t) = self.tier.as_mut() {
+            t.remove(&key);
         }
     }
 
@@ -649,6 +1136,17 @@ impl CacheStore {
     {
         if key == entry.master {
             return Err(anyhow!("mirror cannot reference itself"));
+        }
+        // a master spilled cold mid-cohort comes back hot before the
+        // dense check, so the tiered store accepts exactly the mirrors
+        // the flat store would
+        if !self.entries.contains_key(&entry.master)
+            && self
+                .tier
+                .as_ref()
+                .is_some_and(|t| t.contains(&entry.master))
+        {
+            self.restore_from_cold(entry.master, false);
         }
         match self.entries.get(&entry.master).map(|r| &r.entry) {
             Some(Entry::Dense(_)) => {}
@@ -707,6 +1205,13 @@ impl CacheStore {
     /// Reading a mirror touches its Master too, so a Master is never
     /// LRU-colder than its hottest Mirror.
     pub fn get(&mut self, key: &StoreKey) -> Option<Fetched> {
+        // tier-aware fetch: a spilled key restores on demand (a stall
+        // restore — the prefetch path should have brought it back first)
+        if !self.entries.contains_key(key)
+            && self.tier.as_ref().is_some_and(|t| t.contains(key))
+        {
+            self.restore_from_cold(*key, false);
+        }
         let (fetched, master_key) =
             match self.entries.get(key).map(|r| &r.entry) {
                 None => {
@@ -736,6 +1241,9 @@ impl CacheStore {
                 }
             };
         self.counters.hits += 1;
+        if self.prefetched.remove(key) {
+            self.counters.prefetch_hits += 1;
+        }
         self.touch(*key);
         if let Some(mk) = master_key {
             self.touch(mk);
@@ -800,6 +1308,18 @@ impl CacheStore {
                     st.mirror_dense_equiv_bytes += m.tokens.len()
                         * self.spec.kv_bytes_per_token()
                         + m.tokens.len() * 8;
+                }
+            }
+        }
+        if let Some(t) = &self.tier {
+            for (_, m) in t.iter_meta() {
+                st.cold_entries += 1;
+                match m.kind {
+                    ColdKind::Dense => st.cold_dense_bytes += m.bytes,
+                    ColdKind::Mirror => st.cold_mirror_bytes += m.bytes,
+                    ColdKind::Quantized => {
+                        st.cold_quantized_bytes += m.bytes
+                    }
                 }
             }
         }
@@ -883,6 +1403,37 @@ impl CacheStore {
                     _ => panic!("reverse-index edge {mk:?} -> {s:?} stale"),
                 }
             }
+        }
+        // cold tier: its own ledger, plus hot/cold disjointness and the
+        // cold-mirror base rule (master hot-dense or itself cold base)
+        if let Some(t) = &self.tier {
+            t.assert_invariants();
+            for (k, m) in t.iter_meta() {
+                assert!(
+                    !self.entries.contains_key(k),
+                    "key {k:?} resident hot and cold at once"
+                );
+                if let Some(mk) = m.master {
+                    let hot_dense = matches!(
+                        self.entries.get(&mk).map(|r| &r.entry),
+                        Some(Entry::Dense(_))
+                    );
+                    let cold_base = t
+                        .meta(&mk)
+                        .is_some_and(|b| b.master.is_none());
+                    assert!(
+                        hot_dense || cold_base,
+                        "cold mirror {k:?} dangling: master {mk:?} is \
+                         neither hot-dense nor a cold base"
+                    );
+                }
+            }
+        }
+        for k in &self.prefetched {
+            assert!(
+                self.entries.contains_key(k),
+                "prefetched set names a non-resident key {k:?}"
+            );
         }
     }
 }
@@ -1199,6 +1750,250 @@ mod tests {
         st.put_dense(key(4), dense(&sp, 16, 4.0)).unwrap();
         assert!(st.contains(&key(1)) && st.contains(&key(3)));
         assert!(!st.contains(&key(2)), "true LRU victim evicted");
+        st.assert_invariants();
+    }
+
+    // -----------------------------------------------------------------
+    // storage tier
+    // -----------------------------------------------------------------
+
+    fn tier_store(
+        sp: &ModelSpec,
+        hot: usize,
+        cold: usize,
+        quantize: bool,
+        name: &str,
+    ) -> CacheStore {
+        let mut st = CacheStore::new(sp, hot);
+        let dir = std::env::temp_dir().join(format!(
+            "td-store-tier-{}-{name}",
+            std::process::id()
+        ));
+        st.configure_tier(TierConfig {
+            cold_bytes: cold,
+            spill_dir: dir,
+            quantize,
+            format: QuantFormat::Int8,
+        })
+        .unwrap();
+        st
+    }
+
+    /// A dense entry with per-element varied values (quantization needs
+    /// non-constant planes to exercise the scales).
+    fn vdense(sp: &ModelSpec, len: usize) -> DenseEntry {
+        let mut d = dense(sp, len, 1.0);
+        for (i, x) in d.kv.k.iter_mut().enumerate() {
+            *x = (i as f32 * 0.37).sin() * 3.0;
+        }
+        for (i, x) in d.kv.v.iter_mut().enumerate() {
+            *x = (i as f32 * 0.11).cos() * 2.0;
+        }
+        d
+    }
+
+    #[test]
+    fn spilled_dense_restores_bitwise_on_get() {
+        let sp = spec();
+        let one = dense(&sp, 16, 1.0);
+        let eb = dense_bytes(&one);
+        let mut st = tier_store(&sp, eb + 64, 1 << 20, false, "dense-rt");
+        st.put_dense(key(1), one.clone()).unwrap();
+        st.put_dense(key(2), dense(&sp, 16, 2.0)).unwrap();
+        assert!(!st.contains(&key(1)), "capacity forces a spill");
+        assert!(st.is_spilled(&key(1)));
+        let stats = st.stats();
+        assert_eq!(stats.cold_entries, 1);
+        assert!(stats.cold_dense_bytes > 0);
+        match st.get(&key(1)) {
+            Some(Fetched::Dense(d)) => {
+                assert_eq!(d.kv, one.kv, "restore must be bitwise");
+                assert_eq!(d.tokens, one.tokens);
+                assert_eq!(d.positions, one.positions);
+            }
+            _ => panic!("expected restored dense"),
+        }
+        let c = st.counters();
+        assert_eq!(c.stall_restores, 1);
+        assert_eq!(c.spills, 2, "key2 spilled to make room for the restore");
+        assert_eq!(c.evicted_to_nothing, 0);
+        st.assert_invariants();
+    }
+
+    #[test]
+    fn spilled_mirror_round_trips_bitwise_with_master_chain() {
+        let sp = spec();
+        let master = dense(&sp, 64, 1.0);
+        let mb = dense_bytes(&master);
+        let mut probe = CacheStore::new(&sp, 1 << 22);
+        probe.put_dense(key(1), master.clone()).unwrap();
+        let m = mirror_of(&sp, &mut probe, key(1), 2.0);
+        let mm = mirror_bytes(&m);
+
+        let mut st =
+            tier_store(&sp, mb + mm + 128, 1 << 20, false, "mirror-rt");
+        st.put_dense(key(1), master.clone()).unwrap();
+        st.put_mirror(key(2), m.clone()).unwrap();
+        // the unhinted mirror is the priority victim; the master follows
+        // it cold once its pin clears, and both restore on demand
+        st.note_round(1);
+        st.hint_next_use(&key(1), 1);
+        st.put_dense(key(3), dense(&sp, 32, 3.0)).unwrap();
+        assert!(st.is_spilled(&key(2)), "mirror spilled under pressure");
+        match st.get(&key(2)) {
+            Some(Fetched::Mirror(h)) => {
+                assert_eq!(h.master.kv, master.kv, "master bitwise");
+                assert_eq!(h.mirror.diff, m.diff, "diff bitwise");
+                assert_eq!(h.mirror.tokens, m.tokens);
+                assert_eq!(h.mirror.positions, m.positions);
+            }
+            _ => panic!("expected restored mirror"),
+        }
+        let c = st.counters();
+        assert!(c.stall_restores >= 1);
+        assert_eq!(c.cold_dead_drops, 0);
+        st.assert_invariants();
+    }
+
+    #[test]
+    fn quantized_spill_restores_within_tolerance() {
+        let sp = spec();
+        let one = vdense(&sp, 16);
+        let eb = dense_bytes(&one);
+        let mut st = tier_store(&sp, eb + 64, 1 << 20, true, "quant");
+        st.put_dense(key(1), one.clone()).unwrap();
+        st.put_dense(key(2), dense(&sp, 16, 2.0)).unwrap();
+        assert!(st.is_spilled(&key(1)));
+        let stats = st.stats();
+        assert!(stats.cold_quantized_bytes > 0);
+        assert!(
+            stats.cold_quantized_bytes < eb,
+            "quantized payload must compress: {} vs {eb}",
+            stats.cold_quantized_bytes
+        );
+        let maxabs = one
+            .kv
+            .k
+            .iter()
+            .chain(one.kv.v.iter())
+            .fold(0f32, |a, x| a.max(x.abs()));
+        // int8: error <= scale/2, scale <= global maxabs / 127
+        let bound = maxabs * 0.5 / 127.0 + 1e-6;
+        match st.get(&key(1)) {
+            Some(Fetched::Dense(d)) => {
+                assert_eq!(d.tokens, one.tokens, "tokens are lossless");
+                let worst = d
+                    .kv
+                    .k
+                    .iter()
+                    .zip(&one.kv.k)
+                    .chain(d.kv.v.iter().zip(&one.kv.v))
+                    .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+                assert!(
+                    worst <= bound,
+                    "dequantized error {worst} exceeds bound {bound}"
+                );
+            }
+            _ => panic!("expected restored dense"),
+        }
+        st.assert_invariants();
+    }
+
+    #[test]
+    fn master_reelection_rehomes_spilled_mirrors() {
+        let sp = spec();
+        let master = dense(&sp, 64, 1.0);
+        let mb = dense_bytes(&master);
+        let mut probe = CacheStore::new(&sp, 1 << 22);
+        probe.put_dense(key(1), master.clone()).unwrap();
+        let m2 = mirror_of(&sp, &mut probe, key(1), 2.0);
+        let m3 = mirror_of(&sp, &mut probe, key(1), 3.0);
+        let mm = mirror_bytes(&m2);
+
+        let mut st = tier_store(
+            &sp,
+            mb + 2 * mm + 64,
+            1 << 20,
+            false,
+            "reelect",
+        );
+        st.put_dense(key(1), master.clone()).unwrap();
+        st.put_mirror(key(2), m2).unwrap();
+        st.put_mirror(key(3), m3).unwrap();
+        // pressure spills exactly the unhinted mirror key3 cold
+        st.note_round(1);
+        st.hint_next_use(&key(1), 1);
+        st.hint_next_use(&key(2), 1);
+        st.put_dense(key(4), dense(&sp, 16, 4.0)).unwrap();
+        assert!(st.is_spilled(&key(3)), "cold mirror precondition");
+        // replacing the master re-elects: the cold mirror must re-home
+        // (self-contained) before the old payload disappears
+        st.put_dense(key(1), dense(&sp, 64, 9.0)).unwrap();
+        let c = st.counters();
+        assert!(c.rehomed_mirrors >= 1, "cold mirror re-homed");
+        assert_eq!(c.promotions, 1, "hot mirror promoted to master");
+        assert_eq!(c.cold_dead_drops, 0);
+        // the re-homed mirror reads back as the exact old master + salt
+        let mut expected = master.kv.clone();
+        let o = expected.off(0, 17);
+        expected.k[o] += 3.0;
+        match st.get(&key(3)) {
+            Some(Fetched::Dense(d)) => {
+                assert_eq!(d.kv, expected, "re-homed payload bitwise")
+            }
+            _ => panic!("expected self-contained re-homed entry"),
+        }
+        st.assert_invariants();
+    }
+
+    #[test]
+    fn prefetch_restores_and_hits_are_counted() {
+        let sp = spec();
+        let one = dense(&sp, 16, 1.0);
+        let eb = dense_bytes(&one);
+        let mut st =
+            tier_store(&sp, eb + 64, 1 << 20, false, "prefetch");
+        st.put_dense(key(1), one).unwrap();
+        st.put_dense(key(2), dense(&sp, 16, 2.0)).unwrap();
+        assert!(st.is_spilled(&key(1)));
+        st.prefetch(&[key(1)]);
+        assert!(st.contains(&key(1)), "prefetch restored the key");
+        let c = st.counters();
+        assert_eq!(c.prefetch_restores, 1);
+        assert!(st.get(&key(1)).is_some());
+        let c = st.counters();
+        assert_eq!(c.prefetch_hits, 1);
+        assert_eq!(c.stall_restores, 0);
+
+        // a prefetch never displaces entries hinted for the current
+        // rounds: it fails gracefully and the payload stays cold
+        st.note_round(5);
+        st.hint_next_use(&key(1), 5);
+        st.prefetch(&[key(2)]);
+        assert!(st.contains(&key(1)), "hinted entry held hot");
+        assert!(st.is_spilled(&key(2)), "payload re-spilled, not lost");
+        assert_eq!(st.counters().evicted_to_nothing, 0);
+        st.assert_invariants();
+    }
+
+    #[test]
+    fn priority_eviction_prefers_unhinted() {
+        let sp = spec();
+        let one = dense(&sp, 16, 1.0);
+        let eb = dense_bytes(&one);
+        let mut st =
+            tier_store(&sp, 3 * eb + 64, 1 << 20, false, "prio");
+        st.put_dense(key(1), dense(&sp, 16, 1.0)).unwrap();
+        st.put_dense(key(2), dense(&sp, 16, 2.0)).unwrap();
+        st.put_dense(key(3), dense(&sp, 16, 3.0)).unwrap();
+        st.note_round(2);
+        st.hint_next_use(&key(1), 2);
+        st.put_dense(key(4), dense(&sp, 16, 4.0)).unwrap();
+        // LRU would evict key1; the hint overrides recency, so the
+        // oldest *unhinted* entry spills instead
+        assert!(st.contains(&key(1)), "hinted entry survives");
+        assert!(st.is_spilled(&key(2)), "oldest unhinted entry spilled");
+        assert!(st.contains(&key(3)) && st.contains(&key(4)));
         st.assert_invariants();
     }
 }

@@ -1,0 +1,1152 @@
+//! Cold storage tier behind [`CacheStore`](super::CacheStore): disk
+//! spill, payload quantization, and steps-to-next-use metadata (the
+//! MT-APC-style hierarchy; ROADMAP "tiered storage" item).
+//!
+//! Under hot-capacity pressure the store no longer drops entries — it
+//! *spills* them here. Mirrors keep their block-sparse
+//! [`AlignedDiff`](super::AlignedDiff) form (already 11–17x smaller than
+//! dense), and dense payloads are optionally quantized — int8 or Q4 with
+//! one f32 scale per (layer, token-block) per plane — before
+//! serialization. Every cold entry is one little-endian flat file
+//! (`spill-<seq>.tdm`, magic `TDM1`) under the configured spill
+//! directory; f32 values travel as raw bit patterns, so an unquantized
+//! spill → restore round trip is **bitwise**, and
+//! `EngineBuilder::quantize(false)` is the equivalence baseline (same
+//! discipline as `gather_plan` / `collective_encode`).
+//!
+//! The tier records, per cold entry, the round scheduler's *next-use
+//! hint* (which round will read the key next). Cold eviction — the only
+//! lossy step in the hierarchy — removes the entry with the largest
+//! steps-to-next-use (unhinted or stale = infinity), the same
+//! KVFlow-style priority the hot tier uses under pressure, with ties
+//! broken toward the oldest spill sequence number so the choice is
+//! deterministic regardless of hash-map iteration order. Evicting a cold
+//! master dead-drops its cold mirrors (their diffs have no base left);
+//! both losses are counted, never silent.
+
+use std::collections::{BTreeSet, HashMap};
+use std::fs;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::diff::{wire, AlignedDiff};
+use super::{DenseEntry, MirrorEntry, Role, StoreCounters, StoreKey};
+use crate::runtime::KvBuf;
+
+/// Quantization format for spilled dense payloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantFormat {
+    /// 8-bit symmetric: scale = maxabs/127 per (layer, block) per plane.
+    Int8,
+    /// 4-bit symmetric, two values per byte: scale = maxabs/7.
+    Q4,
+}
+
+impl QuantFormat {
+    fn qmax(self) -> f32 {
+        match self {
+            QuantFormat::Int8 => 127.0,
+            QuantFormat::Q4 => 7.0,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            QuantFormat::Int8 => "int8",
+            QuantFormat::Q4 => "q4",
+        }
+    }
+}
+
+impl std::str::FromStr for QuantFormat {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "int8" => QuantFormat::Int8,
+            "q4" => QuantFormat::Q4,
+            other => bail!("unknown quant format {other:?} (int8 | q4)"),
+        })
+    }
+}
+
+/// Cold-tier configuration (`CacheStore::configure_tier`, fed from
+/// `EngineBuilder::cold_tier` / `spill_dir` / `quantize` / `quant_format`).
+#[derive(Clone, Debug)]
+pub struct TierConfig {
+    /// Serialized-byte capacity of the cold tier.
+    pub cold_bytes: usize,
+    /// Directory the spill files live in (created on configure; files and
+    /// the directory are removed on drop — but only when empty, never
+    /// recursively, since the path is user-supplied).
+    pub spill_dir: PathBuf,
+    /// Quantize dense payloads on spill. `false` keeps spills exact and
+    /// is the bitwise-equivalence baseline.
+    pub quantize: bool,
+    pub format: QuantFormat,
+}
+
+// ---------------------------------------------------------------------
+// quantization
+// ---------------------------------------------------------------------
+
+/// A dense entry quantized per (layer, token-block): one f32 scale per
+/// block per plane, values one byte each (int8) or two per byte (Q4).
+/// The packed value stream is in `KvBuf` element order, so quantize and
+/// dequantize walk the planes identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedDense {
+    pub format: QuantFormat,
+    pub layers: usize,
+    pub len: usize,
+    pub d: usize,
+    pub block_tokens: usize,
+    pub tokens: Vec<u32>,
+    pub positions: Vec<i32>,
+    /// Per (layer, block) K-plane scales, layer-major.
+    pub k_scales: Vec<f32>,
+    pub v_scales: Vec<f32>,
+    pub k_q: Vec<u8>,
+    pub v_q: Vec<u8>,
+}
+
+fn quantize_plane(
+    xs: &[f32],
+    layers: usize,
+    len: usize,
+    d: usize,
+    block_tokens: usize,
+    format: QuantFormat,
+) -> (Vec<f32>, Vec<u8>) {
+    let nb = len.div_ceil(block_tokens).max(1);
+    let qmax = format.qmax();
+    let mut scales = Vec::with_capacity(layers * nb);
+    let mut qi: Vec<i8> = Vec::with_capacity(xs.len());
+    for l in 0..layers {
+        for b in 0..nb {
+            let lo = (l * len + b * block_tokens) * d;
+            let hi = (l * len + len.min((b + 1) * block_tokens)) * d;
+            let maxabs = xs[lo..hi]
+                .iter()
+                .fold(0.0f32, |m, x| m.max(x.abs()));
+            // an all-zero block quantizes through a unit scale (0/1 = 0)
+            let scale = if maxabs == 0.0 { 1.0 } else { maxabs / qmax };
+            scales.push(scale);
+            for &x in &xs[lo..hi] {
+                qi.push((x / scale).round().clamp(-qmax, qmax) as i8);
+            }
+        }
+    }
+    let packed = match format {
+        QuantFormat::Int8 => qi.iter().map(|&v| v as u8).collect(),
+        QuantFormat::Q4 => {
+            // nibble-pack pairs over the whole plane stream (values are in
+            // [-7, 7]; stored biased by +8 so a nibble is never sign-lossy)
+            let mut out = Vec::with_capacity(qi.len().div_ceil(2));
+            for pair in qi.chunks(2) {
+                let lo = (pair[0] + 8) as u8 & 0x0f;
+                let hi = if pair.len() == 2 {
+                    ((pair[1] + 8) as u8 & 0x0f) << 4
+                } else {
+                    0
+                };
+                out.push(lo | hi);
+            }
+            out
+        }
+    };
+    (scales, packed)
+}
+
+fn dequantize_plane(
+    packed: &[u8],
+    scales: &[f32],
+    layers: usize,
+    len: usize,
+    d: usize,
+    block_tokens: usize,
+    format: QuantFormat,
+) -> Vec<f32> {
+    let nb = len.div_ceil(block_tokens).max(1);
+    let mut out = Vec::with_capacity(layers * len * d);
+    let unpack = |i: usize| -> i8 {
+        match format {
+            QuantFormat::Int8 => packed[i] as i8,
+            QuantFormat::Q4 => {
+                let byte = packed[i / 2];
+                let nib = if i % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+                nib as i8 - 8
+            }
+        }
+    };
+    let mut i = 0usize;
+    for l in 0..layers {
+        for s in 0..len {
+            let scale = scales[l * nb + s / block_tokens];
+            for _ in 0..d {
+                out.push(unpack(i) as f32 * scale);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+impl QuantizedDense {
+    /// Quantize a dense entry per (layer, token-block). Per-element error
+    /// of the round trip is bounded by `scale / 2` (scale = block
+    /// maxabs / qmax).
+    pub fn quantize(
+        e: &DenseEntry,
+        block_tokens: usize,
+        format: QuantFormat,
+    ) -> Self {
+        let kv = &e.kv;
+        let (layers, len, d) = (kv.layers, kv.seq, kv.d);
+        let (k_scales, k_q) =
+            quantize_plane(&kv.k, layers, len, d, block_tokens, format);
+        let (v_scales, v_q) =
+            quantize_plane(&kv.v, layers, len, d, block_tokens, format);
+        QuantizedDense {
+            format,
+            layers,
+            len,
+            d,
+            block_tokens,
+            tokens: e.tokens.clone(),
+            positions: e.positions.clone(),
+            k_scales,
+            v_scales,
+            k_q,
+            v_q,
+        }
+    }
+
+    /// Reconstruct the dense entry (lossy: per-element error <= scale/2).
+    pub fn dequantize(&self) -> DenseEntry {
+        let mut kv = KvBuf::zeroed(self.layers, self.len, self.d);
+        kv.k = dequantize_plane(
+            &self.k_q,
+            &self.k_scales,
+            self.layers,
+            self.len,
+            self.d,
+            self.block_tokens,
+            self.format,
+        );
+        kv.v = dequantize_plane(
+            &self.v_q,
+            &self.v_scales,
+            self.layers,
+            self.len,
+            self.d,
+            self.block_tokens,
+            self.format,
+        );
+        DenseEntry {
+            tokens: self.tokens.clone(),
+            positions: self.positions.clone(),
+            kv,
+        }
+    }
+
+    /// Bytes of the reconstructed dense form — the hot-tier cost a
+    /// restore pays (the store's accounting unit for dense entries).
+    pub fn dense_bytes(&self) -> usize {
+        2 * self.layers * self.len * self.d * 4 + self.tokens.len() * 8
+    }
+
+    /// In-memory bytes of the quantized form itself.
+    pub fn bytes(&self) -> usize {
+        self.k_q.len()
+            + self.v_q.len()
+            + (self.k_scales.len() + self.v_scales.len()) * 4
+            + self.tokens.len() * 4
+            + self.positions.len() * 4
+    }
+}
+
+// ---------------------------------------------------------------------
+// spill payloads + on-disk codec
+// ---------------------------------------------------------------------
+
+/// One payload spilled to the cold tier.
+#[derive(Clone, Debug)]
+pub enum SpillPayload {
+    /// Exact dense entry (the `quantize(false)` path — bitwise round
+    /// trip).
+    Dense(DenseEntry),
+    /// Block-sparse mirror (always exact; restoring it needs its master
+    /// resident dense, so the restore path re-heats masters first).
+    Mirror(MirrorEntry),
+    /// Quantized dense entry (lossy; dequantized on restore).
+    Quantized(QuantizedDense),
+}
+
+impl SpillPayload {
+    pub fn kind(&self) -> ColdKind {
+        match self {
+            SpillPayload::Dense(_) => ColdKind::Dense,
+            SpillPayload::Mirror(_) => ColdKind::Mirror,
+            SpillPayload::Quantized(_) => ColdKind::Quantized,
+        }
+    }
+
+    /// Master key a mirror payload depends on (None for dense forms).
+    pub fn master(&self) -> Option<StoreKey> {
+        match self {
+            SpillPayload::Mirror(m) => Some(m.master),
+            _ => None,
+        }
+    }
+}
+
+const MAGIC: &[u8; 4] = b"TDM1";
+
+fn put_key(out: &mut Vec<u8>, key: &StoreKey) {
+    wire::put_u64(out, key.content);
+    match key.role {
+        Role::Segment => {
+            wire::put_u8(out, 0);
+            wire::put_u64(out, 0);
+        }
+        Role::AgentCache { agent } => {
+            wire::put_u8(out, 1);
+            wire::put_u64(out, agent as u64);
+        }
+    }
+}
+
+fn read_key(r: &mut wire::Reader) -> Result<StoreKey> {
+    let content = r.u64()?;
+    let tag = r.u8()?;
+    let agent = r.u64()? as usize;
+    let role = match tag {
+        0 => Role::Segment,
+        1 => Role::AgentCache { agent },
+        other => bail!("unknown role tag {other} in spill payload"),
+    };
+    Ok(StoreKey { content, role })
+}
+
+fn put_dense_payload(out: &mut Vec<u8>, e: &DenseEntry) {
+    wire::put_u32s(out, &e.tokens);
+    wire::put_i32s(out, &e.positions);
+    wire::put_u64(out, e.kv.layers as u64);
+    wire::put_u64(out, e.kv.seq as u64);
+    wire::put_u64(out, e.kv.d as u64);
+    wire::put_f32s(out, &e.kv.k);
+    wire::put_f32s(out, &e.kv.v);
+}
+
+fn read_dense_payload(r: &mut wire::Reader) -> Result<DenseEntry> {
+    let tokens = r.u32s()?;
+    let positions = r.i32s()?;
+    let layers = r.u64()? as usize;
+    let seq = r.u64()? as usize;
+    let d = r.u64()? as usize;
+    let k = r.f32s()?;
+    let v = r.f32s()?;
+    if k.len() != layers * seq * d || v.len() != k.len() {
+        bail!("dense spill plane size mismatch");
+    }
+    let mut kv = KvBuf::zeroed(layers, seq, d);
+    kv.k = k;
+    kv.v = v;
+    Ok(DenseEntry { tokens, positions, kv })
+}
+
+/// Serialize `(key, payload)` into one flat spill-file image.
+pub fn encode_payload(key: &StoreKey, p: &SpillPayload) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    wire::put_u8(
+        &mut out,
+        match p {
+            SpillPayload::Dense(_) => 0,
+            SpillPayload::Mirror(_) => 1,
+            SpillPayload::Quantized(_) => 2,
+        },
+    );
+    put_key(&mut out, key);
+    match p {
+        SpillPayload::Dense(e) => put_dense_payload(&mut out, e),
+        SpillPayload::Mirror(m) => {
+            put_key(&mut out, &m.master);
+            wire::put_u32s(&mut out, &m.tokens);
+            wire::put_i32s(&mut out, &m.positions);
+            m.diff.write_le(&mut out);
+        }
+        SpillPayload::Quantized(q) => {
+            wire::put_u8(
+                &mut out,
+                match q.format {
+                    QuantFormat::Int8 => 0,
+                    QuantFormat::Q4 => 1,
+                },
+            );
+            wire::put_u64(&mut out, q.layers as u64);
+            wire::put_u64(&mut out, q.len as u64);
+            wire::put_u64(&mut out, q.d as u64);
+            wire::put_u64(&mut out, q.block_tokens as u64);
+            wire::put_u32s(&mut out, &q.tokens);
+            wire::put_i32s(&mut out, &q.positions);
+            wire::put_f32s(&mut out, &q.k_scales);
+            wire::put_f32s(&mut out, &q.v_scales);
+            wire::put_bytes(&mut out, &q.k_q);
+            wire::put_bytes(&mut out, &q.v_q);
+        }
+    }
+    out
+}
+
+/// Decode one spill-file image back to `(key, payload)`.
+pub fn decode_payload(buf: &[u8]) -> Result<(StoreKey, SpillPayload)> {
+    let mut r = wire::Reader::new(buf);
+    if r.raw(4)? != MAGIC {
+        bail!("bad spill magic (expected TDM1)");
+    }
+    let kind = r.u8()?;
+    let key = read_key(&mut r)?;
+    let payload = match kind {
+        0 => SpillPayload::Dense(read_dense_payload(&mut r)?),
+        1 => {
+            let master = read_key(&mut r)?;
+            let tokens = r.u32s()?;
+            let positions = r.i32s()?;
+            let diff = AlignedDiff::read_le(&mut r)?;
+            SpillPayload::Mirror(MirrorEntry {
+                master,
+                tokens,
+                positions,
+                diff,
+            })
+        }
+        2 => {
+            let format = match r.u8()? {
+                0 => QuantFormat::Int8,
+                1 => QuantFormat::Q4,
+                other => bail!("unknown quant format tag {other}"),
+            };
+            let layers = r.u64()? as usize;
+            let len = r.u64()? as usize;
+            let d = r.u64()? as usize;
+            let block_tokens = r.u64()? as usize;
+            let tokens = r.u32s()?;
+            let positions = r.i32s()?;
+            let k_scales = r.f32s()?;
+            let v_scales = r.f32s()?;
+            let k_q = r.bytes()?;
+            let v_q = r.bytes()?;
+            let elems = layers * len * d;
+            let expect = match format {
+                QuantFormat::Int8 => elems,
+                QuantFormat::Q4 => elems.div_ceil(2),
+            };
+            if k_q.len() != expect || v_q.len() != expect {
+                bail!("quantized spill plane size mismatch");
+            }
+            SpillPayload::Quantized(QuantizedDense {
+                format,
+                layers,
+                len,
+                d,
+                block_tokens,
+                tokens,
+                positions,
+                k_scales,
+                v_scales,
+                k_q,
+                v_q,
+            })
+        }
+        other => bail!("unknown spill kind {other}"),
+    };
+    Ok((key, payload))
+}
+
+// ---------------------------------------------------------------------
+// the cold tier itself
+// ---------------------------------------------------------------------
+
+/// What class of payload a cold entry holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColdKind {
+    Dense,
+    Mirror,
+    Quantized,
+}
+
+/// Ledger record of one cold entry (the payload itself lives on disk).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct ColdMeta {
+    /// Serialized file length — the cold tier's ledger unit.
+    pub bytes: usize,
+    pub kind: ColdKind,
+    /// Master key a cold mirror depends on (must stay hot-dense or cold
+    /// non-mirror, or the mirror is dead).
+    pub master: Option<StoreKey>,
+    /// Scheduler hint: the round expected to read this key next.
+    pub next_use: Option<u64>,
+    /// Spill sequence number — file name + deterministic eviction ties.
+    pub seq: u64,
+}
+
+/// The cold tier: an on-disk spill area with an exact in-memory ledger.
+/// All policy (what to spill, when to restore) lives in `CacheStore`;
+/// this type owns serialization, files, the cold byte ledger, and cold
+/// eviction.
+pub struct ColdTier {
+    cfg: TierConfig,
+    entries: HashMap<StoreKey, ColdMeta>,
+    /// Cold mirrors per master key (the master itself may be hot or
+    /// cold).
+    by_master: HashMap<StoreKey, BTreeSet<StoreKey>>,
+    bytes: usize,
+    next_seq: u64,
+}
+
+impl ColdTier {
+    pub(super) fn new(cfg: TierConfig) -> Result<Self> {
+        fs::create_dir_all(&cfg.spill_dir).with_context(|| {
+            format!("creating spill dir {}", cfg.spill_dir.display())
+        })?;
+        Ok(ColdTier {
+            cfg,
+            entries: HashMap::new(),
+            by_master: HashMap::new(),
+            bytes: 0,
+            next_seq: 0,
+        })
+    }
+
+    fn path(&self, seq: u64) -> PathBuf {
+        self.cfg.spill_dir.join(format!("spill-{seq}.tdm"))
+    }
+
+    pub(super) fn quantize_dense(&self) -> bool {
+        self.cfg.quantize
+    }
+
+    pub(super) fn format(&self) -> QuantFormat {
+        self.cfg.format
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.cfg.cold_bytes
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: &StoreKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub(super) fn meta(&self, key: &StoreKey) -> Option<&ColdMeta> {
+        self.entries.get(key)
+    }
+
+    pub(super) fn iter_meta(
+        &self,
+    ) -> impl Iterator<Item = (&StoreKey, &ColdMeta)> {
+        self.entries.iter()
+    }
+
+    /// Cold mirrors referencing `master`, sorted (BTreeSet order).
+    pub(super) fn mirrors_of(&self, master: &StoreKey) -> Vec<StoreKey> {
+        self.by_master
+            .get(master)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    pub(super) fn hint_next_use(&mut self, key: &StoreKey, round: u64) {
+        if let Some(m) = self.entries.get_mut(key) {
+            m.next_use = Some(round);
+        }
+    }
+
+    fn detach_edge(&mut self, key: &StoreKey, master: Option<StoreKey>) {
+        if let Some(mk) = master {
+            if let Some(set) = self.by_master.get_mut(&mk) {
+                set.remove(key);
+                if set.is_empty() {
+                    self.by_master.remove(&mk);
+                }
+            }
+        }
+    }
+
+    /// Remove one cold entry (meta + file). Returns whether it existed.
+    pub(super) fn remove(&mut self, key: &StoreKey) -> bool {
+        let Some(meta) = self.entries.remove(key) else {
+            return false;
+        };
+        self.bytes -= meta.bytes;
+        self.detach_edge(key, meta.master);
+        let _ = fs::remove_file(self.path(meta.seq));
+        true
+    }
+
+    /// Dead-drop every cold mirror of `master` (its restore chain broke).
+    pub(super) fn drop_mirrors_of(
+        &mut self,
+        master: &StoreKey,
+        counters: &mut StoreCounters,
+    ) {
+        for mk in self.mirrors_of(master) {
+            if self.remove(&mk) {
+                counters.cold_dead_drops += 1;
+            }
+        }
+    }
+
+    /// Steps-to-next-use at `clock` (unhinted or stale hints rank as "no
+    /// known upcoming use" — first to go).
+    fn steps(meta: &ColdMeta, clock: u64) -> u64 {
+        match meta.next_use {
+            Some(n) if n >= clock => n - clock,
+            _ => u64::MAX,
+        }
+    }
+
+    /// Evict cold entries until `need` more serialized bytes fit: victim
+    /// = max steps-to-next-use, tie broken toward the oldest spill seq (a
+    /// total order, deterministic regardless of map iteration). Evicting
+    /// a cold master dead-drops its cold mirrors. `protect` (the master a
+    /// mirror being inserted depends on) is never chosen.
+    fn evict_cold(
+        &mut self,
+        need: usize,
+        protect: Option<StoreKey>,
+        clock: u64,
+        counters: &mut StoreCounters,
+    ) {
+        while self.bytes + need > self.cfg.cold_bytes
+            && !self.entries.is_empty()
+        {
+            let mut best: Option<(u64, u64, StoreKey)> = None;
+            for (k, m) in &self.entries {
+                if Some(*k) == protect {
+                    continue;
+                }
+                let s = Self::steps(m, clock);
+                let better = match best {
+                    None => true,
+                    Some((bs, bseq, _)) => {
+                        s > bs || (s == bs && m.seq < bseq)
+                    }
+                };
+                if better {
+                    best = Some((s, m.seq, *k));
+                }
+            }
+            let Some((_, _, victim)) = best else { break };
+            // a cold master's mirrors die with it: their diffs lost the
+            // base they apply to
+            if self
+                .entries
+                .get(&victim)
+                .is_some_and(|m| m.kind != ColdKind::Mirror)
+            {
+                self.drop_mirrors_of(&victim, counters);
+            }
+            self.remove(&victim);
+            counters.cold_evictions += 1;
+        }
+    }
+
+    /// Spill one payload, replacing any stale entry at `key`. Fails when
+    /// the serialized payload cannot fit cold capacity even after
+    /// eviction, or the file write fails — the caller counts the loss
+    /// (`evicted_to_nothing`).
+    pub(super) fn insert(
+        &mut self,
+        key: StoreKey,
+        payload: &SpillPayload,
+        next_use: Option<u64>,
+        clock: u64,
+        counters: &mut StoreCounters,
+    ) -> Result<()> {
+        let buf = encode_payload(&key, payload);
+        if buf.len() > self.cfg.cold_bytes {
+            bail!(
+                "spill payload of {} B exceeds cold capacity {} B",
+                buf.len(),
+                self.cfg.cold_bytes
+            );
+        }
+        if self.contains(&key) {
+            self.remove(&key);
+        }
+        self.evict_cold(buf.len(), payload.master(), clock, counters);
+        if self.bytes + buf.len() > self.cfg.cold_bytes {
+            bail!(
+                "spill payload of {} B cannot fit beside its protected \
+                 master within cold capacity {} B",
+                buf.len(),
+                self.cfg.cold_bytes
+            );
+        }
+        let seq = self.next_seq;
+        let path = self.path(seq);
+        fs::write(&path, &buf).with_context(|| {
+            format!("writing spill file {}", path.display())
+        })?;
+        self.next_seq += 1;
+        let meta = ColdMeta {
+            bytes: buf.len(),
+            kind: payload.kind(),
+            master: payload.master(),
+            next_use,
+            seq,
+        };
+        if let Some(mk) = meta.master {
+            self.by_master.entry(mk).or_default().insert(key);
+        }
+        self.bytes += meta.bytes;
+        self.entries.insert(key, meta);
+        Ok(())
+    }
+
+    /// Take one payload out (meta and file are removed either way).
+    /// `None` when absent; `Some(Err)` when the file could not be read or
+    /// decoded.
+    pub(super) fn take(
+        &mut self,
+        key: &StoreKey,
+    ) -> Option<Result<SpillPayload>> {
+        let meta = *self.entries.get(key)?;
+        self.entries.remove(key);
+        self.bytes -= meta.bytes;
+        self.detach_edge(key, meta.master);
+        let path = self.path(meta.seq);
+        let res = (|| -> Result<SpillPayload> {
+            let buf = fs::read(&path).with_context(|| {
+                format!("reading spill file {}", path.display())
+            })?;
+            let (k, p) = decode_payload(&buf)?;
+            if k != *key {
+                bail!(
+                    "spill file {} holds {k:?}, expected {key:?}",
+                    path.display()
+                );
+            }
+            Ok(p)
+        })();
+        let _ = fs::remove_file(&path);
+        Some(res)
+    }
+
+    /// Panic unless the cold ledger is exact: bytes equal the sum of meta
+    /// sizes and stay within capacity, every entry's spill file exists,
+    /// and the master reverse index matches the metas both ways.
+    pub(super) fn assert_invariants(&self) {
+        let mut sum = 0usize;
+        for (k, m) in &self.entries {
+            sum += m.bytes;
+            assert!(
+                self.path(m.seq).exists(),
+                "missing spill file for cold entry {k:?}"
+            );
+            match m.master {
+                Some(mk) => {
+                    assert_eq!(m.kind, ColdKind::Mirror);
+                    assert!(
+                        self.by_master
+                            .get(&mk)
+                            .is_some_and(|s| s.contains(k)),
+                        "cold mirror {k:?} missing from reverse index"
+                    );
+                }
+                None => assert_ne!(m.kind, ColdKind::Mirror),
+            }
+        }
+        assert_eq!(self.bytes, sum, "cold byte ledger out of balance");
+        assert!(
+            self.bytes <= self.cfg.cold_bytes,
+            "cold tier over capacity: {} > {}",
+            self.bytes,
+            self.cfg.cold_bytes
+        );
+        for (mk, set) in &self.by_master {
+            assert!(!set.is_empty(), "empty cold reverse-index {mk:?}");
+            for s in set {
+                assert!(
+                    self.entries
+                        .get(s)
+                        .is_some_and(|m| m.master == Some(*mk)),
+                    "stale cold reverse-index edge {mk:?} -> {s:?}"
+                );
+            }
+        }
+    }
+}
+
+impl Drop for ColdTier {
+    fn drop(&mut self) {
+        for m in self.entries.values() {
+            let _ = fs::remove_file(self.path(m.seq));
+        }
+        // only removed when empty — never recursive on a user path
+        let _ = fs::remove_dir(&self.cfg.spill_dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::diff::diff_blocks;
+    use super::super::identity_aligned;
+    use super::*;
+    use crate::model::ModelSpec;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            vocab: 512,
+            max_seq: 64,
+            block_tokens: 16,
+            check_layer: 1,
+            rope_theta: 10000.0,
+        }
+    }
+
+    fn dense(spec: &ModelSpec, len: usize, fill: f32) -> DenseEntry {
+        let mut kv = KvBuf::zeroed(spec.n_layers, len, spec.d_model);
+        for (i, x) in kv.k.iter_mut().enumerate() {
+            *x = fill + (i % 13) as f32 * 0.37;
+        }
+        for (i, x) in kv.v.iter_mut().enumerate() {
+            *x = -fill - (i % 7) as f32 * 0.11;
+        }
+        DenseEntry {
+            tokens: (0..len as u32).map(|i| 4 + i + fill as u32).collect(),
+            positions: (0..len as i32).collect(),
+            kv,
+        }
+    }
+
+    fn key(c: u64) -> StoreKey {
+        StoreKey { content: c, role: Role::Segment }
+    }
+
+    fn akey(c: u64, agent: usize) -> StoreKey {
+        StoreKey { content: c, role: Role::AgentCache { agent } }
+    }
+
+    fn tier(name: &str, cold: usize) -> ColdTier {
+        let dir = std::env::temp_dir().join(format!(
+            "td-tier-unit-{}-{name}",
+            std::process::id()
+        ));
+        ColdTier::new(TierConfig {
+            cold_bytes: cold,
+            spill_dir: dir,
+            quantize: false,
+            format: QuantFormat::Int8,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn dense_payload_codec_round_trips_bitwise() {
+        let sp = spec();
+        let e = dense(&sp, 33, 2.5);
+        let buf =
+            encode_payload(&akey(7, 3), &SpillPayload::Dense(e.clone()));
+        let (k, p) = decode_payload(&buf).unwrap();
+        assert_eq!(k, akey(7, 3));
+        match p {
+            SpillPayload::Dense(d) => {
+                assert_eq!(d.tokens, e.tokens);
+                assert_eq!(d.positions, e.positions);
+                assert_eq!(d.kv, e.kv, "f32 planes must round trip bitwise");
+            }
+            _ => panic!("wrong payload kind"),
+        }
+    }
+
+    #[test]
+    fn mirror_payload_codec_round_trips_bitwise() {
+        let sp = spec();
+        let master = dense(&sp, 64, 1.0);
+        let mut mk = master.kv.clone();
+        let o = mk.off(0, 17);
+        mk.k[o] += 2.0;
+        let d = diff_blocks(&master.kv, &mk, 64, sp.block_tokens);
+        let m = MirrorEntry {
+            master: akey(1, 0),
+            tokens: master.tokens.clone(),
+            positions: (0..64).collect(),
+            diff: identity_aligned(d, 4, 64),
+        };
+        let buf =
+            encode_payload(&akey(2, 1), &SpillPayload::Mirror(m.clone()));
+        let (k, p) = decode_payload(&buf).unwrap();
+        assert_eq!(k, akey(2, 1));
+        match p {
+            SpillPayload::Mirror(got) => {
+                assert_eq!(got.master, m.master);
+                assert_eq!(got.tokens, m.tokens);
+                assert_eq!(got.positions, m.positions);
+                assert_eq!(got.diff, m.diff);
+            }
+            _ => panic!("wrong payload kind"),
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_rejected_not_panicking() {
+        let sp = spec();
+        let e = dense(&sp, 16, 1.0);
+        let buf = encode_payload(&key(1), &SpillPayload::Dense(e));
+        assert!(decode_payload(&buf[..buf.len() / 2]).is_err());
+        assert!(decode_payload(&buf[..3]).is_err());
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(decode_payload(&bad).is_err());
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bounded_by_half_scale() {
+        let sp = spec();
+        let e = dense(&sp, 40, 3.0);
+        for format in [QuantFormat::Int8, QuantFormat::Q4] {
+            let q = QuantizedDense::quantize(&e, sp.block_tokens, format);
+            let back = q.dequantize();
+            assert_eq!(back.tokens, e.tokens);
+            let nb = 40usize.div_ceil(sp.block_tokens);
+            for (plane, scales, orig) in [
+                (&back.kv.k, &q.k_scales, &e.kv.k),
+                (&back.kv.v, &q.v_scales, &e.kv.v),
+            ] {
+                for (i, (got, want)) in
+                    plane.iter().zip(orig.iter()).enumerate()
+                {
+                    let s = i / sp.d_model % 40;
+                    let l = i / (sp.d_model * 40);
+                    let scale = scales[l * nb + s / sp.block_tokens];
+                    assert!(
+                        (got - want).abs() <= 0.5 * scale + 1e-6,
+                        "{format:?} elem {i}: |{got} - {want}| > {}",
+                        0.5 * scale
+                    );
+                }
+            }
+            // codec round trip of the quantized form is bitwise
+            let buf = encode_payload(
+                &key(9),
+                &SpillPayload::Quantized(q.clone()),
+            );
+            let (_, p) = decode_payload(&buf).unwrap();
+            match p {
+                SpillPayload::Quantized(got) => assert_eq!(got, q),
+                _ => panic!("wrong payload kind"),
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_zero_block_uses_unit_scale() {
+        let sp = spec();
+        let mut e = dense(&sp, 32, 1.0);
+        // zero out block 1 of layer 0's K plane rows
+        for s in 16..32 {
+            let o = e.kv.off(0, s);
+            e.kv.k[o..o + sp.d_model].fill(0.0);
+        }
+        let q = QuantizedDense::quantize(&e, sp.block_tokens, QuantFormat::Int8);
+        assert_eq!(q.k_scales[1], 1.0);
+        let back = q.dequantize();
+        for s in 16..32 {
+            let o = back.kv.off(0, s);
+            assert!(back.kv.k[o..o + sp.d_model].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn q4_is_at_least_3x_smaller_than_dense_on_the_wire() {
+        let sp = spec();
+        let e = dense(&sp, 64, 2.0);
+        let dense_len = encode_payload(
+            &key(1),
+            &SpillPayload::Dense(e.clone()),
+        )
+        .len();
+        let q4_len = encode_payload(
+            &key(1),
+            &SpillPayload::Quantized(QuantizedDense::quantize(
+                &e,
+                sp.block_tokens,
+                QuantFormat::Q4,
+            )),
+        )
+        .len();
+        assert!(
+            q4_len * 3 < dense_len,
+            "q4 {q4_len} B vs dense {dense_len} B"
+        );
+    }
+
+    #[test]
+    fn cold_tier_insert_take_and_ledger() {
+        let sp = spec();
+        let mut t = tier("insert-take", 1 << 20);
+        let mut c = StoreCounters::default();
+        let e = dense(&sp, 32, 1.0);
+        t.insert(key(1), &SpillPayload::Dense(e.clone()), Some(2), 1, &mut c)
+            .unwrap();
+        assert!(t.contains(&key(1)));
+        assert!(t.bytes() > 0);
+        t.assert_invariants();
+        let p = t.take(&key(1)).unwrap().unwrap();
+        match p {
+            SpillPayload::Dense(d) => assert_eq!(d.kv, e.kv),
+            _ => panic!("wrong payload"),
+        }
+        assert_eq!(t.bytes(), 0);
+        assert!(t.take(&key(1)).is_none());
+        t.assert_invariants();
+    }
+
+    #[test]
+    fn cold_eviction_prefers_unhinted_then_oldest_seq() {
+        let sp = spec();
+        let one = encode_payload(
+            &key(0),
+            &SpillPayload::Dense(dense(&sp, 16, 0.0)),
+        )
+        .len();
+        let mut t = tier("evict-order", one * 3 + 8);
+        let mut c = StoreCounters::default();
+        let d = |f: f32| SpillPayload::Dense(dense(&sp, 16, f));
+        // key 1 hinted for the next round, keys 2 and 3 unhinted
+        t.insert(key(1), &d(1.0), Some(5), 4, &mut c).unwrap();
+        t.insert(key(2), &d(2.0), None, 4, &mut c).unwrap();
+        t.insert(key(3), &d(3.0), None, 4, &mut c).unwrap();
+        // a fourth insert must evict: both 2 and 3 are "never used again"
+        // (steps = MAX); the tie breaks to the older spill seq — key 2
+        t.insert(key(4), &d(4.0), None, 4, &mut c).unwrap();
+        assert!(t.contains(&key(1)), "hinted entry survives");
+        assert!(!t.contains(&key(2)), "oldest unhinted entry evicted");
+        assert!(t.contains(&key(3)) && t.contains(&key(4)));
+        assert_eq!(c.cold_evictions, 1);
+        // stale hints rank like unhinted: clock has moved past key 1
+        t.insert(key(5), &d(5.0), Some(7), 6, &mut c).unwrap();
+        assert!(!t.contains(&key(1)), "stale hint is LRU fodder");
+        t.assert_invariants();
+    }
+
+    #[test]
+    fn cold_evicting_a_master_dead_drops_its_cold_mirrors() {
+        let sp = spec();
+        let master = dense(&sp, 64, 1.0);
+        let mut mk = master.kv.clone();
+        let o = mk.off(0, 17);
+        mk.k[o] += 2.0;
+        let diff = diff_blocks(&master.kv, &mk, 64, sp.block_tokens);
+        let m = MirrorEntry {
+            master: akey(1, 0),
+            tokens: master.tokens.clone(),
+            positions: (0..64).collect(),
+            diff: identity_aligned(diff, 4, 64),
+        };
+        let master_len = encode_payload(
+            &akey(1, 0),
+            &SpillPayload::Dense(master.clone()),
+        )
+        .len();
+        let mirror_len =
+            encode_payload(&akey(2, 1), &SpillPayload::Mirror(m.clone()))
+                .len();
+        let mut t = tier("dead-drop", master_len + mirror_len + 8);
+        let mut c = StoreCounters::default();
+        t.insert(akey(1, 0), &SpillPayload::Dense(master), None, 0, &mut c)
+            .unwrap();
+        t.insert(akey(2, 1), &SpillPayload::Mirror(m), None, 0, &mut c)
+            .unwrap();
+        t.assert_invariants();
+        // the next insert evicts the master (oldest seq) -> mirror dies too
+        t.insert(
+            key(9),
+            &SpillPayload::Dense(dense(&sp, 64, 9.0)),
+            None,
+            0,
+            &mut c,
+        )
+        .unwrap();
+        assert!(!t.contains(&akey(1, 0)));
+        assert!(!t.contains(&akey(2, 1)), "orphan cold mirror dead-dropped");
+        assert_eq!(c.cold_dead_drops, 1);
+        assert!(c.cold_evictions >= 1);
+        t.assert_invariants();
+    }
+
+    #[test]
+    fn oversize_cold_insert_rejected() {
+        let sp = spec();
+        let mut t = tier("oversize", 64);
+        let mut c = StoreCounters::default();
+        let err = t.insert(
+            key(1),
+            &SpillPayload::Dense(dense(&sp, 64, 1.0)),
+            None,
+            0,
+            &mut c,
+        );
+        assert!(err.is_err());
+        assert_eq!(t.bytes(), 0);
+        t.assert_invariants();
+    }
+
+    #[test]
+    fn drop_removes_spill_files() {
+        let sp = spec();
+        let dir = std::env::temp_dir().join(format!(
+            "td-tier-unit-{}-dropclean",
+            std::process::id()
+        ));
+        {
+            let mut t = ColdTier::new(TierConfig {
+                cold_bytes: 1 << 20,
+                spill_dir: dir.clone(),
+                quantize: false,
+                format: QuantFormat::Int8,
+            })
+            .unwrap();
+            let mut c = StoreCounters::default();
+            t.insert(
+                key(1),
+                &SpillPayload::Dense(dense(&sp, 16, 1.0)),
+                None,
+                0,
+                &mut c,
+            )
+            .unwrap();
+            assert!(dir.exists());
+        }
+        assert!(!dir.exists(), "drop removes files and the empty dir");
+    }
+
+    #[test]
+    fn quant_format_parses() {
+        assert_eq!("int8".parse::<QuantFormat>().unwrap(), QuantFormat::Int8);
+        assert_eq!("Q4".parse::<QuantFormat>().unwrap(), QuantFormat::Q4);
+        assert!("fp8".parse::<QuantFormat>().is_err());
+    }
+}

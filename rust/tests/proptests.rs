@@ -17,7 +17,7 @@ use tokendance::store::{diff_blocks, diff_blocks_tol,
                         diff_blocks_tol_masked, gather_permuted_master,
                         identity_aligned, match_blocks_by_content,
                         CacheStore, DenseEntry, Fetched, MirrorEntry,
-                        Role, StoreKey};
+                        QuantFormat, Role, StoreKey, TierConfig};
 use tokendance::tokenizer::{encode, split_segments, BlockKind,
                             RoundAwarePrompt, TTSEP_ID};
 use tokendance::util::rng::Rng;
@@ -712,6 +712,152 @@ fn prop_store_churn_preserves_invariants() {
             // dangling master refs, capacity honored
             st.assert_invariants();
         }
+    });
+}
+
+#[test]
+fn prop_tiered_store_churn_preserves_invariants() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+    forall(30, |rng| {
+        let sp = spec();
+        let bt = sp.block_tokens;
+        let case = CASE.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "td-prop-tier-{}-{case}",
+            std::process::id()
+        ));
+        let mk_key = |i: usize| StoreKey {
+            content: i as u64,
+            role: if i % 2 == 0 {
+                Role::Segment
+            } else {
+                Role::AgentCache { agent: i }
+            },
+        };
+        let mk_dense = |len: usize, salt: u32| {
+            let mut kv = KvBuf::zeroed(sp.n_layers, len, sp.d_model);
+            for (i, x) in kv.k.iter_mut().enumerate() {
+                *x = ((i as u32) ^ salt) as f32 / 100.0;
+            }
+            DenseEntry {
+                tokens: (0..len as u32)
+                    .map(|i| 4 + ((i ^ salt) % 200))
+                    .collect(),
+                positions: (0..len as i32).collect(),
+                kv,
+            }
+        };
+        // hot capacity around ~2 dense entries: every insert spills, so
+        // restores, cold evictions, and re-elections over cold mirrors
+        // all fire; a sometimes-tiny cold tier exercises cold rejection
+        // (evicted-to-nothing) and cold LRU eviction too
+        let probe = mk_dense(48, 0);
+        let eb = probe.kv.bytes() + 48 * 8;
+        let cap = eb * 2 + rng.below(4096);
+        let cold_cap = eb * rng.range(1, 8);
+        let mut st = CacheStore::new(&sp, cap);
+        st.configure_tier(TierConfig {
+            cold_bytes: cold_cap,
+            spill_dir: dir.clone(),
+            quantize: rng.below(2) == 0,
+            format: if rng.below(2) == 0 {
+                QuantFormat::Int8
+            } else {
+                QuantFormat::Q4
+            },
+        })
+        .unwrap();
+        let nk = 12;
+        let mut round = 0u64;
+        st.note_round(round);
+        for _ in 0..rng.range(30, 80) {
+            let i = rng.below(nk);
+            let k = mk_key(i);
+            match rng.below(6) {
+                0 | 1 => {
+                    // re-puts over master keys force re-election while
+                    // their mirrors may sit spilled in the cold tier
+                    let len = 16 * rng.range(1, 5); // 16..64
+                    let _ = st.put_dense(
+                        k,
+                        mk_dense(len, rng.below(1 << 20) as u32),
+                    );
+                }
+                2 => {
+                    let mkey = mk_key(rng.below(nk));
+                    let master = match st.get(&mkey) {
+                        Some(Fetched::Dense(d)) => {
+                            Some((d.tokens.clone(), d.kv.clone()))
+                        }
+                        _ => None,
+                    };
+                    if let Some((toks, mkv)) = master {
+                        if k != mkey {
+                            let len = toks.len();
+                            let mut kv2 = mkv.clone();
+                            let o = kv2.off(0, rng.below(len));
+                            kv2.k[o] += 7.0;
+                            let d = diff_blocks(&mkv, &kv2, len, bt);
+                            let d = identity_aligned(
+                                d, len.div_ceil(bt), len,
+                            );
+                            let _ = st.put_mirror(
+                                k,
+                                MirrorEntry {
+                                    master: mkey,
+                                    tokens: toks,
+                                    positions: (0..len as i32).collect(),
+                                    diff: d,
+                                },
+                            );
+                        }
+                    }
+                }
+                3 => {
+                    // scheduler feed: hint a next use, sometimes tick
+                    // the round clock forward
+                    st.hint_next_use(
+                        &k,
+                        round + 1 + rng.below(3) as u64,
+                    );
+                    if rng.below(2) == 0 {
+                        round += 1;
+                        st.note_round(round);
+                    }
+                }
+                4 => {
+                    // round-aware prefetch over a random key subset
+                    let keys: Vec<StoreKey> = (0..nk)
+                        .filter(|_| rng.below(3) == 0)
+                        .map(mk_key)
+                        .collect();
+                    st.prefetch(&keys);
+                }
+                _ => {
+                    // a hot-resident key always hits; a spilled key may
+                    // legally miss (restore that cannot fit re-spills)
+                    let resident = st.contains(&k);
+                    match st.get(&k) {
+                        Some(Fetched::Mirror(h)) => {
+                            assert_eq!(
+                                h.master.kv.seq,
+                                h.master.tokens.len()
+                            );
+                        }
+                        Some(Fetched::Dense(_)) => {}
+                        None => assert!(!resident, "resident key missed"),
+                    }
+                }
+            }
+            // hot + cold ledgers exact, both capacities honored, the
+            // tiers disjoint, every cold mirror's master chain intact
+            st.assert_invariants();
+            assert!(st.bytes() <= cap, "hot over budget");
+            assert!(st.cold_bytes() <= cold_cap, "cold over budget");
+        }
+        drop(st);
+        let _ = std::fs::remove_dir_all(&dir);
     });
 }
 
