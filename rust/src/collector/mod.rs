@@ -75,6 +75,7 @@ impl Default for CollectorConfig {
 /// active-length bucket ("same active prompt length" in the paper; slot
 /// maps are disjoint by construction since each task owns its buffer).
 /// Groups are capped at the largest ropediff bucket.
+// tdlint: allow(panic_path) -- indices enumerate 0..tasks.len()
 pub fn group_compatible(
     rt: &dyn ModelRuntime,
     tasks: &[ReuseTask],
@@ -117,6 +118,7 @@ pub fn group_compatible(
 }
 
 /// Run collective (or serial) reuse over one round's tasks.
+// tdlint: allow(panic_path) -- group indices enumerate 0..tasks.len()
 pub fn run_reuse(
     rt: &dyn ModelRuntime,
     model: &str,
@@ -190,8 +192,15 @@ pub fn run_reuse(
         }
     }
 
-    let results: Vec<ReuseResult> =
-        results.into_iter().map(Option::unwrap).collect();
+    let results: Vec<ReuseResult> = results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| {
+            r.ok_or_else(|| {
+                anyhow::anyhow!("reuse task {i} produced no result")
+            })
+        })
+        .collect::<Result<_>>()?;
     let plan = ReusePlan::elect(
         results.iter().map(|r| r.id).collect(),
         results.iter().map(|r| r.deviation).collect(),
@@ -222,12 +231,13 @@ pub fn selective_chunked(
         chunks.push(vec![last]);
     }
     // ensure the final chunk carries the last position
-    if !chunks.last().unwrap().contains(&last) {
-        let lc = chunks.last_mut().unwrap();
-        if lc.len() == max_r {
-            chunks.push(vec![last]);
-        } else {
-            lc.push(last);
+    if let Some(lc) = chunks.last_mut() {
+        if !lc.contains(&last) {
+            if lc.len() == max_r {
+                chunks.push(vec![last]);
+            } else {
+                lc.push(last);
+            }
         }
     }
     for chunk in &chunks {

@@ -135,6 +135,7 @@ impl Engine {
     /// The returned [`BlockProvenance`] records, per block, which store
     /// entry rows were copied verbatim — round-end encoding uses it to
     /// skip provably-clean blocks without scanning them.
+    // tdlint: allow(panic_path) -- spec geometry; admission caps at max_seq
     pub(super) fn assemble_round(
         &mut self,
         batch: &[&Pending],

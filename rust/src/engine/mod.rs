@@ -474,6 +474,7 @@ impl Engine {
     fn evict_retained(&mut self, deficit: usize) {
         let mut owners: Vec<(usize, usize)> = self
             .agents
+            // tdlint: allow(hash_iter) -- collected and sort_unstable'd
             .iter()
             .filter_map(|(a, st)| st.gpu.as_ref().map(|_| (st.last_round, *a)))
             .collect();

@@ -96,6 +96,7 @@ impl Engine {
     // vLLM: GPU-retained prefix sharing
     // -----------------------------------------------------------------
 
+    // tdlint: allow(panic_path) -- indices bounded by p.tokens.len()
     fn vllm_prefix_path(&mut self, p: Pending) -> Result<Running> {
         let bt = self.spec.block_tokens;
         let total = p.tokens.len() + p.req.max_new_tokens;
@@ -237,13 +238,15 @@ impl Engine {
     ) -> Result<(KvBuf, Vec<f32>, usize)> {
         let model = self.cfg.model.clone();
         let len = p.tokens.len();
-        if prefix_len == 0 || prefix_kv.is_none() {
-            let out = self.rt.prefill(&model, &p.tokens, len)?;
-            let mut kv = self.scratch.checkout();
-            kv.copy_rows_from(&out.kv, 0, 0, len.min(out.kv.seq));
-            return Ok((kv, out.logits, 0));
-        }
-        let kv = prefix_kv.unwrap();
+        let kv = match prefix_kv {
+            Some(kv) if prefix_len > 0 => kv,
+            _ => {
+                let out = self.rt.prefill(&model, &p.tokens, len)?;
+                let mut kv = self.scratch.checkout();
+                kv.copy_rows_from(&out.kv, 0, 0, len.min(out.kv.seq));
+                return Ok((kv, out.logits, 0));
+            }
+        };
         let mut padded = p.tokens.clone();
         padded.resize(self.spec.max_seq, 0);
         let sel: Vec<i32> = (prefix_len..len).map(|i| i as i32).collect();
@@ -268,6 +271,7 @@ impl Engine {
     /// below). Cohort scope is the admitted batch: when pool pressure
     /// splits a round's admission, each sub-batch is clustered (and
     /// mastered) independently, exactly like the gather plan before it.
+    // tdlint: allow(panic_path) -- slots indexed by in-batch positions
     fn pic_path(&mut self, batch: Vec<Pending>, partition: CohortPartition)
         -> Result<Vec<Running>>
     {
@@ -369,7 +373,10 @@ impl Engine {
             let mut idxs = Vec::new();
             let mut tasks = Vec::new();
             for &m in members {
-                let (task, reused, prov) = assembled[m].take().unwrap();
+                let (task, reused, prov) =
+                    assembled[m].take().ok_or_else(|| {
+                        anyhow::anyhow!("cohort member {m} assembled twice")
+                    })?;
                 reused_tokens[m] = reused;
                 if reused == 0 {
                     // nothing reused: the composite never reaches the
@@ -442,7 +449,10 @@ impl Engine {
 
         let mut running = Vec::new();
         for (i, p) in batch.into_iter().enumerate() {
-            let (kv, logits, deviation) = outputs[i].take().unwrap();
+            let (kv, logits, deviation) =
+                outputs[i].take().ok_or_else(|| {
+                    anyhow::anyhow!("prefill produced no output for slot {i}")
+                })?;
             let total = p.tokens.len() + p.req.max_new_tokens;
             let mut table = self.pool.allocate(total)?;
             table.len = p.tokens.len();
@@ -488,6 +498,7 @@ impl Engine {
     /// round; this one is retained as its numerical-equivalence baseline
     /// and the bench's "before" arm (`EngineConfig::gather_plan = false`).
     /// Both paths record identical [`BlockProvenance`].
+    // tdlint: allow(panic_path) -- spec geometry; admission caps at max_seq
     pub(super) fn assemble_composite(&mut self, p: &Pending)
         -> Result<(ReuseTask, usize, BlockProvenance)>
     {
@@ -707,6 +718,7 @@ impl Engine {
     // finalization + round-end Master-Mirror encoding
     // -----------------------------------------------------------------
 
+    // tdlint: allow(panic_path) -- r.table.len positions were allocated
     pub(super) fn finalize_one(&mut self, mut r: Running) -> Result<()> {
         let now = Instant::now();
         if let Some(t) = self.metrics.request_mut(r.id) {
@@ -906,6 +918,7 @@ impl Engine {
                 {
                     let mut keys: Vec<crate::store::StoreKey> = self
                         .agents
+                        // tdlint: allow(hash_iter) -- sorted and deduped
                         .values()
                         .filter_map(|s| s.store_key)
                         .collect();
@@ -925,6 +938,7 @@ impl Engine {
     /// (or should not) mirror a staged cache: store it dense under its
     /// salted per-round key, updating the agent's retention pointer only
     /// on success (a rejected oversize cache keeps the previous pointer).
+    // tdlint: allow(panic_path) -- rows bounded by the staged valid_len
     fn retain_dense(
         &mut self,
         salt: u64,
@@ -986,6 +1000,7 @@ impl Engine {
     /// the source positions differ from the slots, RoPE-recovered into
     /// the mirror frame. One of these serves *every* mirror sharing the
     /// signature on the collective path.
+    // tdlint: allow(panic_path) -- signature slots validated at alignment
     fn build_expected(
         &mut self,
         master_padded: &KvBuf,
@@ -1042,6 +1057,7 @@ impl Engine {
     /// `collective_encode(false)` as the equivalence baseline and
     /// `bench_encode_round`'s "before" arm; both paths emit bitwise-
     /// identical `AlignedDiff`s.
+    // tdlint: allow(panic_path) -- staged caches share one spec geometry
     fn encode_cohort(
         &mut self,
         round: usize,
@@ -1259,6 +1275,9 @@ impl Engine {
                 self.scratch.checkin(e.kv, e.dirty_rows);
             }
         }
+        // returned scratch buffers are interchangeable: pool order never
+        // reaches outputs or counters
+        // tdlint: allow(hash_iter) -- order-free scratch checkin
         for (_, e) in memo.drain() {
             self.scratch.checkin(e.kv, e.dirty_rows);
         }

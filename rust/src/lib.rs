@@ -33,6 +33,14 @@
 //! | [`metrics`] | latency/usage recorders and table emitters |
 //! | [`experiments`] | one driver per paper figure (2, 3, 10–14) + pressure/topology sweeps |
 //! | [`util`] | offline-environment stand-ins: PRNG, JSON, stats, CLI |
+//! | `xtask` (workspace) | `tdlint` static analysis: hash-iteration determinism lints, Arc-readiness ratchet (`xtask/arc_readiness.toml`), hot-path panic audit — `cargo run -p xtask -- lint` |
+//!
+//! ## Clippy policy
+//!
+//! CI denies `clippy::correctness` and `clippy::suspicious` across the
+//! workspace (blocking); style/perf/complexity run advisory. Targeted
+//! `#![allow]`s for the blocking set belong here, each with a comment
+//! saying why the lint is a false positive — there are currently none.
 
 pub mod collector;
 pub mod engine;

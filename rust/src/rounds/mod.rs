@@ -299,6 +299,7 @@ pub fn detect_pattern(
     }
     let mut seen_pairs: std::collections::HashSet<(usize, usize)> =
         std::collections::HashSet::new();
+    // tdlint: allow(hash_iter) -- union-find merge, order cannot leak
     for members in by_hash.values() {
         for (ai, &a) in members.iter().enumerate() {
             for &b in &members[ai + 1..] {
@@ -333,6 +334,7 @@ pub fn detect_pattern(
         groups.entry(r).or_default().push(i);
     }
     let mut cohorts: Vec<Cohort> = groups
+        // tdlint: allow(hash_iter) -- cohorts.sort_by_key canonicalizes
         .into_values()
         .map(|members| {
             // the cohort's shared set: hashes present in >= 2 members
@@ -345,6 +347,7 @@ pub fn detect_pattern(
             // c >= 2 can only arise from two distinct members (each
             // member contributes each hash once, via its deduped set)
             let mut shared_hashes: Vec<u64> = count
+                // tdlint: allow(hash_iter) -- sort_unstable'd below
                 .into_iter()
                 .filter(|&(_, c)| c >= 2)
                 .map(|(h, _)| h)

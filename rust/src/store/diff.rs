@@ -39,6 +39,7 @@ impl BlockSparseDiff {
 
     /// Apply only the V-plane corrections (the fused path restores K
     /// through the kernel and V through the host transfer).
+    // tdlint: allow(panic_path) -- block ids validated at diff construction
     pub fn apply_v_to(&self, kv: &mut KvBuf) {
         let bt = self.block_tokens;
         let be = bt * self.d;
@@ -55,6 +56,7 @@ impl BlockSparseDiff {
 
     /// Apply the diff onto a dense buffer (the host-side half of dense
     /// restore; the fused path does this on the fly inside the transfer).
+    // tdlint: allow(panic_path) -- block ids validated at diff construction
     pub fn apply_to(&self, kv: &mut KvBuf) {
         let bt = self.block_tokens;
         let be = bt * self.d;
@@ -145,6 +147,7 @@ pub fn diff_blocks_tol(
 /// (callers must only mask blocks that are provably within tolerance; a
 /// wrong mask silently drops a correction, which the golden-run encode
 /// digests would catch).
+// tdlint: allow(panic_path) -- both buffers share one [L, S, d] geometry
 pub fn diff_blocks_tol_masked(
     master: &KvBuf,
     mirror: &KvBuf,
@@ -213,6 +216,7 @@ pub fn diff_blocks_tol_masked(
 /// Extract the given token-blocks of a buffer into a BlockSparseDiff
 /// (values verbatim). Used to re-express correction values in a different
 /// position frame than the one the block ids were detected in.
+// tdlint: allow(panic_path) -- block ids come from a diff over src
 pub fn extract_blocks(
     src: &KvBuf,
     block_ids: &[i32],
@@ -299,6 +303,7 @@ pub fn diff_blocks(
 /// mirror block the id of a master block with identical tokens (first
 /// match), or -1. `block_tokens`-sized chunks; partial tail blocks only
 /// match partial tails of equal length.
+// tdlint: allow(panic_path) -- chunk offsets bounded by chunks_exact
 pub fn match_blocks_by_content(
     master_tokens: &[u32],
     mirror_tokens: &[u32],
@@ -330,6 +335,7 @@ pub fn match_blocks_by_content(
 /// collide when different donors contain identical 16-token chunks, e.g.
 /// repetitive greedy outputs, whose context-dependent V values differ).
 /// Segments must start block-aligned (the workload pads blocks).
+// tdlint: allow(panic_path) -- segment spans checked block-aligned
 pub fn match_blocks_by_segments(
     master_segs: &[crate::rounds::Segment],
     mirror_segs: &[crate::rounds::Segment],
@@ -393,6 +399,7 @@ pub fn gather_permuted_master(
 /// whose `seq` is the padded length — the encode path passes recycled
 /// scratch buffers here instead of allocating two fresh [L, S, d] planes
 /// per expectation. Returns the per-slot source positions.
+// tdlint: allow(panic_path) -- caller sizes the buffer to padded seq
 pub fn gather_permuted_master_into(
     master: &KvBuf,
     master_positions: &[i32],
@@ -485,6 +492,7 @@ pub(crate) mod wire {
         }
 
         /// Take `n` raw bytes.
+        // tdlint: allow(panic_path) -- slice guarded by the bounds check above
         pub fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
             if n > self.buf.len() - self.pos {
                 bail!(
@@ -499,10 +507,12 @@ pub(crate) mod wire {
             Ok(s)
         }
 
+        // tdlint: allow(panic_path) -- raw(1) returned exactly one byte
         pub fn u8(&mut self) -> Result<u8> {
             Ok(self.raw(1)?[0])
         }
 
+        // tdlint: allow(panic_path) -- raw(8) is 8 bytes, try_into cannot fail
         pub fn u64(&mut self) -> Result<u64> {
             Ok(u64::from_le_bytes(self.raw(8)?.try_into().unwrap()))
         }
@@ -518,6 +528,7 @@ pub(crate) mod wire {
             Ok(n)
         }
 
+        // tdlint: allow(panic_path) -- chunks_exact(4) yields 4-byte slices
         pub fn u32s(&mut self) -> Result<Vec<u32>> {
             let n = self.len()?;
             Ok(self
@@ -527,6 +538,7 @@ pub(crate) mod wire {
                 .collect())
         }
 
+        // tdlint: allow(panic_path) -- chunks_exact(4) yields 4-byte slices
         pub fn i32s(&mut self) -> Result<Vec<i32>> {
             let n = self.len()?;
             Ok(self
@@ -536,6 +548,7 @@ pub(crate) mod wire {
                 .collect())
         }
 
+        // tdlint: allow(panic_path) -- chunks_exact(4) yields 4-byte slices
         pub fn f32s(&mut self) -> Result<Vec<f32>> {
             let n = self.len()?;
             Ok(self

@@ -1263,6 +1263,7 @@ impl CacheStore {
         min_similarity: f64,
     ) -> Option<(StoreKey, f64)> {
         let mut best: Option<(StoreKey, f64)> = None;
+        // tdlint: allow(hash_iter) -- key tie-break gives a total order
         for (k, r) in &self.entries {
             let Entry::Dense(d) = &r.entry else { continue };
             if !k.role.same_class(role) {
@@ -1291,6 +1292,7 @@ impl CacheStore {
 
     pub fn stats(&self) -> StoreStats {
         let mut st = StoreStats::default();
+        // tdlint: allow(hash_iter) -- commutative sums into counters
         for (k, r) in &self.entries {
             match &r.entry {
                 Entry::Dense(d) => {
@@ -1334,6 +1336,7 @@ impl CacheStore {
     /// Mirror, and every resident Mirror's Master is resident and dense.
     /// Cheap enough for tests and debug builds (O(n)); called after every
     /// mutation in debug builds.
+    // tdlint: allow(hash_iter) -- read-only assertions, no output or state
     pub fn assert_invariants(&self) {
         // byte ledger
         let mut sum = 0usize;

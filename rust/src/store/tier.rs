@@ -111,6 +111,7 @@ pub struct QuantizedDense {
     pub v_q: Vec<u8>,
 }
 
+// tdlint: allow(panic_path) -- plane is layers*len*d by construction
 fn quantize_plane(
     xs: &[f32],
     layers: usize,
@@ -159,6 +160,7 @@ fn quantize_plane(
     (scales, packed)
 }
 
+// tdlint: allow(panic_path) -- packed/scales sized by the quantizer
 fn dequantize_plane(
     packed: &[u8],
     scales: &[f32],
@@ -557,6 +559,7 @@ impl ColdTier {
         self.entries.get(key)
     }
 
+    // tdlint: allow(hash_iter) -- callers are stats sums and assertions
     pub(super) fn iter_meta(
         &self,
     ) -> impl Iterator<Item = (&StoreKey, &ColdMeta)> {
@@ -637,6 +640,7 @@ impl ColdTier {
             && !self.entries.is_empty()
         {
             let mut best: Option<(u64, u64, StoreKey)> = None;
+            // tdlint: allow(hash_iter) -- seq tie-break gives a total order
             for (k, m) in &self.entries {
                 if Some(*k) == protect {
                     continue;
@@ -752,6 +756,7 @@ impl ColdTier {
     /// Panic unless the cold ledger is exact: bytes equal the sum of meta
     /// sizes and stay within capacity, every entry's spill file exists,
     /// and the master reverse index matches the metas both ways.
+    // tdlint: allow(hash_iter) -- read-only assertions, no output or state
     pub(super) fn assert_invariants(&self) {
         let mut sum = 0usize;
         for (k, m) in &self.entries {
@@ -796,6 +801,7 @@ impl ColdTier {
 
 impl Drop for ColdTier {
     fn drop(&mut self) {
+        // tdlint: allow(hash_iter) -- file removal, any order works
         for m in self.entries.values() {
             let _ = fs::remove_file(self.path(m.seq));
         }

@@ -1,0 +1,5 @@
+//! Fixture: seeded panic-path violations in a hot-path file.
+
+pub fn hot(xs: &[u32]) -> u32 {
+    xs[0] + xs.last().copied().unwrap()
+}

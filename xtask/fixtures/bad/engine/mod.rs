@@ -1,0 +1,17 @@
+//! Fixture: seeded violations — an unannotated hash iteration in a
+//! digest-affecting module, and an `Rc` count above the ceiling.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+pub struct Engine {
+    pub agents: HashMap<u64, u32>,
+    pub runtime: Rc<u32>,
+    pub spare: Rc<u32>,
+}
+
+impl Engine {
+    pub fn order_leak(&self) -> Vec<u32> {
+        self.agents.values().copied().collect()
+    }
+}

@@ -1,0 +1,13 @@
+//! Fixture: an un-allowlisted `RefCell` plus a malformed directive
+//! (missing the mandatory `-- <reason>` tail).
+
+use std::cell::RefCell;
+
+pub struct Store {
+    pub counter: RefCell<u32>,
+}
+
+// tdlint: allow(hash_iter)
+pub fn touch(s: &Store) {
+    *s.counter.borrow_mut() += 1;
+}

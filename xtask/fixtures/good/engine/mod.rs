@@ -1,0 +1,18 @@
+//! Fixture: a digest-affecting module that lints clean — the hash
+//! iteration is order-insensitive and annotated, the `Rc` count sits
+//! exactly at the committed ceiling.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+pub struct Engine {
+    pub agents: HashMap<u64, u32>,
+    pub runtime: Rc<u32>,
+}
+
+impl Engine {
+    pub fn total(&self) -> u32 {
+        // tdlint: allow(hash_iter) -- commutative sum into one counter
+        self.agents.values().sum()
+    }
+}

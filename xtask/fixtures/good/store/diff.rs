@@ -1,0 +1,12 @@
+//! Fixture: hot-path file whose one panic site carries its invariant,
+//! plus a directive that suppresses nothing (reported as unused).
+
+// tdlint: allow(panic_path) -- caller guarantees xs is non-empty
+pub fn first(xs: &[u32]) -> u32 {
+    xs[0]
+}
+
+// tdlint: allow(hash_iter) -- deliberately unused fixture directive
+pub fn safe_first(xs: &[u32]) -> u32 {
+    xs.first().copied().unwrap_or(0)
+}

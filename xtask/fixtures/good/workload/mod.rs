@@ -1,0 +1,10 @@
+//! Fixture: out-of-scope directory — hash iteration, unwraps and Rc
+//! here must not produce findings in any rule family.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+pub fn shape(m: &HashMap<u64, u32>) -> usize {
+    let handle = Rc::new(m.keys().count());
+    handle.checked_add(1).unwrap()
+}

@@ -1,0 +1,140 @@
+//! In-source allow directives.
+//!
+//! Syntax, on its own comment line or trailing a statement:
+//!
+//! ```text
+//! // tdlint: allow(hash_iter) -- summed into totals, order-insensitive
+//! // tdlint: allow(panic_path, hash_iter) -- <reason>
+//! ```
+//!
+//! The `-- <reason>` part is mandatory: an allow without a recorded
+//! justification is itself a lint error. Scope (resolved in
+//! [`crate::scan::SourceFile::resolve_allow`]): the directive's own
+//! line, the line directly below it, or — when placed in the signature
+//! /doc region of a `fn` (between two lines above the item and the
+//! opening brace) — the whole function body.
+
+/// One parsed directive.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allow {
+    /// 1-indexed source line the directive sits on.
+    pub line: usize,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+/// All directives of one file, plus malformed ones (line, raw text).
+#[derive(Clone, Debug, Default)]
+pub struct AllowSet {
+    pub allows: Vec<Allow>,
+    pub malformed: Vec<(usize, String)>,
+}
+
+const MARKER: &str = "tdlint:";
+
+/// Parse every `tdlint:` directive in `src`. Lines without the marker
+/// are ignored; lines with it must parse fully or are recorded as
+/// malformed.
+pub fn parse_allows(src: &str) -> AllowSet {
+    let mut set = AllowSet::default();
+    for (i, raw) in src.lines().enumerate() {
+        let line = i + 1;
+        let Some(pos) = raw.find(MARKER) else { continue };
+        // only honor the marker inside a `//` comment on the same line
+        let Some(slash) = raw.find("//") else {
+            set.malformed.push((line, raw.trim().to_string()));
+            continue;
+        };
+        if slash > pos {
+            set.malformed.push((line, raw.trim().to_string()));
+            continue;
+        }
+        match parse_one(raw[pos + MARKER.len()..].trim()) {
+            Some((rules, reason)) => {
+                set.allows.push(Allow { line, rules, reason });
+            }
+            None => set.malformed.push((line, raw.trim().to_string())),
+        }
+    }
+    set
+}
+
+/// Parse `allow(<rule>[, <rule>]) -- <reason>`; `None` on any deviation.
+fn parse_one(body: &str) -> Option<(Vec<String>, String)> {
+    let rest = body.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .collect();
+    if rules.is_empty() || rules.iter().any(|r| r.is_empty()) {
+        return None;
+    }
+    let tail = rest[close + 1..].trim();
+    let reason = tail.strip_prefix("--")?.trim();
+    if reason.is_empty() {
+        return None;
+    }
+    Some((rules, reason.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_rule_with_reason() {
+        let set = parse_allows(
+            "let x = 1;\n// tdlint: allow(hash_iter) -- sums, order-free\n",
+        );
+        assert!(set.malformed.is_empty());
+        assert_eq!(
+            set.allows,
+            vec![Allow {
+                line: 2,
+                rules: vec!["hash_iter".into()],
+                reason: "sums, order-free".into(),
+            }]
+        );
+    }
+
+    #[test]
+    fn parses_rule_list_and_trailing_position() {
+        let set = parse_allows(
+            "foo(); // tdlint: allow(panic_path, hash_iter) -- guarded\n",
+        );
+        assert_eq!(set.allows.len(), 1);
+        assert_eq!(set.allows[0].line, 1);
+        assert_eq!(set.allows[0].rules, vec!["panic_path", "hash_iter"]);
+        assert_eq!(set.allows[0].reason, "guarded");
+    }
+
+    #[test]
+    fn missing_reason_is_malformed() {
+        let set = parse_allows("// tdlint: allow(hash_iter)\n");
+        assert!(set.allows.is_empty());
+        assert_eq!(set.malformed.len(), 1);
+        assert_eq!(set.malformed[0].0, 1);
+    }
+
+    #[test]
+    fn unknown_shapes_are_malformed() {
+        for bad in [
+            "// tdlint: alow(hash_iter) -- typo",
+            "// tdlint: allow() -- empty",
+            "// tdlint: allow(a,) -- dangling comma",
+            "// tdlint: allow(a) -- ",
+            "let tdlint: u32 = 0; // not a comment marker",
+        ] {
+            let set = parse_allows(bad);
+            assert!(set.allows.is_empty(), "{bad}");
+            assert_eq!(set.malformed.len(), 1, "{bad}");
+        }
+    }
+
+    #[test]
+    fn lines_without_marker_are_ignored() {
+        let set = parse_allows("// plain comment\nlet x = 1;\n");
+        assert!(set.allows.is_empty() && set.malformed.is_empty());
+    }
+}

@@ -1,0 +1,332 @@
+//! `hash_iter`: no `HashMap`/`HashSet` iteration in digest-affecting
+//! modules.
+//!
+//! The golden-run pin (`rust/tests/golden_runs.rs`) digests outputs
+//! *and logical counters*; any hash-order-dependent iteration in the
+//! engine, store, rounds, collector or metrics modules can flip it —
+//! and ROADMAP item 1 requires cohort ordering to stay deterministic
+//! under parallel merge. `BTreeMap`/sorted-vec is the required idiom;
+//! a site that is provably order-insensitive (sums, per-key updates,
+//! scans with a total-order tie-break) carries
+//! `// tdlint: allow(hash_iter) -- <why order cannot leak>`.
+//!
+//! Detection is name-based, not type-checked: an identifier counts as
+//! hash-typed when a binding, field, or parameter with that name in
+//! the same *module group* (top-level directory, so `engine/mod.rs`
+//! fields are visible to `engine/prefill.rs` impl blocks) mentions
+//! `HashMap`/`HashSet` in its type or initializer. That over-approximates
+//! across same-named bindings — annotate or rename on collision.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use quote::ToTokens;
+use syn::spanned::Spanned;
+
+use crate::scan::{is_cfg_test, is_test_fn, SourceFile};
+
+pub const RULE: &str = "hash_iter";
+
+const DIRS: [&str; 5] =
+    ["engine/", "store/", "rounds/", "collector/", "metrics/"];
+
+const METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+fn in_scope(f: &SourceFile) -> bool {
+    !f.is_test_file() && DIRS.iter().any(|d| f.rel.starts_with(d))
+}
+
+/// Top-level directory a file's hash-typed names are shared across.
+fn group(rel: &str) -> &str {
+    rel.split('/').next().unwrap_or(rel)
+}
+
+/// Collect hash-typed identifier names per module group.
+pub fn collect_names(
+    files: &[SourceFile],
+) -> BTreeMap<String, BTreeSet<String>> {
+    let mut out: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for f in files.iter().filter(|f| in_scope(f)) {
+        let mut v = Names::default();
+        syn::visit::Visit::visit_file(&mut v, &f.ast);
+        out.entry(group(&f.rel).to_string()).or_default().extend(v.0);
+    }
+    out
+}
+
+/// Emit findings for one file as (rule, line, what, context).
+pub fn check(
+    f: &SourceFile,
+    names: &BTreeMap<String, BTreeSet<String>>,
+    out: &mut Vec<(&'static str, usize, String, String)>,
+) {
+    if !in_scope(f) {
+        return;
+    }
+    let empty = BTreeSet::new();
+    let names = names.get(group(&f.rel)).unwrap_or(&empty);
+    let mut v = Iters { names, f, out };
+    syn::visit::Visit::visit_file(&mut v, &f.ast);
+}
+
+fn mentions_word(hay: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(i) = hay[from..].find(word) {
+        let start = from + i;
+        let end = start + word.len();
+        let pre = hay[..start].chars().next_back();
+        let post = hay[end..].chars().next();
+        let is_ident =
+            |c: Option<char>| c.is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if !is_ident(pre) && !is_ident(post) {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn mentions_hash(tokens: &str) -> bool {
+    mentions_word(tokens, "HashMap") || mentions_word(tokens, "HashSet")
+}
+
+fn ty_mentions_hash(ty: &syn::Type) -> bool {
+    mentions_hash(&ty.to_token_stream().to_string())
+}
+
+fn expr_mentions_hash(e: &syn::Expr) -> bool {
+    mentions_hash(&e.to_token_stream().to_string())
+}
+
+/// Pass 1: names bound with a hash type or hash-constructing init.
+#[derive(Default)]
+struct Names(BTreeSet<String>);
+
+impl<'ast> syn::visit::Visit<'ast> for Names {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if !is_cfg_test(&node.attrs) {
+            syn::visit::visit_item_mod(self, node);
+        }
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if !is_test_fn(&node.attrs) {
+            syn::visit::visit_item_fn(self, node);
+        }
+    }
+
+    fn visit_field(&mut self, node: &'ast syn::Field) {
+        if let Some(id) = &node.ident {
+            if ty_mentions_hash(&node.ty) {
+                self.0.insert(id.to_string());
+            }
+        }
+        syn::visit::visit_field(self, node);
+    }
+
+    fn visit_pat_type(&mut self, node: &'ast syn::PatType) {
+        if ty_mentions_hash(&node.ty) {
+            if let syn::Pat::Ident(pi) = &*node.pat {
+                self.0.insert(pi.ident.to_string());
+            }
+        }
+        syn::visit::visit_pat_type(self, node);
+    }
+
+    fn visit_local(&mut self, node: &'ast syn::Local) {
+        if let syn::Pat::Ident(pi) = &node.pat {
+            if node.init.as_ref().is_some_and(|i| expr_mentions_hash(&i.expr))
+            {
+                self.0.insert(pi.ident.to_string());
+            }
+        }
+        syn::visit::visit_local(self, node);
+    }
+}
+
+/// `x`, `&x`, `&mut x`, `(x)`, `self.x`, `*x` -> `x`.
+fn receiver_name(e: &syn::Expr) -> Option<String> {
+    match e {
+        syn::Expr::Path(p) => p.path.get_ident().map(|i| i.to_string()),
+        syn::Expr::Field(f) => match &f.member {
+            syn::Member::Named(id) => Some(id.to_string()),
+            syn::Member::Unnamed(_) => None,
+        },
+        syn::Expr::Reference(r) => receiver_name(&r.expr),
+        syn::Expr::Paren(p) => receiver_name(&p.expr),
+        syn::Expr::Unary(u) => receiver_name(&u.expr),
+        _ => None,
+    }
+}
+
+/// Pass 2: iteration over a known hash-typed name.
+struct Iters<'a> {
+    names: &'a BTreeSet<String>,
+    f: &'a SourceFile,
+    out: &'a mut Vec<(&'static str, usize, String, String)>,
+}
+
+impl<'a, 'ast> syn::visit::Visit<'ast> for Iters<'a> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if !is_cfg_test(&node.attrs) {
+            syn::visit::visit_item_mod(self, node);
+        }
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if !is_test_fn(&node.attrs) {
+            syn::visit::visit_item_fn(self, node);
+        }
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        let m = node.method.to_string();
+        if METHODS.contains(&m.as_str()) {
+            if let Some(n) = receiver_name(&node.receiver) {
+                if self.names.contains(&n) {
+                    let line = node.method.span().start().line;
+                    self.out.push((
+                        RULE,
+                        line,
+                        format!("{n}.{m}()"),
+                        self.f.context_of(line),
+                    ));
+                }
+            }
+        }
+        syn::visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_expr_for_loop(&mut self, node: &'ast syn::ExprForLoop) {
+        if let Some(n) = receiver_name(&node.expr) {
+            if self.names.contains(&n) {
+                let line = node.for_token.span.start().line;
+                self.out.push((
+                    RULE,
+                    line,
+                    format!("for _ in {n}"),
+                    self.f.context_of(line),
+                ));
+            }
+        }
+        syn::visit::visit_expr_for_loop(self, node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::parse_source;
+
+    fn run(rel: &str, src: &str) -> Vec<(usize, String)> {
+        let f = parse_source(rel, src).unwrap();
+        let names = collect_names(std::slice::from_ref(&f));
+        let mut out = Vec::new();
+        check(&f, &names, &mut out);
+        out.into_iter().map(|(_, l, w, _)| (l, w)).collect()
+    }
+
+    #[test]
+    fn flags_iteration_over_hash_bindings() {
+        let src = "\
+use std::collections::{HashMap, HashSet};
+struct S {
+    entries: HashMap<u64, u32>,
+}
+impl S {
+    fn sum(&self) -> u32 {
+        let mut acc = 0;
+        for (_, v) in &self.entries {
+            acc += v;
+        }
+        acc
+    }
+}
+fn locals() {
+    let m: HashMap<u64, u32> = HashMap::new();
+    let s = HashSet::<u32>::new();
+    for k in m.keys() {
+        let _ = k;
+    }
+    let _ = s.iter().count();
+}
+";
+        let got = run("engine/mod.rs", src);
+        assert_eq!(
+            got,
+            vec![
+                (8, "for _ in entries".to_string()),
+                (17, "m.keys()".to_string()),
+                (20, "s.iter()".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn lookup_and_btree_are_clean() {
+        let src = "\
+use std::collections::{BTreeMap, HashMap};
+fn f(m: &HashMap<u64, u32>, b: &BTreeMap<u64, u32>) -> u32 {
+    let hit = m.get(&1).copied().unwrap_or(0);
+    let ordered: u32 = b.values().sum();
+    hit + ordered
+}
+";
+        assert!(run("store/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn out_of_scope_dirs_and_tests_are_skipped() {
+        let src = "\
+use std::collections::HashMap;
+fn f(m: &HashMap<u64, u32>) -> usize {
+    m.keys().count()
+}
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    fn g(m: &HashMap<u64, u32>) -> usize {
+        m.keys().count()
+    }
+}
+";
+        assert!(run("workload/mod.rs", src).is_empty(), "dir out of scope");
+        let in_scope = run("rounds/mod.rs", src);
+        assert_eq!(in_scope.len(), 1, "only the non-test site: {in_scope:?}");
+        assert_eq!(in_scope[0].0, 3);
+    }
+
+    #[test]
+    fn group_names_cross_files() {
+        let decl = parse_source(
+            "engine/mod.rs",
+            "use std::collections::HashMap;\nstruct E {\n    agents: \
+             HashMap<u64, u32>,\n}\n",
+        )
+        .unwrap();
+        let usage = parse_source(
+            "engine/prefill.rs",
+            "impl E {\n    fn f(&self) -> usize {\n        \
+             self.agents.values().count()\n    }\n}\n",
+        )
+        .unwrap();
+        let files = vec![decl, usage];
+        let names = collect_names(&files);
+        let mut out = Vec::new();
+        check(&files[1], &names, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1, 3);
+        assert_eq!(out[0].2, "agents.values()");
+        assert_eq!(out[0].3, "f");
+    }
+}

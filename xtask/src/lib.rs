@@ -1,0 +1,155 @@
+//! `tdlint`: repo-invariant static analysis for the TokenDance tree.
+//!
+//! Three rule families, each with an in-source allow mechanism
+//! (`// tdlint: allow(<rule>) -- <reason>`) and a machine-readable JSON
+//! report:
+//!
+//! - **`hash_iter`** (determinism): in digest-affecting modules
+//!   (`engine/`, `store/`, `rounds/`, `collector/`, `metrics/`),
+//!   iterating a `HashMap`/`HashSet` (`.iter()`, `.keys()`, `.values()`,
+//!   `.drain()`, `for`-loops, ...) is forbidden unless the site is
+//!   provably order-insensitive and annotated. `BTreeMap`/sorted-vec is
+//!   the required idiom: the golden-run pin and the "cohort ordering
+//!   stays deterministic under parallel merge" requirement of the
+//!   Rc->Arc migration (ROADMAP item 1) both depend on it.
+//! - **`arc_ratchet`** (Arc-readiness): every `Rc`, `RefCell`, `Cell`,
+//!   raw-pointer and `thread_local!` site in `engine/`, `store/`,
+//!   `serve/`, `runtime/` is classified against the committed allowlist
+//!   `xtask/arc_readiness.toml`. An un-allowlisted site, or a count
+//!   above the committed ceiling, fails the lint — the migration is a
+//!   monotone burn-down, never a regression.
+//! - **`panic_path`**: `unwrap()`, `expect()`, `panic!`-family macros
+//!   and direct slice indexing in the hot path (`engine/gather.rs`,
+//!   `engine/prefill.rs`, `store/diff.rs`, `store/tier.rs`,
+//!   `collector/`) must be annotated with the invariant that makes them
+//!   unreachable, or replaced with `Result`/`get` forms — a panic
+//!   mid-round poisons an entire cohort's staged caches.
+//!
+//! Test code is out of scope for every rule: `#[cfg(test)]` modules,
+//! `#[test]` functions and files named `tests.rs` are skipped. Code
+//! inside macro invocations (`assert!`, `vec!`, ...) is not parsed as
+//! expressions by `syn` and is therefore not linted either.
+
+pub mod allow;
+pub mod determinism;
+pub mod minitoml;
+pub mod panic_path;
+pub mod ratchet;
+pub mod report;
+pub mod scan;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+/// One lint finding (or one suppressed-and-audited site).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule family: `hash_iter`, `panic_path`, `arc_ratchet` or
+    /// `tdlint` (malformed directives).
+    pub rule: &'static str,
+    /// Path relative to the scan root, forward slashes.
+    pub file: String,
+    pub line: usize,
+    /// What was found, e.g. `entries.values()` or `unwrap()`.
+    pub what: String,
+    /// Enclosing function name, empty at item scope.
+    pub context: String,
+    /// True when an allow directive covers the site.
+    pub allowed: bool,
+    /// The directive's `-- <reason>` text when allowed.
+    pub reason: String,
+}
+
+/// Lint run configuration. `src_root` is scanned recursively; paths in
+/// findings and in the allowlist are relative to it.
+pub struct LintConfig {
+    pub src_root: PathBuf,
+    pub allowlist: PathBuf,
+    pub report_dir: Option<PathBuf>,
+}
+
+/// Aggregate outcome of a lint run.
+pub struct LintOutcome {
+    /// Every finding, including allowed (audited) sites.
+    pub findings: Vec<Finding>,
+    /// Arc-readiness inventory + ratchet verdict.
+    pub ratchet: ratchet::RatchetOutcome,
+    /// Directives that suppressed nothing (informational).
+    pub unused_allows: Vec<(String, usize, String)>,
+}
+
+impl LintOutcome {
+    /// Unsuppressed findings: these fail the run.
+    pub fn errors(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.allowed)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.errors().count()
+    }
+}
+
+/// Run every rule family over the tree. Does not write reports or exit;
+/// see `xtask::report` and the binary for that.
+pub fn run_lint(cfg: &LintConfig) -> Result<LintOutcome> {
+    let files = scan::load_tree(&cfg.src_root)?;
+    let det_names = determinism::collect_names(&files);
+    let mut findings = Vec::new();
+    let mut used = Vec::new();
+    for f in &files {
+        for (line, text) in &f.allows.malformed {
+            findings.push(Finding {
+                rule: "tdlint",
+                file: f.rel.clone(),
+                line: *line,
+                what: format!("malformed directive: {text}"),
+                context: String::new(),
+                allowed: false,
+                reason: String::new(),
+            });
+        }
+        let mut raw = Vec::new();
+        determinism::check(f, &det_names, &mut raw);
+        panic_path::check(f, &mut raw);
+        for (rule, line, what, context) in raw {
+            let (allowed, reason, idx) = f.resolve_allow(rule, line, &context);
+            if let Some(i) = idx {
+                used.push((f.rel.clone(), i));
+            }
+            findings.push(Finding {
+                rule,
+                file: f.rel.clone(),
+                line,
+                what,
+                context,
+                allowed,
+                reason,
+            });
+        }
+    }
+    let ratchet = ratchet::check(&files, &cfg.allowlist)?;
+    for v in &ratchet.violations {
+        findings.push(Finding {
+            rule: "arc_ratchet",
+            file: v.file.clone(),
+            line: 0,
+            what: v.message.clone(),
+            context: String::new(),
+            allowed: false,
+            reason: String::new(),
+        });
+    }
+    let mut unused = Vec::new();
+    for f in &files {
+        for (i, a) in f.allows.allows.iter().enumerate() {
+            if !used.iter().any(|(rel, j)| rel == &f.rel && *j == i) {
+                unused.push((f.rel.clone(), a.line, a.rules.join(", ")));
+            }
+        }
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    Ok(LintOutcome { findings, ratchet, unused_allows: unused })
+}

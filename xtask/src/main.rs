@@ -1,0 +1,119 @@
+//! `cargo run -p xtask -- lint` — tdlint CLI.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Result};
+
+use xtask::{report, LintConfig};
+
+const USAGE: &str = "\
+usage: cargo run -p xtask -- lint [options]
+
+options:
+  --src <dir>        source tree to scan      (default: <repo>/rust/src)
+  --allowlist <f>    Arc-readiness allowlist  (default: <repo>/xtask/arc_readiness.toml)
+  --report-dir <d>   JSON report directory    (default: <repo>/target/tdlint)
+  --no-report        skip writing JSON reports
+
+exit status: 0 when every finding is audited and the ratchet holds,
+1 on any unsuppressed finding, 2 on usage errors.
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(errors) => {
+            if errors == 0 {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("tdlint: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<usize> {
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits one level below the repo root")
+        .to_path_buf();
+    let mut cfg = LintConfig {
+        src_root: repo.join("rust/src"),
+        allowlist: repo.join("xtask/arc_readiness.toml"),
+        report_dir: Some(repo.join("target/tdlint")),
+    };
+
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {}
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+        None => bail!("missing command\n{USAGE}"),
+    }
+    while let Some(a) = args.next() {
+        let mut val = |name: &str| -> Result<PathBuf> {
+            args.next()
+                .map(PathBuf::from)
+                .ok_or_else(|| anyhow::anyhow!("{name} needs a value\n{USAGE}"))
+        };
+        match a.as_str() {
+            "--src" => cfg.src_root = val("--src")?,
+            "--allowlist" => cfg.allowlist = val("--allowlist")?,
+            "--report-dir" => cfg.report_dir = Some(val("--report-dir")?),
+            "--no-report" => cfg.report_dir = None,
+            other => bail!("unknown option {other:?}\n{USAGE}"),
+        }
+    }
+
+    let outcome = xtask::run_lint(&cfg)?;
+
+    for f in &outcome.findings {
+        if f.allowed {
+            continue;
+        }
+        let ctx = if f.context.is_empty() {
+            String::new()
+        } else {
+            format!(" (in {})", f.context)
+        };
+        println!(
+            "error[{}]: {}:{}: {}{ctx}",
+            f.rule, f.file, f.line, f.what
+        );
+    }
+    for (file, line, rules) in &outcome.unused_allows {
+        println!("note: {file}:{line}: unused allow({rules}) — remove it");
+    }
+    for s in &outcome.ratchet.slack {
+        println!("note: ratchet slack: {s}");
+    }
+
+    let audited = outcome.findings.iter().filter(|f| f.allowed).count();
+    println!(
+        "tdlint: {} files-with-findings span checked; {} audited sites, {} \
+         errors; arc-readiness {} sites / ceiling {}",
+        outcome
+            .findings
+            .iter()
+            .map(|f| f.file.as_str())
+            .collect::<std::collections::BTreeSet<_>>()
+            .len(),
+        audited,
+        outcome.error_count(),
+        outcome.ratchet.total_actual(),
+        outcome.ratchet.total_max(),
+    );
+
+    if let Some(dir) = &cfg.report_dir {
+        report::write_reports(&outcome, dir)?;
+        println!(
+            "tdlint: reports written to {} (tdlint_report.json, \
+             arc_readiness.json)",
+            dir.display()
+        );
+    }
+    Ok(outcome.error_count())
+}

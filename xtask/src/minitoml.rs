@@ -1,0 +1,201 @@
+//! Minimal TOML-subset parser for `xtask/arc_readiness.toml`.
+//!
+//! The repo's only external dependencies are `anyhow` plus the syn
+//! stack; a full TOML crate is not warranted for one allowlist file.
+//! Supported grammar (everything the allowlist uses, nothing more):
+//!
+//! - `#` comments (full-line or trailing) and blank lines,
+//! - top-level `key = value` pairs,
+//! - `[[name]]` array-of-tables headers with `key = value` entries,
+//! - values: double-quoted strings (with `\"`, `\\`, `\n`, `\t`
+//!   escapes) and integers.
+//!
+//! Anything else is a hard parse error: an allowlist that silently
+//! drops entries would defeat the ratchet.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            Value::Int(_) => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Str(_) => None,
+        }
+    }
+}
+
+pub type Table = BTreeMap<String, Value>;
+
+/// A parsed document: top-level pairs plus named arrays of tables.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Doc {
+    pub root: Table,
+    pub tables: BTreeMap<String, Vec<Table>>,
+}
+
+pub fn parse(src: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    // index into the currently-open [[array]] table, if any
+    let mut open: Option<(String, usize)> = None;
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[") {
+            let Some(name) = name.strip_suffix("]]") else {
+                bail!("line {lineno}: malformed table header: {raw:?}");
+            };
+            let name = name.trim();
+            if name.is_empty() || !is_bare_key(name) {
+                bail!("line {lineno}: bad table name: {raw:?}");
+            }
+            let arr = doc.tables.entry(name.to_string()).or_default();
+            arr.push(Table::new());
+            open = Some((name.to_string(), arr.len() - 1));
+            continue;
+        }
+        if line.starts_with('[') {
+            bail!(
+                "line {lineno}: plain [table] sections are unsupported, \
+                 use [[{}]]",
+                line.trim_matches(['[', ']'])
+            );
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            bail!("line {lineno}: expected key = value: {raw:?}");
+        };
+        let key = key.trim();
+        if !is_bare_key(key) {
+            bail!("line {lineno}: bad key {key:?}");
+        }
+        let val = parse_value(val.trim())
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: bad value: {raw:?}"))?;
+        let table = match &open {
+            Some((name, idx)) => &mut doc.tables.get_mut(name).unwrap()[*idx],
+            None => &mut doc.root,
+        };
+        if table.insert(key.to_string(), val).is_some() {
+            bail!("line {lineno}: duplicate key {key:?}");
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a trailing `#` comment, respecting `"..."` strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"')?;
+        let mut out = String::new();
+        let mut chars = body.chars();
+        while let Some(c) = chars.next() {
+            if c == '"' {
+                return None; // unescaped quote mid-string
+            }
+            if c != '\\' {
+                out.push(c);
+                continue;
+            }
+            match chars.next()? {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                _ => return None,
+            }
+        }
+        return Some(Value::Str(out));
+    }
+    s.parse::<i64>().ok().map(Value::Int)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_allowlist_shape() {
+        let doc = parse(
+            "# header comment\nschema = 1\n\n[[site]]\nfile = \
+             \"store/mod.rs\"  # trailing\nconstruct = \"Rc\"\nmax = \
+             16\nnote = \"master payloads\"\n\n[[site]]\nfile = \
+             \"engine/gather.rs\"\nconstruct = \"Rc\"\nmax = 5\nnote = \
+             \"says \\\"hi\\\"\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc.root.get("schema"), Some(&Value::Int(1)));
+        let sites = &doc.tables["site"];
+        assert_eq!(sites.len(), 2);
+        assert_eq!(
+            sites[0].get("file").and_then(Value::as_str),
+            Some("store/mod.rs")
+        );
+        assert_eq!(sites[0].get("max").and_then(Value::as_int), Some(16));
+        assert_eq!(
+            sites[1].get("note").and_then(Value::as_str),
+            Some("says \"hi\"")
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_a_comment() {
+        let doc = parse("[[site]]\nnote = \"burn-down #3\"\n").unwrap();
+        assert_eq!(
+            doc.tables["site"][0].get("note").and_then(Value::as_str),
+            Some("burn-down #3")
+        );
+    }
+
+    #[test]
+    fn rejects_unsupported_syntax() {
+        for bad in [
+            "[plain]\nk = 1\n",
+            "k = [1, 2]\n",
+            "k = 'single'\n",
+            "k = 1\nk = 2\n",
+            "[[a]\n",
+            "just words\n",
+        ] {
+            assert!(parse(bad).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! `panic_path`: no un-audited panics in the hot path.
+//!
+//! A panic mid-round poisons an entire cohort's staged caches (the
+//! engine's round state unwinds with buffers checked out and staging
+//! maps half-drained), so the assembly/encode hot path must either use
+//! `Result`/`get` forms or annotate each panic-capable site with the
+//! invariant that makes it unreachable:
+//! `// tdlint: allow(panic_path) -- <invariant>`.
+//!
+//! Flagged: `.unwrap()` / `.expect(..)` calls, `Option::unwrap` /
+//! `Result::unwrap` / `..::expect` function paths, the `panic!` /
+//! `unreachable!` / `todo!` / `unimplemented!` macros, and direct
+//! index expressions `x[i]` (slice or map indexing panics on miss;
+//! range indexing included). `assert!`-family macros are deliberately
+//! *not* flagged: they are the repo's documented invariant mechanism,
+//! and their bodies are not expression-parsed anyway.
+
+use syn::spanned::Spanned;
+
+use crate::scan::{is_cfg_test, is_test_fn, SourceFile};
+
+pub const RULE: &str = "panic_path";
+
+/// Hot-path files/dirs, relative to the scan root.
+const HOT_FILES: [&str; 4] = [
+    "engine/gather.rs",
+    "engine/prefill.rs",
+    "store/diff.rs",
+    "store/tier.rs",
+];
+const HOT_DIRS: [&str; 1] = ["collector/"];
+
+const MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+fn in_scope(f: &SourceFile) -> bool {
+    !f.is_test_file()
+        && (HOT_FILES.contains(&f.rel.as_str())
+            || HOT_DIRS.iter().any(|d| f.rel.starts_with(d)))
+}
+
+/// Emit findings for one file as (rule, line, what, context).
+pub fn check(
+    f: &SourceFile,
+    out: &mut Vec<(&'static str, usize, String, String)>,
+) {
+    if !in_scope(f) {
+        return;
+    }
+    let mut v = Panics { f, out };
+    syn::visit::Visit::visit_file(&mut v, &f.ast);
+}
+
+struct Panics<'a> {
+    f: &'a SourceFile,
+    out: &'a mut Vec<(&'static str, usize, String, String)>,
+}
+
+impl<'a> Panics<'a> {
+    fn push(&mut self, line: usize, what: String) {
+        self.out.push((RULE, line, what, self.f.context_of(line)));
+    }
+}
+
+impl<'a, 'ast> syn::visit::Visit<'ast> for Panics<'a> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if !is_cfg_test(&node.attrs) {
+            syn::visit::visit_item_mod(self, node);
+        }
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if !is_test_fn(&node.attrs) {
+            syn::visit::visit_item_fn(self, node);
+        }
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        let m = node.method.to_string();
+        if m == "unwrap" || m == "expect" {
+            let line = node.method.span().start().line;
+            self.push(line, format!("{m}()"));
+        }
+        syn::visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_expr_path(&mut self, node: &'ast syn::ExprPath) {
+        let segs = &node.path.segments;
+        if segs.len() >= 2 {
+            let last = segs.last().map(|s| s.ident.to_string());
+            if let Some(last) = last {
+                if last == "unwrap" || last == "expect" {
+                    let line = node.path.span().start().line;
+                    self.push(
+                        line,
+                        format!(
+                            "{} (fn path)",
+                            node.path
+                                .segments
+                                .iter()
+                                .map(|s| s.ident.to_string())
+                                .collect::<Vec<_>>()
+                                .join("::")
+                        ),
+                    );
+                }
+            }
+        }
+        syn::visit::visit_expr_path(self, node);
+    }
+
+    fn visit_macro(&mut self, node: &'ast syn::Macro) {
+        if let Some(seg) = node.path.segments.last() {
+            let name = seg.ident.to_string();
+            if MACROS.contains(&name.as_str()) {
+                let line = node.path.span().start().line;
+                self.push(line, format!("{name}!"));
+            }
+        }
+        syn::visit::visit_macro(self, node);
+    }
+
+    fn visit_expr_index(&mut self, node: &'ast syn::ExprIndex) {
+        let line = node.bracket_token.span.open().start().line;
+        self.push(line, "indexing".to_string());
+        syn::visit::visit_expr_index(self, node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::parse_source;
+
+    fn run(rel: &str, src: &str) -> Vec<(usize, String)> {
+        let f = parse_source(rel, src).unwrap();
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out.into_iter().map(|(_, l, w, _)| (l, w)).collect()
+    }
+
+    #[test]
+    fn flags_every_panic_form() {
+        let src = "\
+fn f(xs: &[u32], o: Option<u32>) -> u32 {
+    let a = o.unwrap();
+    let b = xs.first().expect(\"empty\");
+    let c = xs[0];
+    let d: Vec<u32> = xs.iter().copied().map(Option::Some).map(Option::unwrap).collect();
+    if a > 3 {
+        panic!(\"boom\");
+    }
+    a + b + c + d[0]
+}
+";
+        let got = run("store/diff.rs", src);
+        let whats: Vec<&str> = got.iter().map(|(_, w)| w.as_str()).collect();
+        assert_eq!(
+            whats,
+            vec![
+                "unwrap()",
+                "expect()",
+                "indexing",
+                "Option::unwrap (fn path)",
+                "panic!",
+                "indexing",
+            ]
+        );
+        assert_eq!(got[0].0, 2);
+        assert_eq!(got[2].0, 4);
+    }
+
+    #[test]
+    fn asserts_and_cold_files_are_clean() {
+        let src = "\
+fn f(xs: &[u32]) -> u32 {
+    assert!(!xs.is_empty(), \"invariant\");
+    debug_assert_eq!(xs.len() % 2, 0);
+    xs.iter().sum()
+}
+";
+        assert!(run("store/diff.rs", src).is_empty());
+        let hot = "fn g(xs: &[u32]) -> u32 {\n    xs[0]\n}\n";
+        assert!(run("engine/mod.rs", hot).is_empty(), "not a hot file");
+        assert_eq!(run("engine/gather.rs", hot).len(), 1);
+        assert_eq!(run("collector/mod.rs", hot).len(), 1);
+    }
+
+    #[test]
+    fn get_forms_are_clean() {
+        let src = "\
+fn f(xs: &[u32]) -> u32 {
+    xs.first().copied().unwrap_or(0)
+}
+";
+        assert!(run("store/tier.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,407 @@
+//! `arc_ratchet`: Arc-readiness inventory and monotone ratchet.
+//!
+//! ROADMAP item 1 (shard the engine, `Rc -> Arc` migration) needs a
+//! live inventory of every single-threaded-only construct in the
+//! modules that will cross a thread boundary: `Rc`, `RefCell`, `Cell`,
+//! `UnsafeCell`, raw pointers and `thread_local!` in `engine/`,
+//! `store/`, `serve/`, `runtime/`. Each (file, construct) pair is
+//! classified in the committed allowlist `xtask/arc_readiness.toml`
+//! with a per-file ceiling and a migration note. The lint fails when a
+//! pair appears that is not in the allowlist, or when a count exceeds
+//! its ceiling — the migration only ever burns down. Counts below the
+//! ceiling are reported as slack so the allowlist can be tightened.
+//!
+//! Counting is by `syn::Path` node (one `Rc::new(..)` or `Rc<T>` is one
+//! site), so `use` imports, comments, strings and macro interiors do
+//! not count; test code is skipped like everywhere else in tdlint.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use syn::spanned::Spanned;
+
+use crate::minitoml::{self, Value};
+use crate::scan::{is_cfg_test, is_test_fn, SourceFile};
+
+pub const RULE: &str = "arc_ratchet";
+
+const DIRS: [&str; 4] = ["engine/", "store/", "serve/", "runtime/"];
+
+/// Path-segment identifiers counted as constructs.
+const IDENTS: [&str; 4] = ["Rc", "RefCell", "Cell", "UnsafeCell"];
+
+/// Expected `schema` key in the allowlist, bumped on format changes.
+const SCHEMA: i64 = 1;
+
+/// Actual occurrences of one construct in one file.
+#[derive(Clone, Debug)]
+pub struct Site {
+    pub file: String,
+    pub construct: String,
+    pub lines: Vec<usize>,
+}
+
+impl Site {
+    pub fn count(&self) -> usize {
+        self.lines.len()
+    }
+}
+
+/// One committed allowlist entry.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub file: String,
+    pub construct: String,
+    pub max: usize,
+    pub note: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: String,
+    pub message: String,
+}
+
+/// Inventory + ratchet verdict, all fields sorted for stable reports.
+#[derive(Clone, Debug, Default)]
+pub struct RatchetOutcome {
+    pub sites: Vec<Site>,
+    pub entries: Vec<Entry>,
+    pub violations: Vec<Violation>,
+    /// Informational: ceilings that can be tightened (or removed).
+    pub slack: Vec<String>,
+}
+
+impl RatchetOutcome {
+    pub fn total_actual(&self) -> usize {
+        self.sites.iter().map(Site::count).sum()
+    }
+
+    pub fn total_max(&self) -> usize {
+        self.entries.iter().map(|e| e.max).sum()
+    }
+}
+
+fn in_scope(f: &SourceFile) -> bool {
+    !f.is_test_file() && DIRS.iter().any(|d| f.rel.starts_with(d))
+}
+
+/// Inventory the tree and compare against the allowlist file.
+pub fn check(files: &[SourceFile], allowlist: &Path) -> Result<RatchetOutcome> {
+    let sites = inventory(files);
+    let entries = load_allowlist(allowlist)?;
+    Ok(compare(sites, entries))
+}
+
+/// Count construct occurrences per (file, construct), sorted.
+pub fn inventory(files: &[SourceFile]) -> Vec<Site> {
+    let mut map: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+    for f in files.iter().filter(|f| in_scope(f)) {
+        let mut v = Counter { out: &mut map, rel: &f.rel };
+        syn::visit::Visit::visit_file(&mut v, &f.ast);
+    }
+    map.into_iter()
+        .map(|((file, construct), lines)| Site { file, construct, lines })
+        .collect()
+}
+
+/// Parse and validate `arc_readiness.toml`.
+pub fn load_allowlist(path: &Path) -> Result<Vec<Entry>> {
+    let src = fs::read_to_string(path)
+        .with_context(|| format!("reading allowlist {}", path.display()))?;
+    let doc = minitoml::parse(&src)
+        .with_context(|| format!("parsing allowlist {}", path.display()))?;
+    match doc.root.get("schema").and_then(Value::as_int) {
+        Some(SCHEMA) => {}
+        other => bail!(
+            "allowlist {}: schema = {other:?}, expected {SCHEMA}",
+            path.display()
+        ),
+    }
+    let mut entries = Vec::new();
+    for (i, t) in doc.tables.get("site").into_iter().flatten().enumerate() {
+        let field = |k: &str| -> Result<&str> {
+            t.get(k).and_then(Value::as_str).ok_or_else(|| {
+                anyhow::anyhow!("allowlist [[site]] #{}: missing {k}", i + 1)
+            })
+        };
+        let max = t.get("max").and_then(Value::as_int).unwrap_or(-1);
+        if max < 0 {
+            bail!("allowlist [[site]] #{}: missing or negative max", i + 1);
+        }
+        let entry = Entry {
+            file: field("file")?.to_string(),
+            construct: field("construct")?.to_string(),
+            max: max as usize,
+            note: field("note")?.to_string(),
+        };
+        if entry.note.len() < 10 {
+            bail!(
+                "allowlist {} {}: migration note too short to be useful",
+                entry.file,
+                entry.construct
+            );
+        }
+        if entries.iter().any(|e: &Entry| {
+            e.file == entry.file && e.construct == entry.construct
+        }) {
+            bail!(
+                "allowlist: duplicate entry {} {}",
+                entry.file,
+                entry.construct
+            );
+        }
+        entries.push(entry);
+    }
+    entries.sort_by(|a, b| {
+        (&a.file, &a.construct).cmp(&(&b.file, &b.construct))
+    });
+    Ok(entries)
+}
+
+/// Ratchet comparison: un-allowlisted or grown pairs are violations,
+/// under-ceiling pairs are slack.
+pub fn compare(sites: Vec<Site>, entries: Vec<Entry>) -> RatchetOutcome {
+    let mut out = RatchetOutcome::default();
+    for s in &sites {
+        let entry = entries
+            .iter()
+            .find(|e| e.file == s.file && e.construct == s.construct);
+        match entry {
+            None => out.violations.push(Violation {
+                file: s.file.clone(),
+                message: format!(
+                    "{} x{} not in arc_readiness.toml (lines {}) — \
+                     classify it with a ceiling and a migration note",
+                    s.construct,
+                    s.count(),
+                    fmt_lines(&s.lines),
+                ),
+            }),
+            Some(e) if s.count() > e.max => out.violations.push(Violation {
+                file: s.file.clone(),
+                message: format!(
+                    "{} count grew to {} (ceiling {}) — the Arc migration \
+                     ratchet only goes down; lines {}",
+                    s.construct,
+                    s.count(),
+                    e.max,
+                    fmt_lines(&s.lines),
+                ),
+            }),
+            Some(e) if s.count() < e.max => out.slack.push(format!(
+                "{}: {} ceiling {} but only {} found — tighten the \
+                 allowlist",
+                e.file,
+                e.construct,
+                e.max,
+                s.count(),
+            )),
+            Some(_) => {}
+        }
+    }
+    for e in &entries {
+        if !sites
+            .iter()
+            .any(|s| s.file == e.file && s.construct == e.construct)
+        {
+            out.slack.push(format!(
+                "{}: {} fully burned down — remove its allowlist entry",
+                e.file, e.construct,
+            ));
+        }
+    }
+    out.sites = sites;
+    out.entries = entries;
+    out
+}
+
+fn fmt_lines(lines: &[usize]) -> String {
+    lines
+        .iter()
+        .map(|l| l.to_string())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+struct Counter<'a> {
+    out: &'a mut BTreeMap<(String, String), Vec<usize>>,
+    rel: &'a str,
+}
+
+impl<'a> Counter<'a> {
+    fn push(&mut self, construct: &str, line: usize) {
+        self.out
+            .entry((self.rel.to_string(), construct.to_string()))
+            .or_default()
+            .push(line);
+    }
+}
+
+impl<'a, 'ast> syn::visit::Visit<'ast> for Counter<'a> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if !is_cfg_test(&node.attrs) {
+            syn::visit::visit_item_mod(self, node);
+        }
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if !is_test_fn(&node.attrs) {
+            syn::visit::visit_item_fn(self, node);
+        }
+    }
+
+    // `use` imports don't count as sites: only mentions in types and
+    // expressions do. (visit_path is not called for use-trees, which
+    // are `UsePath`, a distinct node.)
+    fn visit_path(&mut self, node: &'ast syn::Path) {
+        for seg in &node.segments {
+            let id = seg.ident.to_string();
+            if IDENTS.contains(&id.as_str()) {
+                self.push(&id, seg.ident.span().start().line);
+            }
+        }
+        syn::visit::visit_path(self, node);
+    }
+
+    fn visit_type_ptr(&mut self, node: &'ast syn::TypePtr) {
+        self.push("raw_ptr", node.star_token.span.start().line);
+        syn::visit::visit_type_ptr(self, node);
+    }
+
+    fn visit_macro(&mut self, node: &'ast syn::Macro) {
+        if node
+            .path
+            .segments
+            .last()
+            .is_some_and(|s| s.ident == "thread_local")
+        {
+            self.push("thread_local", node.path.span().start().line);
+        }
+        syn::visit::visit_macro(self, node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::parse_source;
+
+    const SRC: &str = "\
+use std::cell::RefCell;
+use std::rc::Rc;
+struct S {
+    shared: Rc<RefCell<Vec<u32>>>,
+}
+impl S {
+    fn dup(&self) -> Rc<RefCell<Vec<u32>>> {
+        Rc::clone(&self.shared)
+    }
+}
+#[cfg(test)]
+mod tests {
+    use std::rc::Rc;
+    fn t() {
+        let _ = Rc::new(3u32);
+    }
+}
+";
+
+    fn entry(file: &str, construct: &str, max: usize) -> Entry {
+        Entry {
+            file: file.into(),
+            construct: construct.into(),
+            max,
+            note: "wrap behind SharedState alias".into(),
+        }
+    }
+
+    #[test]
+    fn inventory_counts_paths_not_imports_or_tests() {
+        let f = parse_source("engine/mod.rs", SRC).unwrap();
+        let sites = inventory(std::slice::from_ref(&f));
+        let got: Vec<(String, String, usize)> = sites
+            .iter()
+            .map(|s| (s.file.clone(), s.construct.clone(), s.count()))
+            .collect();
+        assert_eq!(
+            got,
+            vec![
+                ("engine/mod.rs".into(), "Rc".into(), 3),
+                ("engine/mod.rs".into(), "RefCell".into(), 2),
+            ]
+        );
+        assert_eq!(sites[0].lines, vec![4, 7, 8]);
+    }
+
+    #[test]
+    fn out_of_scope_dirs_are_skipped() {
+        let f = parse_source("workload/mod.rs", SRC).unwrap();
+        assert!(inventory(std::slice::from_ref(&f)).is_empty());
+    }
+
+    #[test]
+    fn raw_ptr_and_thread_local_are_counted() {
+        let f = parse_source(
+            "runtime/pjrt.rs",
+            "thread_local! {\n    static SLOT: u32 = 0;\n}\nfn f(p: *const \
+             u8) -> *mut u8 {\n    p as *mut u8\n}\n",
+        )
+        .unwrap();
+        let sites = inventory(std::slice::from_ref(&f));
+        let got: Vec<(&str, usize)> = sites
+            .iter()
+            .map(|s| (s.construct.as_str(), s.count()))
+            .collect();
+        assert_eq!(got, vec![("raw_ptr", 3), ("thread_local", 1)]);
+    }
+
+    #[test]
+    fn ratchet_shrink_ok_grow_fails() {
+        let f = parse_source("engine/mod.rs", SRC).unwrap();
+        let sites = inventory(std::slice::from_ref(&f));
+
+        // exact ceilings: clean
+        let ok = compare(
+            sites.clone(),
+            vec![
+                entry("engine/mod.rs", "Rc", 3),
+                entry("engine/mod.rs", "RefCell", 2),
+            ],
+        );
+        assert!(ok.violations.is_empty() && ok.slack.is_empty());
+
+        // shrink (ceiling above actual): slack, not violation
+        let shrank = compare(
+            sites.clone(),
+            vec![
+                entry("engine/mod.rs", "Rc", 5),
+                entry("engine/mod.rs", "RefCell", 2),
+                entry("store/mod.rs", "Rc", 4),
+            ],
+        );
+        assert!(shrank.violations.is_empty());
+        assert_eq!(shrank.slack.len(), 2, "{:?}", shrank.slack);
+
+        // growth past the ceiling: violation
+        let grew = compare(
+            sites.clone(),
+            vec![
+                entry("engine/mod.rs", "Rc", 2),
+                entry("engine/mod.rs", "RefCell", 2),
+            ],
+        );
+        assert_eq!(grew.violations.len(), 1);
+        assert!(grew.violations[0].message.contains("grew to 3"));
+
+        // un-allowlisted pair: violation
+        let missing =
+            compare(sites, vec![entry("engine/mod.rs", "Rc", 3)]);
+        assert_eq!(missing.violations.len(), 1);
+        assert!(missing.violations[0]
+            .message
+            .contains("not in arc_readiness.toml"));
+    }
+}

@@ -1,0 +1,246 @@
+//! Machine-readable JSON reports.
+//!
+//! Two artifacts, both emitted with stable key order and sorted arrays
+//! so CI diffs are meaningful:
+//!
+//! - `tdlint_report.json` — every finding (including allowed/audited
+//!   sites with their recorded reasons) plus unused directives.
+//! - `arc_readiness.json` — the Arc-readiness inventory: each
+//!   (file, construct) pair with its occurrence lines, committed
+//!   ceiling and migration note, plus ratchet violations and slack.
+//!
+//! JSON is hand-emitted (the repo's only external deps are `anyhow`
+//! and the syn stack); `schema` is bumped on any shape change and
+//! pinned by a golden test below.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::ratchet::RatchetOutcome;
+use crate::LintOutcome;
+
+pub const SCHEMA: u32 = 1;
+
+/// `tdlint_report.json` body.
+pub fn lint_report_json(o: &LintOutcome) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": {SCHEMA},");
+    let _ = writeln!(s, "  \"error_count\": {},", o.error_count());
+    let _ = writeln!(s, "  \"findings\": [");
+    for (i, f) in o.findings.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"rule\": {}, \"file\": {}, \"line\": {}, \"what\": {}, \
+             \"context\": {}, \"allowed\": {}, \"reason\": {}}}{}",
+            esc(f.rule),
+            esc(&f.file),
+            f.line,
+            esc(&f.what),
+            esc(&f.context),
+            f.allowed,
+            esc(&f.reason),
+            comma(i, o.findings.len()),
+        );
+    }
+    let _ = writeln!(s, "  ],");
+    let _ = writeln!(s, "  \"unused_allows\": [");
+    for (i, (file, line, rules)) in o.unused_allows.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"file\": {}, \"line\": {line}, \"rules\": {}}}{}",
+            esc(file),
+            esc(rules),
+            comma(i, o.unused_allows.len()),
+        );
+    }
+    let _ = writeln!(s, "  ]");
+    s.push_str("}\n");
+    s
+}
+
+/// `arc_readiness.json` body.
+pub fn arc_readiness_json(r: &RatchetOutcome) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": {SCHEMA},");
+    let _ = writeln!(s, "  \"total_actual\": {},", r.total_actual());
+    let _ = writeln!(s, "  \"total_ceiling\": {},", r.total_max());
+    let _ = writeln!(s, "  \"sites\": [");
+    for (i, site) in r.sites.iter().enumerate() {
+        let entry = r
+            .entries
+            .iter()
+            .find(|e| e.file == site.file && e.construct == site.construct);
+        let lines = site
+            .lines
+            .iter()
+            .map(|l| l.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
+        let _ = writeln!(
+            s,
+            "    {{\"file\": {}, \"construct\": {}, \"count\": {}, \
+             \"lines\": [{lines}], \"ceiling\": {}, \"note\": {}}}{}",
+            esc(&site.file),
+            esc(&site.construct),
+            site.count(),
+            entry.map_or("null".to_string(), |e| e.max.to_string()),
+            esc(entry.map_or("", |e| e.note.as_str())),
+            comma(i, r.sites.len()),
+        );
+    }
+    let _ = writeln!(s, "  ],");
+    let _ = writeln!(s, "  \"violations\": [");
+    for (i, v) in r.violations.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"file\": {}, \"message\": {}}}{}",
+            esc(&v.file),
+            esc(&v.message),
+            comma(i, r.violations.len()),
+        );
+    }
+    let _ = writeln!(s, "  ],");
+    let _ = writeln!(s, "  \"slack\": [");
+    for (i, m) in r.slack.iter().enumerate() {
+        let _ = writeln!(s, "    {}{}", esc(m), comma(i, r.slack.len()));
+    }
+    let _ = writeln!(s, "  ]");
+    s.push_str("}\n");
+    s
+}
+
+/// Write both artifacts under `dir`, creating it if needed.
+pub fn write_reports(o: &LintOutcome, dir: &Path) -> Result<()> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let lint = dir.join("tdlint_report.json");
+    fs::write(&lint, lint_report_json(o))
+        .with_context(|| format!("writing {}", lint.display()))?;
+    let arc = dir.join("arc_readiness.json");
+    fs::write(&arc, arc_readiness_json(&o.ratchet))
+        .with_context(|| format!("writing {}", arc.display()))?;
+    Ok(())
+}
+
+fn comma(i: usize, len: usize) -> &'static str {
+    if i + 1 < len {
+        ","
+    } else {
+        ""
+    }
+}
+
+/// JSON string escape.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ratchet::{Entry, Site, Violation};
+    use crate::Finding;
+
+    fn outcome() -> LintOutcome {
+        LintOutcome {
+            findings: vec![
+                Finding {
+                    rule: "hash_iter",
+                    file: "engine/mod.rs".into(),
+                    line: 476,
+                    what: "agents.iter()".into(),
+                    context: "evict_retained".into(),
+                    allowed: true,
+                    reason: "sorted before use".into(),
+                },
+                Finding {
+                    rule: "panic_path",
+                    file: "store/diff.rs".into(),
+                    line: 9,
+                    what: "say \"hi\"\n".into(),
+                    context: String::new(),
+                    allowed: false,
+                    reason: String::new(),
+                },
+            ],
+            ratchet: RatchetOutcome {
+                sites: vec![Site {
+                    file: "engine/gather.rs".into(),
+                    construct: "Rc".into(),
+                    lines: vec![67, 70],
+                }],
+                entries: vec![Entry {
+                    file: "engine/gather.rs".into(),
+                    construct: "Rc".into(),
+                    max: 2,
+                    note: "plan nodes, single-owner".into(),
+                }],
+                violations: vec![Violation {
+                    file: "store/mod.rs".into(),
+                    message: "Rc x3 not in arc_readiness.toml".into(),
+                }],
+                slack: vec!["engine/mod.rs: Rc ceiling 5, 4 found".into()],
+            },
+            unused_allows: vec![("store/tier.rs".into(), 12, "hash_iter".into())],
+        }
+    }
+
+    /// Golden pin: any schema change must be deliberate (bump SCHEMA and
+    /// update this test together).
+    #[test]
+    fn lint_report_schema_is_stable() {
+        let got = lint_report_json(&outcome());
+        let want = "{\n  \"schema\": 1,\n  \"error_count\": 1,\n  \
+                    \"findings\": [\n    {\"rule\": \"hash_iter\", \"file\": \
+                    \"engine/mod.rs\", \"line\": 476, \"what\": \
+                    \"agents.iter()\", \"context\": \"evict_retained\", \
+                    \"allowed\": true, \"reason\": \"sorted before use\"},\n    \
+                    {\"rule\": \"panic_path\", \"file\": \"store/diff.rs\", \
+                    \"line\": 9, \"what\": \"say \\\"hi\\\"\\n\", \
+                    \"context\": \"\", \"allowed\": false, \"reason\": \
+                    \"\"}\n  ],\n  \"unused_allows\": [\n    {\"file\": \
+                    \"store/tier.rs\", \"line\": 12, \"rules\": \
+                    \"hash_iter\"}\n  ]\n}\n";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn arc_readiness_schema_is_stable() {
+        let got = arc_readiness_json(&outcome().ratchet);
+        let want = "{\n  \"schema\": 1,\n  \"total_actual\": 2,\n  \
+                    \"total_ceiling\": 2,\n  \"sites\": [\n    {\"file\": \
+                    \"engine/gather.rs\", \"construct\": \"Rc\", \"count\": \
+                    2, \"lines\": [67, 70], \"ceiling\": 2, \"note\": \"plan \
+                    nodes, single-owner\"}\n  ],\n  \"violations\": [\n    \
+                    {\"file\": \"store/mod.rs\", \"message\": \"Rc x3 not in \
+                    arc_readiness.toml\"}\n  ],\n  \"slack\": [\n    \
+                    \"engine/mod.rs: Rc ceiling 5, 4 found\"\n  ]\n}\n";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn escapes_control_and_quote_chars() {
+        assert_eq!(esc("a\"b\\c\nd\u{1}"), "\"a\\\"b\\\\c\\nd\\u0001\"");
+    }
+}

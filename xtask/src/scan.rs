@@ -1,0 +1,246 @@
+//! File loading, parsing and span bookkeeping shared by every rule.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use syn::spanned::Spanned;
+
+use crate::allow::{parse_allows, AllowSet};
+
+/// Line span of one `fn` item: `item_line` is the first attribute/doc
+/// line (or the `fn` keyword), `body_line` the opening brace,
+/// `end_line` the closing brace.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub item_line: usize,
+    pub body_line: usize,
+    pub end_line: usize,
+}
+
+/// One parsed source file plus its directives and fn spans.
+pub struct SourceFile {
+    /// Path relative to the scan root, forward slashes.
+    pub rel: String,
+    pub ast: syn::File,
+    pub allows: AllowSet,
+    pub fns: Vec<FnSpan>,
+}
+
+impl SourceFile {
+    /// Files named `tests.rs` are test-only by repo convention
+    /// (included via `#[cfg(test)] mod tests;`) and skipped by every
+    /// rule.
+    pub fn is_test_file(&self) -> bool {
+        self.rel == "tests.rs" || self.rel.ends_with("/tests.rs")
+    }
+
+    /// Name of the innermost `fn` whose span contains `line`.
+    pub fn context_of(&self, line: usize) -> String {
+        self.fn_containing(line).map(|f| f.name.clone()).unwrap_or_default()
+    }
+
+    fn fn_containing(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.item_line <= line && line <= f.end_line)
+            .min_by_key(|f| f.end_line - f.item_line)
+    }
+
+    /// Resolve the allow directive covering (`rule`, `line`), if any:
+    /// same line, the line directly above, or a directive in the
+    /// signature/doc region of the enclosing fn (from two lines above
+    /// the item down to its opening brace). Returns (allowed, reason,
+    /// directive index) — the index feeds unused-allow reporting.
+    pub fn resolve_allow(
+        &self,
+        rule: &str,
+        line: usize,
+        _context: &str,
+    ) -> (bool, String, Option<usize>) {
+        for (i, a) in self.allows.allows.iter().enumerate() {
+            if !a.rules.iter().any(|r| r == rule) {
+                continue;
+            }
+            if a.line == line || a.line + 1 == line {
+                return (true, a.reason.clone(), Some(i));
+            }
+            if let Some(f) = self.fn_containing(line) {
+                if a.line + 2 >= f.item_line && a.line <= f.body_line {
+                    return (true, a.reason.clone(), Some(i));
+                }
+            }
+        }
+        (false, String::new(), None)
+    }
+}
+
+/// Load and parse every `.rs` file under `root`, sorted by relative
+/// path so reports are deterministic.
+pub fn load_tree(root: &Path) -> Result<Vec<SourceFile>> {
+    let mut paths = Vec::new();
+    collect(root, &mut paths)
+        .with_context(|| format!("scanning {}", root.display()))?;
+    paths.sort();
+    let mut out = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        out.push(parse_source(&rel, &src)?);
+    }
+    Ok(out)
+}
+
+/// Parse one file from source text (used directly by fixture tests).
+pub fn parse_source(rel: &str, src: &str) -> Result<SourceFile> {
+    let ast = syn::parse_file(src)
+        .with_context(|| format!("parsing {rel}"))?;
+    let allows = parse_allows(src);
+    let mut fns = FnSpans::default();
+    syn::visit::Visit::visit_file(&mut fns, &ast);
+    Ok(SourceFile { rel: rel.to_string(), ast, allows, fns: fns.0 })
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// True for a literal `#[cfg(test)]` attribute. Only the exact form is
+/// recognized — the repo gates test modules with nothing else.
+pub fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| match &a.meta {
+        syn::Meta::List(l) if l.path.is_ident("cfg") => {
+            l.tokens.to_string() == "test"
+        }
+        _ => false,
+    })
+}
+
+/// True for `#[test]` (any path ending in `test`, e.g. `tokio::test`).
+pub fn is_test_fn(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        a.path().segments.last().is_some_and(|s| s.ident == "test")
+    })
+}
+
+#[derive(Default)]
+struct FnSpans(Vec<FnSpan>);
+
+impl FnSpans {
+    fn push(
+        &mut self,
+        name: &syn::Ident,
+        attrs: &[syn::Attribute],
+        fn_token: &syn::token::Fn,
+        block: &syn::Block,
+    ) {
+        let item_line = attrs
+            .first()
+            .map(|a| a.span().start().line)
+            .unwrap_or_else(|| fn_token.span.start().line);
+        self.0.push(FnSpan {
+            name: name.to_string(),
+            item_line,
+            body_line: block.brace_token.span.open().start().line,
+            end_line: block.brace_token.span.close().end().line,
+        });
+    }
+}
+
+impl<'ast> syn::visit::Visit<'ast> for FnSpans {
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        self.push(&node.sig.ident, &node.attrs, &node.sig.fn_token, &node.block);
+        syn::visit::visit_item_fn(self, node);
+    }
+
+    fn visit_impl_item_fn(&mut self, node: &'ast syn::ImplItemFn) {
+        self.push(&node.sig.ident, &node.attrs, &node.sig.fn_token, &node.block);
+        syn::visit::visit_impl_item_fn(self, node);
+    }
+
+    fn visit_trait_item_fn(&mut self, node: &'ast syn::TraitItemFn) {
+        if let Some(block) = &node.default {
+            self.push(&node.sig.ident, &node.attrs, &node.sig.fn_token, block);
+        }
+        syn::visit::visit_trait_item_fn(self, node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_spans_and_context() {
+        let f = parse_source(
+            "engine/mod.rs",
+            "/// doc\nfn outer() {\n    let x = 1;\n    fn inner() {\n        \
+             let y = 2;\n    }\n}\n",
+        )
+        .unwrap();
+        assert_eq!(f.fns.len(), 2);
+        assert_eq!(f.context_of(3), "outer");
+        assert_eq!(f.context_of(5), "inner");
+        assert_eq!(f.context_of(7), "outer");
+        let outer = &f.fns[0];
+        assert_eq!((outer.item_line, outer.body_line), (1, 2));
+    }
+
+    #[test]
+    fn allow_scopes() {
+        let src = "\
+// tdlint: allow(hash_iter) -- fn-scoped: whole body is order-free
+fn covered() {
+    let a = 1;
+    let b = 2;
+}
+fn uncovered() {
+    // tdlint: allow(panic_path) -- just the next line
+    let c = 3;
+    let d = 4;
+}
+";
+        let f = parse_source("store/mod.rs", src).unwrap();
+        assert!(f.resolve_allow("hash_iter", 3, "").0);
+        assert!(f.resolve_allow("hash_iter", 4, "").0);
+        assert!(!f.resolve_allow("panic_path", 3, "").0, "wrong rule");
+        assert!(f.resolve_allow("panic_path", 8, "").0, "line below");
+        assert!(!f.resolve_allow("panic_path", 9, "").0, "out of scope");
+        assert!(!f.resolve_allow("hash_iter", 6, "").0);
+    }
+
+    #[test]
+    fn cfg_test_detection() {
+        let f = parse_source(
+            "x.rs",
+            "#[cfg(test)]\nmod tests {}\n#[cfg(feature = \"pjrt\")]\nmod p \
+             {}\n",
+        )
+        .unwrap();
+        let mods: Vec<_> = f
+            .ast
+            .items
+            .iter()
+            .filter_map(|i| match i {
+                syn::Item::Mod(m) => Some(is_cfg_test(&m.attrs)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(mods, vec![true, false]);
+    }
+}

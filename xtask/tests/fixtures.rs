@@ -1,0 +1,160 @@
+//! End-to-end fixture tests: each rule family has a good tree that
+//! lints clean and a seeded-bad tree that fails, the allow mechanism
+//! and the ratchet are exercised through the public entry point, and
+//! the JSON reports land on disk with the pinned schema version.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use xtask::{run_lint, LintConfig, LintOutcome};
+
+fn fixture(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("fixtures")
+        .join(rel)
+}
+
+fn lint(tree: &str, allowlist: &str) -> LintOutcome {
+    run_lint(&LintConfig {
+        src_root: fixture(tree),
+        allowlist: fixture(allowlist),
+        report_dir: None,
+    })
+    .expect("lint run failed")
+}
+
+#[test]
+fn good_tree_lints_clean() {
+    let o = lint("good", "good_allow.toml");
+    assert_eq!(
+        o.error_count(),
+        0,
+        "unexpected errors: {:#?}",
+        o.errors().collect::<Vec<_>>()
+    );
+
+    // Audited sites are still reported, with their reasons.
+    assert!(o.findings.iter().any(|f| f.rule == "hash_iter"
+        && f.allowed
+        && f.file == "engine/mod.rs"
+        && f.reason.contains("commutative")));
+    assert!(o.findings.iter().any(|f| f.rule == "panic_path"
+        && f.allowed
+        && f.file == "store/diff.rs"
+        && f.context == "first"));
+
+    // The out-of-scope directory produced nothing in any family.
+    assert!(!o.findings.iter().any(|f| f.file.starts_with("workload/")));
+    assert!(!o.ratchet.sites.iter().any(|s| s.file.starts_with("workload/")));
+
+    // The directive that suppressed nothing is surfaced, not silent.
+    assert_eq!(o.unused_allows.len(), 1, "{:?}", o.unused_allows);
+    assert_eq!(o.unused_allows[0].0, "store/diff.rs");
+    assert_eq!(o.unused_allows[0].2, "hash_iter");
+
+    // Ratchet at exact ceiling: no violations, no slack.
+    assert!(o.ratchet.violations.is_empty());
+    assert!(o.ratchet.slack.is_empty());
+    assert_eq!(o.ratchet.total_actual(), 1);
+}
+
+#[test]
+fn bad_tree_fails_every_rule_family() {
+    let o = lint("bad", "bad_allow.toml");
+    let rules: BTreeSet<&str> = o.errors().map(|f| f.rule).collect();
+    assert_eq!(
+        rules,
+        ["arc_ratchet", "hash_iter", "panic_path", "tdlint"]
+            .into_iter()
+            .collect(),
+        "errors: {:#?}",
+        o.errors().collect::<Vec<_>>()
+    );
+
+    // hash_iter: the unannotated iteration, with receiver and context.
+    let hi: Vec<_> = o.errors().filter(|f| f.rule == "hash_iter").collect();
+    assert_eq!(hi.len(), 1);
+    assert!(hi[0].what.contains("agents.values()"), "{:?}", hi[0]);
+    assert_eq!(hi[0].context, "order_leak");
+
+    // panic_path: both the indexing and the unwrap in the hot file.
+    let pp: Vec<_> = o.errors().filter(|f| f.rule == "panic_path").collect();
+    assert_eq!(pp.len(), 2, "{pp:#?}");
+    assert!(pp.iter().all(|f| f.file == "engine/gather.rs"));
+    assert!(pp.iter().any(|f| f.what.contains("indexing")));
+    assert!(pp.iter().any(|f| f.what.contains("unwrap")));
+
+    // arc_ratchet: growth past the ceiling AND an un-allowlisted pair.
+    let msgs: Vec<&str> = o
+        .ratchet
+        .violations
+        .iter()
+        .map(|v| v.message.as_str())
+        .collect();
+    assert_eq!(msgs.len(), 2, "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("grew to 2")));
+    assert!(msgs.iter().any(|m| m.contains("not in arc_readiness.toml")));
+
+    // tdlint: the reason-less directive is flagged, never honoured.
+    let td: Vec<_> = o.errors().filter(|f| f.rule == "tdlint").collect();
+    assert_eq!(td.len(), 1);
+    assert!(td[0].what.contains("malformed"));
+}
+
+#[test]
+fn ratchet_slack_is_informational_not_an_error() {
+    let o = lint("good", "slack_allow.toml");
+    assert_eq!(o.error_count(), 0);
+    assert!(o.ratchet.violations.is_empty());
+    assert_eq!(o.ratchet.slack.len(), 2, "{:?}", o.ratchet.slack);
+    assert!(o.ratchet.slack.iter().any(|s| s.contains("tighten")));
+    assert!(o.ratchet.slack.iter().any(|s| s.contains("fully burned down")));
+}
+
+#[test]
+fn reports_are_written_with_pinned_schema() {
+    let dir = std::env::temp_dir().join("tdlint-fixture-reports");
+    let o = lint("good", "good_allow.toml");
+    xtask::report::write_reports(&o, &dir).expect("writing reports");
+
+    let lint_json =
+        std::fs::read_to_string(dir.join("tdlint_report.json")).unwrap();
+    let arc_json =
+        std::fs::read_to_string(dir.join("arc_readiness.json")).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    for json in [&lint_json, &arc_json] {
+        assert!(json.starts_with("{\n  \"schema\": 1,"), "schema drifted");
+        assert!(json.ends_with("}\n"));
+    }
+    assert!(lint_json.contains("\"error_count\": 0"));
+    assert!(lint_json.contains("\"unused_allows\""));
+    assert!(arc_json.contains("\"total_actual\": 1"));
+    assert!(arc_json.contains("\"construct\": \"Rc\""));
+    assert!(arc_json.contains("\"ceiling\": 1"));
+}
+
+/// The committed tree and the committed allowlist must agree: this is
+/// the same check the CI lint lane runs, kept in the test suite so a
+/// plain `cargo test -p xtask` catches drift too.
+#[test]
+fn committed_tree_lints_clean_against_committed_allowlist() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let o = run_lint(&LintConfig {
+        src_root: manifest.parent().unwrap().join("rust").join("src"),
+        allowlist: manifest.join("arc_readiness.toml"),
+        report_dir: None,
+    })
+    .expect("lint run failed");
+    assert_eq!(
+        o.error_count(),
+        0,
+        "committed tree has lint errors: {:#?}",
+        o.errors().collect::<Vec<_>>()
+    );
+    assert!(
+        o.ratchet.violations.is_empty(),
+        "{:#?}",
+        o.ratchet.violations
+    );
+}
