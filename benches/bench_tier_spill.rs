@@ -49,6 +49,8 @@ fn tier_store(
         spill_dir: dir.to_path_buf(),
         quantize,
         format,
+        fault_plan: None,
+        recover: false,
     })
     .unwrap();
     st

@@ -42,7 +42,8 @@ use crate::runtime::{
 use crate::scheduler::{decode_batches, AdmissionQueue, QueuedRequest};
 use crate::serve::EngineEvent;
 use crate::store::{
-    CacheStore, QuantFormat, Role, StoreCounters, StoreKey, TierConfig,
+    CacheStore, FaultPlan, QuantFormat, Role, StoreCounters, StoreKey,
+    TierConfig,
 };
 use crate::tokenizer::{RoundAwarePrompt, EOS_ID};
 use crate::util::fnv1a_tokens;
@@ -138,6 +139,17 @@ pub struct EngineConfig {
     pub quantize: bool,
     /// Quantization format for dense spills when `quantize` is on.
     pub quant_format: QuantFormat,
+    /// Deterministic cold-tier fault injection (`EngineBuilder::
+    /// fault_plan`). `None` — the default — adds zero branches to the
+    /// tier I/O path and leaves golden digests frozen; any seeded plan
+    /// degrades throughput/hit-rate only, never token streams (the
+    /// miss path recomputes whatever faults destroy).
+    pub fault_plan: Option<FaultPlan>,
+    /// Crash-recovery semantics for the cold tier: rebuild the cold
+    /// index from surviving spill files at startup and preserve them at
+    /// shutdown. Pair with a fixed `spill_dir` to carry the tier across
+    /// engine restarts.
+    pub recover_spills: bool,
 }
 
 impl EngineConfig {
@@ -161,6 +173,8 @@ impl EngineConfig {
             spill_dir: None,
             quantize: true,
             quant_format: QuantFormat::Int8,
+            fault_plan: None,
+            recover_spills: false,
         }
     }
 
@@ -332,6 +346,8 @@ impl Engine {
                 spill_dir: dir,
                 quantize: cfg.quantize,
                 format: cfg.quant_format,
+                fault_plan: cfg.fault_plan,
+                recover: cfg.recover_spills,
             })?;
         }
         let scratch = KvScratch::for_spec(&spec);
@@ -624,6 +640,12 @@ impl Engine {
         self.metrics.store_cold_evictions = c.cold_evictions;
         self.metrics.store_cold_dead_drops = c.cold_dead_drops;
         self.metrics.store_evicted_to_nothing = c.evicted_to_nothing;
+        self.metrics.store_io_errors = c.io_errors;
+        self.metrics.store_retries = c.retries;
+        self.metrics.store_quarantined = c.quarantined;
+        self.metrics.store_recovered_entries = c.recovered_entries;
+        self.metrics.store_dead_dropped_dependents =
+            c.dead_dropped_dependents;
         for s in self.store.take_restore_samples() {
             self.metrics.tier_restore_secs.push(s);
         }

@@ -190,6 +190,190 @@ fn tiered_small_hot_store_matches_flat_baseline() {
 }
 
 #[test]
+fn faulted_tier_matches_flat_baseline() {
+    // the headline robustness pin: under ANY fault schedule — a mixed
+    // plan with every fault class live, and the torture plan where 100%
+    // of restore reads corrupt — an exact (unquantized) tier produces
+    // token streams bitwise-identical to the flat unconstrained store.
+    // Faults degrade a restore to a recompute and a spill to a drop;
+    // they never change what the engine serves. Pinned across Full and
+    // Teams topologies so cohort-shaped retention is covered too.
+    use crate::store::FaultPlan;
+    use crate::workload::{Session, Topology, WorkloadConfig};
+    let run = |eng: &mut Engine,
+               topology: Topology|
+     -> Vec<Vec<(usize, Vec<u32>)>> {
+        let cfg = WorkloadConfig::generative_agents(1, 4, 3)
+            .with_topology(topology);
+        let mut session = Session::new(cfg, 0);
+        let mut all = Vec::new();
+        while !session.done() {
+            let sub = RoundSubmission::new(session.global_round())
+                .requests(session.next_round());
+            eng.submit_round(sub).unwrap();
+            let mut outs: Vec<(usize, Vec<u32>)> = eng
+                .drain()
+                .unwrap()
+                .iter()
+                .map(|c| (c.agent, c.generated.clone()))
+                .collect();
+            outs.sort_by_key(|(x, _)| *x);
+            all.push(outs.clone());
+            session.absorb(&outs).unwrap();
+        }
+        all
+    };
+    let mixed = FaultPlan {
+        seed: 0x51D,
+        write_fail: 0.3,
+        read_fail: 0.2,
+        corrupt: 0.15,
+        truncate: 0.1,
+        transient: 0.5,
+    };
+    let corrupt100 = FaultPlan {
+        seed: 2,
+        write_fail: 0.0,
+        read_fail: 0.0,
+        corrupt: 1.0,
+        truncate: 0.0,
+        transient: 0.0,
+    };
+    for topology in [Topology::Full, Topology::Teams { size: 2 }] {
+        let mut flat = Engine::builder(MODEL)
+            .policy(Policy::TokenDance)
+            .pool_blocks(256)
+            .store_bytes(256 << 20)
+            .mock()
+            .build()
+            .unwrap();
+        let of = run(&mut flat, topology);
+        let ws = flat.metrics.peak_store_bytes().max(1);
+
+        for plan in [mixed, corrupt100] {
+            let mut tiered = Engine::builder(MODEL)
+                .policy(Policy::TokenDance)
+                .pool_blocks(256)
+                .store_bytes(ws / 2)
+                .cold_tier(4 * ws)
+                .quantize(false)
+                .fault_plan(plan)
+                .mock()
+                .build()
+                .unwrap();
+            let ot = run(&mut tiered, topology);
+            assert_eq!(
+                of,
+                ot,
+                "{}: faulted tier must be bitwise-transparent \
+                 (plan {plan:?})",
+                topology.label()
+            );
+            tiered.store().assert_invariants();
+            let c = tiered.store().counters();
+            assert!(
+                c.spills > 0,
+                "{}: premise — hot store at WS/2 must spill",
+                topology.label()
+            );
+            if plan == corrupt100 {
+                // every cold read that happened failed its checksum
+                assert_eq!(c.io_errors, 0);
+                assert!(
+                    c.stall_restores + c.prefetch_restores == 0,
+                    "{}: no restore may survive 100% corruption",
+                    topology.label()
+                );
+                assert!(
+                    c.quarantined > 0,
+                    "{}: corrupt restores must quarantine files",
+                    topology.label()
+                );
+            } else {
+                assert!(
+                    c.io_errors > 0,
+                    "{}: premise — the mixed plan injected faults",
+                    topology.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn crash_recovery_restores_spilled_entries_across_sessions() {
+    // crash-recovery round-trip at engine scope: session 1 spills with
+    // `recover_spills` on (its Drop preserves the spill dir), the
+    // process "crashes" (engine dropped, a torn .tmp file planted),
+    // session 2 rebuilds the cold index from the surviving TDM2 files —
+    // torn file quarantined, intact entries recovered — and replays the
+    // identical workload to the flat baseline's streams bitwise.
+    let dir = std::env::temp_dir().join(format!(
+        "td-engine-recover-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut flat = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(256)
+        .store_bytes(256 << 20)
+        .mock()
+        .build()
+        .unwrap();
+    let of = run_rounds(&mut flat, 4, 3);
+    let ws = flat.metrics.peak_store_bytes().max(1);
+
+    let tiered = |dir: &std::path::Path| -> Engine {
+        Engine::builder(MODEL)
+            .policy(Policy::TokenDance)
+            .pool_blocks(256)
+            .store_bytes(ws / 2)
+            .cold_tier(4 * ws)
+            .quantize(false)
+            .spill_dir(dir.to_path_buf())
+            .recover_spills(true)
+            .mock()
+            .build()
+            .unwrap()
+    };
+    {
+        let mut one = tiered(&dir);
+        let o1 = run_rounds(&mut one, 4, 3);
+        assert_eq!(of, o1);
+        assert!(one.store().counters().spills > 0, "premise: spilled");
+        assert!(
+            one.store().stats().cold_entries > 0,
+            "premise: cold residue survives the session"
+        );
+        // session 1's engine drops here; recover semantics keep files
+    }
+    assert!(
+        std::fs::read_dir(&dir).unwrap().count() > 0,
+        "spill files must survive engine shutdown"
+    );
+    // a torn in-flight write left behind by the "crash"
+    std::fs::write(dir.join("spill-9999.tdm.tmp"), b"torn").unwrap();
+
+    let mut two = tiered(&dir);
+    let c = two.store().counters();
+    assert!(
+        c.recovered_entries > 0,
+        "recovery must rebuild the cold index: {c:?}"
+    );
+    assert!(c.quarantined >= 1, "torn .tmp file must be quarantined");
+    two.store().assert_invariants();
+    let o2 = run_rounds(&mut two, 4, 3);
+    assert_eq!(
+        of, o2,
+        "session over a recovered tier must replay bitwise"
+    );
+    two.store().assert_invariants();
+    drop(two);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn vllm_retains_gpu_caches_tokendance_frees() {
     let mut v = engine(Policy::VllmPrefix, 256);
     run_rounds(&mut v, 3, 2);

@@ -15,8 +15,12 @@
 //! | [`topology`] | (beyond the paper) reuse hit rate + per-agent
 //!   assembly time as the sharing fraction varies (Full / Neighborhood /
 //!   Teams cohort topologies) |
+//! | [`faults`] | (beyond the paper) fault rate x tier pressure sweep:
+//!   bitwise output equivalence vs the flat oracle plus degradation-ladder
+//!   cost (io errors, retries, quarantines, slowdown) |
 
 pub mod common;
+pub mod faults;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;

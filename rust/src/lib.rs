@@ -18,7 +18,8 @@
 //! | `runtime::kv` | `KvBuf`/`KvScratch` + `BlockProvenance`: per-block copy origins that let round-end encode skip provably-clean blocks |
 //! | [`kvcache`] | paged GPU-pool analog: block allocator, block tables |
 //! | [`store`] | CPU-side cache store: dense + Master-Mirror diff entries, O(1) LRU, master re-election, capacity-honest accounting |
-//! | `store::tier` | cold storage tier: serialized disk spill (optionally int8/q4-quantized), steps-to-next-use eviction, round-aware prefetch |
+//! | `store::tier` | cold storage tier: serialized disk spill (optionally int8/q4-quantized), steps-to-next-use eviction, round-aware prefetch, checksummed `TDM2` spill format, crash recovery |
+//! | `store::fault` | deterministic seeded fault injection for the cold tier: per-op-class rates (write/read/corrupt/truncate, transient vs persistent), replayable from one seed |
 //! | [`rounds`] | segment hashing, sharing-cohort clustering (All-Gather = one cohort) |
 //! | [`pic`] | position-independent caching: importance selection, plans |
 //! | [`collector`] | KV Collector: grouping + collective reuse (paper §4.2) |
@@ -31,7 +32,7 @@
 //! | [`workload`] | GenerativeAgents / AgentSociety trace synthesizers |
 //! | `workload::topology` | sharing topologies: Full / Neighborhood / Teams cohort shapes |
 //! | [`metrics`] | latency/usage recorders and table emitters |
-//! | [`experiments`] | one driver per paper figure (2, 3, 10–14) + pressure/topology sweeps |
+//! | [`experiments`] | one driver per paper figure (2, 3, 10–14) + pressure/topology/faults sweeps |
 //! | [`util`] | offline-environment stand-ins: PRNG, JSON, stats, CLI |
 //! | `xtask` (workspace) | `tdlint` static analysis: hash-iteration determinism lints, Arc-readiness ratchet (`xtask/arc_readiness.toml`), hot-path panic audit — `cargo run -p xtask -- lint` |
 //!

@@ -5,7 +5,7 @@
 //! tokendance serve        [--model M] [--policy P] [--agents N]
 //!                         [--topology T] ...
 //! tokendance experiments  <fig2|fig3|fig10|fig11|fig12|fig13|fig14
-//!                          |pressure|topology|all>
+//!                          |pressure|topology|faults|all>
 //!                         [--quick] [--mock] [--artifacts DIR] [--out DIR]
 //! tokendance info         [--artifacts DIR]
 //! ```
@@ -27,7 +27,7 @@ USAGE:
   tokendance serve [options]        run a multi-agent serving session
   tokendance experiments <FIG...>   reproduce paper figures
                                     (fig2 fig3 fig10 fig11 fig12 fig13
-                                     fig14 pressure topology | all)
+                                     fig14 pressure topology faults | all)
   tokendance info [options]         show artifacts / models / buckets
 
 COMMON OPTIONS:
@@ -183,6 +183,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fmt_secs(eng.metrics.tier_restore_secs.p50()),
             fmt_secs(eng.metrics.tier_restore_secs.p99()),
         );
+        println!(
+            "tier faults:        {} io errors, {} retries, {} quarantined, \
+             {} recovered, {} dead-dropped dependents",
+            sc.io_errors,
+            sc.retries,
+            sc.quarantined,
+            sc.recovered_entries,
+            sc.dead_dropped_dependents,
+        );
     }
     println!(
         "reuse:              {:.0}% of prompt tokens served from cache; \
@@ -268,6 +277,10 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     }
     if want("topology") {
         experiments::topology::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("faults") {
+        experiments::faults::run(&ctx, args)?;
         ran += 1;
     }
     if ran == 0 {

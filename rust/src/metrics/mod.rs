@@ -148,6 +148,19 @@ pub struct RunMetrics {
     pub store_cold_dead_drops: u64,
     /// Hot victims lost outright because the cold tier refused them.
     pub store_evicted_to_nothing: u64,
+    /// Cold-tier I/O attempts that failed (injected or real).
+    pub store_io_errors: u64,
+    /// Bounded retries the degradation ladder made after I/O errors.
+    pub store_retries: u64,
+    /// Spill files quarantined (`*.quarantine`): corrupt, unreadable,
+    /// or torn — never served, kept for forensics.
+    pub store_quarantined: u64,
+    /// Cold entries rebuilt from surviving spill files by crash
+    /// recovery at startup.
+    pub store_recovered_entries: u64,
+    /// Dependent cold mirrors dead-dropped because a fault destroyed
+    /// their base (subset of `store_cold_dead_drops`).
+    pub store_dead_dropped_dependents: u64,
     /// Wall time of each cold→hot restore (decode + dequantize + insert;
     /// the `pressure` experiment reports its p50/p99 per tier regime).
     pub tier_restore_secs: Samples,

@@ -31,7 +31,7 @@ use crate::engine::{AgentRequest, Engine, EngineConfig, Policy};
 use crate::restore::RestoreMode;
 use crate::rounds::DetectorConfig;
 use crate::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
-use crate::store::QuantFormat;
+use crate::store::{FaultPlan, QuantFormat};
 
 // ---------------------------------------------------------------------
 // Events
@@ -267,6 +267,8 @@ pub struct EngineBuilder {
     spill_dir: Option<PathBuf>,
     quantize: Option<bool>,
     quant_format: Option<QuantFormat>,
+    fault_plan: Option<FaultPlan>,
+    recover_spills: Option<bool>,
 }
 
 impl EngineBuilder {
@@ -289,6 +291,8 @@ impl EngineBuilder {
             spill_dir: None,
             quantize: None,
             quant_format: None,
+            fault_plan: None,
+            recover_spills: None,
         }
     }
 
@@ -414,6 +418,29 @@ impl EngineBuilder {
         self
     }
 
+    /// Inject deterministic, seeded cold-tier I/O faults (write-fail,
+    /// read-fail, corrupt-bytes, truncation, transient) — the
+    /// robustness test harness and the `experiments faults` sweep.
+    /// Default `None`: zero overhead, no behavior change. Under any
+    /// plan, faults degrade throughput/hit-rate only — token streams
+    /// stay bitwise-identical because destroyed entries recompute
+    /// through the miss path.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Crash-recovery semantics for the cold tier (default off): at
+    /// startup, rebuild the cold index from spill files surviving in
+    /// `spill_dir` (torn/corrupt files are quarantined and counted);
+    /// at shutdown, preserve spill files instead of deleting them.
+    /// Pair with a fixed `spill_dir` to carry the tier across engine
+    /// restarts.
+    pub fn recover_spills(mut self, on: bool) -> Self {
+        self.recover_spills = Some(on);
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let rt: Rc<dyn ModelRuntime> = match (self.runtime, self.artifacts)
         {
@@ -469,6 +496,12 @@ impl EngineBuilder {
         }
         if let Some(f) = self.quant_format {
             cfg.quant_format = f;
+        }
+        if let Some(p) = self.fault_plan {
+            cfg.fault_plan = Some(p);
+        }
+        if let Some(r) = self.recover_spills {
+            cfg.recover_spills = r;
         }
         Engine::new(rt, cfg)
     }

@@ -478,6 +478,41 @@ pub(crate) mod wire {
         out.extend_from_slice(xs);
     }
 
+    /// CRC-32 (IEEE 802.3, poly 0xEDB88320) — guards the `TDM2` spill
+    /// format: computed over the body (kind + key + payload) at encode
+    /// and re-verified on every read, so a flipped bit on disk is
+    /// *detected*, never served as KV. Table built at compile time; no
+    /// dependencies (offline container).
+    const CRC32_TABLE: [u32; 256] = {
+        let mut table = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut b = 0;
+            while b < 8 {
+                c = if c & 1 != 0 {
+                    0xedb8_8320 ^ (c >> 1)
+                } else {
+                    c >> 1
+                };
+                b += 1;
+            }
+            // tdlint: allow(panic_path) -- i < 256 by the loop bound
+            table[i] = c;
+            i += 1;
+        }
+        table
+    };
+
+    // tdlint: allow(panic_path) -- table index is masked to 8 bits
+    pub fn crc32(bytes: &[u8]) -> u32 {
+        let mut c = 0xffff_ffffu32;
+        for &b in bytes {
+            c = CRC32_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+        }
+        !c
+    }
+
     /// Bounds-checked sequential reader over one serialized payload —
     /// corrupt or truncated spill files surface as errors, never panics
     /// or over-reads.
@@ -620,6 +655,18 @@ mod tests {
             *x = -(i as f32);
         }
         kv
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE 802.3 check values ("123456789" is the canonical vector)
+        assert_eq!(wire::crc32(b""), 0);
+        assert_eq!(wire::crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(wire::crc32(b"The quick brown fox jumps over the lazy dog"), 0x414f_a339);
+        // a single flipped bit changes the checksum
+        let a = wire::crc32(b"spill payload body");
+        let b = wire::crc32(b"spill payload bodz");
+        assert_ne!(a, b);
     }
 
     #[test]

@@ -1,0 +1,341 @@
+//! Deterministic fault injection for the cold tier (robustness
+//! harness) plus the typed [`StoreFault`] taxonomy the degradation
+//! ladder speaks.
+//!
+//! A [`FaultPlan`] is a pure, `Copy` description of an I/O fault
+//! schedule: per-op-class rates (write-fail/ENOSPC, read-fail,
+//! corrupt-bytes, truncation) plus a *transient* fraction, all driven
+//! by a seeded xorshift generator — no wall clock, no OS entropy — so
+//! any fault run is replayable bit for bit and can be pinned like a
+//! golden run. The plan is wired into [`ColdTier`](super::tier::ColdTier)
+//! behind `EngineBuilder::fault_plan`; the default `None` adds zero
+//! branches to the un-faulted path and leaves golden digests frozen.
+//!
+//! Determinism contract: the [`FaultInjector`] draws a **fixed number
+//! of RNG values per logical operation** (two: class + transient coin;
+//! data faults draw one extra position value). Retries never draw, so
+//! the fault stream is independent of how many attempts the
+//! degradation ladder makes — replaying the same plan against the same
+//! operation sequence yields the same faults regardless of ladder
+//! policy.
+//!
+//! This module is on tdlint's `panic_path` hot list: everything here
+//! is panic-free or carries an audited allow.
+
+use std::fmt;
+
+/// Bounded attempts the degradation ladder makes per cold-tier I/O
+/// operation: the initial try plus one retry. Transient faults clear
+/// on the retry; persistent faults exhaust it and surface as
+/// [`StoreFault`].
+pub const MAX_ATTEMPTS: u32 = 2;
+
+/// Typed fault taxonomy for the store's cold-tier degradation ladder.
+/// Every cold I/O failure is one of these — the engine-facing surface
+/// (`CacheStore::get` / `prefetch`) converts them into misses and
+/// counters, never panics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreFault {
+    /// I/O failed after [`MAX_ATTEMPTS`] bounded attempts (write =
+    /// ENOSPC-style spill failure; read = unreadable spill file).
+    Io { op: &'static str, detail: String },
+    /// Payload failed checksum or decode — detected corruption; the
+    /// file is quarantined, never served.
+    Corrupt { detail: String },
+    /// Payload cannot fit cold capacity even after eviction.
+    Capacity { need: usize, cap: usize },
+}
+
+impl fmt::Display for StoreFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreFault::Io { op, detail } => {
+                write!(f, "cold-tier {op} I/O fault: {detail}")
+            }
+            StoreFault::Corrupt { detail } => {
+                write!(f, "cold-tier corruption detected: {detail}")
+            }
+            StoreFault::Capacity { need, cap } => {
+                write!(
+                    f,
+                    "cold-tier capacity fault: {need} B cannot fit {cap} B"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreFault {}
+
+/// Seeded, wall-clock-free fault schedule. Rates are probabilities in
+/// `[0, 1]` per logical operation; `transient` is the fraction of
+/// injected read/write *I/O* faults that clear on the first retry
+/// (data faults — corrupt/truncate — are never transient: the bytes on
+/// disk are what they are).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability a spill write fails (ENOSPC-style).
+    pub write_fail: f64,
+    /// Probability a restore read fails (EIO-style).
+    pub read_fail: f64,
+    /// Probability a restore reads flipped bytes (caught by CRC).
+    pub corrupt: f64,
+    /// Probability a restore reads a torn/short file (caught by the
+    /// length-guarded decoder).
+    pub truncate: f64,
+    /// Fraction of injected I/O faults that are transient.
+    pub transient: f64,
+}
+
+impl FaultPlan {
+    /// All-quiet plan: a valid baseline to override field-wise.
+    pub fn quiet(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            write_fail: 0.0,
+            read_fail: 0.0,
+            corrupt: 0.0,
+            truncate: 0.0,
+            transient: 0.0,
+        }
+    }
+}
+
+/// Outcome of the write-fault draw for one spill write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteFault {
+    None,
+    /// Fails the first attempt, clears on retry.
+    Transient,
+    /// Fails every bounded attempt.
+    Persistent,
+}
+
+/// Outcome of the read-fault draw for one restore read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadFault {
+    None,
+    /// I/O error on the first attempt, clears on retry.
+    Transient,
+    /// I/O error on every bounded attempt.
+    Persistent,
+    /// The read succeeds but returns flipped bytes.
+    Corrupt,
+    /// The read succeeds but returns a short prefix.
+    Truncate,
+}
+
+/// The live injector: plan + xorshift64* state. Constructed by the
+/// cold tier from its configured plan; owns all randomness so the tier
+/// itself stays deterministic.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    state: u64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        // splitmix-style scramble so nearby seeds diverge; xorshift
+        // state must be non-zero
+        let mut s = plan.seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        s ^= s >> 30;
+        s = s.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        s ^= s >> 27;
+        FaultInjector { plan, state: s | 1 }
+    }
+
+    /// xorshift64* — the repo-standard no-dependency PRNG family.
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform in [0, 1) from the top 53 bits.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Draw the fault decision for one spill write. Exactly two draws
+    /// regardless of outcome (determinism contract above).
+    pub fn write_fault(&mut self) -> WriteFault {
+        let u = self.next_f64();
+        let t = self.next_f64();
+        if u >= self.plan.write_fail {
+            WriteFault::None
+        } else if t < self.plan.transient {
+            WriteFault::Transient
+        } else {
+            WriteFault::Persistent
+        }
+    }
+
+    /// Draw the fault decision for one restore read. Exactly two draws
+    /// regardless of outcome; the classes stack (read_fail, then
+    /// corrupt, then truncate bands of the unit interval).
+    pub fn read_fault(&mut self) -> ReadFault {
+        let u = self.next_f64();
+        let t = self.next_f64();
+        let p = &self.plan;
+        if u < p.read_fail {
+            if t < p.transient {
+                ReadFault::Transient
+            } else {
+                ReadFault::Persistent
+            }
+        } else if u < p.read_fail + p.corrupt {
+            ReadFault::Corrupt
+        } else if u < p.read_fail + p.corrupt + p.truncate {
+            ReadFault::Truncate
+        } else {
+            ReadFault::None
+        }
+    }
+
+    /// Flip one byte of `buf` at a seeded position (the corrupt-bytes
+    /// data fault). One extra draw; no-op on an empty buffer.
+    pub fn corrupt_bytes(&mut self, buf: &mut [u8]) {
+        let r = self.next_u64();
+        if buf.is_empty() {
+            return;
+        }
+        let pos = (r % buf.len() as u64) as usize;
+        // tdlint: allow(panic_path) -- pos < len by the modulo above
+        buf[pos] ^= 0x40;
+    }
+
+    /// Seeded truncation point in `[0, len)` (the torn-file data
+    /// fault). One extra draw; 0 when the buffer is empty.
+    pub fn truncate_at(&mut self, len: usize) -> usize {
+        let r = self.next_u64();
+        if len == 0 {
+            0
+        } else {
+            (r % len as u64) as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_fault_stream() {
+        let plan = FaultPlan {
+            write_fail: 0.3,
+            read_fail: 0.2,
+            corrupt: 0.2,
+            truncate: 0.1,
+            transient: 0.5,
+            ..FaultPlan::quiet(42)
+        };
+        let mut a = FaultInjector::new(plan);
+        let mut b = FaultInjector::new(plan);
+        for _ in 0..256 {
+            assert_eq!(a.write_fault(), b.write_fault());
+            assert_eq!(a.read_fault(), b.read_fault());
+        }
+        let mut xa = vec![0u8; 64];
+        let mut xb = vec![0u8; 64];
+        a.corrupt_bytes(&mut xa);
+        b.corrupt_bytes(&mut xb);
+        assert_eq!(xa, xb);
+        assert_ne!(xa, vec![0u8; 64], "corruption changed a byte");
+    }
+
+    #[test]
+    fn zero_rates_never_fault_and_full_rates_always_fault() {
+        let mut quiet = FaultInjector::new(FaultPlan::quiet(7));
+        for _ in 0..128 {
+            assert_eq!(quiet.write_fault(), WriteFault::None);
+            assert_eq!(quiet.read_fault(), ReadFault::None);
+        }
+        let mut loud = FaultInjector::new(FaultPlan {
+            write_fail: 1.0,
+            read_fail: 1.0,
+            transient: 0.0,
+            ..FaultPlan::quiet(7)
+        });
+        for _ in 0..128 {
+            assert_eq!(loud.write_fault(), WriteFault::Persistent);
+            assert_eq!(loud.read_fault(), ReadFault::Persistent);
+        }
+        let mut flappy = FaultInjector::new(FaultPlan {
+            write_fail: 1.0,
+            read_fail: 1.0,
+            transient: 1.0,
+            ..FaultPlan::quiet(7)
+        });
+        for _ in 0..128 {
+            assert_eq!(flappy.write_fault(), WriteFault::Transient);
+            assert_eq!(flappy.read_fault(), ReadFault::Transient);
+        }
+    }
+
+    #[test]
+    fn read_classes_stack_and_data_faults_are_never_transient() {
+        // corrupt band only: transient coin must not matter
+        let mut inj = FaultInjector::new(FaultPlan {
+            corrupt: 1.0,
+            transient: 1.0,
+            ..FaultPlan::quiet(11)
+        });
+        for _ in 0..64 {
+            assert_eq!(inj.read_fault(), ReadFault::Corrupt);
+        }
+        let mut inj = FaultInjector::new(FaultPlan {
+            truncate: 1.0,
+            transient: 1.0,
+            ..FaultPlan::quiet(11)
+        });
+        for _ in 0..64 {
+            assert_eq!(inj.read_fault(), ReadFault::Truncate);
+        }
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let mut inj = FaultInjector::new(FaultPlan {
+            write_fail: 0.25,
+            ..FaultPlan::quiet(3)
+        });
+        let n = 4096;
+        let hits = (0..n)
+            .filter(|_| inj.write_fault() != WriteFault::None)
+            .count();
+        let rate = hits as f64 / n as f64;
+        assert!(
+            (rate - 0.25).abs() < 0.05,
+            "observed write-fault rate {rate} far from 0.25"
+        );
+    }
+
+    #[test]
+    fn truncate_at_stays_in_range_and_handles_empty() {
+        let mut inj = FaultInjector::new(FaultPlan::quiet(5));
+        assert_eq!(inj.truncate_at(0), 0);
+        for _ in 0..64 {
+            let t = inj.truncate_at(100);
+            assert!(t < 100);
+        }
+        let mut empty: Vec<u8> = Vec::new();
+        inj.corrupt_bytes(&mut empty);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn store_fault_displays_each_class() {
+        let io = StoreFault::Io { op: "read", detail: "eio".into() };
+        let c = StoreFault::Corrupt { detail: "crc".into() };
+        let cap = StoreFault::Capacity { need: 9, cap: 4 };
+        assert!(io.to_string().contains("read"));
+        assert!(c.to_string().contains("corruption"));
+        assert!(cap.to_string().contains("9"));
+    }
+}

@@ -62,6 +62,7 @@
 //! bit-identical to the flat store — the golden-run digests pin that.
 
 pub mod diff;
+pub mod fault;
 pub mod tier;
 
 use std::collections::{BTreeSet, HashMap, HashSet};
@@ -77,6 +78,7 @@ pub use diff::{
     match_blocks_by_content, match_blocks_by_segments, rediff_identity,
     AlignedDiff, BlockSparseDiff,
 };
+pub use fault::{FaultPlan, StoreFault};
 pub use tier::{
     ColdKind, QuantFormat, QuantizedDense, SpillPayload, TierConfig,
 };
@@ -227,6 +229,25 @@ pub struct StoreCounters {
     /// Hot victims that could not spill (cold tier full beside a
     /// protected master, or the write failed) and were lost outright.
     pub evicted_to_nothing: u64,
+    /// Cold-tier I/O attempts that failed (injected or real), counted
+    /// per attempt — a transient fault that retried cleanly still
+    /// shows up here.
+    pub io_errors: u64,
+    /// Bounded re-attempts the degradation ladder made after an I/O
+    /// error (`fault::MAX_ATTEMPTS` caps attempts per operation).
+    pub retries: u64,
+    /// Spill files renamed to `*.quarantine`: corrupt (checksum or
+    /// decode failure), unreadable after retries, or torn `.tmp`
+    /// leftovers found by crash recovery. Never served, never deleted.
+    pub quarantined: u64,
+    /// Cold entries re-indexed from surviving spill files by crash
+    /// recovery at startup.
+    pub recovered_entries: u64,
+    /// Dependent cold mirrors dead-dropped because their base was lost
+    /// to a *fault* (quarantine, failed write, crash) — a subset of
+    /// `cold_dead_drops`, split out so fault blast radius is visible
+    /// apart from capacity policy.
+    pub dead_dropped_dependents: u64,
 }
 
 impl StoreStats {
@@ -368,10 +389,13 @@ impl CacheStore {
         }
     }
 
-    /// Enable the cold tier (creates the spill directory). The engine
-    /// calls this once at construction when a cold capacity is set.
+    /// Enable the cold tier (creates the spill directory; with
+    /// `cfg.recover`, rebuilds the cold index from surviving spill
+    /// files and counts `recovered_entries` / `quarantined`). The
+    /// engine calls this once at construction when a cold capacity is
+    /// set.
     pub fn configure_tier(&mut self, cfg: TierConfig) -> Result<()> {
-        self.tier = Some(tier::ColdTier::new(cfg)?);
+        self.tier = Some(tier::ColdTier::new(cfg, &mut self.counters)?);
         Ok(())
     }
 
@@ -847,12 +871,15 @@ impl CacheStore {
         {
             Ok(()) => self.counters.spills += 1,
             Err(_) => {
+                // degradation ladder, write side: the tier already
+                // retried transient faults; a persistent failure
+                // (capacity or I/O) drops the victim outright
                 self.counters.evicted_to_nothing += 1;
                 // the entry is gone for good; cold mirrors that diffed
                 // against it (a dense base) are dead too
                 if matches!(entry, Entry::Dense(_)) {
                     if let Some(t) = self.tier.as_mut() {
-                        t.drop_mirrors_of(&key, &mut self.counters);
+                        t.drop_dependents_of(&key, &mut self.counters);
                     }
                 }
             }
@@ -903,9 +930,11 @@ impl CacheStore {
                     t.meta(&mk).is_some_and(|m| m.master.is_none())
                 });
                 if !(cold_base && self.restore_from_cold(mk, prefetch)) {
-                    // the mirror's base is gone — dead-drop it
+                    // the mirror's base is gone — dead-drop it (a
+                    // dependent lost to its base's fault/loss)
                     if self.tier.as_mut().is_some_and(|t| t.remove(&key)) {
                         self.counters.cold_dead_drops += 1;
+                        self.counters.dead_dropped_dependents += 1;
                     }
                     return false;
                 }
@@ -925,11 +954,22 @@ impl CacheStore {
             .as_ref()
             .and_then(|t| t.meta(&key))
             .and_then(|m| m.next_use);
-        let payload = match self.tier.as_mut().and_then(|t| t.take(&key)) {
+        let taken = match self.tier.as_mut() {
+            Some(t) => t.take(&key, &mut self.counters),
+            None => None,
+        };
+        let payload = match taken {
             Some(Ok(p)) => p,
-            Some(Err(_)) => {
-                // unreadable spill file: the entry is lost
+            Some(Err(_fault)) => {
+                // degradation ladder, read side: the tier already
+                // retried transient I/O and quarantined the file on
+                // corruption — the entry is lost; anything that diffed
+                // against it (a dense base's cold mirrors) dies with
+                // it, and the engine's miss path recomputes
                 self.counters.cold_dead_drops += 1;
+                if let Some(t) = self.tier.as_mut() {
+                    t.drop_dependents_of(&key, &mut self.counters);
+                }
                 return false;
             }
             None => return false,
@@ -1018,8 +1058,13 @@ impl CacheStore {
                 .as_ref()
                 .and_then(|t| t.meta(&mk))
                 .and_then(|m| m.next_use);
-            let taken = self.tier.as_mut().and_then(|t| t.take(&mk));
+            let taken = match self.tier.as_mut() {
+                Some(t) => t.take(&mk, &mut self.counters),
+                None => None,
+            };
             let Some(Ok(SpillPayload::Mirror(m))) = taken else {
+                // faulted or non-mirror payload: this dependent cannot
+                // be re-homed (the tier quarantined any bad file)
                 self.counters.cold_dead_drops += 1;
                 continue;
             };
@@ -1777,6 +1822,8 @@ mod tests {
             spill_dir: dir,
             quantize,
             format: QuantFormat::Int8,
+            fault_plan: None,
+            recover: false,
         })
         .unwrap();
         st
@@ -1856,6 +1903,72 @@ mod tests {
         assert!(c.stall_restores >= 1);
         assert_eq!(c.cold_dead_drops, 0);
         st.assert_invariants();
+    }
+
+    #[test]
+    fn cold_tier_full_victim_drops_to_nothing_counted() {
+        let sp = spec();
+        let one = dense(&sp, 16, 1.0);
+        let eb = dense_bytes(&one);
+        // a cold tier too small for any entry: the hot victim has
+        // nowhere to spill and is dropped outright — counted, and the
+        // key simply misses afterwards (the caller recomputes)
+        let mut st = tier_store(&sp, eb + 64, 64, false, "cold-full");
+        st.put_dense(key(1), one).unwrap();
+        st.put_dense(key(2), dense(&sp, 16, 2.0)).unwrap();
+        let c = st.counters();
+        assert_eq!(c.evicted_to_nothing, 1, "victim dropped, not spilled");
+        assert_eq!(c.spills, 0);
+        assert!(!st.contains(&key(1)));
+        assert!(!st.is_spilled(&key(1)));
+        assert!(st.get(&key(1)).is_none(), "dropped key must miss");
+        assert!(st.contains(&key(2)));
+        st.assert_invariants();
+    }
+
+    #[test]
+    fn unreadable_cold_entries_dead_drop_never_panic() {
+        let sp = spec();
+        let master = dense(&sp, 64, 1.0);
+        let mb = dense_bytes(&master);
+        let mut probe = CacheStore::new(&sp, 1 << 22);
+        probe.put_dense(key(1), master.clone()).unwrap();
+        let m = mirror_of(&sp, &mut probe, key(1), 2.0);
+        let mm = mirror_bytes(&m);
+        drop(probe);
+
+        let name = "dead-chain";
+        let mut st = tier_store(&sp, mb + mm + 128, 1 << 20, false, name);
+        st.put_dense(key(1), master).unwrap();
+        st.put_mirror(key(2), m).unwrap();
+        // push both cold, then corrupt every spill file on disk: the
+        // master restore under key(2)'s get fails its checksum, so the
+        // chain dead-drops and the get degrades to a clean miss
+        st.put_dense(key(3), dense(&sp, 48, 3.0)).unwrap();
+        st.put_dense(key(4), dense(&sp, 48, 4.0)).unwrap();
+        assert!(st.is_spilled(&key(1)) && st.is_spilled(&key(2)));
+        let dir = std::env::temp_dir().join(format!(
+            "td-store-tier-{}-{name}",
+            std::process::id()
+        ));
+        for f in std::fs::read_dir(&dir).unwrap().flatten() {
+            let p = f.path();
+            if p.extension().is_some_and(|x| x == "tdm") {
+                let mut b = std::fs::read(&p).unwrap();
+                let mid = b.len() / 2;
+                b[mid] ^= 0xff;
+                std::fs::write(&p, &b).unwrap();
+            }
+        }
+        assert!(st.get(&key(2)).is_none(), "corrupt chain must miss");
+        assert!(st.get(&key(1)).is_none(), "corrupt master must miss");
+        let c = st.counters();
+        assert!(c.cold_dead_drops >= 2, "both cold entries dead: {c:?}");
+        assert!(c.quarantined >= 1, "corrupt files quarantined");
+        assert!(!st.is_spilled(&key(1)) && !st.is_spilled(&key(2)));
+        st.assert_invariants();
+        drop(st);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

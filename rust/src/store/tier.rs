@@ -8,11 +8,30 @@
 //! dense), and dense payloads are optionally quantized — int8 or Q4 with
 //! one f32 scale per (layer, token-block) per plane — before
 //! serialization. Every cold entry is one little-endian flat file
-//! (`spill-<seq>.tdm`, magic `TDM1`) under the configured spill
-//! directory; f32 values travel as raw bit patterns, so an unquantized
-//! spill → restore round trip is **bitwise**, and
-//! `EngineBuilder::quantize(false)` is the equivalence baseline (same
-//! discipline as `gather_plan` / `collective_encode`).
+//! (`spill-<seq>.tdm`, magic `TDM2`: a CRC32 over the body guards
+//! every read; legacy `TDM1` files remain readable for migration)
+//! under the configured spill directory; f32 values travel as raw bit
+//! patterns, so an unquantized spill → restore round trip is
+//! **bitwise**, and `EngineBuilder::quantize(false)` is the
+//! equivalence baseline (same discipline as `gather_plan` /
+//! `collective_encode`).
+//!
+//! Fault tolerance (the degradation ladder): spill writes go through
+//! `spill-<seq>.tdm.tmp` + `sync_all` + atomic rename, so a crash
+//! mid-spill never leaves a torn `.tdm` visible; transient I/O errors
+//! retry up to [`MAX_ATTEMPTS`](super::fault::MAX_ATTEMPTS) bounded
+//! attempts; persistent write failure surfaces as a typed
+//! [`StoreFault`](super::fault::StoreFault) the store converts into
+//! `evicted_to_nothing`; a corrupt/unreadable restore **quarantines**
+//! the file (renamed `*.quarantine`, never deleted, never served) and
+//! the store dead-drops the entry plus its dependent cold mirrors —
+//! the engine's miss path recomputes, so token streams never change.
+//! With `TierConfig::recover`, construction scans the spill directory
+//! and rebuilds the cold index from surviving files (torn `.tmp` and
+//! corrupt files quarantined and counted), and `Drop` preserves the
+//! directory for the next session. A seeded
+//! [`FaultPlan`](super::fault::FaultPlan) injects all of the above
+//! deterministically for tests and the `experiments faults` sweep.
 //!
 //! The tier records, per cold entry, the round scheduler's *next-use
 //! hint* (which round will read the key next). Cold eviction — the only
@@ -26,11 +45,16 @@
 
 use std::collections::{BTreeSet, HashMap};
 use std::fs;
-use std::path::PathBuf;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use super::diff::{wire, AlignedDiff};
+use super::fault::{
+    FaultInjector, FaultPlan, ReadFault, StoreFault, WriteFault,
+    MAX_ATTEMPTS,
+};
 use super::{DenseEntry, MirrorEntry, Role, StoreCounters, StoreKey};
 use crate::runtime::KvBuf;
 
@@ -77,14 +101,23 @@ impl std::str::FromStr for QuantFormat {
 pub struct TierConfig {
     /// Serialized-byte capacity of the cold tier.
     pub cold_bytes: usize,
-    /// Directory the spill files live in (created on configure; files and
-    /// the directory are removed on drop — but only when empty, never
-    /// recursively, since the path is user-supplied).
+    /// Directory the spill files live in (created on configure). With
+    /// `recover` off, drop removes this run's spill files, plus the
+    /// directory itself when the tier created it and it is empty —
+    /// never recursively, since the path is user-supplied. With
+    /// `recover` on, drop preserves everything for the next session.
     pub spill_dir: PathBuf,
     /// Quantize dense payloads on spill. `false` keeps spills exact and
     /// is the bitwise-equivalence baseline.
     pub quantize: bool,
     pub format: QuantFormat,
+    /// Deterministic fault-injection schedule. `None` (default) adds
+    /// zero branches to the I/O path.
+    pub fault_plan: Option<FaultPlan>,
+    /// Crash-recovery semantics: scan the spill directory at
+    /// construction, rebuild the cold index from surviving files
+    /// (quarantining torn/corrupt ones), and keep spill files on drop.
+    pub recover: bool,
 }
 
 // ---------------------------------------------------------------------
@@ -304,7 +337,14 @@ impl SpillPayload {
     }
 }
 
-const MAGIC: &[u8; 4] = b"TDM1";
+/// Current spill format: `TDM2 | crc32(body) LE | body`, where body is
+/// `kind u8 | key | payload`. The CRC is verified on every decode so
+/// on-disk corruption is detected, never served as KV.
+const MAGIC: &[u8; 4] = b"TDM2";
+/// PR 6's checksum-free format: `TDM1 | body`, body identical to TDM2's.
+/// Still decoded (no CRC to verify) so pre-existing spill files migrate
+/// transparently; never written anymore.
+const MAGIC_V1: &[u8; 4] = b"TDM1";
 
 fn put_key(out: &mut Vec<u8>, key: &StoreKey) {
     wire::put_u64(out, key.content);
@@ -359,56 +399,81 @@ fn read_dense_payload(r: &mut wire::Reader) -> Result<DenseEntry> {
     Ok(DenseEntry { tokens, positions, kv })
 }
 
-/// Serialize `(key, payload)` into one flat spill-file image.
+/// Serialize `(key, payload)` into one flat spill-file image:
+/// `TDM2 | crc32(body) | body`.
 pub fn encode_payload(key: &StoreKey, p: &SpillPayload) -> Vec<u8> {
-    let mut out = Vec::new();
-    out.extend_from_slice(MAGIC);
+    let mut body = Vec::new();
     wire::put_u8(
-        &mut out,
+        &mut body,
         match p {
             SpillPayload::Dense(_) => 0,
             SpillPayload::Mirror(_) => 1,
             SpillPayload::Quantized(_) => 2,
         },
     );
-    put_key(&mut out, key);
+    put_key(&mut body, key);
     match p {
-        SpillPayload::Dense(e) => put_dense_payload(&mut out, e),
+        SpillPayload::Dense(e) => put_dense_payload(&mut body, e),
         SpillPayload::Mirror(m) => {
-            put_key(&mut out, &m.master);
-            wire::put_u32s(&mut out, &m.tokens);
-            wire::put_i32s(&mut out, &m.positions);
-            m.diff.write_le(&mut out);
+            put_key(&mut body, &m.master);
+            wire::put_u32s(&mut body, &m.tokens);
+            wire::put_i32s(&mut body, &m.positions);
+            m.diff.write_le(&mut body);
         }
         SpillPayload::Quantized(q) => {
             wire::put_u8(
-                &mut out,
+                &mut body,
                 match q.format {
                     QuantFormat::Int8 => 0,
                     QuantFormat::Q4 => 1,
                 },
             );
-            wire::put_u64(&mut out, q.layers as u64);
-            wire::put_u64(&mut out, q.len as u64);
-            wire::put_u64(&mut out, q.d as u64);
-            wire::put_u64(&mut out, q.block_tokens as u64);
-            wire::put_u32s(&mut out, &q.tokens);
-            wire::put_i32s(&mut out, &q.positions);
-            wire::put_f32s(&mut out, &q.k_scales);
-            wire::put_f32s(&mut out, &q.v_scales);
-            wire::put_bytes(&mut out, &q.k_q);
-            wire::put_bytes(&mut out, &q.v_q);
+            wire::put_u64(&mut body, q.layers as u64);
+            wire::put_u64(&mut body, q.len as u64);
+            wire::put_u64(&mut body, q.d as u64);
+            wire::put_u64(&mut body, q.block_tokens as u64);
+            wire::put_u32s(&mut body, &q.tokens);
+            wire::put_i32s(&mut body, &q.positions);
+            wire::put_f32s(&mut body, &q.k_scales);
+            wire::put_f32s(&mut body, &q.v_scales);
+            wire::put_bytes(&mut body, &q.k_q);
+            wire::put_bytes(&mut body, &q.v_q);
         }
     }
+    let mut out = Vec::with_capacity(body.len() + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&wire::crc32(&body).to_le_bytes());
+    out.extend_from_slice(&body);
     out
 }
 
-/// Decode one spill-file image back to `(key, payload)`.
+/// Decode one spill-file image back to `(key, payload)`. `TDM2` images
+/// are CRC-verified; legacy `TDM1` images (no checksum) decode as-is.
 pub fn decode_payload(buf: &[u8]) -> Result<(StoreKey, SpillPayload)> {
-    let mut r = wire::Reader::new(buf);
-    if r.raw(4)? != MAGIC {
-        bail!("bad spill magic (expected TDM1)");
-    }
+    let magic = buf
+        .get(..4)
+        .ok_or_else(|| anyhow::anyhow!("spill image shorter than magic"))?;
+    let body = if magic == MAGIC.as_slice() {
+        let crc_raw: [u8; 4] = buf
+            .get(4..8)
+            .and_then(|s| s.try_into().ok())
+            .ok_or_else(|| anyhow::anyhow!("spill image missing checksum"))?;
+        let stored = u32::from_le_bytes(crc_raw);
+        let body = buf.get(8..).unwrap_or(&[]);
+        let computed = wire::crc32(body);
+        if computed != stored {
+            bail!(
+                "spill checksum mismatch: stored {stored:#010x}, \
+                 computed {computed:#010x}"
+            );
+        }
+        body
+    } else if magic == MAGIC_V1.as_slice() {
+        buf.get(4..).unwrap_or(&[])
+    } else {
+        bail!("bad spill magic (expected TDM2 or legacy TDM1)");
+    };
+    let mut r = wire::Reader::new(body);
     let kind = r.u8()?;
     let key = read_key(&mut r)?;
     let payload = match kind {
@@ -507,20 +572,161 @@ pub struct ColdTier {
     by_master: HashMap<StoreKey, BTreeSet<StoreKey>>,
     bytes: usize,
     next_seq: u64,
+    /// Live fault injector (None = zero-overhead un-faulted path).
+    faults: Option<FaultInjector>,
+    /// Whether this tier created the spill directory (drop only removes
+    /// a directory it created).
+    created_dir: bool,
+}
+
+/// Rename `path` to `path.quarantine` (fall back to deletion if the
+/// rename itself fails) and count it. Quarantined files are never
+/// decoded, never served, and never touched by recovery or drop — they
+/// are the forensics trail.
+fn quarantine_file(path: &Path, counters: &mut StoreCounters) {
+    let mut q = path.as_os_str().to_os_string();
+    q.push(".quarantine");
+    if fs::rename(path, &q).is_err() {
+        let _ = fs::remove_file(path);
+    }
+    counters.quarantined += 1;
+}
+
+/// Crash-safe spill write: `path.tmp` + `sync_all` + atomic rename. A
+/// crash at any point leaves either no visible `.tdm` or a complete
+/// one — never a torn file recovery could misread.
+fn write_atomic(path: &Path, buf: &[u8]) -> std::io::Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let res = (|| {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(buf)?;
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, path)
+    })();
+    if res.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    res
+}
+
+/// Parse `spill-<seq>.tdm` back to its sequence number (recovery scan).
+fn parse_spill_seq(name: &str) -> Option<u64> {
+    name.strip_prefix("spill-")?.strip_suffix(".tdm")?.parse().ok()
 }
 
 impl ColdTier {
-    pub(super) fn new(cfg: TierConfig) -> Result<Self> {
+    /// Build the tier. With `cfg.recover`, scans the spill directory
+    /// and rebuilds the cold index from surviving files — intact
+    /// entries are re-indexed (`recovered_entries`), torn `.tmp` and
+    /// corrupt/unreadable files are quarantined (`quarantined`), and
+    /// recovered mirrors whose base did not survive are dead-dropped.
+    pub(super) fn new(
+        cfg: TierConfig,
+        counters: &mut StoreCounters,
+    ) -> Result<Self> {
+        let created_dir = !cfg.spill_dir.exists();
         fs::create_dir_all(&cfg.spill_dir).with_context(|| {
             format!("creating spill dir {}", cfg.spill_dir.display())
         })?;
-        Ok(ColdTier {
+        let faults = cfg.fault_plan.map(FaultInjector::new);
+        let recover = cfg.recover;
+        let mut t = ColdTier {
             cfg,
             entries: HashMap::new(),
             by_master: HashMap::new(),
             bytes: 0,
             next_seq: 0,
-        })
+            faults,
+            created_dir,
+        };
+        if recover {
+            t.recover(counters)?;
+        }
+        Ok(t)
+    }
+
+    /// Rebuild the cold index from whatever the spill directory holds.
+    /// Files are visited in sequence order (sorted, not read_dir order)
+    /// so recovery is deterministic; non-spill files are left alone.
+    fn recover(&mut self, counters: &mut StoreCounters) -> Result<()> {
+        let mut found: Vec<(u64, PathBuf)> = Vec::new();
+        let rd = fs::read_dir(&self.cfg.spill_dir).with_context(|| {
+            format!("scanning spill dir {}", self.cfg.spill_dir.display())
+        })?;
+        for ent in rd.flatten() {
+            let path = ent.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str())
+            else {
+                continue;
+            };
+            if name.ends_with(".tdm.tmp") {
+                // torn mid-spill write: the rename never happened
+                quarantine_file(&path, counters);
+            } else if let Some(seq) = parse_spill_seq(name) {
+                found.push((seq, path));
+            }
+        }
+        found.sort();
+        for (seq, path) in found {
+            let decoded = fs::read(&path)
+                .map_err(anyhow::Error::from)
+                .and_then(|buf| decode_payload(&buf).map(|kp| (buf, kp)));
+            let (buf, (key, payload)) = match decoded {
+                Ok(v) => v,
+                Err(_) => {
+                    quarantine_file(&path, counters);
+                    continue;
+                }
+            };
+            // a crash between write and stale-removal can leave two
+            // files for one key: the higher seq is the live one
+            if self.entries.get(&key).is_some() {
+                self.remove(&key);
+                counters.recovered_entries -= 1;
+            }
+            let meta = ColdMeta {
+                bytes: buf.len(),
+                kind: payload.kind(),
+                master: payload.master(),
+                next_use: None,
+                seq,
+            };
+            if let Some(mk) = meta.master {
+                self.by_master.entry(mk).or_default().insert(key);
+            }
+            self.bytes += meta.bytes;
+            self.entries.insert(key, meta);
+            self.next_seq = self.next_seq.max(seq + 1);
+            counters.recovered_entries += 1;
+        }
+        // recovered mirrors need their base among the recovered
+        // non-mirror entries (the hot tier is empty at startup)
+        // tdlint: allow(hash_iter) -- keys collected and sorted below
+        let mut orphans: Vec<StoreKey> = self
+            .entries
+            .iter()
+            .filter(|(_, m)| {
+                m.kind == ColdKind::Mirror
+                    && !m.master.is_some_and(|mk| {
+                        self.entries
+                            .get(&mk)
+                            .is_some_and(|b| b.kind != ColdKind::Mirror)
+                    })
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        orphans.sort();
+        for k in orphans {
+            self.remove(&k);
+            counters.cold_dead_drops += 1;
+            counters.dead_dropped_dependents += 1;
+        }
+        // shrink back under capacity (all recovered entries are
+        // unhinted, so eviction goes oldest-seq first)
+        self.evict_cold(0, None, 0, counters);
+        Ok(())
     }
 
     fn path(&self, seq: u64) -> PathBuf {
@@ -615,6 +821,23 @@ impl ColdTier {
         }
     }
 
+    /// Like [`Self::drop_mirrors_of`], but for bases lost to a *fault*
+    /// (quarantined or unwritable) rather than a capacity decision —
+    /// also counted as `dead_dropped_dependents` so fault blast radius
+    /// is observable separately from eviction policy.
+    pub(super) fn drop_dependents_of(
+        &mut self,
+        master: &StoreKey,
+        counters: &mut StoreCounters,
+    ) {
+        for mk in self.mirrors_of(master) {
+            if self.remove(&mk) {
+                counters.cold_dead_drops += 1;
+                counters.dead_dropped_dependents += 1;
+            }
+        }
+    }
+
     /// Steps-to-next-use at `clock` (unhinted or stale hints rank as "no
     /// known upcoming use" — first to go).
     fn steps(meta: &ColdMeta, clock: u64) -> u64 {
@@ -671,10 +894,12 @@ impl ColdTier {
         }
     }
 
-    /// Spill one payload, replacing any stale entry at `key`. Fails when
-    /// the serialized payload cannot fit cold capacity even after
-    /// eviction, or the file write fails — the caller counts the loss
-    /// (`evicted_to_nothing`).
+    /// Spill one payload, replacing any stale entry at `key`. Fails
+    /// typed: [`StoreFault::Capacity`] when the serialized payload
+    /// cannot fit cold capacity even after eviction,
+    /// [`StoreFault::Io`] when the crash-safe write (tmp + sync +
+    /// rename) still fails after [`MAX_ATTEMPTS`] bounded attempts —
+    /// the caller counts the loss (`evicted_to_nothing`).
     pub(super) fn insert(
         &mut self,
         key: StoreKey,
@@ -682,32 +907,71 @@ impl ColdTier {
         next_use: Option<u64>,
         clock: u64,
         counters: &mut StoreCounters,
-    ) -> Result<()> {
+    ) -> std::result::Result<(), StoreFault> {
         let buf = encode_payload(&key, payload);
         if buf.len() > self.cfg.cold_bytes {
-            bail!(
-                "spill payload of {} B exceeds cold capacity {} B",
-                buf.len(),
-                self.cfg.cold_bytes
-            );
+            return Err(StoreFault::Capacity {
+                need: buf.len(),
+                cap: self.cfg.cold_bytes,
+            });
         }
         if self.contains(&key) {
             self.remove(&key);
         }
         self.evict_cold(buf.len(), payload.master(), clock, counters);
         if self.bytes + buf.len() > self.cfg.cold_bytes {
-            bail!(
-                "spill payload of {} B cannot fit beside its protected \
-                 master within cold capacity {} B",
-                buf.len(),
-                self.cfg.cold_bytes
-            );
+            // the protected master of the incoming mirror occupies the
+            // remainder — a capacity fault, not an I/O one
+            return Err(StoreFault::Capacity {
+                need: buf.len(),
+                cap: self.cfg.cold_bytes,
+            });
         }
         let seq = self.next_seq;
         let path = self.path(seq);
-        fs::write(&path, &buf).with_context(|| {
-            format!("writing spill file {}", path.display())
-        })?;
+        // one fault decision per logical write, drawn before any
+        // attempt — retries never consume randomness
+        let fault = match self.faults.as_mut() {
+            Some(inj) => inj.write_fault(),
+            None => WriteFault::None,
+        };
+        let mut attempt = 0;
+        loop {
+            let injected = match fault {
+                WriteFault::None => false,
+                WriteFault::Transient => attempt == 0,
+                WriteFault::Persistent => true,
+            };
+            let res = if injected {
+                Err(StoreFault::Io {
+                    op: "write",
+                    detail: format!(
+                        "injected spill-write failure for {}",
+                        path.display()
+                    ),
+                })
+            } else {
+                write_atomic(&path, &buf).map_err(|e| StoreFault::Io {
+                    op: "write",
+                    detail: format!(
+                        "writing spill file {}: {e}",
+                        path.display()
+                    ),
+                })
+            };
+            match res {
+                Ok(()) => break,
+                Err(f) => {
+                    counters.io_errors += 1;
+                    attempt += 1;
+                    if attempt < MAX_ATTEMPTS {
+                        counters.retries += 1;
+                    } else {
+                        return Err(f);
+                    }
+                }
+            }
+        }
         self.next_seq += 1;
         let meta = ColdMeta {
             bytes: buf.len(),
@@ -724,32 +988,105 @@ impl ColdTier {
         Ok(())
     }
 
-    /// Take one payload out (meta and file are removed either way).
-    /// `None` when absent; `Some(Err)` when the file could not be read or
-    /// decoded.
+    /// Take one payload out. `None` when absent; `Some(Err)` carries
+    /// the typed fault after the degradation ladder ran its course:
+    /// transient read errors were retried (bounded), and a
+    /// corrupt/truncated/unreadable file was **quarantined** (renamed
+    /// `*.quarantine`) — the entry's ledger record is gone either way,
+    /// so the caller's recompute path takes over.
     pub(super) fn take(
         &mut self,
         key: &StoreKey,
-    ) -> Option<Result<SpillPayload>> {
+        counters: &mut StoreCounters,
+    ) -> Option<std::result::Result<SpillPayload, StoreFault>> {
         let meta = *self.entries.get(key)?;
         self.entries.remove(key);
         self.bytes -= meta.bytes;
         self.detach_edge(key, meta.master);
         let path = self.path(meta.seq);
-        let res = (|| -> Result<SpillPayload> {
-            let buf = fs::read(&path).with_context(|| {
-                format!("reading spill file {}", path.display())
-            })?;
-            let (k, p) = decode_payload(&buf)?;
-            if k != *key {
-                bail!(
-                    "spill file {} holds {k:?}, expected {key:?}",
-                    path.display()
-                );
+        // one fault decision per logical read (see insert)
+        let fault = match self.faults.as_mut() {
+            Some(inj) => inj.read_fault(),
+            None => ReadFault::None,
+        };
+        let mut attempt = 0;
+        let read = loop {
+            let injected = match fault {
+                ReadFault::Transient => attempt == 0,
+                ReadFault::Persistent => true,
+                _ => false,
+            };
+            let res = if injected {
+                Err(StoreFault::Io {
+                    op: "read",
+                    detail: format!(
+                        "injected spill-read failure for {}",
+                        path.display()
+                    ),
+                })
+            } else {
+                fs::read(&path).map_err(|e| StoreFault::Io {
+                    op: "read",
+                    detail: format!(
+                        "reading spill file {}: {e}",
+                        path.display()
+                    ),
+                })
+            };
+            match res {
+                Ok(buf) => break Ok(buf),
+                Err(f) => {
+                    counters.io_errors += 1;
+                    attempt += 1;
+                    if attempt < MAX_ATTEMPTS {
+                        counters.retries += 1;
+                    } else {
+                        break Err(f);
+                    }
+                }
             }
-            Ok(p)
-        })();
-        let _ = fs::remove_file(&path);
+        };
+        let res = match read {
+            Err(f) => {
+                // unreadable after bounded retries: keep the file for
+                // forensics, but never as a live spill
+                quarantine_file(&path, counters);
+                Err(f)
+            }
+            Ok(mut buf) => {
+                // injected data faults model what the disk returned
+                if let Some(inj) = self.faults.as_mut() {
+                    match fault {
+                        ReadFault::Corrupt => inj.corrupt_bytes(&mut buf),
+                        ReadFault::Truncate => {
+                            let at = inj.truncate_at(buf.len());
+                            buf.truncate(at);
+                        }
+                        _ => {}
+                    }
+                }
+                match decode_payload(&buf) {
+                    Ok((k, p)) if k == *key => {
+                        let _ = fs::remove_file(&path);
+                        Ok(p)
+                    }
+                    Ok((k, _)) => {
+                        quarantine_file(&path, counters);
+                        Err(StoreFault::Corrupt {
+                            detail: format!(
+                                "spill file {} holds {k:?}, expected \
+                                 {key:?}",
+                                path.display()
+                            ),
+                        })
+                    }
+                    Err(e) => {
+                        quarantine_file(&path, counters);
+                        Err(StoreFault::Corrupt { detail: e.to_string() })
+                    }
+                }
+            }
+        };
         Some(res)
     }
 
@@ -801,12 +1138,23 @@ impl ColdTier {
 
 impl Drop for ColdTier {
     fn drop(&mut self) {
+        if self.cfg.recover {
+            // recovery semantics: spill files survive the session so
+            // the next tier can rebuild from them
+            return;
+        }
+        // every live entry's file was created this run (without
+        // `recover`, files only enter the ledger via `insert`), so
+        // removing them touches nothing pre-existing
         // tdlint: allow(hash_iter) -- file removal, any order works
         for m in self.entries.values() {
             let _ = fs::remove_file(self.path(m.seq));
         }
-        // only removed when empty — never recursive on a user path
-        let _ = fs::remove_dir(&self.cfg.spill_dir);
+        // only the directory this tier created, and only when empty —
+        // never recursive on a user path
+        if self.created_dir {
+            let _ = fs::remove_dir(&self.cfg.spill_dir);
+        }
     }
 }
 
@@ -855,18 +1203,27 @@ mod tests {
         StoreKey { content: c, role: Role::AgentCache { agent } }
     }
 
-    fn tier(name: &str, cold: usize) -> ColdTier {
-        let dir = std::env::temp_dir().join(format!(
+    fn unit_dir(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
             "td-tier-unit-{}-{name}",
             std::process::id()
-        ));
-        ColdTier::new(TierConfig {
+        ))
+    }
+
+    fn cfg(dir: PathBuf, cold: usize) -> TierConfig {
+        TierConfig {
             cold_bytes: cold,
             spill_dir: dir,
             quantize: false,
             format: QuantFormat::Int8,
-        })
-        .unwrap()
+            fault_plan: None,
+            recover: false,
+        }
+    }
+
+    fn tier(name: &str, cold: usize) -> ColdTier {
+        let mut c = StoreCounters::default();
+        ColdTier::new(cfg(unit_dir(name), cold), &mut c).unwrap()
     }
 
     #[test]
@@ -1020,13 +1377,14 @@ mod tests {
         assert!(t.contains(&key(1)));
         assert!(t.bytes() > 0);
         t.assert_invariants();
-        let p = t.take(&key(1)).unwrap().unwrap();
+        let p = t.take(&key(1), &mut c).unwrap().unwrap();
         match p {
             SpillPayload::Dense(d) => assert_eq!(d.kv, e.kv),
             _ => panic!("wrong payload"),
         }
         assert_eq!(t.bytes(), 0);
-        assert!(t.take(&key(1)).is_none());
+        assert!(t.take(&key(1), &mut c).is_none());
+        assert_eq!(c.io_errors + c.retries + c.quarantined, 0);
         t.assert_invariants();
     }
 
@@ -1123,19 +1481,11 @@ mod tests {
     #[test]
     fn drop_removes_spill_files() {
         let sp = spec();
-        let dir = std::env::temp_dir().join(format!(
-            "td-tier-unit-{}-dropclean",
-            std::process::id()
-        ));
+        let dir = unit_dir("dropclean");
         {
-            let mut t = ColdTier::new(TierConfig {
-                cold_bytes: 1 << 20,
-                spill_dir: dir.clone(),
-                quantize: false,
-                format: QuantFormat::Int8,
-            })
-            .unwrap();
             let mut c = StoreCounters::default();
+            let mut t =
+                ColdTier::new(cfg(dir.clone(), 1 << 20), &mut c).unwrap();
             t.insert(
                 key(1),
                 &SpillPayload::Dense(dense(&sp, 16, 1.0)),
@@ -1147,6 +1497,338 @@ mod tests {
             assert!(dir.exists());
         }
         assert!(!dir.exists(), "drop removes files and the empty dir");
+    }
+
+    #[test]
+    fn drop_leaves_preexisting_dir_and_foreign_files_alone() {
+        let sp = spec();
+        let dir = unit_dir("drop-foreign");
+        fs::create_dir_all(&dir).unwrap();
+        let foreign = dir.join("user-data.txt");
+        fs::write(&foreign, b"not a spill file").unwrap();
+        {
+            let mut c = StoreCounters::default();
+            let mut t =
+                ColdTier::new(cfg(dir.clone(), 1 << 20), &mut c).unwrap();
+            t.insert(
+                key(1),
+                &SpillPayload::Dense(dense(&sp, 16, 1.0)),
+                None,
+                0,
+                &mut c,
+            )
+            .unwrap();
+        }
+        assert!(
+            foreign.exists() && dir.exists(),
+            "pre-existing dir and foreign files survive drop"
+        );
+        fs::remove_file(&foreign).unwrap();
+        fs::remove_dir(&dir).unwrap();
+    }
+
+    #[test]
+    fn drop_with_recover_preserves_spill_files() {
+        let sp = spec();
+        let dir = unit_dir("drop-recover");
+        {
+            let mut c = StoreCounters::default();
+            let mut rcfg = cfg(dir.clone(), 1 << 20);
+            rcfg.recover = true;
+            let mut t = ColdTier::new(rcfg, &mut c).unwrap();
+            t.insert(
+                key(1),
+                &SpillPayload::Dense(dense(&sp, 16, 1.0)),
+                None,
+                0,
+                &mut c,
+            )
+            .unwrap();
+        }
+        let survivors: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.path())
+            .collect();
+        assert_eq!(survivors.len(), 1, "spill file survives the session");
+        for p in survivors {
+            fs::remove_file(p).unwrap();
+        }
+        fs::remove_dir(&dir).unwrap();
+    }
+
+    #[test]
+    fn spill_write_is_atomic_no_tmp_left_behind() {
+        let sp = spec();
+        let dir = unit_dir("atomic");
+        let mut c = StoreCounters::default();
+        let mut t = ColdTier::new(cfg(dir.clone(), 1 << 20), &mut c).unwrap();
+        t.insert(
+            key(1),
+            &SpillPayload::Dense(dense(&sp, 16, 1.0)),
+            None,
+            0,
+            &mut c,
+        )
+        .unwrap();
+        let names: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["spill-0.tdm".to_string()]);
+    }
+
+    #[test]
+    fn tdm2_detects_a_flipped_bit_tdm1_legacy_still_decodes() {
+        let sp = spec();
+        let e = dense(&sp, 24, 1.5);
+        let buf = encode_payload(&key(3), &SpillPayload::Dense(e.clone()));
+        assert_eq!(&buf[..4], b"TDM2");
+        // flip one payload bit: the CRC catches it
+        let mut bad = buf.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x10;
+        let err = decode_payload(&bad).unwrap_err();
+        assert!(
+            err.to_string().contains("checksum"),
+            "corruption is a checksum error, got: {err}"
+        );
+        // a legacy TDM1 image is the same body without the CRC word
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(b"TDM1");
+        v1.extend_from_slice(&buf[8..]);
+        let (k, p) = decode_payload(&v1).unwrap();
+        assert_eq!(k, key(3));
+        match p {
+            SpillPayload::Dense(d) => assert_eq!(d.kv, e.kv),
+            _ => panic!("wrong payload kind"),
+        }
+    }
+
+    #[test]
+    fn corrupt_restore_quarantines_and_reports_typed_fault() {
+        let sp = spec();
+        let dir = unit_dir("quarantine");
+        let mut c = StoreCounters::default();
+        let mut fcfg = cfg(dir.clone(), 1 << 20);
+        fcfg.fault_plan = Some(FaultPlan {
+            corrupt: 1.0,
+            ..FaultPlan::quiet(99)
+        });
+        let mut t = ColdTier::new(fcfg, &mut c).unwrap();
+        t.insert(
+            key(1),
+            &SpillPayload::Dense(dense(&sp, 16, 1.0)),
+            None,
+            0,
+            &mut c,
+        )
+        .unwrap();
+        let got = t.take(&key(1), &mut c).unwrap();
+        assert!(
+            matches!(got, Err(StoreFault::Corrupt { .. })),
+            "100% corruption must surface as StoreFault::Corrupt"
+        );
+        assert_eq!(c.quarantined, 1);
+        assert!(!t.contains(&key(1)));
+        assert!(
+            dir.join("spill-0.tdm.quarantine").exists(),
+            "corrupt file renamed, not deleted"
+        );
+        t.assert_invariants();
+        drop(t);
+        fs::remove_file(dir.join("spill-0.tdm.quarantine")).unwrap();
+        fs::remove_dir(&dir).unwrap();
+    }
+
+    #[test]
+    fn transient_faults_retry_and_succeed_persistent_write_fails_typed() {
+        let sp = spec();
+        let mut c = StoreCounters::default();
+        let dir = unit_dir("transient");
+        let mut fcfg = cfg(dir, 1 << 20);
+        fcfg.fault_plan = Some(FaultPlan {
+            write_fail: 1.0,
+            read_fail: 1.0,
+            transient: 1.0,
+            ..FaultPlan::quiet(5)
+        });
+        let mut t = ColdTier::new(fcfg, &mut c).unwrap();
+        let e = dense(&sp, 16, 2.0);
+        // transient write: one retry, then success
+        t.insert(key(1), &SpillPayload::Dense(e.clone()), None, 0, &mut c)
+            .unwrap();
+        assert_eq!((c.io_errors, c.retries), (1, 1));
+        // transient read: one retry, then a bitwise restore
+        match t.take(&key(1), &mut c).unwrap().unwrap() {
+            SpillPayload::Dense(d) => assert_eq!(d.kv, e.kv),
+            _ => panic!("wrong payload"),
+        }
+        assert_eq!((c.io_errors, c.retries, c.quarantined), (2, 2, 0));
+
+        // persistent write: bounded attempts then a typed Io fault
+        let mut c2 = StoreCounters::default();
+        let mut pcfg = cfg(unit_dir("persistent"), 1 << 20);
+        pcfg.fault_plan = Some(FaultPlan {
+            write_fail: 1.0,
+            transient: 0.0,
+            ..FaultPlan::quiet(5)
+        });
+        let mut t2 = ColdTier::new(pcfg, &mut c2).unwrap();
+        let err = t2
+            .insert(key(1), &SpillPayload::Dense(e), None, 0, &mut c2)
+            .unwrap_err();
+        assert!(matches!(err, StoreFault::Io { op: "write", .. }));
+        assert_eq!(c2.io_errors, MAX_ATTEMPTS as u64);
+        assert_eq!(c2.retries, MAX_ATTEMPTS as u64 - 1);
+        assert!(!t2.contains(&key(1)));
+        t2.assert_invariants();
+    }
+
+    #[test]
+    fn recovery_rebuilds_index_quarantines_torn_and_corrupt_files() {
+        let sp = spec();
+        let dir = unit_dir("recover-rt");
+        let e1 = dense(&sp, 16, 1.0);
+        let e2 = dense(&sp, 24, 2.0);
+        {
+            let mut c = StoreCounters::default();
+            let mut rcfg = cfg(dir.clone(), 1 << 20);
+            rcfg.recover = true;
+            let mut t = ColdTier::new(rcfg, &mut c).unwrap();
+            t.insert(key(1), &SpillPayload::Dense(e1.clone()), None, 0, &mut c)
+                .unwrap();
+            t.insert(key(2), &SpillPayload::Dense(e2.clone()), None, 0, &mut c)
+                .unwrap();
+            // "crash": drop with recover on keeps every file
+        }
+        // corrupt one surviving file on disk + plant a torn tmp write
+        let f2 = dir.join("spill-1.tdm");
+        let mut bytes = fs::read(&f2).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&f2, &bytes).unwrap();
+        fs::write(dir.join("spill-7.tdm.tmp"), b"torn mid-write").unwrap();
+
+        let mut c = StoreCounters::default();
+        let mut rcfg = cfg(dir.clone(), 1 << 20);
+        rcfg.recover = true;
+        let mut t = ColdTier::new(rcfg, &mut c).unwrap();
+        assert_eq!(c.recovered_entries, 1, "intact entry re-indexed");
+        assert_eq!(c.quarantined, 2, "torn tmp + corrupt file quarantined");
+        assert!(t.contains(&key(1)));
+        assert!(!t.contains(&key(2)));
+        assert!(dir.join("spill-1.tdm.quarantine").exists());
+        assert!(dir.join("spill-7.tdm.tmp.quarantine").exists());
+        t.assert_invariants();
+        // the recovered entry restores bitwise
+        match t.take(&key(1), &mut c).unwrap().unwrap() {
+            SpillPayload::Dense(d) => assert_eq!(d.kv, e1.kv),
+            _ => panic!("wrong payload"),
+        }
+        // fresh spills continue past the recovered sequence numbers
+        t.insert(key(9), &SpillPayload::Dense(e2), None, 0, &mut c)
+            .unwrap();
+        assert!(t.meta(&key(9)).unwrap().seq >= 2);
+        drop(t);
+        for f in fs::read_dir(&dir).unwrap().flatten() {
+            fs::remove_file(f.path()).unwrap();
+        }
+        fs::remove_dir(&dir).unwrap();
+    }
+
+    #[test]
+    fn recovery_dead_drops_mirrors_with_no_surviving_base() {
+        let sp = spec();
+        let dir = unit_dir("recover-orphan");
+        let master = dense(&sp, 64, 1.0);
+        let mut mk = master.kv.clone();
+        let o = mk.off(0, 17);
+        mk.k[o] += 2.0;
+        let d = diff_blocks(&master.kv, &mk, 64, sp.block_tokens);
+        let m = MirrorEntry {
+            master: akey(1, 0),
+            tokens: master.tokens.clone(),
+            positions: (0..64).collect(),
+            diff: identity_aligned(d, 4, 64),
+        };
+        {
+            let mut c = StoreCounters::default();
+            let mut rcfg = cfg(dir.clone(), 1 << 20);
+            rcfg.recover = true;
+            let mut t = ColdTier::new(rcfg, &mut c).unwrap();
+            t.insert(
+                akey(1, 0),
+                &SpillPayload::Dense(master),
+                None,
+                0,
+                &mut c,
+            )
+            .unwrap();
+            t.insert(akey(2, 1), &SpillPayload::Mirror(m), None, 0, &mut c)
+                .unwrap();
+        }
+        // lose the master's file outright (simulated disk loss)
+        fs::remove_file(dir.join("spill-0.tdm")).unwrap();
+        let mut c = StoreCounters::default();
+        let mut rcfg = cfg(dir.clone(), 1 << 20);
+        rcfg.recover = true;
+        let t = ColdTier::new(rcfg, &mut c).unwrap();
+        assert!(
+            !t.contains(&akey(2, 1)),
+            "mirror without a surviving base is dead-dropped"
+        );
+        assert_eq!(c.dead_dropped_dependents, 1);
+        assert_eq!(c.cold_dead_drops, 1);
+        assert!(t.is_empty());
+        t.assert_invariants();
+        drop(t);
+        for f in fs::read_dir(&dir).unwrap().flatten() {
+            fs::remove_file(f.path()).unwrap();
+        }
+        fs::remove_dir(&dir).unwrap();
+    }
+
+    #[test]
+    fn fault_schedule_is_replayable() {
+        let sp = spec();
+        let plan = FaultPlan {
+            write_fail: 0.4,
+            read_fail: 0.3,
+            corrupt: 0.2,
+            transient: 0.5,
+            ..FaultPlan::quiet(1234)
+        };
+        let run = |name: &str| -> (Vec<bool>, StoreCounters) {
+            let mut c = StoreCounters::default();
+            let mut fcfg = cfg(unit_dir(name), 1 << 20);
+            fcfg.fault_plan = Some(plan);
+            let mut t = ColdTier::new(fcfg, &mut c).unwrap();
+            let mut outcomes = Vec::new();
+            for i in 0..24u64 {
+                let ok = t
+                    .insert(
+                        key(i),
+                        &SpillPayload::Dense(dense(&sp, 16, i as f32)),
+                        None,
+                        0,
+                        &mut c,
+                    )
+                    .is_ok();
+                outcomes.push(ok);
+                if ok && i % 2 == 0 {
+                    outcomes
+                        .push(t.take(&key(i), &mut c).unwrap().is_ok());
+                }
+            }
+            (outcomes, c)
+        };
+        let (a, ca) = run("replay-a");
+        let (b, cb) = run("replay-b");
+        assert_eq!(a, b, "same plan, same ops => same fault outcomes");
+        assert_eq!(ca, cb, "and identical counters");
+        assert!(ca.io_errors > 0, "plan actually injected faults");
     }
 
     #[test]

@@ -769,6 +769,8 @@ fn prop_tiered_store_churn_preserves_invariants() {
             } else {
                 QuantFormat::Q4
             },
+            fault_plan: None,
+            recover: false,
         })
         .unwrap();
         let nk = 12;
@@ -858,6 +860,213 @@ fn prop_tiered_store_churn_preserves_invariants() {
             st.assert_invariants();
             assert!(st.bytes() <= cap, "hot over budget");
             assert!(st.cold_bytes() <= cold_cap, "cold over budget");
+        }
+        drop(st);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+// Disk-bound (spill files + crash/recovery scans through temp_dir);
+// interpreted file I/O makes this prohibitively slow under miri.
+#[cfg_attr(miri, ignore)]
+fn prop_tiered_crash_recovery_churn_preserves_invariants() {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+    forall(25, |rng| {
+        let sp = spec();
+        let bt = sp.block_tokens;
+        let case = CASE.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "td-prop-recover-{}-{case}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mk_key = |i: usize| StoreKey {
+            content: i as u64,
+            role: if i % 2 == 0 {
+                Role::Segment
+            } else {
+                Role::AgentCache { agent: i }
+            },
+        };
+        let mk_dense = |len: usize, salt: u32| {
+            let mut kv = KvBuf::zeroed(sp.n_layers, len, sp.d_model);
+            for (i, x) in kv.k.iter_mut().enumerate() {
+                *x = ((i as u32) ^ salt) as f32 / 100.0;
+            }
+            DenseEntry {
+                tokens: (0..len as u32)
+                    .map(|i| 4 + ((i ^ salt) % 200))
+                    .collect(),
+                positions: (0..len as i32).collect(),
+                kv,
+            }
+        };
+        // hot capacity ~2 entries so puts spill constantly; exact
+        // (unquantized) payloads so a surviving entry is bitwise
+        let probe = mk_dense(48, 0);
+        let eb = probe.kv.bytes() + 48 * 8;
+        let cap = eb * 2 + rng.below(4096);
+        let cold_cap = eb * rng.range(3, 8);
+        let mk_store = |sp: &ModelSpec| {
+            let mut st = CacheStore::new(sp, cap);
+            st.configure_tier(TierConfig {
+                cold_bytes: cold_cap,
+                spill_dir: dir.clone(),
+                quantize: false,
+                format: QuantFormat::Int8,
+                fault_plan: None,
+                recover: true,
+            })
+            .unwrap();
+            st
+        };
+        let mut st = mk_store(&sp);
+        // content ledger: the tokens last stored at each key — every hit
+        // (hot or restored) must reproduce them, across any crash
+        let mut ledger: HashMap<StoreKey, Vec<u32>> = HashMap::new();
+        let nk = 10;
+        for _ in 0..rng.range(25, 60) {
+            let i = rng.below(nk);
+            let k = mk_key(i);
+            match rng.below(8) {
+                0 | 1 | 2 => {
+                    let len = 16 * rng.range(1, 5); // 16..64
+                    let e = mk_dense(len, rng.below(1 << 20) as u32);
+                    let toks = e.tokens.clone();
+                    if st.put_dense(k, e).is_ok() {
+                        ledger.insert(k, toks);
+                    }
+                }
+                3 => {
+                    let mkey = mk_key(rng.below(nk));
+                    let master = match st.get(&mkey) {
+                        Some(Fetched::Dense(d)) => {
+                            Some((d.tokens.clone(), d.kv.clone()))
+                        }
+                        _ => None,
+                    };
+                    if let Some((toks, mkv)) = master {
+                        if k != mkey {
+                            let len = toks.len();
+                            let mut kv2 = mkv.clone();
+                            let o = kv2.off(0, rng.below(len));
+                            kv2.k[o] += 7.0;
+                            let d = diff_blocks(&mkv, &kv2, len, bt);
+                            let d = identity_aligned(
+                                d, len.div_ceil(bt), len,
+                            );
+                            if st
+                                .put_mirror(
+                                    k,
+                                    MirrorEntry {
+                                        master: mkey,
+                                        tokens: toks.clone(),
+                                        positions: (0..len as i32)
+                                            .collect(),
+                                        diff: d,
+                                    },
+                                )
+                                .is_ok()
+                            {
+                                ledger.insert(k, toks);
+                            }
+                        }
+                    }
+                }
+                4 => {
+                    // CRASH: no destructor runs, no cleanup happens —
+                    // then a new store recovers the cold index from
+                    // whatever spill files survived on disk
+                    std::mem::forget(std::mem::replace(
+                        &mut st,
+                        mk_store(&sp),
+                    ));
+                    // hot-resident entries died with the process; any
+                    // key the recovered index still serves must match
+                    // the ledger (checked by the get arm below)
+                    assert!(
+                        st.cold_bytes() <= cold_cap,
+                        "recovery overfilled the cold tier"
+                    );
+                }
+                5 => {
+                    let keys: Vec<StoreKey> = (0..nk)
+                        .filter(|_| rng.below(3) == 0)
+                        .map(mk_key)
+                        .collect();
+                    st.prefetch(&keys);
+                }
+                _ => {
+                    // a hit — hot, restored, or recovered-then-restored
+                    // — must reproduce exactly the tokens last stored
+                    let resident = st.contains(&k);
+                    match st.get(&k) {
+                        Some(Fetched::Dense(d)) => {
+                            if let Some(toks) = ledger.get(&k) {
+                                assert_eq!(
+                                    &d.tokens, toks,
+                                    "dense hit diverged from ledger"
+                                );
+                            }
+                        }
+                        Some(Fetched::Mirror(h)) => {
+                            assert_eq!(
+                                h.master.kv.seq,
+                                h.master.tokens.len()
+                            );
+                            if let Some(toks) = ledger.get(&k) {
+                                assert_eq!(
+                                    &h.mirror.tokens, toks,
+                                    "mirror hit diverged from ledger"
+                                );
+                            }
+                        }
+                        None => assert!(!resident, "resident key missed"),
+                    }
+                }
+            }
+            st.assert_invariants();
+            assert!(st.bytes() <= cap, "hot over budget");
+            assert!(st.cold_bytes() <= cold_cap, "cold over budget");
+        }
+        // a torn in-flight write + one corrupted spill file, then a
+        // final crash/recover: recovery must quarantine both, keep the
+        // rest, and leave a store whose hits still match the ledger
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("spill-77777.tdm.tmp"), b"torn").unwrap();
+        let victim = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.path())
+            .find(|p| {
+                p.extension().is_some_and(|x| x == "tdm")
+                    && std::fs::metadata(p)
+                        .is_ok_and(|m| m.len() > 12)
+            });
+        if let Some(p) = &victim {
+            let mut buf = std::fs::read(p).unwrap();
+            let mid = buf.len() / 2;
+            buf[mid] ^= 0x20;
+            std::fs::write(p, &buf).unwrap();
+        }
+        std::mem::forget(std::mem::replace(&mut st, mk_store(&sp)));
+        let c = st.counters();
+        assert!(
+            c.quarantined >= 1 + u64::from(victim.is_some()),
+            "torn + corrupt files must be quarantined: {c:?}"
+        );
+        st.assert_invariants();
+        for i in 0..nk {
+            let k = mk_key(i);
+            if let Some(Fetched::Dense(d)) = st.get(&k) {
+                if let Some(toks) = ledger.get(&k) {
+                    assert_eq!(&d.tokens, toks);
+                }
+            }
+            st.assert_invariants();
         }
         drop(st);
         let _ = std::fs::remove_dir_all(&dir);
