@@ -41,7 +41,7 @@ struct Row {
 }
 
 fn run_case(
-    rt: &std::rc::Rc<dyn tokendance::runtime::ModelRuntime>,
+    rt: &std::sync::Arc<dyn tokendance::runtime::ModelRuntime>,
     model: &str,
     agents: usize,
     collective: bool,

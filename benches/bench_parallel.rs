@@ -1,0 +1,140 @@
+//! Bench: per-round wall clock vs engine worker count.
+//!
+//! Drives the ISSUE-9 reference workload — Teams{4} topology, 64 agents,
+//! 3 rounds, TokenDance policy — at 1/2/4 workers and reports the mean
+//! per-round wall clock plus the engine's own assembly/reuse timers. The
+//! worker pool parallelizes per-cohort composite assembly, mirror
+//! materialization, and per-signature encode expectation builds; a
+//! Teams{4} round has 16 independent cohorts, so the fan-out has real
+//! width. Token streams and logical counters are asserted identical
+//! across worker counts (the golden-digest guarantee, re-checked here so
+//! a perf run can never silently trade correctness for speed).
+//!
+//! With `BENCH_JSON=BENCH_parallel.json` each arm emits machine-readable
+//! `round_secs` / `speedup_vs_serial` lines (see harness.rs).
+
+include!("harness.rs");
+
+use tokendance::engine::Engine;
+use tokendance::serve::RoundSubmission;
+use tokendance::workload::{Session, Topology, WorkloadConfig};
+
+const AGENTS: usize = 64;
+const ROUNDS: usize = 3;
+
+struct Arm {
+    workers: usize,
+    round_secs: f64,
+    asm_secs: f64,
+    reuse_secs: f64,
+    digest: u64,
+}
+
+fn run_arm(
+    rt: &std::sync::Arc<dyn tokendance::runtime::ModelRuntime>,
+    workers: usize,
+) -> Arm {
+    let mut eng = Engine::builder("sim-7b")
+        .pool_blocks(16384)
+        .workers(workers)
+        .runtime(rt.clone())
+        .build()
+        .unwrap();
+    let mut cfg = WorkloadConfig::generative_agents(1, AGENTS, ROUNDS)
+        .with_topology(Topology::Teams { size: 4 });
+    cfg.max_new_tokens = 16;
+    let mut session = Session::new(cfg, 0);
+    let mut rounds = 0usize;
+    let mut transcript: Vec<u8> = Vec::new();
+    let t0 = Instant::now();
+    while !session.done() {
+        let sub = RoundSubmission::new(session.global_round())
+            .requests(session.next_round());
+        eng.submit_round(sub).unwrap();
+        let mut outs: Vec<(usize, Vec<u32>)> = eng
+            .drain()
+            .unwrap()
+            .iter()
+            .map(|c| (c.agent, c.generated.clone()))
+            .collect();
+        outs.sort_by_key(|(a, _)| *a);
+        for (a, toks) in &outs {
+            transcript.extend_from_slice(&(*a as u64).to_le_bytes());
+            for t in toks {
+                transcript.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        session.absorb(&outs).unwrap();
+        rounds += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = &eng.metrics;
+    // fold the logical counters in with the token streams: any
+    // worker-count-dependent behavior breaks the digest equality below
+    for c in [
+        m.assembly_lookups,
+        m.assembly_dedup_hits,
+        m.assembly_restores,
+        m.prefill_reused,
+        m.prefill_full,
+        m.encode_lookups,
+        m.expected_memo_hits,
+        m.encode_skipped_blocks,
+        m.encode_rope_recovers,
+    ] {
+        transcript.extend_from_slice(&c.to_le_bytes());
+    }
+    Arm {
+        workers,
+        round_secs: wall / rounds.max(1) as f64,
+        asm_secs: m.assembly_secs.mean(),
+        reuse_secs: m.reuse_secs.mean(),
+        digest: tokendance::util::fnv1a(&transcript),
+    }
+}
+
+fn main() {
+    let (rt, real) = bench_runtime();
+    println!("== bench_parallel (worker pool, Teams{{4}} x {AGENTS} agents) ==");
+    println!(
+        "{ROUNDS} rounds, TokenDance, retain=true, runtime={}",
+        if real { "pjrt" } else { "mock" }
+    );
+    println!(
+        "{:>7}  {:>11}  {:>10}  {:>10}  {:>8}",
+        "workers", "round-wall", "asm/round", "reuse/rnd", "speedup"
+    );
+    let mut serial = f64::NAN;
+    let mut serial_digest = None;
+    for &workers in &[1usize, 2, 4] {
+        let a = run_arm(&rt, workers);
+        if workers == 1 {
+            serial = a.round_secs;
+            serial_digest = Some(a.digest);
+        }
+        let speedup = serial / a.round_secs;
+        assert_eq!(
+            Some(a.digest),
+            serial_digest,
+            "workers={workers} changed outputs or logical counters"
+        );
+        println!(
+            "{:>7}  {:>11}  {:>10}  {:>10}  {:>7.2}x",
+            a.workers,
+            fmt(a.round_secs),
+            fmt(a.asm_secs),
+            fmt(a.reuse_secs),
+            speedup
+        );
+        bench_json(
+            "parallel",
+            &format!("round_secs_w{workers}"),
+            a.round_secs,
+        );
+        bench_json(
+            "parallel",
+            &format!("speedup_vs_serial_w{workers}"),
+            speedup,
+        );
+    }
+}

@@ -96,15 +96,15 @@ pub fn bench_json(bench: &str, metric: &str, value: f64) {
 
 /// Runtime selection for benches: real artifacts when present unless
 /// BENCH_MOCK=1; iterations scale down on the real runtime.
-pub fn bench_runtime() -> (std::rc::Rc<dyn tokendance::runtime::ModelRuntime>, bool) {
-    use std::rc::Rc;
+pub fn bench_runtime() -> (std::sync::Arc<dyn tokendance::runtime::ModelRuntime>, bool) {
+    use std::sync::Arc;
     let force_mock = std::env::var("BENCH_MOCK").is_ok();
     let dir = std::path::PathBuf::from("artifacts");
     if !force_mock && dir.join("manifest.json").exists() {
         match tokendance::runtime::PjrtRuntime::load(&dir) {
-            Ok(rt) => return (Rc::new(rt), true),
+            Ok(rt) => return (Arc::new(rt), true),
             Err(e) => eprintln!("falling back to mock runtime: {e:#}"),
         }
     }
-    (Rc::new(tokendance::runtime::MockRuntime::new()), false)
+    (Arc::new(tokendance::runtime::MockRuntime::new()), false)
 }

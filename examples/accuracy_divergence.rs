@@ -8,14 +8,14 @@
 //! ```
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use tokendance::engine::{Engine, Policy};
 use tokendance::runtime::PjrtRuntime;
 use tokendance::serve::RoundSubmission;
 use tokendance::workload::{Session, WorkloadConfig};
 
-fn run(rt: Rc<PjrtRuntime>, policy: Policy, rounds: usize)
+fn run(rt: Arc<PjrtRuntime>, policy: Policy, rounds: usize)
     -> anyhow::Result<Vec<Vec<(usize, Vec<u32>)>>>
 {
     let mut eng = Engine::builder("sim-7b")
@@ -43,7 +43,7 @@ fn run(rt: Rc<PjrtRuntime>, policy: Policy, rounds: usize)
 }
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(PjrtRuntime::load(Path::new("artifacts"))?);
+    let rt = Arc::new(PjrtRuntime::load(Path::new("artifacts"))?);
     let rounds = 6;
     println!("# accuracy probe: Election Discussions, 4 agents, {rounds} rounds\n");
     let exact = run(rt.clone(), Policy::VllmPrefix, rounds)?;

@@ -7,7 +7,7 @@
 //! ```
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use tokendance::engine::{Engine, Policy};
 use tokendance::runtime::{ModelRuntime, PjrtRuntime};
@@ -16,7 +16,7 @@ use tokendance::workload::driver::drive_sessions;
 use tokendance::workload::WorkloadConfig;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(PjrtRuntime::load(Path::new("artifacts"))?);
+    let rt = Arc::new(PjrtRuntime::load(Path::new("artifacts"))?);
     let model = "sim-7b";
     let slo = 1.5; // seconds, as in the paper
     let qps = 8.0;

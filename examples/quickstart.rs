@@ -9,7 +9,7 @@
 //! ```
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use tokendance::engine::{AgentRequest, Engine, Policy};
@@ -20,12 +20,12 @@ use tokendance::tokenizer::{decode, encode, BlockKind, RoundAwarePrompt};
 fn main() -> anyhow::Result<()> {
     // 1. the runtime: AOT-compiled XLA artifacts through PJRT when built
     //    (`make artifacts`), the deterministic mock otherwise
-    let rt: Rc<dyn ModelRuntime> =
+    let rt: Arc<dyn ModelRuntime> =
         match PjrtRuntime::load(Path::new("artifacts")) {
-            Ok(rt) => Rc::new(rt),
+            Ok(rt) => Arc::new(rt),
             Err(e) => {
                 eprintln!("(mock runtime: {e:#})");
-                Rc::new(MockRuntime::new())
+                Arc::new(MockRuntime::new())
             }
         };
 

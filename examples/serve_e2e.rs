@@ -9,7 +9,7 @@
 //! ```
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use tokendance::engine::{Engine, Policy};
 use tokendance::runtime::{ModelRuntime, PjrtRuntime};
@@ -18,7 +18,7 @@ use tokendance::workload::driver::drive_sessions;
 use tokendance::workload::WorkloadConfig;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(PjrtRuntime::load(Path::new("artifacts"))?);
+    let rt = Arc::new(PjrtRuntime::load(Path::new("artifacts"))?);
     let model = "sim-7b";
     let agents = 6;
     let rounds = 4;

@@ -21,7 +21,7 @@
 //! clustered and planned independently.) Within one plan, every distinct
 //! [`StoreKey`] the cohort references is resolved against the store
 //! **exactly once**: one `get`, one mirror materialization, and the
-//! resolved rows (shared `Rc` payloads, no tensor clones) fan out to
+//! resolved rows (shared `Arc` payloads, no tensor clones) fan out to
 //! every cohort member that references them. A key referenced by two
 //! *different* cohorts resolves once per cohort — cohorts never share a
 //! memo, so an unrelated cohort's fetches can never alias into this
@@ -32,6 +32,25 @@
 //! scans for the best donor for one cold prompt's tokens; distinct
 //! prompts are distinct queries, so only the elected key's fetch is
 //! memoized) and the fan-out copies themselves.
+//!
+//! **Parallel assembly** splits the round into three waves so the worker
+//! pool (engine/workers.rs) can fan the heavy ones out without touching
+//! the store off-thread:
+//!
+//! 1. *Plan* (serial): every `store.get`, donor decision, LCP/segment/
+//!    similarity election, provenance record and traffic counter — in
+//!    exactly the order the serial engine used, because `get` mutates
+//!    LRU state and hit/miss counters that the golden digests pin.
+//!    Output: per-agent [`CopyOp`] lists over `Arc`-shared payloads.
+//! 2. *Materialize* (parallel): every queued mirror donor restores via
+//!    `materialize_mirror`, which is pure given the handle + runtime.
+//! 3. *Build* (parallel): each agent's composite checks a buffer out of
+//!    its worker's scratch arena and replays its ops. Checked-out
+//!    buffers are all-zero by the arena invariant, so the result is
+//!    independent of which arena served which agent.
+//!
+//! With one worker every wave runs inline on the calling thread and the
+//! byte stream is identical to the pre-pool engine.
 //!
 //! The plan's counters flow into `RunMetrics` (`assembly_lookups`,
 //! `assembly_restores`, `assembly_dedup_hits`) so the once-per-round
@@ -47,27 +66,29 @@
 //! stall-restore count stays near zero (`store/tier.rs`).
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::prefill::{common_prefix, SIMILARITY_FALLBACK_MIN};
-use super::{Engine, Pending, Policy};
+use super::prefill::{clamp_reuse_len, common_prefix, SIMILARITY_FALLBACK_MIN};
+use super::{workers, Engine, Pending, Policy};
 use crate::collector::ReuseTask;
+use crate::model::ModelSpec;
 use crate::restore::{materialize_mirror, RestoreMode};
-use crate::runtime::{BlockProvenance, KvBuf, ModelRuntime};
-use crate::store::{CacheStore, DenseEntry, Fetched, Role, StoreKey};
+use crate::runtime::{BlockProvenance, KvBuf, KvScratch, ModelRuntime};
+use crate::store::{DenseEntry, Fetched, MirrorHandle, Role, StoreKey};
 
 /// One resolved cache source, shared by every agent that references it.
 #[derive(Clone)]
 pub(super) enum Resolved {
     /// Resident dense entry (segment donor, retained cache, or
     /// similarity-fallback donor) — a shared view of the stored tensor.
-    Dense(Rc<DenseEntry>),
-    /// Retained Mirror materialized once for the round: padded [L, S, d]
-    /// rows plus the donor token stream.
-    Restored { tokens: Rc<Vec<u32>>, kv: Rc<KvBuf> },
+    Dense(Arc<DenseEntry>),
+    /// Retained Mirror donor: the token stream is available immediately
+    /// (off the handle); the padded [L, S, d] rows land at `idx` in the
+    /// plan's `restored` table after the materialization wave.
+    Restored { tokens: Arc<Vec<u32>>, idx: usize },
     /// Nothing usable at this key (missing, or a Mirror where only dense
     /// donors apply).
     Missing,
@@ -77,6 +98,11 @@ pub(super) enum Resolved {
 #[derive(Default)]
 pub(super) struct GatherPlan {
     sources: HashMap<StoreKey, Resolved>,
+    /// Mirror donors awaiting materialization; `Resolved::Restored.idx`
+    /// indexes this queue and, after the wave, `restored`.
+    queue: Vec<MirrorHandle>,
+    /// Materialized mirror rows, filled by [`GatherPlan::materialize_queued`].
+    restored: Vec<Arc<KvBuf>>,
     /// Store lookups performed (== distinct keys referenced).
     pub lookups: u64,
     /// Mirror materializations performed (== distinct mirror donors).
@@ -90,67 +116,132 @@ pub(super) struct GatherPlan {
 impl GatherPlan {
     /// Resolve `key`, hitting the store only on first reference.
     /// `materialize_mirrors` is true for retained-cache keys (their
-    /// Mirrors restore through `mode`) and false for dense-only sources
-    /// (segment donors, similarity donors), mirroring the per-agent
-    /// path's `Fetched::Dense` filters.
+    /// Mirrors are queued for the restore wave) and false for dense-only
+    /// sources (segment donors, similarity donors), mirroring the
+    /// per-agent path's `Fetched::Dense` filters. The store is touched
+    /// here and only here — callers run this serially.
     fn resolve(
         &mut self,
-        store: &mut CacheStore,
-        rt: &dyn ModelRuntime,
-        model: &str,
-        mode: RestoreMode,
+        store: &mut crate::store::CacheStore,
         key: StoreKey,
         materialize_mirrors: bool,
-    ) -> Result<Resolved> {
+    ) -> Resolved {
         if let Some(r) = self.sources.get(&key) {
             self.dedup_hits += 1;
-            return Ok(r.clone());
+            return r.clone();
         }
         self.lookups += 1;
         let resolved = match store.get(&key) {
             Some(Fetched::Dense(e)) => Resolved::Dense(e),
             Some(Fetched::Mirror(h)) if materialize_mirrors => {
-                let t0 = Instant::now();
-                let (kv, _) = materialize_mirror(rt, model, &h, mode)?;
                 self.restores += 1;
-                self.restore_secs.push(t0.elapsed().as_secs_f64());
-                Resolved::Restored {
-                    tokens: Rc::new(h.mirror.tokens.clone()),
-                    kv: Rc::new(kv),
-                }
+                let tokens = Arc::new(h.mirror.tokens.clone());
+                let idx = self.queue.len();
+                self.queue.push(h);
+                Resolved::Restored { tokens, idx }
             }
             Some(Fetched::Mirror(_)) | None => Resolved::Missing,
         };
         self.sources.insert(key, resolved.clone());
-        Ok(resolved)
+        resolved
     }
+
+    /// Materialize every queued mirror donor, fanning across up to `wrk`
+    /// scoped threads. `restores` was already counted at resolve time (in
+    /// serial store order); only the wall-clock samples are taken here.
+    fn materialize_queued(
+        &mut self,
+        rt: &dyn ModelRuntime,
+        model: &str,
+        mode: RestoreMode,
+        wrk: usize,
+    ) -> Result<()> {
+        let pending: Vec<MirrorHandle> = self.queue.drain(..).collect();
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let done = workers::map_parallel(pending, wrk, |h| {
+            let t0 = Instant::now();
+            let (kv, _) = materialize_mirror(rt, model, &h, mode)?;
+            Ok((Arc::new(kv), t0.elapsed().as_secs_f64()))
+        })?;
+        for (kv, secs) in done {
+            self.restored.push(kv);
+            self.restore_secs.push(secs);
+        }
+        Ok(())
+    }
+}
+
+/// One row-range copy of a planned composite: replayed verbatim by the
+/// build wave, on whichever worker owns the agent.
+struct CopyOp {
+    src: CopySrc,
+    src_slot: usize,
+    dst_slot: usize,
+    len: usize,
+}
+
+enum CopySrc {
+    Dense(Arc<DenseEntry>),
+    /// Index into the plan's `restored` table.
+    Restored(usize),
+}
+
+/// Everything the build wave needs to produce one agent's `ReuseTask`
+/// without touching the store: the serial plan wave decided it all.
+pub(super) struct PlannedComposite {
+    id: u64,
+    tokens: Vec<u32>,
+    valid_len: usize,
+    old_pos: Vec<i32>,
+    valid: Vec<u8>,
+    reused: usize,
+    prov: BlockProvenance,
+    ops: Vec<CopyOp>,
 }
 
 impl Engine {
     /// Collective cohort assembly: resolve every distinct store key the
     /// cohort references once through `plan`, then fan the resolved rows
-    /// out to each member's composite. Produces bitwise-identical
-    /// `ReuseTask`s (in `batch` order) to the per-agent path
-    /// ([`Engine::assemble_composite`]); only the store traffic differs.
-    /// The returned [`BlockProvenance`] records, per block, which store
-    /// entry rows were copied verbatim — round-end encoding uses it to
-    /// skip provably-clean blocks without scanning them.
-    // tdlint: allow(panic_path) -- spec geometry; admission caps at max_seq
+    /// out to each member's composite across the worker pool. Produces
+    /// bitwise-identical `ReuseTask`s (in `batch` order) to the per-agent
+    /// path ([`Engine::assemble_composite`]) at any worker count; only
+    /// the store traffic and the wall clock differ. The returned
+    /// [`BlockProvenance`] records, per block, which store entry rows
+    /// were copied verbatim — round-end encoding uses it to skip
+    /// provably-clean blocks without scanning them.
     pub(super) fn assemble_round(
         &mut self,
         batch: &[&Pending],
         plan: &mut GatherPlan,
     ) -> Result<Vec<(ReuseTask, usize, BlockProvenance)>> {
+        let planned = self.plan_round(batch, plan);
+        plan.materialize_queued(
+            self.rt.as_ref(),
+            &self.cfg.model,
+            self.cfg.restore_mode(),
+            self.cfg.workers,
+        )?;
+        let spec = self.spec.clone();
+        build_composites(planned, plan, &spec, self.scratch.arenas_mut())
+    }
+
+    /// The serial plan wave: all store traffic and all reuse decisions,
+    /// in exactly the order the pre-pool engine made them.
+    // tdlint: allow(panic_path) -- spec geometry; admission caps at max_seq
+    fn plan_round(
+        &mut self,
+        batch: &[&Pending],
+        plan: &mut GatherPlan,
+    ) -> Vec<PlannedComposite> {
         let spec = self.spec.clone();
         let s = spec.max_seq;
         let bt = spec.block_tokens;
-        let mode = self.cfg.restore_mode();
-        let model = self.cfg.model.clone();
-        let rt = self.rt.clone();
         let mut out = Vec::with_capacity(batch.len());
 
         for p in batch {
-            let mut kv = self.scratch.checkout();
+            let mut ops: Vec<CopyOp> = Vec::new();
             let mut old_pos: Vec<i32> = (0..s as i32).collect();
             let mut valid = vec![0u8; s];
             let mut reused = 0usize;
@@ -163,26 +254,28 @@ impl Engine {
                 .and_then(|st| st.store_key);
             let mut covered_upto = 0usize;
             if let Some(key) = key {
-                let r = plan.resolve(
-                    &mut self.store,
-                    rt.as_ref(),
-                    &model,
-                    mode,
-                    key,
-                    true,
-                )?;
-                let donor: Option<(&[u32], &KvBuf)> = match &r {
-                    Resolved::Dense(e) => Some((&e.tokens, &e.kv)),
-                    Resolved::Restored { tokens, kv } => {
-                        Some((tokens, kv))
+                let r = plan.resolve(&mut self.store, key, true);
+                let donor: Option<(&[u32], CopySrc)> = match &r {
+                    Resolved::Dense(e) => {
+                        Some((&e.tokens, CopySrc::Dense(e.clone())))
+                    }
+                    Resolved::Restored { tokens, idx } => {
+                        Some((tokens, CopySrc::Restored(*idx)))
                     }
                     Resolved::Missing => None,
                 };
-                if let Some((donor_tokens, donor_kv)) = donor {
-                    let lcp = common_prefix(&p.tokens, donor_tokens)
-                        .min(p.tokens.len().saturating_sub(1));
+                if let Some((donor_tokens, src)) = donor {
+                    let lcp = clamp_reuse_len(
+                        common_prefix(&p.tokens, donor_tokens),
+                        p.tokens.len(),
+                    );
                     if lcp > 0 {
-                        kv.copy_rows_from(donor_kv, 0, 0, lcp);
+                        ops.push(CopyOp {
+                            src,
+                            src_slot: 0,
+                            dst_slot: 0,
+                            len: lcp,
+                        });
                         for slot in 0..lcp {
                             valid[slot] = 1;
                             old_pos[slot] = slot as i32;
@@ -206,28 +299,12 @@ impl Engine {
                 }
                 let seg_tokens = &p.tokens[seg.start..seg.end];
                 let skey = Engine::segment_key(seg_tokens);
-                let r = plan.resolve(
-                    &mut self.store,
-                    rt.as_ref(),
-                    &model,
-                    mode,
-                    skey,
-                    false,
-                )?;
+                let r = plan.resolve(&mut self.store, skey, false);
                 if let Resolved::Dense(e) = r {
                     if e.tokens.len() != seg.len() {
                         continue;
                     }
                     let n = seg.len();
-                    let d = spec.d_model;
-                    for l in 0..spec.n_layers {
-                        let so = e.kv.off(l, 0);
-                        let dst = kv.off(l, seg.start);
-                        kv.k[dst..dst + n * d]
-                            .copy_from_slice(&e.kv.k[so..so + n * d]);
-                        kv.v[dst..dst + n * d]
-                            .copy_from_slice(&e.kv.v[so..so + n * d]);
-                    }
                     for i in 0..n {
                         valid[seg.start + i] = 1;
                         old_pos[seg.start + i] = e.positions[i];
@@ -236,6 +313,12 @@ impl Engine {
                     prov.record_copy(
                         seg.start, n, skey, 0, Some(&e.positions),
                     );
+                    ops.push(CopyOp {
+                        src: CopySrc::Dense(e),
+                        src_slot: 0,
+                        dst_slot: seg.start,
+                        len: n,
+                    });
                 }
             }
 
@@ -248,23 +331,21 @@ impl Engine {
                     SIMILARITY_FALLBACK_MIN,
                 );
                 if let Some((skey, _sim)) = found {
-                    let r = plan.resolve(
-                        &mut self.store,
-                        rt.as_ref(),
-                        &model,
-                        mode,
-                        skey,
-                        false,
-                    )?;
+                    let r = plan.resolve(&mut self.store, skey, false);
                     if let Resolved::Dense(e) = r {
                         // never mark the last position (fresh logits rule)
-                        let n = e
-                            .tokens
-                            .len()
-                            .min(p.tokens.len().saturating_sub(1));
+                        let n = clamp_reuse_len(
+                            e.tokens.len(),
+                            p.tokens.len(),
+                        );
                         for slot in 0..n {
                             if p.tokens[slot] == e.tokens[slot] {
-                                kv.copy_rows_from(&e.kv, slot, slot, 1);
+                                ops.push(CopyOp {
+                                    src: CopySrc::Dense(e.clone()),
+                                    src_slot: slot,
+                                    dst_slot: slot,
+                                    len: 1,
+                                });
                                 valid[slot] = 1;
                                 old_pos[slot] = e.positions[slot];
                                 reused += 1;
@@ -281,21 +362,55 @@ impl Engine {
                 reused = 0;
             }
 
-            let mut tokens = p.tokens.clone();
-            tokens.resize(s, 0);
-            out.push((
-                ReuseTask {
-                    id: p.id,
-                    tokens,
-                    valid_len: p.tokens.len(),
-                    old_pos,
-                    valid,
-                    kv,
-                },
+            out.push(PlannedComposite {
+                id: p.id,
+                tokens: p.tokens.clone(),
+                valid_len: p.tokens.len(),
+                old_pos,
+                valid,
                 reused,
                 prov,
-            ));
+                ops,
+            });
         }
-        Ok(out)
+        out
     }
+}
+
+/// The build wave: replay each agent's planned copy ops into a buffer
+/// checked out of that worker's scratch arena. Pure per agent — no store
+/// access, no cross-agent state — so any worker count yields the same
+/// bytes (checkouts are all-zero by the arena invariant).
+// tdlint: allow(panic_path) -- restored indices assigned by the plan wave
+fn build_composites(
+    planned: Vec<PlannedComposite>,
+    plan: &GatherPlan,
+    spec: &ModelSpec,
+    arenas: &mut [KvScratch],
+) -> Result<Vec<(ReuseTask, usize, BlockProvenance)>> {
+    let s = spec.max_seq;
+    workers::map_with_arenas(planned, arenas, |pc, arena| {
+        let mut kv = arena.checkout();
+        for op in &pc.ops {
+            let src: &KvBuf = match &op.src {
+                CopySrc::Dense(e) => &e.kv,
+                CopySrc::Restored(i) => &plan.restored[*i],
+            };
+            kv.copy_rows_from(src, op.src_slot, op.dst_slot, op.len);
+        }
+        let mut tokens = pc.tokens;
+        tokens.resize(s, 0);
+        Ok((
+            ReuseTask {
+                id: pc.id,
+                tokens,
+                valid_len: pc.valid_len,
+                old_pos: pc.old_pos,
+                valid: pc.valid,
+                kv,
+            },
+            pc.reused,
+            pc.prov,
+        ))
+    })
 }

@@ -20,11 +20,12 @@
 
 mod gather;
 mod prefill;
+mod workers;
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -36,8 +37,8 @@ use crate::model::ModelSpec;
 use crate::restore::RestoreMode;
 use crate::rounds::{segment_blocks, DetectorConfig, SegmentedPrompt};
 use crate::runtime::{
-    argmax, BlockProvenance, DecodeSeq, KvBuf, KvScratch, ModelRuntime,
-    ScratchCounters,
+    argmax, BlockProvenance, DecodeSeq, KvBuf, ModelRuntime,
+    ScratchCounters, ScratchPool,
 };
 use crate::scheduler::{decode_batches, AdmissionQueue, QueuedRequest};
 use crate::serve::EngineEvent;
@@ -150,6 +151,13 @@ pub struct EngineConfig {
     /// shutdown. Pair with a fixed `spill_dir` to carry the tier across
     /// engine restarts.
     pub recover_spills: bool,
+    /// Worker threads for the engine's parallel sections (per-cohort
+    /// composite builds, mirror materialization, per-signature encode
+    /// expectations). `1` — the default — runs every section inline on
+    /// the calling thread, byte-for-byte identical to the pre-pool
+    /// engine (pinned by the golden digests); higher counts change wall
+    /// clock only, never token streams or logical counters.
+    pub workers: usize,
 }
 
 impl EngineConfig {
@@ -175,6 +183,7 @@ impl EngineConfig {
             quant_format: QuantFormat::Int8,
             fault_plan: None,
             recover_spills: false,
+            workers: 1,
         }
     }
 
@@ -280,14 +289,15 @@ struct Pending {
 }
 
 pub struct Engine {
-    pub rt: Rc<dyn ModelRuntime>,
+    pub rt: Arc<dyn ModelRuntime>,
     pub cfg: EngineConfig,
     spec: ModelSpec,
     pool: KvPool,
     store: CacheStore,
-    /// Recycling arena for max_seq working buffers (composites, cold
+    /// Recycling arenas for max_seq working buffers (composites, cold
     /// prefills, encode padding) — the prefill hot path's allocator.
-    scratch: KvScratch,
+    /// One arena per worker; the serial paths use arena 0.
+    scratch: ScratchPool,
     /// Cached 0..max_seq position ramp: the encode path's `slots` array
     /// and every per-entry `positions` ramp are slices/copies of this
     /// instead of per-call `(0..n).collect()` allocations.
@@ -322,7 +332,7 @@ pub struct Engine {
 const EVENT_BUF_CAP: usize = 1 << 16;
 
 impl Engine {
-    pub fn new(rt: Rc<dyn ModelRuntime>, cfg: EngineConfig) -> Result<Self> {
+    pub fn new(rt: Arc<dyn ModelRuntime>, cfg: EngineConfig) -> Result<Self> {
         let spec = rt.spec(&cfg.model)?.clone();
         let pool = KvPool::new(&spec, cfg.pool_blocks);
         let mut store = CacheStore::new(&spec, cfg.store_bytes);
@@ -350,7 +360,7 @@ impl Engine {
                 recover: cfg.recover_spills,
             })?;
         }
-        let scratch = KvScratch::for_spec(&spec);
+        let scratch = ScratchPool::for_spec(&spec, cfg.workers);
         let pos_ramp: Vec<i32> = (0..spec.max_seq as i32).collect();
         Ok(Engine {
             rt,
@@ -400,8 +410,8 @@ impl Engine {
         &mut self.store
     }
 
-    /// Lifecycle counters of the scratch-buffer arena (bench/diagnostic
-    /// observability for the recycling win).
+    /// Lifecycle counters of the scratch-buffer arenas, summed across
+    /// workers (bench/diagnostic observability for the recycling win).
     pub fn scratch_counters(&self) -> ScratchCounters {
         self.scratch.counters()
     }

@@ -17,17 +17,17 @@
 
 use std::collections::hash_map::Entry;
 use std::collections::{BTreeMap, HashMap};
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::gather::GatherPlan;
-use super::{Completion, Engine, Pending, Policy, Running, StagedCache};
+use super::{workers, Completion, Engine, Pending, Policy, Running, StagedCache};
 use crate::collector::{run_reuse, selective_chunked, CollectorConfig, ReuseTask};
 use crate::restore::materialize_mirror;
 use crate::rounds::{detect_pattern, CohortPartition};
-use crate::runtime::{argmax, BlockProvenance, KvBuf};
+use crate::runtime::{argmax, BlockProvenance, KvBuf, KvScratch, ModelRuntime};
 use crate::store::{
     diff_blocks_tol_masked, extract_blocks, gather_permuted_master_into,
     match_blocks_by_segments, AlignedDiff, DenseEntry, Fetched, MirrorEntry,
@@ -51,6 +51,14 @@ pub(super) const SIMILARITY_FALLBACK_MIN: f64 = 0.9;
 /// Longest common prefix of two token streams.
 pub(super) fn common_prefix(a: &[u32], b: &[u32]) -> usize {
     a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Clamp a reuse span so the prompt's last position is never covered:
+/// the final slot must be recomputed for fresh logits. One helper shared
+/// by every reuse path (planned, baseline, prefix policies) so the
+/// equivalence baselines can't silently diverge from the hot path.
+pub(super) fn clamp_reuse_len(n: usize, prompt_len: usize) -> usize {
+    n.min(prompt_len.saturating_sub(1))
 }
 
 impl Engine {
@@ -107,10 +115,12 @@ impl Engine {
         let mut shared_ids: Vec<crate::kvcache::BlockId> = Vec::new();
         if let Some(st) = self.agents.get(&p.req.agent) {
             if let Some((table, toks)) = &st.gpu {
-                let lcp = common_prefix(&p.tokens, toks);
                 // never share the *entire* prompt (the last position must
                 // be recomputed for fresh logits)
-                let lcp = lcp.min(p.tokens.len().saturating_sub(1));
+                let lcp = clamp_reuse_len(
+                    common_prefix(&p.tokens, toks),
+                    p.tokens.len(),
+                );
                 shared_blocks = lcp / bt;
                 if shared_blocks > 0 {
                     shared_ids =
@@ -184,8 +194,10 @@ impl Engine {
         let mut prefix_len = 0usize;
         if let Some(key) = key {
             if let Some(Fetched::Dense(e)) = self.store.get(&key) {
-                let lcp = common_prefix(&p.tokens, &e.tokens)
-                    .min(p.tokens.len().saturating_sub(1));
+                let lcp = clamp_reuse_len(
+                    common_prefix(&p.tokens, &e.tokens),
+                    p.tokens.len(),
+                );
                 if lcp > 0 {
                     let t0 = Instant::now();
                     let mut buf = self.scratch.checkout();
@@ -505,7 +517,7 @@ impl Engine {
         /// Prefix donor rows: a shared store payload (zero-copy) or a
         /// mirror materialized for this request.
         enum Donor {
-            Dense(Rc<DenseEntry>),
+            Dense(Arc<DenseEntry>),
             Restored(KvBuf, Vec<u32>),
         }
 
@@ -553,8 +565,10 @@ impl Engine {
                         Donor::Dense(e) => (&e.kv, &e.tokens),
                         Donor::Restored(kv, toks) => (kv, toks),
                     };
-                let lcp = common_prefix(&p.tokens, donor_tokens)
-                    .min(p.tokens.len().saturating_sub(1));
+                let lcp = clamp_reuse_len(
+                    common_prefix(&p.tokens, donor_tokens),
+                    p.tokens.len(),
+                );
                 if lcp > 0 {
                     kv.copy_rows_from(donor_kv, 0, 0, lcp);
                     for slot in 0..lcp {
@@ -619,10 +633,10 @@ impl Engine {
                 self.metrics.assembly_lookups += 1;
                 if let Some(Fetched::Dense(e)) = self.store.get(&skey) {
                     // never mark the last position (fresh logits rule)
-                    let n = e
-                        .tokens
-                        .len()
-                        .min(p.tokens.len().saturating_sub(1));
+                    let n = clamp_reuse_len(
+                        e.tokens.len(),
+                        p.tokens.len(),
+                    );
                     for slot in 0..n {
                         if p.tokens[slot] == e.tokens[slot] {
                             kv.copy_rows_from(&e.kv, slot, slot, 1);
@@ -1010,31 +1024,22 @@ impl Engine {
         bt: usize,
         model: &str,
     ) -> Result<Expected> {
-        let mut buf = self.scratch.checkout();
-        let src_pos = gather_permuted_master_into(
+        let (exp, roped) = build_expected_in(
+            self.rt.as_ref(),
+            model,
+            &self.pos_ramp,
+            self.spec.max_seq,
+            &mut self.scratch.arenas_mut()[0],
             master_padded,
-            &self.pos_ramp[..master_len],
+            master_len,
             src_block,
             len,
             bt,
-            &mut buf,
-        );
-        // when the source positions already equal the slots (aligned
-        // offsets, the common All-Gather case) the rotation is the
-        // identity and the rope pass is skipped (§Perf)
-        let identity =
-            src_pos.iter().enumerate().all(|(i, &p)| p == i as i32);
-        if !identity {
-            self.rt
-                .rope_recover(model, &mut buf, &src_pos, &self.pos_ramp)?;
+        )?;
+        if roped {
             self.metrics.encode_rope_recovers += 1;
         }
-        Ok(Expected {
-            identity,
-            dirty_rows: if identity { len } else { self.spec.max_seq },
-            kv: buf,
-            src_pos,
-        })
+        Ok(exp)
     }
 
     /// Elect one cohort's Master (lowest reuse deviation; ties broken by
@@ -1129,6 +1134,63 @@ impl Engine {
         // with the same (len, src_block) share one buffer
         let mut memo: HashMap<(usize, Vec<i32>), Expected> = HashMap::new();
 
+        // multi-worker collective path: pre-build the expectation buffer
+        // for every distinct signature across the worker pool, in
+        // first-appearance order. The serial loop below still drives the
+        // memo — its first use of a signature lands on the Vacant arm and
+        // installs the pre-built buffer, so `encode_lookups` and
+        // `expected_memo_hits` count exactly as they do serially.
+        let mut prebuilt: HashMap<(usize, Vec<i32>), Expected> =
+            HashMap::new();
+        if collective && self.cfg.workers > 1 && staged.len() > 1 {
+            let mut sigs: Vec<(usize, Vec<i32>)> = Vec::new();
+            for s in &staged {
+                let len = s.kv.seq;
+                let src_block = match_blocks_by_segments(
+                    &master_segments, &s.segments, len, bt,
+                );
+                if src_block.iter().all(|&b| b < 0) {
+                    continue; // the loop below stores this one dense
+                }
+                let sig = (len, src_block);
+                if !sigs.contains(&sig) {
+                    sigs.push(sig);
+                }
+            }
+            if sigs.len() > 1 {
+                let rt = self.rt.clone();
+                let pos_ramp = &self.pos_ramp;
+                let max_seq = spec.max_seq;
+                let master_len = master_tokens.len();
+                let mp = &master_padded;
+                let built = workers::map_with_arenas(
+                    sigs,
+                    self.scratch.arenas_mut(),
+                    |(len, src_block), arena| {
+                        let (exp, roped) = build_expected_in(
+                            rt.as_ref(),
+                            &model,
+                            pos_ramp,
+                            max_seq,
+                            arena,
+                            mp,
+                            master_len,
+                            &src_block,
+                            len,
+                            bt,
+                        )?;
+                        Ok((len, src_block, exp, roped))
+                    },
+                )?;
+                for (len, src_block, exp, roped) in built {
+                    if roped {
+                        self.metrics.encode_rope_recovers += 1;
+                    }
+                    prebuilt.insert((len, src_block), exp);
+                }
+            }
+        }
+
         for s in staged {
             let len = s.kv.seq;
             // align mirror blocks to master blocks by segment identity
@@ -1159,14 +1221,17 @@ impl Engine {
                         o.into_mut()
                     }
                     Entry::Vacant(v) => {
-                        let e = self.build_expected(
-                            &master_padded,
-                            master_tokens.len(),
-                            &src_block,
-                            len,
-                            bt,
-                            &model,
-                        )?;
+                        let e = match prebuilt.remove(v.key()) {
+                            Some(e) => e,
+                            None => self.build_expected(
+                                &master_padded,
+                                master_tokens.len(),
+                                &src_block,
+                                len,
+                                bt,
+                                &model,
+                            )?,
+                        };
                         v.insert(e)
                     }
                 }
@@ -1281,6 +1346,13 @@ impl Engine {
         for (_, e) in memo.drain() {
             self.scratch.checkin(e.kv, e.dirty_rows);
         }
+        // defensive: a pre-built signature the loop never consumed (it
+        // can't happen today — the pre-pass mirrors the loop's gating)
+        // must still return its buffer
+        // tdlint: allow(hash_iter) -- order-free scratch checkin
+        for (_, e) in prebuilt.drain() {
+            self.scratch.checkin(e.kv, e.dirty_rows);
+        }
         self.scratch.checkin(master_padded, master_len);
         Ok(mirror_bytes)
     }
@@ -1302,7 +1374,57 @@ struct Expected {
     dirty_rows: usize,
 }
 
-fn _assert_engine_send() {
-    // engine is intentionally single-threaded (Rc<dyn ModelRuntime>);
-    // the server module owns it on a dedicated thread.
+/// The parallel-safe core of [`Engine::build_expected`]: gather the
+/// permuted master into `arena`'s buffer and RoPE-recover when the
+/// rotation is not the identity. Returns the buffer plus whether a rope
+/// pass ran — the caller owns the `encode_rope_recovers` metric, so the
+/// worker pool can sum counts after the join instead of sharing state.
+// tdlint: allow(panic_path) -- signature slots validated at alignment
+#[allow(clippy::too_many_arguments)]
+fn build_expected_in(
+    rt: &dyn ModelRuntime,
+    model: &str,
+    pos_ramp: &[i32],
+    max_seq: usize,
+    arena: &mut KvScratch,
+    master_padded: &KvBuf,
+    master_len: usize,
+    src_block: &[i32],
+    len: usize,
+    bt: usize,
+) -> Result<(Expected, bool)> {
+    let mut buf = arena.checkout();
+    let src_pos = gather_permuted_master_into(
+        master_padded,
+        &pos_ramp[..master_len],
+        src_block,
+        len,
+        bt,
+        &mut buf,
+    );
+    // when the source positions already equal the slots (aligned
+    // offsets, the common All-Gather case) the rotation is the
+    // identity and the rope pass is skipped (§Perf)
+    let identity = src_pos.iter().enumerate().all(|(i, &p)| p == i as i32);
+    if !identity {
+        rt.rope_recover(model, &mut buf, &src_pos, pos_ramp)?;
+    }
+    Ok((
+        Expected {
+            identity,
+            dirty_rows: if identity { len } else { max_seq },
+            kv: buf,
+            src_pos,
+        },
+        !identity,
+    ))
 }
+
+// The engine hands shared references to its runtime and store payloads
+// across the worker pool: Send is part of its contract now, and this
+// assertion breaks the build if a non-Send field (`Rc`, `RefCell`) ever
+// creeps back in.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<Engine>();
+};

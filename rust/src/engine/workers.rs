@@ -1,0 +1,188 @@
+//! Scoped worker pool for the engine's parallel sections.
+//!
+//! The engine never holds threads between rounds: each parallel section
+//! (`std::thread::scope`) fans an owned work list out as contiguous
+//! chunks — one chunk per worker, in item order — and joins before
+//! returning, so no work outlives the borrow of the store or the scratch
+//! arenas. Results concatenate chunk-by-chunk, which keeps the output in
+//! exactly the input's item order regardless of which thread finished
+//! first; determinism therefore never depends on scheduling. The serial
+//! fast path (one worker, or at most one item) runs the closure inline on
+//! the calling thread, byte-for-byte like the pre-pool engine.
+//!
+//! Error discipline: within a chunk the first `Err` stops that chunk;
+//! across chunks the earliest chunk's error wins. A panic on a worker
+//! thread is resumed on the caller.
+
+use anyhow::Result;
+
+use crate::runtime::KvScratch;
+
+/// Map `f` over `items`, handing worker `w` exclusive use of
+/// `arenas[w]`. `arenas.len()` is the worker count.
+pub(super) fn map_with_arenas<T, R, F>(
+    items: Vec<T>,
+    arenas: &mut [KvScratch],
+    f: F,
+) -> Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T, &mut KvScratch) -> Result<R> + Sync,
+{
+    let workers = arenas.len().max(1);
+    if workers <= 1 || items.len() <= 1 {
+        let arena = &mut arenas[0];
+        return items.into_iter().map(|it| f(it, arena)).collect();
+    }
+    let n = items.len();
+    let per = n.div_ceil(workers);
+    let mut chunks: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, it) in items.into_iter().enumerate() {
+        chunks[i / per].push(it);
+    }
+    let results: Vec<Result<Vec<R>>> = std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .zip(arenas.iter_mut())
+            .map(|(chunk, arena)| {
+                s.spawn(move || {
+                    chunk.into_iter().map(|it| f(it, arena)).collect()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|p| std::panic::resume_unwind(p))
+            })
+            .collect()
+    });
+    let mut out = Vec::with_capacity(n);
+    for r in results {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+/// Arena-free variant for work that needs no scratch buffer (e.g. the
+/// mirror materialization wave). `workers` is clamped to >= 1.
+pub(super) fn map_parallel<T, R, F>(
+    items: Vec<T>,
+    workers: usize,
+    f: F,
+) -> Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> Result<R> + Sync,
+{
+    let workers = workers.max(1);
+    if workers <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let per = n.div_ceil(workers);
+    let mut chunks: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, it) in items.into_iter().enumerate() {
+        chunks[i / per].push(it);
+    }
+    let results: Vec<Result<Vec<R>>> = std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                s.spawn(move || chunk.into_iter().map(f).collect())
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|p| std::panic::resume_unwind(p))
+            })
+            .collect()
+    });
+    let mut out = Vec::with_capacity(n);
+    for r in results {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn map_parallel_preserves_item_order() {
+        for workers in [1usize, 2, 3, 4, 7] {
+            let items: Vec<usize> = (0..23).collect();
+            let out =
+                map_parallel(items, workers, |i| Ok(i * 10)).unwrap();
+            assert_eq!(out, (0..23).map(|i| i * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_parallel_handles_small_inputs() {
+        let out: Vec<usize> = map_parallel(vec![], 4, Ok).unwrap();
+        assert!(out.is_empty());
+        let out = map_parallel(vec![9usize], 4, |i| Ok(i + 1)).unwrap();
+        assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn map_parallel_returns_earliest_chunk_error() {
+        let items: Vec<usize> = (0..16).collect();
+        let err = map_parallel(items, 4, |i| {
+            if i >= 2 {
+                Err(anyhow!("boom at {i}"))
+            } else {
+                Ok(i)
+            }
+        })
+        .unwrap_err();
+        // items 0..4 form chunk 0; its first failure (i == 2) wins
+        assert_eq!(err.to_string(), "boom at 2");
+    }
+
+    #[test]
+    fn map_with_arenas_gives_each_worker_its_own_arena() {
+        let mut arenas: Vec<KvScratch> =
+            (0..3).map(|_| KvScratch::new(1, 4, 2)).collect();
+        let items: Vec<usize> = (0..9).collect();
+        let out = map_with_arenas(items, &mut arenas, |i, arena| {
+            let buf = arena.checkout();
+            arena.checkin(buf, 0);
+            Ok(i)
+        })
+        .unwrap();
+        assert_eq!(out, (0..9).collect::<Vec<_>>());
+        let total: u64 =
+            arenas.iter().map(|a| a.counters().checkouts).sum();
+        assert_eq!(total, 9);
+        // chunked split: 3 workers x 3 items each
+        for a in &arenas {
+            assert_eq!(a.counters().checkouts, 3);
+        }
+    }
+
+    #[test]
+    fn single_worker_runs_inline_on_arena_zero() {
+        let mut arenas = vec![KvScratch::new(1, 4, 2)];
+        let out = map_with_arenas(
+            (0..5).collect::<Vec<usize>>(),
+            &mut arenas,
+            |i, arena| {
+                let buf = arena.checkout();
+                arena.checkin(buf, 0);
+                Ok(i * 2)
+            },
+        )
+        .unwrap();
+        assert_eq!(out, vec![0, 2, 4, 6, 8]);
+        assert_eq!(arenas[0].counters().checkouts, 5);
+    }
+}

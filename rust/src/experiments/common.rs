@@ -2,7 +2,7 @@
 //! SLO/capacity derivation, and result emission.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -13,7 +13,7 @@ use crate::util::cli::Args;
 
 /// Execution context shared by every experiment driver.
 pub struct ExpContext {
-    pub rt: Rc<dyn ModelRuntime>,
+    pub rt: Arc<dyn ModelRuntime>,
     pub quick: bool,
     pub out_dir: PathBuf,
 }
@@ -23,8 +23,8 @@ impl ExpContext {
     /// `--mock` to use the mock runtime (logic-only dry runs), `--quick`
     /// for reduced sweeps, `--out DIR` for result files.
     pub fn from_args(args: &Args) -> Result<ExpContext> {
-        let rt: Rc<dyn ModelRuntime> = if args.flag("mock") {
-            Rc::new(MockRuntime::new())
+        let rt: Arc<dyn ModelRuntime> = if args.flag("mock") {
+            Arc::new(MockRuntime::new())
         } else {
             let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
             let rt = PjrtRuntime::load(&dir).with_context(|| {
@@ -41,7 +41,7 @@ impl ExpContext {
                 rt.warmup(None)?;
                 eprintln!("warmup done in {:?}", t0.elapsed());
             }
-            Rc::new(rt)
+            Arc::new(rt)
         };
         let out_dir = PathBuf::from(args.get_or("out", "results"));
         std::fs::create_dir_all(&out_dir).ok();

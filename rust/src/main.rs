@@ -50,6 +50,8 @@ SERVE OPTIONS:
   --cold-mb N       cold spill-tier capacity, MiB (0 = tier off)  [0]
   --spill-dir DIR   cold-tier spill directory    [temp dir]
   --quant Q         dense spill payloads: off | int8 | q4  [int8]
+  --workers N       engine worker threads (1 = serial; identical
+                    outputs at any count)          [1 or $TOKENDANCE_WORKERS]
 ";
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -82,6 +84,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .policy(policy)
         .pool_blocks(pool)
         .runtime(ctx.rt.clone());
+    if let Some(w) = args.get("workers") {
+        let w: usize = w
+            .parse()
+            .map_err(|_| anyhow!("--workers expects an integer"))?;
+        b = b.workers(w);
+    }
     if let Some(mb) = args.get("store-mb") {
         let mb: usize = mb
             .parse()

@@ -47,6 +47,10 @@ impl KvBuf {
 
     /// Copy `len` consecutive token rows (all layers) from `src` starting at
     /// `src_slot` into self starting at `dst_slot`.
+    ///
+    /// Bounds are enforced in release builds too: the planes are one flat
+    /// vec per buffer, so an overrun would not fault — it would silently
+    /// bleed the next layer's leading rows into the copy.
     pub fn copy_rows_from(
         &mut self,
         src: &KvBuf,
@@ -54,8 +58,20 @@ impl KvBuf {
         dst_slot: usize,
         len: usize,
     ) {
-        debug_assert_eq!(self.d, src.d);
-        debug_assert_eq!(self.layers, src.layers);
+        assert_eq!(self.d, src.d, "copy_rows_from: d_model mismatch");
+        assert_eq!(self.layers, src.layers, "copy_rows_from: layer mismatch");
+        assert!(
+            src_slot + len <= src.seq,
+            "copy_rows_from: src rows {src_slot}..{} exceed src seq {}",
+            src_slot + len,
+            src.seq
+        );
+        assert!(
+            dst_slot + len <= self.seq,
+            "copy_rows_from: dst rows {dst_slot}..{} exceed dst seq {}",
+            dst_slot + len,
+            self.seq
+        );
         for l in 0..self.layers {
             let so = src.off(l, src_slot);
             let do_ = self.off(l, dst_slot);
@@ -67,8 +83,15 @@ impl KvBuf {
     }
 
     /// Extract `len` token rows (all layers) starting at `slot` into a new
-    /// compact KvBuf of seq == len.
+    /// compact KvBuf of seq == len. Panics (debug and release) when
+    /// `slot + len` exceeds this buffer's seq, like [`Self::copy_rows_from`].
     pub fn extract_rows(&self, slot: usize, len: usize) -> KvBuf {
+        assert!(
+            slot + len <= self.seq,
+            "extract_rows: rows {slot}..{} exceed seq {}",
+            slot + len,
+            self.seq
+        );
         let mut out = KvBuf::zeroed(self.layers, len, self.d);
         out.copy_rows_from(self, slot, 0, len);
         out
@@ -94,6 +117,10 @@ impl KvBuf {
     /// Used by the Fig-3 similarity analysis.
     pub fn block_similarity(&self, other: &KvBuf, block_tokens: usize,
                             valid_len: usize, tol: f32) -> f64 {
+        // Same flat-plane overrun hazard as copy_rows_from: a valid_len
+        // past either seq would read the next layer's rows. Clamp — the
+        // rows past seq do not exist, so they cannot count as similar.
+        let valid_len = valid_len.min(self.seq).min(other.seq);
         let nb = valid_len.div_ceil(block_tokens);
         if nb == 0 {
             return 1.0;
@@ -292,10 +319,29 @@ pub struct ScratchCounters {
     pub fresh_allocs: u64,
     /// Checkouts served from the free pool (the recycling win).
     pub recycled: u64,
+    /// Buffers actually re-zeroed and pooled at checkin (the only ones a
+    /// later checkout can recycle).
     pub checkins: u64,
     /// Buffers refused at checkin because their shape does not match the
     /// arena (e.g. a bucket-sized runtime output).
     pub rejected: u64,
+    /// Well-shaped buffers dropped at checkin because the free pool was
+    /// already at capacity — returned, but never recyclable.
+    pub dropped_full: u64,
+}
+
+impl ScratchCounters {
+    /// Element-wise sum (for aggregating per-worker arenas).
+    pub fn merged(self, other: ScratchCounters) -> ScratchCounters {
+        ScratchCounters {
+            checkouts: self.checkouts + other.checkouts,
+            fresh_allocs: self.fresh_allocs + other.fresh_allocs,
+            recycled: self.recycled + other.recycled,
+            checkins: self.checkins + other.checkins,
+            rejected: self.rejected + other.rejected,
+            dropped_full: self.dropped_full + other.dropped_full,
+        }
+    }
 }
 
 /// Recycling arena for max_seq-padded working buffers.
@@ -361,10 +407,13 @@ impl KvScratch {
             self.counters.rejected += 1;
             return;
         }
-        self.counters.checkins += 1;
         if self.free.len() >= SCRATCH_MAX_FREE {
+            // Dropped un-recycled: counting it as a checkin would overstate
+            // the recycling rate.
+            self.counters.dropped_full += 1;
             return;
         }
+        self.counters.checkins += 1;
         let n = dirty_rows.min(self.seq) * self.d;
         for l in 0..self.layers {
             let o = buf.off(l, 0);
@@ -381,6 +430,60 @@ impl KvScratch {
     /// Idle buffers currently pooled.
     pub fn free_len(&self) -> usize {
         self.free.len()
+    }
+}
+
+/// Per-worker [`KvScratch`] arenas sharing one [L, S, d] shape.
+///
+/// Arena `w` is handed exclusively to worker `w` during a parallel
+/// section ([`ScratchPool::arenas_mut`] splits the borrow), so no locking
+/// is ever needed; every serial engine path goes through arena 0 via the
+/// delegating [`ScratchPool::checkout`] / [`ScratchPool::checkin`], which
+/// keeps `workers = 1` behavior identical to a single arena.
+pub struct ScratchPool {
+    arenas: Vec<KvScratch>,
+}
+
+impl ScratchPool {
+    pub fn new(layers: usize, seq: usize, d: usize, workers: usize) -> Self {
+        let n = workers.max(1);
+        ScratchPool { arenas: (0..n).map(|_| KvScratch::new(layers, seq, d)).collect() }
+    }
+
+    pub fn for_spec(spec: &ModelSpec, workers: usize) -> Self {
+        Self::new(spec.n_layers, spec.max_seq, spec.d_model, workers)
+    }
+
+    /// Number of per-worker arenas (== the engine's worker count).
+    pub fn workers(&self) -> usize {
+        self.arenas.len()
+    }
+
+    /// Serial-path checkout (arena 0).
+    pub fn checkout(&mut self) -> KvBuf {
+        self.arenas[0].checkout()
+    }
+
+    /// Serial-path checkin (arena 0).
+    pub fn checkin(&mut self, buf: KvBuf, dirty_rows: usize) {
+        self.arenas[0].checkin(buf, dirty_rows)
+    }
+
+    /// Exclusive per-worker views, one arena per worker thread.
+    pub fn arenas_mut(&mut self) -> &mut [KvScratch] {
+        &mut self.arenas
+    }
+
+    /// Lifecycle counters summed across all arenas.
+    pub fn counters(&self) -> ScratchCounters {
+        self.arenas
+            .iter()
+            .fold(ScratchCounters::default(), |acc, a| acc.merged(a.counters()))
+    }
+
+    /// Idle buffers pooled across all arenas.
+    pub fn free_len(&self) -> usize {
+        self.arenas.iter().map(|a| a.free_len()).sum()
     }
 }
 
@@ -540,5 +643,76 @@ mod tests {
         // a correctly shaped buffer allocated elsewhere is adopted
         sc.checkin(KvBuf::zeroed(2, 8, 4), 0);
         assert_eq!(sc.free_len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy_rows_from: src rows")]
+    fn copy_rows_from_rejects_src_overrun() {
+        // Release builds must panic too: rows 6..10 of an 8-row source
+        // would otherwise bleed layer 1's leading rows into the copy.
+        let src = filled(2, 8, 4, 1.0);
+        let mut dst = KvBuf::zeroed(2, 16, 4);
+        dst.copy_rows_from(&src, 6, 0, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy_rows_from: dst rows")]
+    fn copy_rows_from_rejects_dst_overrun() {
+        let src = filled(2, 16, 4, 1.0);
+        let mut dst = KvBuf::zeroed(2, 8, 4);
+        dst.copy_rows_from(&src, 0, 5, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "extract_rows: rows")]
+    fn extract_rows_rejects_overrun() {
+        let src = filled(2, 8, 4, 1.0);
+        let _ = src.extract_rows(5, 4);
+    }
+
+    #[test]
+    fn block_similarity_clamps_valid_len_to_seq() {
+        // valid_len past seq must not read across the layer boundary; the
+        // clamped call scores exactly like valid_len == seq.
+        let a = filled(2, 32, 4, 1.0);
+        let b = a.clone();
+        assert_eq!(a.block_similarity(&b, 16, 64, 1e-6), 1.0);
+        assert_eq!(
+            a.block_similarity(&b, 16, 64, 1e-6),
+            a.block_similarity(&b, 16, 32, 1e-6)
+        );
+    }
+
+    #[test]
+    fn scratch_counts_dropped_full_not_checkins() {
+        let mut sc = KvScratch::new(1, 4, 2);
+        for _ in 0..(SCRATCH_MAX_FREE + 3) {
+            sc.checkin(KvBuf::zeroed(1, 4, 2), 0);
+        }
+        let c = sc.counters();
+        assert_eq!(sc.free_len(), SCRATCH_MAX_FREE);
+        assert_eq!(c.checkins, SCRATCH_MAX_FREE as u64);
+        assert_eq!(c.dropped_full, 3);
+        assert_eq!(c.rejected, 0);
+    }
+
+    #[test]
+    fn scratch_pool_delegates_and_sums() {
+        let mut pool = ScratchPool::new(2, 8, 4, 3);
+        assert_eq!(pool.workers(), 3);
+        let a = pool.checkout(); // serial path -> arena 0
+        pool.checkin(a, 0);
+        // drive arenas 1 and 2 directly, like workers would
+        for w in 1..3 {
+            let arenas = pool.arenas_mut();
+            let b = arenas[w].checkout();
+            arenas[w].checkin(b, 0);
+        }
+        let c = pool.counters();
+        assert_eq!(c.checkouts, 3);
+        assert_eq!(c.checkins, 3);
+        assert_eq!(pool.free_len(), 3);
+        // workers clamp to >= 1
+        assert_eq!(ScratchPool::new(1, 2, 2, 0).workers(), 1);
     }
 }

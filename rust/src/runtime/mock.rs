@@ -26,7 +26,7 @@ pub const MOCK_INVALID_SCORE: f32 = 1e9;
 pub struct MockRuntime {
     specs: Vec<ModelSpec>,
     buckets: Buckets,
-    calls: std::cell::RefCell<u64>,
+    calls: std::sync::atomic::AtomicU64,
 }
 
 impl Default for MockRuntime {
@@ -52,12 +52,12 @@ impl MockRuntime {
         MockRuntime {
             specs: vec![mk("sim-7b", 4), mk("sim-14b", 8)],
             buckets: Buckets::default(),
-            calls: std::cell::RefCell::new(0),
+            calls: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
     fn bump(&self) {
-        *self.calls.borrow_mut() += 1;
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
 
     /// Content component of a K/V element (context-free).
@@ -295,7 +295,7 @@ impl ModelRuntime for MockRuntime {
     }
 
     fn calls(&self) -> u64 {
-        *self.calls.borrow()
+        self.calls.load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 

@@ -13,7 +13,9 @@ pub mod pjrt;
 pub mod pjrt;
 pub mod traits;
 
-pub use kv::{BlockOrigin, BlockProvenance, KvBuf, KvScratch, ScratchCounters};
+pub use kv::{
+    BlockOrigin, BlockProvenance, KvBuf, KvScratch, ScratchCounters, ScratchPool,
+};
 pub use mock::MockRuntime;
 pub use pjrt::PjrtRuntime;
 pub use traits::{

@@ -6,10 +6,10 @@
 //! travel per call (`execute_b` with stored `PjRtBuffer`s — per-call inputs
 //! are uploaded with `buffer_from_host_buffer`).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
@@ -36,9 +36,20 @@ pub struct PjrtRuntime {
     client: PjRtClient,
     manifest: Manifest,
     models: HashMap<String, ModelState>,
-    exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
-    calls: RefCell<u64>,
+    exes: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+    calls: AtomicU64,
 }
+
+// SAFETY: the xla wrapper types hold raw pointers into the PJRT C API and
+// therefore do not derive Send/Sync, but the PJRT C API contract requires
+// implementations to support concurrent calls on one client: compilation,
+// `buffer_from_host_buffer`, and `execute` are documented thread-safe
+// entry points, and the CPU client serializes internally where needed.
+// Our own interior mutability is confined to `exes` (Mutex) and `calls`
+// (atomic); `client`, `manifest` and the weight buffers are written only
+// during `load`, before the value is shared.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
     /// Load the manifest + weights from an artifacts directory and create
@@ -78,8 +89,8 @@ impl PjrtRuntime {
             client,
             manifest,
             models,
-            exes: RefCell::new(HashMap::new()),
-            calls: RefCell::new(0),
+            exes: Mutex::new(HashMap::new()),
+            calls: AtomicU64::new(0),
         })
     }
 
@@ -114,10 +125,14 @@ impl PjrtRuntime {
             })
     }
 
-    fn exe(&self, art: &ArtifactInfo) -> Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(&art.name) {
+    fn exe(&self, art: &ArtifactInfo) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(&art.name) {
             return Ok(e.clone());
         }
+        // Compile outside the lock: XLA compilation is slow and the PJRT
+        // client supports concurrent compiles. Two threads may race to
+        // compile the same artifact once; the map keeps whichever landed
+        // first and both callers get a working executable.
         let proto = HloModuleProto::from_text_file(
             art.file.to_str().ok_or_else(|| anyhow!("bad path"))?,
         )
@@ -127,9 +142,13 @@ impl PjrtRuntime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {}: {e:?}", art.name))?;
-        let rc = Rc::new(exe);
-        self.exes.borrow_mut().insert(art.name.clone(), rc.clone());
-        Ok(rc)
+        Ok(self
+            .exes
+            .lock()
+            .unwrap()
+            .entry(art.name.clone())
+            .or_insert_with(|| Arc::new(exe))
+            .clone())
     }
 
     /// Execute an artifact: stored weight buffers first (per the manifest's
@@ -166,7 +185,7 @@ impl PjrtRuntime {
         // interleave: weights come first in HLO parameter order, then inputs
         let mut all: Vec<&PjRtBuffer> = refs;
         all.extend(args.iter());
-        *self.calls.borrow_mut() += 1;
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let out = exe
             .execute_b(&all)
             .map_err(|e| anyhow!("execute {}: {e:?}", art.name))?;
@@ -418,6 +437,6 @@ impl ModelRuntime for PjrtRuntime {
     }
 
     fn calls(&self) -> u64 {
-        *self.calls.borrow()
+        self.calls.load(Ordering::Relaxed)
     }
 }

@@ -80,8 +80,11 @@ pub struct SparseDiff<'a> {
 }
 
 /// The runtime interface the coordinator drives. One instance serves all
-/// models listed in the manifest.
-pub trait ModelRuntime {
+/// models listed in the manifest. `Send + Sync` is part of the contract:
+/// the engine shares one handle across its worker pool, so implementations
+/// must use thread-safe interior mutability (atomics / `Mutex`) for any
+/// internal state such as call counters or executable caches.
+pub trait ModelRuntime: Send + Sync {
     fn spec(&self, model: &str) -> Result<&ModelSpec>;
     fn buckets(&self) -> &Buckets;
 

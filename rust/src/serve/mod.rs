@@ -22,7 +22,7 @@
 //! internal; no caller rebuilds round state from per-request completions.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -252,7 +252,7 @@ impl Engine {
 pub struct EngineBuilder {
     model: String,
     policy: Policy,
-    runtime: Option<Rc<dyn ModelRuntime>>,
+    runtime: Option<Arc<dyn ModelRuntime>>,
     artifacts: Option<PathBuf>,
     pool_blocks: Option<usize>,
     store_bytes: Option<usize>,
@@ -269,6 +269,7 @@ pub struct EngineBuilder {
     quant_format: Option<QuantFormat>,
     fault_plan: Option<FaultPlan>,
     recover_spills: Option<bool>,
+    workers: Option<usize>,
 }
 
 impl EngineBuilder {
@@ -293,6 +294,7 @@ impl EngineBuilder {
             quant_format: None,
             fault_plan: None,
             recover_spills: None,
+            workers: None,
         }
     }
 
@@ -303,14 +305,14 @@ impl EngineBuilder {
     }
 
     /// Execute on an existing runtime (shared across engines).
-    pub fn runtime(mut self, rt: Rc<dyn ModelRuntime>) -> Self {
+    pub fn runtime(mut self, rt: Arc<dyn ModelRuntime>) -> Self {
         self.runtime = Some(rt);
         self
     }
 
     /// Execute on the deterministic mock runtime (logic runs, tests).
     pub fn mock(self) -> Self {
-        let rt: Rc<dyn ModelRuntime> = Rc::new(MockRuntime::new());
+        let rt: Arc<dyn ModelRuntime> = Arc::new(MockRuntime::new());
         self.runtime(rt)
     }
 
@@ -441,11 +443,23 @@ impl EngineBuilder {
         self
     }
 
+    /// Worker threads for the engine's parallel sections (default 1 =
+    /// fully serial, byte-identical to the pre-pool engine). Token
+    /// streams and logical counters are worker-count-invariant — the
+    /// golden-digest tests pin `workers(1) == workers(n)` — so higher
+    /// counts trade memory (one scratch arena per worker) for per-round
+    /// wall clock. An explicit call overrides the `TOKENDANCE_WORKERS`
+    /// environment variable; values are clamped to >= 1.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n.max(1));
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
-        let rt: Rc<dyn ModelRuntime> = match (self.runtime, self.artifacts)
+        let rt: Arc<dyn ModelRuntime> = match (self.runtime, self.artifacts)
         {
             (Some(rt), _) => rt,
-            (None, Some(dir)) => Rc::new(
+            (None, Some(dir)) => Arc::new(
                 PjrtRuntime::load(&dir).with_context(|| {
                     format!("loading artifacts from {}", dir.display())
                 })?,
@@ -503,6 +517,18 @@ impl EngineBuilder {
         if let Some(r) = self.recover_spills {
             cfg.recover_spills = r;
         }
+        // builder call > TOKENDANCE_WORKERS env > serial default — the
+        // env hook lets CI (and users) run an unmodified binary/test
+        // suite at a different worker count
+        cfg.workers = self
+            .workers
+            .or_else(|| {
+                std::env::var("TOKENDANCE_WORKERS")
+                    .ok()
+                    .and_then(|v| v.trim().parse::<usize>().ok())
+            })
+            .unwrap_or(1)
+            .max(1);
         Engine::new(rt, cfg)
     }
 }

@@ -66,7 +66,7 @@ pub mod fault;
 pub mod tier;
 
 use std::collections::{BTreeSet, HashMap, HashSet};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -134,14 +134,14 @@ pub struct MirrorEntry {
     pub diff: AlignedDiff,
 }
 
-/// Resident entry. Payloads are `Rc`-backed so reads are zero-copy: a
+/// Resident entry. Payloads are `Arc`-backed so reads are zero-copy: a
 /// fetch hands out a shared reference to the stored tensor instead of
 /// cloning the full [L, len, d] planes (the engine's gather plan holds
 /// many of these across one round's assembly).
 #[derive(Clone, Debug)]
 pub enum Entry {
-    Dense(Rc<DenseEntry>),
-    Mirror(Rc<MirrorEntry>),
+    Dense(Arc<DenseEntry>),
+    Mirror(Arc<MirrorEntry>),
 }
 
 /// What class of entry sits at a key — a non-counting, non-touching peek
@@ -154,11 +154,11 @@ pub enum EntryKind {
 
 /// Lazy read handle for a Mirror: everything the restore path needs without
 /// materializing a dense tensor (paper: "a lightweight mirror object").
-/// Owned (`Rc`-backed), so holding a handle does not borrow the store.
+/// Owned (`Arc`-backed), so holding a handle does not borrow the store.
 #[derive(Clone)]
 pub struct MirrorHandle {
-    pub master: Rc<DenseEntry>,
-    pub mirror: Rc<MirrorEntry>,
+    pub master: Arc<DenseEntry>,
+    pub mirror: Arc<MirrorEntry>,
 }
 
 /// Storage accounting for the Fig-12 compression analysis, plus the
@@ -339,7 +339,7 @@ pub struct CacheStore {
     counters: StoreCounters,
     /// Runtime used to materialize position-shifted mirrors during master
     /// re-election; identity mirrors promote host-side without it.
-    runtime: Option<(Rc<dyn ModelRuntime>, String)>,
+    runtime: Option<(Arc<dyn ModelRuntime>, String)>,
     /// Optional cold tier (disk spill + quantization). None = flat store,
     /// the bit-pinned default.
     tier: Option<tier::ColdTier>,
@@ -470,7 +470,7 @@ impl CacheStore {
     /// position-shifted mirrors (identity mirrors — including every
     /// re-homed one — promote host-side without it). The engine attaches
     /// its runtime at construction.
-    pub fn attach_runtime(&mut self, rt: Rc<dyn ModelRuntime>, model: String) {
+    pub fn attach_runtime(&mut self, rt: Arc<dyn ModelRuntime>, model: String) {
         self.runtime = Some((rt, model));
     }
 
@@ -699,7 +699,7 @@ impl CacheStore {
         master_padded.copy_rows_from(&promoted.kv, 0, 0, plen);
         self.insert_resident(
             promoted.key,
-            Entry::Dense(Rc::new(DenseEntry {
+            Entry::Dense(Arc::new(DenseEntry {
                 tokens: promoted.tokens,
                 positions: (0..plen as i32).collect(),
                 kv: promoted.kv,
@@ -723,7 +723,7 @@ impl CacheStore {
             if mb < dense_cost {
                 self.insert_resident(
                     key,
-                    Entry::Mirror(Rc::new(MirrorEntry {
+                    Entry::Mirror(Arc::new(MirrorEntry {
                         master: promoted.key,
                         tokens,
                         positions,
@@ -736,7 +736,7 @@ impl CacheStore {
                 // mirror to pay off: keep it dense
                 self.insert_resident(
                     key,
-                    Entry::Dense(Rc::new(DenseEntry { tokens, positions, kv })),
+                    Entry::Dense(Arc::new(DenseEntry { tokens, positions, kv })),
                 );
                 self.counters.rehomed_mirrors += 1;
             } else {
@@ -1007,11 +1007,11 @@ impl CacheStore {
             return false;
         }
         let entry = match payload {
-            SpillPayload::Dense(d) => Entry::Dense(Rc::new(d)),
+            SpillPayload::Dense(d) => Entry::Dense(Arc::new(d)),
             SpillPayload::Quantized(q) => {
-                Entry::Dense(Rc::new(q.dequantize()))
+                Entry::Dense(Arc::new(q.dequantize()))
             }
-            SpillPayload::Mirror(m) => Entry::Mirror(Rc::new(m)),
+            SpillPayload::Mirror(m) => Entry::Mirror(Arc::new(m)),
         };
         self.insert_resident(key, entry);
         self.entries.get_mut(&key).unwrap().next_use = next_use;
@@ -1075,7 +1075,7 @@ impl CacheStore {
                 .map(|(r, name)| (r.as_ref(), name.as_str()));
             let handle = MirrorHandle {
                 master: master_rc.clone(),
-                mirror: Rc::new(m),
+                mirror: Arc::new(m),
             };
             let Ok(padded) = crate::restore::materialize_for_promotion(
                 &self.spec, rt, &handle,
@@ -1165,7 +1165,7 @@ impl CacheStore {
         }
         self.remove_existing(key);
         self.evict_for(nb, None);
-        self.insert_resident(key, Entry::Dense(Rc::new(entry)));
+        self.insert_resident(key, Entry::Dense(Arc::new(entry)));
         #[cfg(debug_assertions)]
         self.assert_invariants();
         Ok(())
@@ -1225,7 +1225,7 @@ impl CacheStore {
                 self.capacity_bytes
             );
         }
-        self.insert_resident(key, Entry::Mirror(Rc::new(entry)));
+        self.insert_resident(key, Entry::Mirror(Arc::new(entry)));
         #[cfg(debug_assertions)]
         self.assert_invariants();
         Ok(())
@@ -1244,7 +1244,7 @@ impl CacheStore {
         })
     }
 
-    /// Fetch an entry. Dense entries come back as shared (`Rc`) payloads —
+    /// Fetch an entry. Dense entries come back as shared (`Arc`) payloads —
     /// zero-copy, no tensor clone — and mirrors as owned lazy handles, so
     /// the caller can hold many fetches at once (the gather plan does).
     /// Reading a mirror touches its Master too, so a Master is never
@@ -1490,7 +1490,7 @@ impl CacheStore {
 /// borrow the store, and cloning one never copies tensor data).
 #[derive(Clone)]
 pub enum Fetched {
-    Dense(Rc<DenseEntry>),
+    Dense(Arc<DenseEntry>),
     Mirror(MirrorHandle),
 }
 

@@ -56,13 +56,25 @@ fn configs() -> Vec<(Policy, Topology)> {
 /// Drive one fixed-seed session and return (transcript, digest). The
 /// transcript covers every output token of every agent in every round
 /// plus the logical counters, so any behavior change moves the digest.
+/// Builder default worker count (1, or `TOKENDANCE_WORKERS` — CI runs
+/// the suite at both): the digests must not move either way.
 fn run_config(policy: Policy, topology: Topology) -> (String, u64) {
-    let mut eng = Engine::builder("sim-7b")
+    run_config_with(policy, topology, None)
+}
+
+fn run_config_with(
+    policy: Policy,
+    topology: Topology,
+    workers: Option<usize>,
+) -> (String, u64) {
+    let mut b = Engine::builder("sim-7b")
         .policy(policy)
         .pool_blocks(1024)
-        .mock()
-        .build()
-        .unwrap();
+        .mock();
+    if let Some(w) = workers {
+        b = b.workers(w);
+    }
+    let mut eng = b.build().unwrap();
     let cfg = WorkloadConfig::generative_agents(1, AGENTS, ROUNDS)
         .with_topology(topology);
     let mut session = Session::new(cfg, 0);
@@ -130,6 +142,27 @@ fn golden_runs_are_deterministic_in_process() {
             d2,
             "{policy:?}/{} nondeterministic between two fresh engines:\n\
              --- first ---\n{t1}\n--- second ---\n{t2}",
+            topology.label()
+        );
+    }
+}
+
+/// The worker-pool determinism guarantee, pinned directly: the engine's
+/// parallel sections (cohort assembly, mirror materialization, encode
+/// expectation pre-builds) must produce byte-identical transcripts and
+/// logical counters at any worker count. `workers(1)` is the serial
+/// reference; `workers(4)` exercises every fan-out with multiple scoped
+/// threads and multiple scratch arenas.
+#[test]
+fn digests_are_worker_count_invariant() {
+    for (policy, topology) in configs() {
+        let (t1, d1) = run_config_with(policy, topology, Some(1));
+        let (t4, d4) = run_config_with(policy, topology, Some(4));
+        assert_eq!(
+            d1,
+            d4,
+            "{policy:?}/{} diverges between workers=1 and workers=4:\n\
+             --- serial ---\n{t1}\n--- 4 workers ---\n{t4}",
             topology.label()
         );
     }

@@ -5,7 +5,7 @@
 //! Requires `make artifacts` to have run (skipped otherwise).
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use tokendance::engine::{AgentRequest, Engine, Policy};
 use tokendance::runtime::{
@@ -20,8 +20,8 @@ fn artifacts_dir() -> Option<PathBuf> {
     dir.join("manifest.json").exists().then_some(dir)
 }
 
-fn runtime() -> Option<Rc<PjrtRuntime>> {
-    artifacts_dir().map(|d| Rc::new(PjrtRuntime::load(&d).unwrap()))
+fn runtime() -> Option<Arc<PjrtRuntime>> {
+    artifacts_dir().map(|d| Arc::new(PjrtRuntime::load(&d).unwrap()))
 }
 
 #[test]
@@ -183,7 +183,7 @@ fn mk_prompt(agent: usize, hist: &str, shared: &[Vec<u32>], task: &str)
     p
 }
 
-fn run_two_rounds(policy: Policy, rt: Rc<PjrtRuntime>) -> Vec<Vec<Vec<u32>>> {
+fn run_two_rounds(policy: Policy, rt: Arc<PjrtRuntime>) -> Vec<Vec<Vec<u32>>> {
     let mut eng = Engine::builder("sim-7b")
         .policy(policy)
         .pool_blocks(256)

@@ -1230,6 +1230,103 @@ fn prop_engine_serves_random_round_shapes() {
 }
 
 #[test]
+// The worker-pool transparency property over *random* cohort shapes
+// (the golden grid pins fixed ones): the parallel assembly/encode waves
+// must merge in exactly the serial order — same completion order, same
+// token streams, same logical counters (the expectation-memo counters
+// would move if the per-signature pre-build wave ever double-built or
+// reordered a signature group against the serial BTreeMap-driven walk).
+// Engine rounds are too slow under miri's interpreter.
+#[cfg_attr(miri, ignore)]
+fn prop_worker_pool_is_transparent() {
+    forall(10, |rng| {
+        let policy = match rng.below(4) {
+            0 => Policy::VllmPrefix,
+            1 => Policy::CacheBlendOrdinary,
+            2 => Policy::CacheBlendFull,
+            _ => Policy::TokenDance,
+        };
+        let agents = rng.range(2, 7);
+        let rounds = rng.range(1, 4);
+        // one fixed prompt script, replayed against both engines
+        let mut script: Vec<Vec<(Vec<u32>, usize)>> = Vec::new();
+        for _ in 0..rounds {
+            script.push(
+                (0..agents)
+                    .map(|a| {
+                        (
+                            encode(&format!(
+                                "agent {a} h{}",
+                                rng.below(1000)
+                            )),
+                            rng.range(1, 16),
+                        )
+                    })
+                    .collect(),
+            );
+        }
+        let run = |workers: usize| {
+            let mut eng = Engine::builder("sim-7b")
+                .policy(policy)
+                .pool_blocks(512)
+                .workers(workers)
+                .mock()
+                .build()
+                .unwrap();
+            let mut transcript: Vec<(u64, usize, Vec<u32>)> = Vec::new();
+            let mut shared: Vec<Vec<u32>> = Vec::new();
+            for (round, specs) in script.iter().enumerate() {
+                let mut sub = RoundSubmission::new(round);
+                for (a, (hist, max_new)) in specs.iter().enumerate() {
+                    let mut p = RoundAwarePrompt::new();
+                    p.push(BlockKind::PrivateHistory, hist.clone());
+                    for (i, toks) in shared.iter().enumerate() {
+                        p.push(
+                            BlockKind::SharedOutput { producer: i, round },
+                            toks.clone(),
+                        );
+                    }
+                    p.push(BlockKind::RoundTask, encode("go"));
+                    p.pad_blocks(16, 36);
+                    sub.push(AgentRequest {
+                        agent: a,
+                        round,
+                        prompt: p,
+                        max_new_tokens: *max_new,
+                        retain: true,
+                    });
+                }
+                eng.submit_round(sub).unwrap();
+                let done = eng.drain().unwrap();
+                assert_eq!(done.len(), agents);
+                shared =
+                    done.iter().map(|c| c.generated.clone()).collect();
+                for c in &done {
+                    transcript.push((c.id, c.agent, c.generated.clone()));
+                }
+            }
+            let m = &eng.metrics;
+            let counters = (
+                m.assembly_lookups,
+                m.assembly_dedup_hits,
+                m.assembly_restores,
+                m.prefill_reused,
+                m.prefill_full,
+                m.encode_lookups,
+                m.expected_memo_hits,
+                m.encode_skipped_blocks,
+                m.encode_rope_recovers,
+            );
+            (transcript, counters)
+        };
+        let (t1, c1) = run(1);
+        let (t4, c4) = run(4);
+        assert_eq!(t1, t4, "{policy:?}: token streams moved with workers");
+        assert_eq!(c1, c4, "{policy:?}: logical counters moved with workers");
+    });
+}
+
+#[test]
 fn prop_buckets_fit_monotone() {
     let b = Buckets::default();
     forall(200, |rng| {

@@ -2,7 +2,7 @@
 //! the driver at various QPS, policy comparisons at trace level, and
 //! failure injection (pool exhaustion, store pressure, oversize rounds).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use tokendance::engine::{Engine, Policy};
 use tokendance::runtime::{MockRuntime, ModelRuntime};
@@ -59,7 +59,7 @@ fn low_qps_round_latency_excludes_idle_time() {
 
 #[test]
 fn independent_workload_frees_pool() {
-    let rt = Rc::new(MockRuntime::new());
+    let rt = Arc::new(MockRuntime::new());
     let spec = rt.spec("sim-7b").unwrap().clone();
     let mut e = Engine::builder("sim-7b")
         .policy(Policy::VllmPrefix)
@@ -77,7 +77,7 @@ fn independent_workload_frees_pool() {
 #[test]
 fn agents_session_survives_pool_pressure() {
     // pool barely fits two sequences; 5 agents queue through it
-    let rt = Rc::new(MockRuntime::new());
+    let rt = Arc::new(MockRuntime::new());
     let spec = rt.spec("sim-7b").unwrap().clone();
     let mut e = Engine::builder("sim-7b")
         .policy(Policy::TokenDance)
