@@ -20,7 +20,9 @@ use anyhow::Result;
 use crate::pic::{
     select_important_blocks, total_deviation, ImportanceConfig, ReusePlan,
 };
-use crate::runtime::{KvBuf, ModelRuntime, RopeDiffSeq, SelectiveIn};
+use crate::runtime::{
+    EngineFault, KvBuf, ModelRuntime, RopeDiffSeq, RtOp, SelectiveIn,
+};
 
 /// One request's reuse input, prepared by the engine.
 pub struct ReuseTask {
@@ -117,14 +119,41 @@ pub fn group_compatible(
     out
 }
 
-/// Run collective (or serial) reuse over one round's tasks.
+/// One task that an injected compute fault took out of the reuse pass.
+#[derive(Debug)]
+pub struct ReuseFailure {
+    /// Index into the `tasks` slice handed to [`run_reuse_isolated`].
+    pub index: usize,
+    /// The task's id (the engine's batch-slot handle).
+    pub id: u64,
+    pub fault: EngineFault,
+}
+
+/// Fault-isolated reuse output: per-task results aligned with the input
+/// (`None` = that task faulted), the Master-election plan over the
+/// survivors, and the recorded failures.
+pub struct ReuseOutcome {
+    pub results: Vec<Option<ReuseResult>>,
+    pub plan: ReusePlan,
+    pub failures: Vec<ReuseFailure>,
+}
+
+/// Run collective (or serial) reuse over one round's tasks, isolating
+/// injected compute faults to the member they hit.
+///
+/// A [`EngineFault::Group`] from the batched `ropediff` pass names the
+/// faulted group-local members; they are recorded and the group re-issues
+/// with the survivors (fresh fault draws — each re-issue is a new logical
+/// op) until it succeeds or empties. A per-task fault from the selective
+/// refresh fails only that task. Any non-`EngineFault` error propagates
+/// unchanged — real bugs must not be absorbed as degradation.
 // tdlint: allow(panic_path) -- group indices enumerate 0..tasks.len()
-pub fn run_reuse(
+pub fn run_reuse_isolated(
     rt: &dyn ModelRuntime,
     model: &str,
     tasks: &[ReuseTask],
     cfg: &CollectorConfig,
-) -> Result<(Vec<ReuseResult>, ReusePlan)> {
+) -> Result<ReuseOutcome> {
     let groups: Vec<Vec<usize>> = if cfg.collective {
         group_compatible(rt, tasks)
     } else {
@@ -134,25 +163,69 @@ pub fn run_reuse(
 
     let mut results: Vec<Option<ReuseResult>> =
         (0..tasks.len()).map(|_| None).collect();
+    let mut failures: Vec<ReuseFailure> = Vec::new();
 
     for group in &groups {
-        let seqs: Vec<RopeDiffSeq> = group
-            .iter()
-            .map(|&i| {
-                let t = &tasks[i];
-                RopeDiffSeq {
-                    tokens: &t.tokens,
-                    old_pos: &t.old_pos,
-                    valid: &t.valid,
-                    kv: &t.kv,
-                }
-            })
-            .collect();
-        // the one shared RoPE + diff-analysis pass for the whole group
-        let outs = rt.ropediff(model, &seqs)?;
+        // survivors of this group, shrunk as injected faults land; each
+        // iteration either succeeds or removes >= 1 member, so the loop
+        // is bounded by the group size
+        let mut live: Vec<usize> = group.clone();
+        let outs = loop {
+            if live.is_empty() {
+                break Vec::new();
+            }
+            let seqs: Vec<RopeDiffSeq> = live
+                .iter()
+                .map(|&i| {
+                    let t = &tasks[i];
+                    RopeDiffSeq {
+                        tokens: &t.tokens,
+                        old_pos: &t.old_pos,
+                        valid: &t.valid,
+                        kv: &t.kv,
+                    }
+                })
+                .collect();
+            // the one shared RoPE + diff-analysis pass for the group
+            match rt.ropediff(model, &seqs) {
+                Ok(outs) => break outs,
+                Err(e) => match e.downcast_ref::<EngineFault>() {
+                    Some(EngineFault::Group { members, .. }) => {
+                        // group-local indices -> task indices; remove in
+                        // descending order so earlier indices stay valid
+                        let mut dead = members.clone();
+                        dead.sort_unstable();
+                        for &gi in dead.iter().rev() {
+                            let ti = live.remove(gi);
+                            failures.push(ReuseFailure {
+                                index: ti,
+                                id: tasks[ti].id,
+                                fault: EngineFault::Group {
+                                    op: RtOp::GroupReuse,
+                                    members: vec![gi],
+                                },
+                            });
+                        }
+                    }
+                    Some(f) => {
+                        // a non-member-attributable fault (e.g. a worker
+                        // panic surfacing here) takes the whole group
+                        for &ti in &live {
+                            failures.push(ReuseFailure {
+                                index: ti,
+                                id: tasks[ti].id,
+                                fault: f.clone(),
+                            });
+                        }
+                        live.clear();
+                    }
+                    None => return Err(e),
+                },
+            }
+        };
 
         let block_tokens = rt.spec(model)?.block_tokens;
-        for (gi, &ti) in group.iter().enumerate() {
+        for (gi, &ti) in live.iter().enumerate() {
             let task = &tasks[ti];
             let rd = &outs[gi];
             // block-clustered selection keeps the recompute set (and hence
@@ -171,9 +244,22 @@ pub fn run_reuse(
             blended.v.copy_from_slice(&task.kv.v);
 
             // per-position refresh (request-specific, as in the paper)
-            let (logits, kv, recomputed) = selective_chunked(
+            let (logits, kv, recomputed) = match selective_chunked(
                 rt, model, &task.tokens, &sel, blended, task.valid_len,
-            )?;
+            ) {
+                Ok(out) => out,
+                Err(e) => match e.downcast_ref::<EngineFault>() {
+                    Some(f) => {
+                        failures.push(ReuseFailure {
+                            index: ti,
+                            id: task.id,
+                            fault: f.clone(),
+                        });
+                        continue;
+                    }
+                    None => return Err(e),
+                },
+            };
             // selective_chunked always refreshes the last position even
             // when the selection missed it — report the full rewritten set
             let mut recomputed_slots = sel;
@@ -192,7 +278,32 @@ pub fn run_reuse(
         }
     }
 
-    let results: Vec<ReuseResult> = results
+    // Master election runs over the survivors only — a failed agent's
+    // cache never becomes (or votes for) a Master
+    let survivors: Vec<&ReuseResult> = results.iter().flatten().collect();
+    let plan = ReusePlan::elect(
+        survivors.iter().map(|r| r.id).collect(),
+        survivors.iter().map(|r| r.deviation).collect(),
+    );
+    Ok(ReuseOutcome { results, plan, failures })
+}
+
+/// Strict variant of [`run_reuse_isolated`]: every task must produce a
+/// result; the first injected fault (if any) surfaces as an error. The
+/// equivalence tests and baselines use this surface.
+pub fn run_reuse(
+    rt: &dyn ModelRuntime,
+    model: &str,
+    tasks: &[ReuseTask],
+    cfg: &CollectorConfig,
+) -> Result<(Vec<ReuseResult>, ReusePlan)> {
+    let out = run_reuse_isolated(rt, model, tasks, cfg)?;
+    if let Some(f) = out.failures.first() {
+        return Err(anyhow::anyhow!(f.fault.clone())
+            .context(format!("reuse task {} faulted", f.index)));
+    }
+    let results: Vec<ReuseResult> = out
+        .results
         .into_iter()
         .enumerate()
         .map(|(i, r)| {
@@ -201,11 +312,7 @@ pub fn run_reuse(
             })
         })
         .collect::<Result<_>>()?;
-    let plan = ReusePlan::elect(
-        results.iter().map(|r| r.id).collect(),
-        results.iter().map(|r| r.deviation).collect(),
-    );
-    Ok((results, plan))
+    Ok((results, out.plan))
 }
 
 /// Selective recomputation of `sel` rows, chunked to the R buckets. Each
@@ -415,6 +522,62 @@ mod tests {
         assert!(groups.iter().all(|g| g.len() <= 16));
         let total: usize = groups.iter().map(Vec::len).sum();
         assert_eq!(total, 20);
+    }
+
+    #[test]
+    fn injected_group_faults_isolate_to_members() {
+        use crate::runtime::fault::{FaultyRuntime, RuntimeFaultPlan};
+        use std::sync::Arc;
+        let mock = Arc::new(MockRuntime::new());
+        let toks: Vec<u32> =
+            (0..48u32).map(|i| 4 + (i * 3) % 200).collect();
+        let mk = |id| mk_task(&mock, id, &toks, true);
+        // fault-free baseline for the survivor-equivalence check
+        let (base, _) = run_reuse(
+            mock.as_ref(),
+            "sim-7b",
+            &[mk(0), mk(1), mk(2), mk(3)],
+            &CollectorConfig::default(),
+        )
+        .unwrap();
+
+        let (mut saw_failure, mut saw_survivor) = (false, false);
+        for seed in 0..8u64 {
+            let tasks = vec![mk(0), mk(1), mk(2), mk(3)];
+            let faulty = FaultyRuntime::new(
+                mock.clone(),
+                RuntimeFaultPlan {
+                    group_fail: 0.5,
+                    ..RuntimeFaultPlan::quiet(seed)
+                },
+            );
+            let out = run_reuse_isolated(
+                &faulty,
+                "sim-7b",
+                &tasks,
+                &CollectorConfig::default(),
+            )
+            .unwrap();
+            let mut survivors = 0usize;
+            for (i, r) in out.results.iter().enumerate() {
+                if let Some(r) = r {
+                    // a faulted sibling must not perturb survivors
+                    assert_eq!(r.kv, base[i].kv, "survivor {i} exact");
+                    assert_eq!(r.logits, base[i].logits);
+                    survivors += 1;
+                    saw_survivor = true;
+                }
+            }
+            assert_eq!(survivors + out.failures.len(), 4);
+            for f in &out.failures {
+                assert!(out.results[f.index].is_none());
+                saw_failure = true;
+            }
+            // Master election never includes a failed member
+            assert_eq!(out.plan.members.len(), survivors);
+        }
+        assert!(saw_failure, "0.5 x 4 tasks x 8 seeds must fault");
+        assert!(saw_survivor, "0.5 x 4 tasks x 8 seeds must spare");
     }
 
     #[test]

@@ -37,8 +37,8 @@ use crate::model::ModelSpec;
 use crate::restore::RestoreMode;
 use crate::rounds::{segment_blocks, DetectorConfig, SegmentedPrompt};
 use crate::runtime::{
-    argmax, BlockProvenance, DecodeSeq, KvBuf, ModelRuntime,
-    ScratchCounters, ScratchPool,
+    argmax, BlockProvenance, DecodeSeq, EngineFault, FaultyRuntime, KvBuf,
+    ModelRuntime, RtOp, RuntimeFaultPlan, ScratchCounters, ScratchPool,
 };
 use crate::scheduler::{decode_batches, AdmissionQueue, QueuedRequest};
 use crate::serve::EngineEvent;
@@ -158,6 +158,22 @@ pub struct EngineConfig {
     /// engine (pinned by the golden digests); higher counts change wall
     /// clock only, never token streams or logical counters.
     pub workers: usize,
+    /// Deterministic **compute-side** fault injection
+    /// (`runtime::fault::FaultyRuntime` wraps the runtime): seeded
+    /// per-op-class prefill/decode/group-reuse failures, transient
+    /// retries, and virtual-delay stragglers. `None` — the default —
+    /// leaves the runtime unwrapped: zero branches on the hot path,
+    /// golden digests frozen. Under any plan a persistent fault fails
+    /// *only* the request it hits; the round closes with the survivors.
+    pub runtime_fault_plan: Option<RuntimeFaultPlan>,
+    /// Per-request deadline in deterministic engine steps, measured from
+    /// submission (covers queue wait). Requests over budget are shed as
+    /// `Failed(DeadlineExceeded)`. `None` = unbounded (the default).
+    pub request_deadline_steps: Option<u64>,
+    /// Per-round deadline in engine steps, measured from the round's
+    /// first submission; sheds every still-outstanding request of an
+    /// over-budget round so round close is always bounded.
+    pub round_deadline_steps: Option<u64>,
 }
 
 impl EngineConfig {
@@ -184,6 +200,9 @@ impl EngineConfig {
             fault_plan: None,
             recover_spills: false,
             workers: 1,
+            runtime_fault_plan: None,
+            request_deadline_steps: None,
+            round_deadline_steps: None,
         }
     }
 
@@ -236,6 +255,9 @@ struct Running {
     next_token: u32,
     generated: Vec<u32>,
     seg: SegmentedPrompt,
+    /// Engine step at which the request was submitted (deadline clock —
+    /// deterministic, no wall time).
+    submitted_step: u64,
     /// Check-layer deviation from reuse (f64::MAX when not on a PIC path)
     /// — Master election input for round-end Mirror encoding.
     deviation: f64,
@@ -286,6 +308,8 @@ struct Pending {
     req: AgentRequest,
     tokens: Vec<u32>,
     seg: SegmentedPrompt,
+    /// Engine step at submission (deadline clock).
+    submitted_step: u64,
 }
 
 pub struct Engine {
@@ -325,6 +349,17 @@ pub struct Engine {
     /// are assigned per admitted batch at prefill).
     next_cohort: u64,
     started: Instant,
+    /// Typed handle on the fault decorator when `runtime_fault_plan` is
+    /// set (`rt` is then the same object as `dyn ModelRuntime`): scope
+    /// setters, counters, and the virtual-delay drain.
+    faulty: Option<Arc<FaultyRuntime>>,
+    /// Deterministic engine step counter: +1 per `tick`, plus any virtual
+    /// straggler delay charged by the fault decorator. The deadline clock
+    /// — replayable, no wall time.
+    step: u64,
+    /// Step at which each in-flight round's first request was submitted
+    /// (round-deadline clock); removed at round close.
+    round_opened_step: HashMap<usize, u64>,
 }
 
 /// Event-buffer cap: far above any round's event count, small enough that
@@ -333,6 +368,17 @@ const EVENT_BUF_CAP: usize = 1 << 16;
 
 impl Engine {
     pub fn new(rt: Arc<dyn ModelRuntime>, cfg: EngineConfig) -> Result<Self> {
+        // wrap the runtime in the fault decorator when a plan is set; the
+        // default (None) leaves the trait object untouched — no extra
+        // indirection, no draws, golden digests frozen
+        let (rt, faulty): (Arc<dyn ModelRuntime>, Option<Arc<FaultyRuntime>>) =
+            match cfg.runtime_fault_plan {
+                Some(plan) => {
+                    let f = Arc::new(FaultyRuntime::new(rt, plan));
+                    (f.clone(), Some(f))
+                }
+                None => (rt, None),
+            };
         let spec = rt.spec(&cfg.model)?.clone();
         let pool = KvPool::new(&spec, cfg.pool_blocks);
         let mut store = CacheStore::new(&spec, cfg.store_bytes);
@@ -384,6 +430,9 @@ impl Engine {
             next_id: 0,
             next_cohort: 1, // 0 is reserved for the non-PIC paths
             started: Instant::now(),
+            faulty,
+            step: 0,
+            round_opened_step: HashMap::new(),
         })
     }
 
@@ -469,6 +518,7 @@ impl Engine {
         // priority is measured against the latest submitted round
         self.store.note_round(req.round as u64);
         *self.round_outstanding.entry(req.round).or_insert(0) += 1;
+        self.round_opened_step.entry(req.round).or_insert(self.step);
         let mut trace = RequestTrace::new(id, req.agent, req.round, arrived);
         trace.prompt_tokens = tokens.len();
         self.metrics.push_request(trace);
@@ -482,7 +532,9 @@ impl Engine {
             agent: req.agent,
             round: req.round,
         });
-        self.pending.insert(id, Pending { id, req, tokens, seg });
+        let submitted_step = self.step;
+        self.pending
+            .insert(id, Pending { id, req, tokens, seg, submitted_step });
         id
     }
 
@@ -524,6 +576,14 @@ impl Engine {
     /// One engine step. Returns true if any work was done.
     pub fn tick(&mut self) -> Result<bool> {
         let mut worked = false;
+        self.step += 1;
+
+        // 0. deadline enforcement before new work: shedding over-budget
+        // requests (queued or running) keeps round close bounded even
+        // when the pool is wedged behind a straggler
+        if self.shed_over_budget()? {
+            worked = true;
+        }
 
         // 1. admission (with retained-cache eviction when the head stalls)
         if let Some(demand) = self.queue.head_demand() {
@@ -559,6 +619,14 @@ impl Engine {
             self.finalize_finished()?;
         }
 
+        // straggler accounting: slow ops charged virtual delay on the
+        // decorator this tick; drain it into the deterministic step
+        // counter (global charging — a straggler blocks the head of the
+        // line, exactly what the round barrier amplifies)
+        if let Some(f) = &self.faulty {
+            self.step = self.step.saturating_add(f.take_virtual_delay());
+        }
+
         Ok(worked)
     }
 
@@ -578,15 +646,60 @@ impl Engine {
         let max_b = *self.rt.buckets().decode_b.last().unwrap();
         let model = self.cfg.model.clone();
         for (start, end) in decode_batches(self.running.len(), max_b) {
-            let seqs: Vec<DecodeSeq> = self.running[start..end]
-                .iter()
-                .map(|r| DecodeSeq {
-                    token: r.next_token,
-                    len: r.table.len,
-                    kv: &r.kv,
-                })
-                .collect();
-            let outs = self.rt.decode(&model, &seqs)?;
+            if let Some(f) = &self.faulty {
+                f.set_decode_agents(
+                    self.running[start..end]
+                        .iter()
+                        .map(|r| r.agent)
+                        .collect(),
+                );
+            }
+            let res = {
+                let seqs: Vec<DecodeSeq> = self.running[start..end]
+                    .iter()
+                    .map(|r| DecodeSeq {
+                        token: r.next_token,
+                        len: r.table.len,
+                        kv: &r.kv,
+                    })
+                    .collect();
+                self.rt.decode(&model, &seqs)
+            };
+            let outs = match res {
+                Ok(outs) => outs,
+                Err(e) => {
+                    let members = match e.downcast_ref::<EngineFault>() {
+                        Some(EngineFault::Group { members, .. }) => {
+                            members.clone()
+                        }
+                        // real runtime errors keep aborting the engine
+                        _ => return Err(e),
+                    };
+                    // fail exactly the drawn members; every survivor
+                    // (this batch and later ones) re-decodes next tick
+                    // unchanged — decode is per-sequence, a function of
+                    // (token, len, kv) only, so skipping a tick is
+                    // stream-neutral
+                    let ids: Vec<u64> = members
+                        .iter()
+                        .filter_map(|&m| {
+                            self.running.get(start + m).map(|r| r.id)
+                        })
+                        .collect();
+                    for id in ids {
+                        let fault = EngineFault::Op {
+                            op: RtOp::Decode,
+                            detail: format!("decode step failed for {id}"),
+                        };
+                        if let Some(idx) =
+                            self.running.iter().position(|r| r.id == id)
+                        {
+                            self.fail_running_idx(idx, &fault)?;
+                        }
+                    }
+                    return Ok(());
+                }
+            };
             for (i, out) in outs.into_iter().enumerate() {
                 let r = &mut self.running[start + i];
                 // write the new row into the paged pool + working copy
@@ -629,6 +742,166 @@ impl Engine {
         Ok(())
     }
 
+    /// Shed every request over its deadline budget. Queued requests are
+    /// covered too — under pool pressure a queued request can starve
+    /// forever, and the deadline must bound that as well. Returns true
+    /// if anything was shed.
+    fn shed_over_budget(&mut self) -> Result<bool> {
+        let req_dl = self.cfg.request_deadline_steps;
+        let round_dl = self.cfg.round_deadline_steps;
+        if req_dl.is_none() && round_dl.is_none() {
+            return Ok(false);
+        }
+        let step = self.step;
+        // rounds whose first submission is over the round budget
+        let mut over_rounds: Vec<usize> = Vec::new();
+        if let Some(dl) = round_dl {
+            let mut rounds: Vec<(usize, u64)> = self
+                .round_opened_step
+                // tdlint: allow(hash_iter) -- collected and sorted below
+                .iter()
+                .map(|(&r, &s)| (r, s))
+                .collect();
+            rounds.sort_unstable();
+            for (r, opened) in rounds {
+                if step.saturating_sub(opened) > dl {
+                    over_rounds.push(r);
+                }
+            }
+        }
+        let budget_of = |submitted: u64, round: usize| {
+            if let Some(dl) = req_dl {
+                if step.saturating_sub(submitted) > dl {
+                    return Some(("request", dl));
+                }
+            }
+            if over_rounds.contains(&round) {
+                return Some(("round", round_dl.unwrap_or(0)));
+            }
+            None
+        };
+        // victims in deterministic order: running (decode order), then
+        // queued (by id — HashMap iteration is unordered)
+        let mut running_victims: Vec<(u64, &'static str, u64)> = Vec::new();
+        for r in &self.running {
+            if let Some((scope, budget)) =
+                budget_of(r.submitted_step, r.round)
+            {
+                running_victims.push((r.id, scope, budget));
+            }
+        }
+        let mut queued_victims: Vec<(u64, &'static str, u64)> = self
+            .pending
+            // tdlint: allow(hash_iter) -- collected and sorted below
+            .values()
+            .filter_map(|p| {
+                budget_of(p.submitted_step, p.req.round)
+                    .map(|(scope, budget)| (p.id, scope, budget))
+            })
+            .collect();
+        queued_victims.sort_unstable();
+        let shed_any =
+            !running_victims.is_empty() || !queued_victims.is_empty();
+        for (id, scope, budget_steps) in running_victims {
+            let fault =
+                EngineFault::DeadlineExceeded { scope, budget_steps };
+            if let Some(idx) = self.running.iter().position(|r| r.id == id)
+            {
+                self.fail_running_idx(idx, &fault)?;
+            }
+        }
+        for (id, scope, budget_steps) in queued_victims {
+            let fault =
+                EngineFault::DeadlineExceeded { scope, budget_steps };
+            self.fail_pending(id, &fault)?;
+        }
+        Ok(shed_any)
+    }
+
+    /// Fail a request still waiting in the admission queue.
+    pub(crate) fn fail_pending(
+        &mut self,
+        id: u64,
+        fault: &EngineFault,
+    ) -> Result<()> {
+        if let Some(p) = self.pending.remove(&id) {
+            self.queue.remove(id);
+            self.note_failure(id, p.req.agent, p.req.round, fault)?;
+        }
+        Ok(())
+    }
+
+    /// Fail an admitted request that never reached the running set (a
+    /// prefill-phase fault). The caller owns cleanup of any partial
+    /// assembly state; pool blocks are only allocated after prefill
+    /// succeeds, so there is nothing to release here.
+    pub(crate) fn fail_admitted(
+        &mut self,
+        id: u64,
+        agent: usize,
+        round: usize,
+        fault: &EngineFault,
+    ) -> Result<()> {
+        self.note_failure(id, agent, round, fault)
+    }
+
+    /// Fail a running sequence: release its pool blocks, recycle its
+    /// working buffer, then close out round bookkeeping.
+    pub(crate) fn fail_running_idx(
+        &mut self,
+        idx: usize,
+        fault: &EngineFault,
+    ) -> Result<()> {
+        // Vec::remove keeps the survivors' decode order intact
+        let r = self.running.remove(idx);
+        self.pool.release(&r.table);
+        self.scratch.checkin(r.kv, r.table.len);
+        self.note_failure(r.id, r.agent, r.round, fault)
+    }
+
+    /// Common failure bookkeeping: counters, the typed event
+    /// (`Failed`, or `Shed` for deadline faults), and the same at-zero
+    /// round close that successful completions take — a round with
+    /// failures still encodes its survivors and emits `RoundClosed`.
+    fn note_failure(
+        &mut self,
+        id: u64,
+        agent: usize,
+        round: usize,
+        fault: &EngineFault,
+    ) -> Result<()> {
+        let shed =
+            matches!(fault, EngineFault::DeadlineExceeded { .. });
+        if shed {
+            self.metrics.compute_shed += 1;
+        } else {
+            self.metrics.compute_failed += 1;
+        }
+        if matches!(fault, EngineFault::WorkerPanic { .. }) {
+            self.metrics.worker_panics += 1;
+        }
+        let step = self.step;
+        let reason = fault.to_string();
+        if shed {
+            self.push_event(EngineEvent::Shed {
+                id,
+                agent,
+                round,
+                step,
+                reason,
+            });
+        } else {
+            self.push_event(EngineEvent::Failed {
+                id,
+                agent,
+                round,
+                step,
+                reason,
+            });
+        }
+        self.close_round_slot(round)
+    }
+
     fn sample_usage(&mut self) {
         let st = self.pool.stats();
         self.metrics.usage.push(UsageSample {
@@ -639,6 +912,12 @@ impl Engine {
             store_cold_bytes: self.store.cold_bytes(),
         });
         self.metrics.runtime_calls = self.rt.calls();
+        self.metrics.engine_steps = self.step;
+        if let Some(f) = &self.faulty {
+            self.metrics.compute_retries = f.retries();
+            self.metrics.compute_slow_ops = f.slow_ops();
+            self.metrics.compute_injected = f.injected();
+        }
         let c = self.store.counters();
         self.metrics.store_evictions = c.evictions;
         self.metrics.store_promotions = c.promotions;
@@ -707,6 +986,17 @@ impl Engine {
 
     pub fn pending_count(&self) -> usize {
         self.queue.len() + self.running.len()
+    }
+
+    /// The deterministic engine step counter (the deadline clock).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// The fault decorator, when `runtime_fault_plan` is set (counters
+    /// for the serve CLI and the chaos harness).
+    pub fn runtime_faults(&self) -> Option<&Arc<FaultyRuntime>> {
+        self.faulty.as_ref()
     }
 }
 

@@ -24,10 +24,14 @@ use anyhow::Result;
 
 use super::gather::GatherPlan;
 use super::{workers, Completion, Engine, Pending, Policy, Running, StagedCache};
-use crate::collector::{run_reuse, selective_chunked, CollectorConfig, ReuseTask};
+use crate::collector::{
+    run_reuse_isolated, selective_chunked, CollectorConfig, ReuseTask,
+};
 use crate::restore::materialize_mirror;
 use crate::rounds::{detect_pattern, CohortPartition};
-use crate::runtime::{argmax, BlockProvenance, KvBuf, KvScratch, ModelRuntime};
+use crate::runtime::{
+    argmax, BlockProvenance, EngineFault, KvBuf, KvScratch, ModelRuntime,
+};
 use crate::store::{
     diff_blocks_tol_masked, extract_blocks, gather_permuted_master_into,
     match_blocks_by_segments, AlignedDiff, DenseEntry, Fetched, MirrorEntry,
@@ -66,15 +70,37 @@ impl Engine {
         match self.cfg.policy {
             Policy::VllmPrefix => {
                 for p in batch {
-                    let r = self.vllm_prefix_path(p)?;
-                    self.running.push(r);
+                    let (id, agent, round) = (p.id, p.req.agent, p.req.round);
+                    self.set_fault_scope(Some(agent));
+                    match self.vllm_prefix_path(p) {
+                        Ok(r) => self.running.push(r),
+                        // a typed fault fails this request only; the
+                        // rest of the batch (and the round) proceeds
+                        Err(e) => match e.downcast::<EngineFault>() {
+                            Ok(fault) => {
+                                self.fail_admitted(id, agent, round, &fault)?
+                            }
+                            Err(e) => return Err(e),
+                        },
+                    }
                 }
+                self.set_fault_scope(None);
             }
             Policy::CacheBlendOrdinary => {
                 for p in batch {
-                    let r = self.cpu_prefix_path(p)?;
-                    self.running.push(r);
+                    let (id, agent, round) = (p.id, p.req.agent, p.req.round);
+                    self.set_fault_scope(Some(agent));
+                    match self.cpu_prefix_path(p) {
+                        Ok(r) => self.running.push(r),
+                        Err(e) => match e.downcast::<EngineFault>() {
+                            Ok(fault) => {
+                                self.fail_admitted(id, agent, round, &fault)?
+                            }
+                            Err(e) => return Err(e),
+                        },
+                    }
                 }
+                self.set_fault_scope(None);
             }
             Policy::CacheBlendFull => {
                 // per-request PIC: every request is its own singleton
@@ -98,6 +124,15 @@ impl Engine {
             }
         }
         Ok(())
+    }
+
+    /// Tell the fault decorator (when installed) which agent the next
+    /// single-request runtime ops belong to, so a targeted plan can
+    /// suppress out-of-scope draws. No-op without a fault plan.
+    pub(super) fn set_fault_scope(&self, agent: Option<usize>) {
+        if let Some(f) = &self.faulty {
+            f.set_agent_scope(agent);
+        }
     }
 
     // -----------------------------------------------------------------
@@ -137,6 +172,13 @@ impl Engine {
         }
         let prefix_len = shared_blocks * bt;
 
+        // compute before allocating: a prefill fault must not leak pool
+        // blocks or shared-prefix refcounts (the suffix fill touches only
+        // the runtime and scratch, so the ordering is behavior-neutral)
+        let (kv, logits, reused) = self.exact_suffix_fill(
+            &p, prefix_kv, prefix_len,
+        )?;
+
         // table: shared prefix blocks (refcounted) + fresh blocks
         let fresh_tokens = total - prefix_len;
         let mut table = self.pool.allocate(fresh_tokens)?;
@@ -147,10 +189,6 @@ impl Engine {
             table.blocks = blocks;
         }
         table.len = p.tokens.len();
-
-        let (kv, logits, reused) = self.exact_suffix_fill(
-            &p, prefix_kv, prefix_len,
-        )?;
         // scatter only the non-shared region into the pool
         self.pool
             .scatter_range(&table, &kv, prefix_len, p.tokens.len());
@@ -170,6 +208,7 @@ impl Engine {
             next_token: argmax(&logits),
             generated: Vec::new(),
             seg: p.seg,
+            submitted_step: p.submitted_step,
             deviation: f64::MAX,
             cohort: 0,
             provenance: BlockProvenance::default(),
@@ -212,10 +251,11 @@ impl Engine {
             }
         }
 
-        let mut table = self.pool.allocate(total)?;
-        table.len = p.tokens.len();
+        // compute before allocating (fault-safe ordering, as above)
         let (kv, logits, reused) =
             self.exact_suffix_fill(&p, prefix_kv, prefix_len)?;
+        let mut table = self.pool.allocate(total)?;
+        table.len = p.tokens.len();
         self.pool.scatter(&table, &kv, p.tokens.len());
         self.mark_prefill_done(p.id, reused, p.tokens.len() - reused);
         self.metrics.prefill_reused += (reused > 0) as u64;
@@ -233,6 +273,7 @@ impl Engine {
             next_token: argmax(&logits),
             generated: Vec::new(),
             seg: p.seg,
+            submitted_step: p.submitted_step,
             deviation: f64::MAX,
             cohort: 0,
             provenance: BlockProvenance::default(),
@@ -310,6 +351,12 @@ impl Engine {
             }
         }
 
+        // per-slot fault ledger: a typed fault anywhere on the PIC path
+        // fails that slot's request only; the cohort-mates keep going and
+        // the round closes with the survivors
+        let mut failed: Vec<Option<EngineFault>> =
+            (0..batch.len()).map(|_| None).collect();
+
         // composite assembly: one gather plan per collective cohort
         // (each cohort's distinct keys resolve once; unrelated cohorts
         // never share a memo). Singleton-path requests lose *collective*
@@ -345,24 +392,51 @@ impl Engine {
             }
             Ok(())
         };
+        // assembly faults (e.g. a worker panic in the materialization
+        // wave) are attributed to the whole group that shared the pass:
+        // none of its members assembled, so all of them fail — other
+        // groups proceed untouched
+        let fail_group = |failed: &mut Vec<Option<EngineFault>>,
+                          members: &[usize],
+                          e: anyhow::Error|
+         -> Result<()> {
+            match e.downcast::<EngineFault>() {
+                Ok(fault) => {
+                    for &m in members {
+                        failed[m] = Some(fault.clone());
+                    }
+                    Ok(())
+                }
+                Err(e) => Err(e),
+            }
+        };
         if self.cfg.gather_plan {
             let mut singles: Vec<usize> = Vec::new();
             for (_, members, collective) in &groups {
                 if *collective {
-                    plan_group(self, members, &mut assembled)?;
+                    if let Err(e) =
+                        plan_group(self, members, &mut assembled)
+                    {
+                        fail_group(&mut failed, members, e)?;
+                    }
                 } else {
                     singles.extend(members.iter().copied());
                 }
             }
             if !singles.is_empty() {
                 singles.sort_unstable();
-                plan_group(self, &singles, &mut assembled)?;
+                if let Err(e) = plan_group(self, &singles, &mut assembled)
+                {
+                    fail_group(&mut failed, &singles, e)?;
+                }
             }
         } else {
             for (_, members, _) in &groups {
                 for &m in members {
-                    assembled[m] =
-                        Some(self.assemble_composite(&batch[m])?);
+                    match self.assemble_composite(&batch[m]) {
+                        Ok(a) => assembled[m] = Some(a),
+                        Err(e) => fail_group(&mut failed, &[m], e)?,
+                    }
                 }
             }
         }
@@ -385,6 +459,9 @@ impl Engine {
             let mut idxs = Vec::new();
             let mut tasks = Vec::new();
             for &m in members {
+                if failed[m].is_some() {
+                    continue; // faulted at assembly: nothing to classify
+                }
                 let (task, reused, prov) =
                     assembled[m].take().ok_or_else(|| {
                         anyhow::anyhow!("cohort member {m} assembled twice")
@@ -426,9 +503,16 @@ impl Engine {
                         && self.cfg.collector.collective,
                     importance: self.cfg.collector.importance.clone(),
                 };
-                let (results, _plan) =
-                    run_reuse(self.rt.as_ref(), &model, &tasks, &cfg)?;
-                for (ri, res) in idxs.iter().zip(results) {
+                let outcome = run_reuse_isolated(
+                    self.rt.as_ref(), &model, &tasks, &cfg,
+                )?;
+                for f in outcome.failures {
+                    failed[idxs[f.index]] = Some(f.fault);
+                }
+                for (ri, res) in idxs.iter().zip(outcome.results) {
+                    let Some(res) = res else {
+                        continue; // faulted member: recorded above
+                    };
                     if let Some(t) =
                         self.metrics.request_mut(batch[*ri].id)
                     {
@@ -453,14 +537,30 @@ impl Engine {
         }
         for ci in cold {
             let p = &batch[ci];
-            let out = self.rt.prefill(&model, &p.tokens, p.tokens.len())?;
+            self.set_fault_scope(Some(p.req.agent));
+            let out = match self.rt.prefill(
+                &model, &p.tokens, p.tokens.len(),
+            ) {
+                Ok(out) => out,
+                Err(e) => {
+                    fail_group(&mut failed, &[ci], e)?;
+                    continue;
+                }
+            };
             let mut kv = self.scratch.checkout();
             kv.copy_rows_from(&out.kv, 0, 0, p.tokens.len().min(out.kv.seq));
             outputs[ci] = Some((kv, out.logits, f64::MAX));
         }
+        self.set_fault_scope(None);
 
         let mut running = Vec::new();
         for (i, p) in batch.into_iter().enumerate() {
+            if let Some(fault) = failed[i].take() {
+                // fail exactly this request; its slot never allocated
+                // pool blocks, so bookkeeping is all that remains
+                self.fail_admitted(p.id, p.req.agent, p.req.round, &fault)?;
+                continue;
+            }
             let (kv, logits, deviation) =
                 outputs[i].take().ok_or_else(|| {
                     anyhow::anyhow!("prefill produced no output for slot {i}")
@@ -489,6 +589,7 @@ impl Engine {
                 next_token: argmax(&logits),
                 generated: Vec::new(),
                 seg: p.seg,
+                submitted_step: p.submitted_step,
                 deviation,
                 cohort: cohort_of[i],
                 provenance: provs[i].take().unwrap_or_default(),
@@ -890,13 +991,23 @@ impl Engine {
             e2e_secs: e2e,
         });
         self.finished.push(Completion { id, agent, round, generated });
+        self.close_round_slot(round)
+    }
 
+    /// Release one slot of a round's outstanding count and, when it was
+    /// the last, close the round: encode the staged survivors, emit
+    /// `RoundClosed`, and kick the tier prefetch. Reached by successful
+    /// completions *and* by failures/sheds — a round with failed members
+    /// still closes (with whatever survived), so `drain` never stalls on
+    /// a fault.
+    pub(super) fn close_round_slot(&mut self, round: usize) -> Result<()> {
         // round bookkeeping: the engine owns the round lifecycle; callers
         // observe it through the RoundClosed event
         if let Some(c) = self.round_outstanding.get_mut(&round) {
             *c -= 1;
             if *c == 0 {
                 self.round_outstanding.remove(&round);
+                self.round_opened_step.remove(&round);
                 let staged =
                     self.round_staging.get(&round).map_or(0, Vec::len);
                 let mut mirror_bytes = 0;

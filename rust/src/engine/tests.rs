@@ -145,6 +145,61 @@ fn determinism() {
 }
 
 #[test]
+fn transient_faults_are_invisible_beyond_the_retry_counter() {
+    // transient-only plan: every injected fault clears on the bounded
+    // retry inside the decorator — the engine sees no failure, and the
+    // streams are bitwise identical to the fault-free run
+    let plan = crate::runtime::RuntimeFaultPlan {
+        prefill_fail: 0.4,
+        decode_fail: 0.2,
+        group_fail: 0.4,
+        transient: 1.0,
+        ..crate::runtime::RuntimeFaultPlan::quiet(42)
+    };
+    let mut clean = engine(Policy::TokenDance, 256);
+    let mut faulted = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(256)
+        .runtime_fault_plan(plan)
+        .mock()
+        .build()
+        .unwrap();
+    let oa = run_rounds(&mut clean, 3, 2);
+    let ob = run_rounds(&mut faulted, 3, 2);
+    assert_eq!(oa, ob, "transient faults must not move outputs");
+    assert_eq!(faulted.metrics.compute_failed, 0);
+    let f = faulted.runtime_faults().unwrap();
+    assert!(f.retries() > 0, "the plan never drew a fault");
+    assert_eq!(f.injected(), 0, "no persistent faults at transient=1.0");
+}
+
+#[test]
+fn stragglers_cost_steps_not_tokens() {
+    // slow-only plan: every op succeeds but charges virtual delay — the
+    // deterministic step clock advances further for bitwise-identical
+    // streams (the currency deadlines are denominated in)
+    let plan = crate::runtime::RuntimeFaultPlan {
+        slow: 1.0,
+        slow_steps: 5,
+        ..crate::runtime::RuntimeFaultPlan::quiet(7)
+    };
+    let mut clean = engine(Policy::TokenDance, 256);
+    let mut slowed = Engine::builder(MODEL)
+        .policy(Policy::TokenDance)
+        .pool_blocks(256)
+        .runtime_fault_plan(plan)
+        .mock()
+        .build()
+        .unwrap();
+    let oa = run_rounds(&mut clean, 3, 2);
+    let ob = run_rounds(&mut slowed, 3, 2);
+    assert_eq!(oa, ob, "stragglers must not move outputs");
+    assert_eq!(slowed.metrics.compute_failed, 0);
+    assert!(slowed.runtime_faults().unwrap().slow_ops() > 0);
+    assert!(slowed.step() > clean.step(), "virtual delay charges steps");
+}
+
+#[test]
 fn tiered_small_hot_store_matches_flat_baseline() {
     // flat baseline: effectively unconstrained hot store — every donor
     // stays resident, so this is the exact reference stream

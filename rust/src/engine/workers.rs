@@ -11,12 +11,44 @@
 //! the calling thread, byte-for-byte like the pre-pool engine.
 //!
 //! Error discipline: within a chunk the first `Err` stops that chunk;
-//! across chunks the earliest chunk's error wins. A panic on a worker
-//! thread is resumed on the caller.
+//! across chunks the earliest chunk's error wins. A panic inside the
+//! closure is caught **per item** (`catch_unwind`) and converted to
+//! `EngineFault::WorkerPanic`, so one poisoned composite can never kill
+//! the process or a sibling's work — the engine fails only the requests
+//! behind the panicked item. The serial fast path catches identically,
+//! so panic semantics are worker-count-invariant.
 
 use anyhow::Result;
 
+use crate::runtime::fault::EngineFault;
 use crate::runtime::KvScratch;
+
+/// Human-readable payload of a caught panic.
+fn panic_detail(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Run one item's closure with a panic boundary. `AssertUnwindSafe` is
+/// justified because a panic can only *lose* state behind the `&mut`
+/// borrows the closure holds (a checked-out scratch buffer that never
+/// checks back in — a missed recycling, reallocated on demand), never
+/// corrupt produced results: the item's output is discarded with the
+/// panic, and sibling items write disjoint outputs.
+fn run_caught<R>(f: impl FnOnce() -> Result<R>) -> Result<R> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(p) => Err(EngineFault::WorkerPanic {
+            detail: panic_detail(p.as_ref()),
+        }
+        .into()),
+    }
+}
 
 /// Map `f` over `items`, handing worker `w` exclusive use of
 /// `arenas[w]`. `arenas.len()` is the worker count.
@@ -32,13 +64,20 @@ where
 {
     let workers = arenas.len().max(1);
     if workers <= 1 || items.len() <= 1 {
+        // arenas is non-empty by the constructor contract (>= 1 worker)
+        // tdlint: allow(panic_path) -- arenas non-empty (>= 1 worker)
         let arena = &mut arenas[0];
-        return items.into_iter().map(|it| f(it, arena)).collect();
+        return items
+            .into_iter()
+            .map(|it| run_caught(|| f(it, arena)))
+            .collect();
     }
     let n = items.len();
     let per = n.div_ceil(workers);
     let mut chunks: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
     for (i, it) in items.into_iter().enumerate() {
+        // i < n and per = ceil(n/workers), so i/per < chunks.len()
+        // tdlint: allow(panic_path) -- i/per < workers == chunks.len()
         chunks[i / per].push(it);
     }
     let results: Vec<Result<Vec<R>>> = std::thread::scope(|s| {
@@ -48,13 +87,19 @@ where
             .zip(arenas.iter_mut())
             .map(|(chunk, arena)| {
                 s.spawn(move || {
-                    chunk.into_iter().map(|it| f(it, arena)).collect()
+                    chunk
+                        .into_iter()
+                        .map(|it| run_caught(|| f(it, arena)))
+                        .collect()
                 })
             })
             .collect();
         handles
             .into_iter()
             .map(|h| {
+                // closure panics are caught per item above; a join error
+                // means the thread infrastructure itself panicked, which
+                // is unrecoverable — re-raise rather than swallow
                 h.join().unwrap_or_else(|p| std::panic::resume_unwind(p))
             })
             .collect()
@@ -80,12 +125,17 @@ where
 {
     let workers = workers.max(1);
     if workers <= 1 || items.len() <= 1 {
-        return items.into_iter().map(f).collect();
+        return items
+            .into_iter()
+            .map(|it| run_caught(|| f(it)))
+            .collect();
     }
     let n = items.len();
     let per = n.div_ceil(workers);
     let mut chunks: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
     for (i, it) in items.into_iter().enumerate() {
+        // i < n and per = ceil(n/workers), so i/per < chunks.len()
+        // tdlint: allow(panic_path) -- i/per < workers == chunks.len()
         chunks[i / per].push(it);
     }
     let results: Vec<Result<Vec<R>>> = std::thread::scope(|s| {
@@ -93,12 +143,20 @@ where
         let handles: Vec<_> = chunks
             .into_iter()
             .map(|chunk| {
-                s.spawn(move || chunk.into_iter().map(f).collect())
+                s.spawn(move || {
+                    chunk
+                        .into_iter()
+                        .map(|it| run_caught(|| f(it)))
+                        .collect()
+                })
             })
             .collect();
         handles
             .into_iter()
             .map(|h| {
+                // closure panics are caught per item above; a join error
+                // means the thread infrastructure itself panicked, which
+                // is unrecoverable — re-raise rather than swallow
                 h.join().unwrap_or_else(|p| std::panic::resume_unwind(p))
             })
             .collect()
@@ -184,5 +242,67 @@ mod tests {
         .unwrap();
         assert_eq!(out, vec![0, 2, 4, 6, 8]);
         assert_eq!(arenas[0].counters().checkouts, 5);
+    }
+
+    #[test]
+    fn panics_convert_to_worker_fault_at_any_worker_count() {
+        for workers in [1usize, 2, 4] {
+            let items: Vec<usize> = (0..8).collect();
+            let err = map_parallel(items, workers, |i| {
+                if i == 5 {
+                    panic!("poisoned composite {i}");
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+            let fault = err
+                .downcast_ref::<EngineFault>()
+                .expect("typed worker fault");
+            match fault {
+                EngineFault::WorkerPanic { detail } => {
+                    assert!(detail.contains("poisoned composite 5"));
+                }
+                other => panic!("unexpected fault {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn sibling_chunks_complete_despite_a_panicking_item() {
+        // 2 workers over 8 items: chunk 1 (items 4..8) panics at 6, but
+        // chunk 0's arena still sees all four of its checkouts — the
+        // sibling ran to completion rather than being torn down
+        let mut arenas: Vec<KvScratch> =
+            (0..2).map(|_| KvScratch::new(1, 4, 2)).collect();
+        let items: Vec<usize> = (0..8).collect();
+        let err = map_with_arenas(items, &mut arenas, |i, arena| {
+            if i == 6 {
+                panic!("boom");
+            }
+            let buf = arena.checkout();
+            arena.checkin(buf, 0);
+            Ok(i)
+        })
+        .unwrap_err();
+        assert!(err.downcast_ref::<EngineFault>().is_some());
+        assert_eq!(arenas[0].counters().checkouts, 4);
+    }
+
+    #[test]
+    fn error_beats_panic_when_earlier_in_item_order() {
+        // chunk 0 returns a plain error at item 1; chunk 1 panics at 6;
+        // the earliest chunk's failure (the plain error) wins
+        let items: Vec<usize> = (0..8).collect();
+        let err = map_parallel(items, 2, |i| {
+            if i == 1 {
+                Err(anyhow!("plain error at {i}"))
+            } else if i == 6 {
+                panic!("late panic");
+            } else {
+                Ok(i)
+            }
+        })
+        .unwrap_err();
+        assert_eq!(err.to_string(), "plain error at 1");
     }
 }

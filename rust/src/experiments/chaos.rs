@@ -1,0 +1,359 @@
+//! Compute-fault chaos sweep (beyond the paper): survivor correctness
+//! under injected *runtime* faults (`runtime/fault.rs`) — the compute
+//! sibling of the storage sweep in [`super::faults`]. Each faulted arm
+//! drives a full All-Gather session under a seeded [`RuntimeFaultPlan`]
+//! (persistent prefill/decode/group failures, transient blips absorbed
+//! by the bounded retry, a virtual-delay straggler band) and records
+//! which `(round, agent)` subrequests failed or were shed. The oracle is
+//! then a *fault-free restricted replay*: the same session with exactly
+//! those subrequests never submitted, survivors' outputs fed forward.
+//! Survivor token streams must match the oracle bitwise — an injected
+//! fault may remove an agent from a round, but it must never perturb a
+//! cohort-mate's tokens (the per-request isolation invariant).
+//!
+//! The restricted replay is a valid oracle because a failed request
+//! writes nothing: donor KV extraction happens only at finalize, so the
+//! store bytes, reuse elections, and gather plans the survivors see are
+//! identical whether the victim faulted mid-flight or was never
+//! submitted. This holds for transitively-closed topologies (Full,
+//! Teams) where a round's consumers share the same producer pool.
+//!
+//! The last arm is the torture point: one agent pinned to 100%
+//! persistent failure in every round — the session must still run to
+//! completion with every round closing on the survivors.
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use super::common::ExpContext;
+use crate::engine::Policy;
+use crate::metrics::render_table;
+use crate::runtime::RuntimeFaultPlan;
+use crate::serve::{EngineEvent, RoundSubmission};
+use crate::util::cli::Args;
+use crate::util::stats::fmt_secs;
+use crate::workload::{Session, Topology, WorkloadConfig};
+
+/// Token streams in deterministic order: one `(round, agent, tokens)`
+/// triple per *surviving* subrequest, sorted so two runs compare bitwise
+/// regardless of cohort completion order.
+type Streams = Vec<(usize, usize, Vec<u32>)>;
+
+/// The `(round, agent)` pairs that failed or were shed in a run.
+type FailSet = BTreeSet<(usize, usize)>;
+
+/// Counters sampled from one run.
+struct ChaosPoint {
+    survivors: usize,
+    failed: u64,
+    shed: u64,
+    retries: u64,
+    injected: u64,
+    slow_ops: u64,
+    steps: u64,
+    wall_secs: f64,
+}
+
+/// Drive one session to completion, skipping the `(round, agent)` pairs
+/// in `skip` at submission time (the restricted-replay oracle passes the
+/// faulted run's fail set here; faulted runs pass an empty set).
+#[allow(clippy::too_many_arguments)]
+fn run_once(
+    ctx: &ExpContext,
+    model: &str,
+    agents: usize,
+    rounds: usize,
+    topology: Topology,
+    plan: Option<RuntimeFaultPlan>,
+    request_deadline: Option<u64>,
+    skip: &FailSet,
+) -> Result<(Streams, FailSet, ChaosPoint)> {
+    let spec = ctx.rt.spec(model)?.clone();
+    let mut b = ctx
+        .builder(model)
+        .policy(Policy::TokenDance)
+        .pool_blocks(2 * agents * spec.n_blocks());
+    if let Some(p) = plan {
+        b = b.runtime_fault_plan(p);
+    }
+    if let Some(dl) = request_deadline {
+        b = b.request_deadline_steps(dl);
+    }
+    let mut eng = b.build()?;
+    let mut session = Session::new(
+        WorkloadConfig::generative_agents(1, agents, rounds)
+            .with_topology(topology),
+        0,
+    );
+    let mut streams: Streams = Vec::new();
+    let mut fails = FailSet::new();
+    let t0 = Instant::now();
+    while !session.done() {
+        let round = session.global_round();
+        let reqs: Vec<_> = session
+            .next_round()
+            .into_iter()
+            .filter(|r| !skip.contains(&(round, r.agent)))
+            .collect();
+        // a round whose every member is skipped is still a round: the
+        // session absorbs it empty and moves on (nothing to submit)
+        let outs: Vec<(usize, Vec<u32>)> = if reqs.is_empty() {
+            Vec::new()
+        } else {
+            eng.submit_round(RoundSubmission::new(round).requests(reqs))?;
+            eng.drain()?
+                .iter()
+                .map(|c| (c.agent, c.generated.clone()))
+                .collect()
+        };
+        for ev in eng.poll_events() {
+            match ev {
+                EngineEvent::Failed { round, agent, .. }
+                | EngineEvent::Shed { round, agent, .. } => {
+                    fails.insert((round, agent));
+                }
+                _ => {}
+            }
+        }
+        for (agent, toks) in &outs {
+            streams.push((round, *agent, toks.clone()));
+        }
+        session.absorb(&outs)?;
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    streams.sort();
+    let survivors = streams.len();
+    let (retries, injected, slow_ops) = eng
+        .runtime_faults()
+        .map_or((0, 0, 0), |f| (f.retries(), f.injected(), f.slow_ops()));
+    Ok((
+        streams,
+        fails,
+        ChaosPoint {
+            survivors,
+            failed: eng.metrics.compute_failed,
+            shed: eng.metrics.compute_shed,
+            retries,
+            injected,
+            slow_ops,
+            steps: eng.step(),
+            wall_secs,
+        },
+    ))
+}
+
+/// One faulted arm of the sweep.
+struct ChaosArm {
+    label: &'static str,
+    plan: RuntimeFaultPlan,
+    request_deadline: Option<u64>,
+    topology: Topology,
+}
+
+pub fn run(ctx: &ExpContext, args: &Args) -> Result<()> {
+    let agents = args.usize_or("agents", if ctx.quick { 4 } else { 6 });
+    let rounds = args.usize_or("rounds", if ctx.quick { 3 } else { 4 });
+    let model = args.get_or("model", "sim-7b").to_string();
+    let seed = args.usize_or("fault-seed", 0xC0C0) as u64;
+    println!(
+        "== Chaos: survivor correctness under injected compute faults =="
+    );
+    println!(
+        "model={model} agents={agents} rounds={rounds} fault-seed={seed:#x}"
+    );
+
+    // Fault-free sanity run: nothing fails, everything completes.
+    let (_, fails, p) = run_once(
+        ctx,
+        &model,
+        agents,
+        rounds,
+        Topology::Full,
+        None,
+        None,
+        &FailSet::new(),
+    )?;
+    ensure!(fails.is_empty(), "fault-free run reported failures");
+    ensure!(
+        p.survivors == agents * rounds,
+        "fault-free run lost completions"
+    );
+
+    // The straggler-heavy plan pairs with a request deadline: virtual
+    // delay inflates the step clock, and whatever crosses the budget is
+    // shed. The oracle then excludes the shed set like any other fault.
+    let slow_heavy = RuntimeFaultPlan {
+        slow: 0.5,
+        slow_steps: 8,
+        ..RuntimeFaultPlan::quiet(seed ^ 0x51)
+    };
+    let arms = [
+        ChaosArm {
+            label: "mixed",
+            plan: RuntimeFaultPlan::mixed(seed),
+            request_deadline: None,
+            topology: Topology::Full,
+        },
+        ChaosArm {
+            label: "mixed/b",
+            plan: RuntimeFaultPlan::mixed(seed ^ 0xA5A5),
+            request_deadline: None,
+            topology: Topology::Full,
+        },
+        ChaosArm {
+            label: "teams",
+            plan: RuntimeFaultPlan::mixed(seed ^ 0x7E4),
+            request_deadline: None,
+            topology: Topology::Teams { size: 2 },
+        },
+        ChaosArm {
+            label: "deadline",
+            plan: slow_heavy,
+            request_deadline: Some(40),
+            topology: Topology::Full,
+        },
+    ];
+
+    let mut rows = Vec::new();
+    let mut summary = String::new();
+    let mut push_row = |label: &str, topo: &Topology, p: &ChaosPoint| {
+        rows.push(vec![
+            label.to_string(),
+            topo.label(),
+            format!("{}/{}", p.survivors, agents * rounds),
+            format!("{}", p.failed),
+            format!("{}", p.shed),
+            format!("{}", p.retries),
+            format!("{}", p.injected),
+            format!("{}", p.slow_ops),
+            format!("{}", p.steps),
+            fmt_secs(p.wall_secs),
+        ]);
+    };
+
+    for arm in &arms {
+        let (streams, fails, p) = run_once(
+            ctx,
+            &model,
+            agents,
+            rounds,
+            arm.topology,
+            Some(arm.plan),
+            arm.request_deadline,
+            &FailSet::new(),
+        )?;
+        // Restricted replay: fault-free, same topology, the faulted
+        // run's victims never submitted. Survivor streams must match.
+        let (oracle, oracle_fails, _) = run_once(
+            ctx,
+            &model,
+            agents,
+            rounds,
+            arm.topology,
+            None,
+            None,
+            &fails,
+        )?;
+        ensure!(
+            oracle_fails.is_empty(),
+            "{}: oracle replay reported failures",
+            arm.label
+        );
+        ensure!(
+            streams == oracle,
+            "{}: survivor streams diverged from the restricted \
+             fault-free replay ({} victims)",
+            arm.label,
+            fails.len()
+        );
+        summary.push_str(&format!(
+            "{:>8}: {} victims, survivors bitwise ok ({} retries \
+             absorbed, {} slow ops, {} steps)\n",
+            arm.label,
+            fails.len(),
+            p.retries,
+            p.slow_ops,
+            p.steps
+        ));
+        push_row(arm.label, &arm.topology, &p);
+    }
+
+    // Torture point: agent 0 pinned to 100% persistent failure in every
+    // round. Every round must still close on the survivors, and the
+    // restricted replay (agent 0 never submitted) must match bitwise.
+    let torture = RuntimeFaultPlan::torture(0, seed ^ 0xBAD);
+    let (streams, fails, p) = run_once(
+        ctx,
+        &model,
+        agents,
+        rounds,
+        Topology::Full,
+        Some(torture),
+        None,
+        &FailSet::new(),
+    )?;
+    ensure!(
+        fails == (0..rounds).map(|r| (r, 0)).collect::<FailSet>(),
+        "torture arm: expected agent 0 to fail every round, got {fails:?}"
+    );
+    ensure!(
+        p.survivors == (agents - 1) * rounds,
+        "torture arm lost a survivor"
+    );
+    let (oracle, _, _) = run_once(
+        ctx,
+        &model,
+        agents,
+        rounds,
+        Topology::Full,
+        None,
+        None,
+        &fails,
+    )?;
+    ensure!(
+        streams == oracle,
+        "torture arm: survivor streams diverged from replay"
+    );
+    summary.push_str(&format!(
+        " torture: agent 0 failed all {rounds} rounds, {} survivors \
+         bitwise ok, every round closed\n",
+        p.survivors
+    ));
+    push_row("torture", &Topology::Full, &p);
+
+    let table = render_table(
+        &[
+            "arm",
+            "topology",
+            "survivors",
+            "failed",
+            "shed",
+            "retries",
+            "injected",
+            "slow ops",
+            "steps",
+            "wall",
+        ],
+        &rows,
+    );
+    println!("{table}");
+    println!("{summary}");
+    println!(
+        "(every arm above passed a bitwise survivor-stream comparison \
+         against a fault-free replay restricted to the same survivor \
+         set: compute faults remove victims, never perturb survivors)"
+    );
+    ctx.save(
+        "chaos.md",
+        &format!(
+            "# Chaos: survivor correctness under injected compute \
+             faults\n\nagents={agents} rounds={rounds} \
+             fault-seed={seed:#x}\n\nEvery arm's surviving token \
+             streams matched a fault-free restricted replay \
+             bitwise.\n\n{table}\n{summary}"
+        ),
+    )?;
+    Ok(())
+}

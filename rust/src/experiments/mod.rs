@@ -18,7 +18,11 @@
 //! | [`faults`] | (beyond the paper) fault rate x tier pressure sweep:
 //!   bitwise output equivalence vs the flat oracle plus degradation-ladder
 //!   cost (io errors, retries, quarantines, slowdown) |
+//! | [`chaos`] | (beyond the paper) injected *compute* faults + deadlines:
+//!   survivor token streams bitwise vs a fault-free replay restricted to
+//!   the same survivor set, incl. a 100% single-agent torture arm |
 
+pub mod chaos;
 pub mod common;
 pub mod faults;
 pub mod fig10;

@@ -16,6 +16,7 @@
 //! | [`model`] | model specs, shape buckets, artifact manifest |
 //! | [`runtime`] | PJRT execution of the AOT artifacts (+ mock for tests), KV buffers + scratch arena |
 //! | `runtime::kv` | `KvBuf`/`KvScratch`/`ScratchPool` (one arena per worker) + `BlockProvenance`: per-block copy origins that let round-end encode skip provably-clean blocks |
+//! | `runtime::fault` | deterministic seeded *compute* fault injection: `FaultyRuntime` decorator over any `ModelRuntime`, per-op-class rates (prefill/decode/group-reuse, transient vs persistent, stragglers), typed `EngineFault`, replayable from one seed |
 //! | [`kvcache`] | paged GPU-pool analog: block allocator, block tables |
 //! | [`store`] | CPU-side cache store: dense + Master-Mirror diff entries, O(1) LRU, master re-election, capacity-honest accounting |
 //! | `store::tier` | cold storage tier: serialized disk spill (optionally int8/q4-quantized), steps-to-next-use eviction, round-aware prefetch, checksummed `TDM2` spill format, crash recovery |
@@ -28,12 +29,12 @@
 //! | [`engine`] | the serving engine tying every subsystem together |
 //! | `engine::gather` | cohort-level gather plans: resolve-once collective assembly (§4.2) |
 //! | `engine::prefill` | policy prefill paths + collective round-end encode: expectation buffers memoized per alignment signature, provenance-skipped diff scans (§4.3) |
-//! | `engine::workers` | scoped worker pool: chunk-ordered parallel map over per-worker scratch arenas; worker-count-invariant outputs (`EngineBuilder::workers`) |
+//! | `engine::workers` | scoped worker pool: chunk-ordered parallel map over per-worker scratch arenas; worker-count-invariant outputs (`EngineBuilder::workers`); per-item panic isolation → `EngineFault::WorkerPanic` |
 //! | [`serve`] | round-native public API: builder, round handles, events |
 //! | [`workload`] | GenerativeAgents / AgentSociety trace synthesizers |
 //! | `workload::topology` | sharing topologies: Full / Neighborhood / Teams cohort shapes |
 //! | [`metrics`] | latency/usage recorders and table emitters |
-//! | [`experiments`] | one driver per paper figure (2, 3, 10–14) + pressure/topology/faults sweeps |
+//! | [`experiments`] | one driver per paper figure (2, 3, 10–14) + pressure/topology/faults/chaos sweeps |
 //! | [`util`] | offline-environment stand-ins: PRNG, JSON, stats, CLI |
 //! | `xtask` (workspace) | `tdlint` static analysis: hash-iteration determinism lints, Arc-readiness ratchet (`xtask/arc_readiness.toml`), hot-path panic audit — `cargo run -p xtask -- lint` |
 //!

@@ -5,7 +5,7 @@
 //! tokendance serve        [--model M] [--policy P] [--agents N]
 //!                         [--topology T] ...
 //! tokendance experiments  <fig2|fig3|fig10|fig11|fig12|fig13|fig14
-//!                          |pressure|topology|faults|all>
+//!                          |pressure|topology|faults|chaos|all>
 //!                         [--quick] [--mock] [--artifacts DIR] [--out DIR]
 //! tokendance info         [--artifacts DIR]
 //! ```
@@ -13,6 +13,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use tokendance::engine::{Engine, Policy};
+use tokendance::runtime::RuntimeFaultPlan;
 use tokendance::store::QuantFormat;
 use tokendance::experiments::{self, ExpContext};
 use tokendance::util::cli::Args;
@@ -27,7 +28,8 @@ USAGE:
   tokendance serve [options]        run a multi-agent serving session
   tokendance experiments <FIG...>   reproduce paper figures
                                     (fig2 fig3 fig10 fig11 fig12 fig13
-                                     fig14 pressure topology faults | all)
+                                     fig14 pressure topology faults
+                                     chaos | all)
   tokendance info [options]         show artifacts / models / buckets
 
 COMMON OPTIONS:
@@ -52,6 +54,10 @@ SERVE OPTIONS:
   --quant Q         dense spill payloads: off | int8 | q4  [int8]
   --workers N       engine worker threads (1 = serial; identical
                     outputs at any count)          [1 or $TOKENDANCE_WORKERS]
+  --chaos R         inject compute faults: the mixed all-classes plan
+                    at fault-seed R (0 = off)      [0]
+  --deadline N      shed any subrequest older than N engine steps
+                    (0 = no deadline)              [0]
 ";
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -108,6 +114,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "q4" => b = b.quant_format(QuantFormat::Q4),
             other => bail!("unknown --quant {other:?} (off|int8|q4)"),
         }
+    }
+    let chaos_seed = args.usize_or("chaos", 0) as u64;
+    if chaos_seed != 0 {
+        b = b.runtime_fault_plan(RuntimeFaultPlan::mixed(chaos_seed));
+    }
+    let deadline = args.usize_or("deadline", 0) as u64;
+    if deadline != 0 {
+        b = b.request_deadline_steps(deadline);
     }
     let mut eng = b.build()?;
     let cfg = WorkloadConfig::for_family(family, 1, agents, rounds)
@@ -237,6 +251,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eng.metrics.encode_skipped_blocks,
         eng.metrics.encode_rope_recovers,
     );
+    if let Some(f) = eng.runtime_faults() {
+        println!(
+            "compute faults:     {} injected ({} transient retries \
+             absorbed, {} slow ops); {} requests failed, {} shed, \
+             {} worker panics; {} driven/{} absorbed subrequests",
+            f.injected(),
+            f.retries(),
+            f.slow_ops(),
+            eng.metrics.compute_failed,
+            eng.metrics.compute_shed,
+            eng.metrics.worker_panics,
+            report.failed + report.shed,
+            report.subrequests.len(),
+        );
+    } else if eng.metrics.compute_shed > 0 {
+        println!(
+            "deadlines:          {} requests shed past the {}-step budget",
+            eng.metrics.compute_shed, deadline
+        );
+    }
     println!("runtime calls:      {}", eng.rt.calls());
     Ok(())
 }
@@ -289,6 +323,10 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     }
     if want("faults") {
         experiments::faults::run(&ctx, args)?;
+        ran += 1;
+    }
+    if want("chaos") {
+        experiments::chaos::run(&ctx, args)?;
         ran += 1;
     }
     if ran == 0 {

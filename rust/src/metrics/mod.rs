@@ -164,6 +164,26 @@ pub struct RunMetrics {
     /// Wall time of each cold→hot restore (decode + dequantize + insert;
     /// the `pressure` experiment reports its p50/p99 per tier regime).
     pub tier_restore_secs: Samples,
+    /// Deterministic engine steps the run consumed (the deadline clock;
+    /// includes virtual delay charged by injected stragglers).
+    pub engine_steps: u64,
+    /// Requests failed by a persistent compute fault or worker panic
+    /// (each failed in isolation; its round closed with the survivors).
+    pub compute_failed: u64,
+    /// Requests shed for exceeding a request- or round-deadline budget.
+    pub compute_shed: u64,
+    /// Transient compute faults absorbed by the decorator's bounded
+    /// retry — the engine never saw these.
+    pub compute_retries: u64,
+    /// Injected compute faults of any class that actually surfaced
+    /// (post-targeting; includes the transient ones retried above).
+    pub compute_injected: u64,
+    /// Injected straggler ops (each charged `slow_steps` virtual delay
+    /// into `engine_steps`).
+    pub compute_slow_ops: u64,
+    /// Worker-pool closures that panicked and were converted to typed
+    /// per-item faults (subset of `compute_failed`).
+    pub worker_panics: u64,
 }
 
 impl RunMetrics {

@@ -1,0 +1,724 @@
+//! Deterministic **compute-side** fault injection: the runtime analog of
+//! `store::fault`'s storage ladder.
+//!
+//! [`FaultyRuntime`] decorates any `Arc<dyn ModelRuntime>` and injects
+//! seeded faults per *op class* according to a [`RuntimeFaultPlan`]:
+//!
+//! * **prefill-fail** — a full prefill of one request fails.
+//! * **decode-fail** — individual sequences of a decode batch fail (the
+//!   survivors of the batch are unaffected; the engine re-decodes them the
+//!   next tick).
+//! * **group-reuse-fail** — individual members of a collective
+//!   rope+diff group, or one selective-recompute call, fail.
+//! * **transient fraction** — a faulted op is *transient*: the decorator
+//!   retries it once (bounded by [`MAX_ATTEMPTS`]), the retry succeeds,
+//!   and the caller only sees a `retries` counter tick.
+//! * **slow fraction** — the op succeeds but charges `slow_steps` of
+//!   *virtual delay*; the engine drains the accumulated delay into its
+//!   deterministic step counter each tick, so stragglers consume deadline
+//!   budget without any wall clock.
+//!
+//! `fused_restore` and `rope_recover` are deliberately **never** faulted:
+//! they act on shared store entries, whose fault domain is the storage
+//! ladder (`store::fault`). Compute faults target per-request ops only, so
+//! per-request isolation is well-defined — a faulted op fails exactly one
+//! request, never a cohort-mate's composite.
+//!
+//! Determinism contract (mirrors `store::fault`): one seeded xorshift64*
+//! stream; **exactly two draws per logical op** (per sequence for batched
+//! ops) — a class draw and a transient coin — regardless of outcome, drawn
+//! *before* any retry and before the inner runtime runs, so the fault
+//! stream is independent of results and replayable from the seed alone.
+//! All faulted op classes are called from serial engine sections (workers
+//! only run store restore and encode expectations, which draw nothing), so
+//! the stream is stable at any worker count. With `target_agent` set,
+//! draws still happen for every op; faults landing outside the target are
+//! suppressed *after* the draw so the stream stays aligned.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::kv::KvBuf;
+use super::traits::{
+    DecodeOut, DecodeSeq, ModelRuntime, PrefillOut, RopeDiffOut, RopeDiffSeq,
+    SelectiveIn, SelectiveOut, SparseDiff,
+};
+use crate::model::{Buckets, ModelSpec};
+
+/// Bounded retry budget for transient faults: the first attempt fails,
+/// the single retry succeeds (the draw happened before attempt one, so a
+/// transient op is transient for the whole logical op, not per attempt).
+pub const MAX_ATTEMPTS: u32 = 2;
+
+// ---------------------------------------------------------------------
+// Fault taxonomy
+// ---------------------------------------------------------------------
+
+/// Runtime op classes the injector distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RtOp {
+    Prefill,
+    Decode,
+    /// Collective rope+diff and selective recomputation (the reuse path).
+    GroupReuse,
+}
+
+impl fmt::Display for RtOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RtOp::Prefill => write!(f, "prefill"),
+            RtOp::Decode => write!(f, "decode"),
+            RtOp::GroupReuse => write!(f, "group-reuse"),
+        }
+    }
+}
+
+/// Typed compute fault. Travels inside `anyhow::Error`; the engine
+/// downcasts (`err.downcast_ref::<EngineFault>()`) to isolate the failure
+/// to one request — any other error keeps propagating as a real bug.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineFault {
+    /// A single-request op failed persistently.
+    Op { op: RtOp, detail: String },
+    /// Members (by batch/group index) of a batched op failed persistently;
+    /// the op did not run — survivors carry no partial state and are
+    /// simply re-issued without the failed members.
+    Group { op: RtOp, members: Vec<usize> },
+    /// A request or round exceeded its deterministic step budget.
+    DeadlineExceeded { scope: &'static str, budget_steps: u64 },
+    /// A worker-pool closure panicked; the panic was caught at the chunk
+    /// boundary and converted (sibling items complete normally).
+    WorkerPanic { detail: String },
+}
+
+impl fmt::Display for EngineFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineFault::Op { op, detail } => {
+                write!(f, "injected {op} fault: {detail}")
+            }
+            EngineFault::Group { op, members } => {
+                write!(f, "injected {op} fault for group members {members:?}")
+            }
+            EngineFault::DeadlineExceeded { scope, budget_steps } => {
+                write!(f, "{scope} deadline exceeded ({budget_steps} steps)")
+            }
+            EngineFault::WorkerPanic { detail } => {
+                write!(f, "worker panic: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineFault {}
+
+// ---------------------------------------------------------------------
+// Plan
+// ---------------------------------------------------------------------
+
+/// Per-op-class runtime fault rates, replayable from `seed`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RuntimeFaultPlan {
+    pub seed: u64,
+    /// Probability a prefill op faults.
+    pub prefill_fail: f64,
+    /// Probability each sequence of a decode batch faults.
+    pub decode_fail: f64,
+    /// Probability a group-reuse op (per rope+diff member / per selective
+    /// call) faults.
+    pub group_fail: f64,
+    /// Fraction of faults that are transient (absorbed by one retry)
+    /// rather than persistent (fail the request).
+    pub transient: f64,
+    /// Probability an op is a straggler: it succeeds but charges
+    /// `slow_steps` of virtual delay. Stacked after the fail band, so an
+    /// op is either faulted or slow, never both.
+    pub slow: f64,
+    /// Virtual engine steps one slow op costs.
+    pub slow_steps: u64,
+    /// Restrict prefill/decode faults to this agent (the torture knob:
+    /// `prefill_fail = 1.0` + a target persistently kills one agent).
+    /// Group-reuse ops are not agent-attributable at the runtime boundary
+    /// and never fault while a target is set.
+    pub target_agent: Option<usize>,
+}
+
+impl RuntimeFaultPlan {
+    /// All rates zero — wraps the runtime without injecting anything.
+    pub fn quiet(seed: u64) -> Self {
+        RuntimeFaultPlan {
+            seed,
+            prefill_fail: 0.0,
+            decode_fail: 0.0,
+            group_fail: 0.0,
+            transient: 0.0,
+            slow: 0.0,
+            slow_steps: 0,
+            target_agent: None,
+        }
+    }
+
+    /// A mixed all-classes plan (the chaos sweep / CLI default): moderate
+    /// persistent + transient fault rates and a straggler band.
+    pub fn mixed(seed: u64) -> Self {
+        RuntimeFaultPlan {
+            prefill_fail: 0.05,
+            decode_fail: 0.02,
+            group_fail: 0.05,
+            transient: 0.5,
+            slow: 0.10,
+            slow_steps: 3,
+            ..RuntimeFaultPlan::quiet(seed)
+        }
+    }
+
+    /// 100% persistent single-request failure for one agent — the
+    /// torture arm. Both per-request op classes are pinned to 1.0:
+    /// after round 0 the targeted agent may reach decode through the
+    /// reuse path (group-class ops never fault under targeting — they
+    /// are shared with cohort-mates), so decode targeting is what
+    /// guarantees the agent fails every round.
+    pub fn torture(agent: usize, seed: u64) -> Self {
+        RuntimeFaultPlan {
+            prefill_fail: 1.0,
+            decode_fail: 1.0,
+            target_agent: Some(agent),
+            ..RuntimeFaultPlan::quiet(seed)
+        }
+    }
+}
+
+/// Outcome of the two-draw fault decision for one logical op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpFault {
+    None,
+    /// Fails once, succeeds on the bounded retry.
+    Transient,
+    /// Fails the op (and the request it belongs to).
+    Persistent,
+    /// Succeeds after charging virtual delay.
+    Slow,
+}
+
+// ---------------------------------------------------------------------
+// Injector
+// ---------------------------------------------------------------------
+
+/// Seeded fault-decision stream (xorshift64*, same generator as
+/// `store::fault::FaultInjector`).
+#[derive(Debug)]
+pub struct RuntimeFaultInjector {
+    plan: RuntimeFaultPlan,
+    state: u64,
+}
+
+impl RuntimeFaultInjector {
+    pub fn new(plan: RuntimeFaultPlan) -> Self {
+        // splitmix-style scramble so nearby seeds diverge immediately
+        let mut s = plan.seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        s ^= s >> 30;
+        s = s.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        s ^= s >> 27;
+        RuntimeFaultInjector { plan, state: s | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// The two-draw decision for one logical op of a class with fault
+    /// probability `rate`: a class draw (fail band `[0, rate)`, slow band
+    /// `[rate, rate + slow)`) and a transient coin. Both draws always
+    /// happen, so the stream position is outcome-independent.
+    pub fn op_fault(&mut self, rate: f64) -> OpFault {
+        let u = self.next_f64();
+        let t = self.next_f64();
+        if u < rate {
+            if t < self.plan.transient {
+                OpFault::Transient
+            } else {
+                OpFault::Persistent
+            }
+        } else if u < rate + self.plan.slow {
+            OpFault::Slow
+        } else {
+            OpFault::None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decorator
+// ---------------------------------------------------------------------
+
+/// Fault-injecting decorator over any [`ModelRuntime`]. The engine holds
+/// a second, typed handle (`Arc<FaultyRuntime>`) next to the trait object
+/// for scope setters, counters, and the virtual-delay drain.
+pub struct FaultyRuntime {
+    inner: Arc<dyn ModelRuntime>,
+    plan: RuntimeFaultPlan,
+    inj: Mutex<RuntimeFaultInjector>,
+    /// Agent owning the next single-request op (prefill / selective on
+    /// the exact paths); set by the engine around per-request sections.
+    agent_scope: Mutex<Option<usize>>,
+    /// Agents of the current decode batch, by sequence index.
+    decode_agents: Mutex<Vec<usize>>,
+    /// Persistent faults injected (ops / batch members failed).
+    injected: AtomicU64,
+    /// Transient faults absorbed by the bounded retry.
+    retries: AtomicU64,
+    /// Ops that drew the straggler band.
+    slow_ops: AtomicU64,
+    /// Accrued straggler delay in engine steps, drained per tick.
+    virtual_delay: AtomicU64,
+}
+
+impl FaultyRuntime {
+    pub fn new(inner: Arc<dyn ModelRuntime>, plan: RuntimeFaultPlan) -> Self {
+        FaultyRuntime {
+            inner,
+            plan,
+            inj: Mutex::new(RuntimeFaultInjector::new(plan)),
+            agent_scope: Mutex::new(None),
+            decode_agents: Mutex::new(Vec::new()),
+            injected: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            slow_ops: AtomicU64::new(0),
+            virtual_delay: AtomicU64::new(0),
+        }
+    }
+
+    pub fn plan(&self) -> &RuntimeFaultPlan {
+        &self.plan
+    }
+
+    /// Attribute subsequent single-request ops to `agent` (targeting).
+    pub fn set_agent_scope(&self, agent: Option<usize>) {
+        // tdlint: allow(panic_path) -- lock bodies never panic (no poison)
+        *self.agent_scope.lock().expect("agent_scope lock") = agent;
+    }
+
+    /// Attribute the next decode batch's sequences to these agents.
+    pub fn set_decode_agents(&self, agents: Vec<usize>) {
+        // tdlint: allow(panic_path) -- lock bodies never panic (no poison)
+        *self.decode_agents.lock().expect("decode_agents lock") = agents;
+    }
+
+    /// Persistent faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Transient faults absorbed by the bounded retry so far.
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Ops that drew the straggler band so far.
+    pub fn slow_ops(&self) -> u64 {
+        self.slow_ops.load(Ordering::Relaxed)
+    }
+
+    /// Drain the accrued straggler delay (engine steps). The engine calls
+    /// this once per tick and advances its step counter by the result.
+    pub fn take_virtual_delay(&self) -> u64 {
+        self.virtual_delay.swap(0, Ordering::Relaxed)
+    }
+
+    /// Whether a fault drawn for a single-request op applies under the
+    /// plan's targeting. Group-class ops pass `agent = None` and are
+    /// suppressed whenever a target is set.
+    fn in_scope(&self, agent: Option<usize>) -> bool {
+        match self.plan.target_agent {
+            None => true,
+            Some(t) => agent == Some(t),
+        }
+    }
+
+    /// Draw for one single-request op; counters + suppression applied.
+    fn draw_single(&self, rate: f64, agent: Option<usize>) -> OpFault {
+        // tdlint: allow(panic_path) -- lock bodies never panic (no poison)
+        let f = self.inj.lock().expect("injector lock").op_fault(rate);
+        if !self.in_scope(agent) {
+            return OpFault::None;
+        }
+        match f {
+            OpFault::Transient => {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            OpFault::Persistent => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+            }
+            OpFault::Slow => {
+                self.slow_ops.fetch_add(1, Ordering::Relaxed);
+                self.virtual_delay
+                    .fetch_add(self.plan.slow_steps, Ordering::Relaxed);
+            }
+            OpFault::None => {}
+        }
+        f
+    }
+
+    /// Per-member draws for a batched op: returns the persistently faulted
+    /// member indices. `agents(i)` resolves the agent owning member `i`
+    /// (None = not attributable → suppressed under targeting).
+    fn draw_group<A: Fn(usize) -> Option<usize>>(
+        &self,
+        rate: f64,
+        n: usize,
+        agents: A,
+    ) -> Vec<usize> {
+        let mut members = Vec::new();
+        // tdlint: allow(panic_path) -- lock bodies never panic (no poison)
+        let mut inj = self.inj.lock().expect("injector lock");
+        for i in 0..n {
+            let f = inj.op_fault(rate);
+            if !self.in_scope(agents(i)) {
+                continue;
+            }
+            match f {
+                OpFault::Transient => {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                OpFault::Persistent => members.push(i),
+                OpFault::Slow => {
+                    self.slow_ops.fetch_add(1, Ordering::Relaxed);
+                    self.virtual_delay
+                        .fetch_add(self.plan.slow_steps, Ordering::Relaxed);
+                }
+                OpFault::None => {}
+            }
+        }
+        if !members.is_empty() {
+            self.injected
+                .fetch_add(members.len() as u64, Ordering::Relaxed);
+        }
+        members
+    }
+}
+
+impl ModelRuntime for FaultyRuntime {
+    fn spec(&self, model: &str) -> Result<&ModelSpec> {
+        self.inner.spec(model)
+    }
+
+    fn buckets(&self) -> &Buckets {
+        self.inner.buckets()
+    }
+
+    fn prefill(
+        &self,
+        model: &str,
+        tokens: &[u32],
+        len: usize,
+    ) -> Result<PrefillOut> {
+        // tdlint: allow(panic_path) -- lock bodies never panic (no poison)
+        let agent = *self.agent_scope.lock().expect("agent_scope lock");
+        match self.draw_single(self.plan.prefill_fail, agent) {
+            OpFault::Persistent => Err(EngineFault::Op {
+                op: RtOp::Prefill,
+                detail: format!("prefill of {len} tokens failed"),
+            }
+            .into()),
+            // Transient: attempt 1 failed, the MAX_ATTEMPTS-bounded retry
+            // (attempt 2) succeeds — the inner op runs once either way.
+            _ => self.inner.prefill(model, tokens, len),
+        }
+    }
+
+    fn decode(
+        &self,
+        model: &str,
+        seqs: &[DecodeSeq],
+    ) -> Result<Vec<DecodeOut>> {
+        let members = {
+            // tdlint: allow(panic_path) -- lock bodies never panic
+            let agents = self.decode_agents.lock().expect("agents lock");
+            self.draw_group(self.plan.decode_fail, seqs.len(), |i| {
+                agents.get(i).copied()
+            })
+        };
+        if !members.is_empty() {
+            return Err(
+                EngineFault::Group { op: RtOp::Decode, members }.into()
+            );
+        }
+        self.inner.decode(model, seqs)
+    }
+
+    fn ropediff(
+        &self,
+        model: &str,
+        group: &[RopeDiffSeq],
+    ) -> Result<Vec<RopeDiffOut>> {
+        let members =
+            self.draw_group(self.plan.group_fail, group.len(), |_| None);
+        if !members.is_empty() {
+            return Err(
+                EngineFault::Group { op: RtOp::GroupReuse, members }.into()
+            );
+        }
+        self.inner.ropediff(model, group)
+    }
+
+    fn selective(
+        &self,
+        model: &str,
+        input: &SelectiveIn,
+    ) -> Result<SelectiveOut> {
+        // tdlint: allow(panic_path) -- lock bodies never panic (no poison)
+        let agent = *self.agent_scope.lock().expect("agent_scope lock");
+        match self.draw_single(self.plan.group_fail, agent) {
+            OpFault::Persistent => Err(EngineFault::Op {
+                op: RtOp::GroupReuse,
+                detail: format!(
+                    "selective recompute of {} slots failed",
+                    input.sel.len()
+                ),
+            }
+            .into()),
+            _ => self.inner.selective(model, input),
+        }
+    }
+
+    fn fused_restore(
+        &self,
+        model: &str,
+        master_k: &KvBuf,
+        diff: &SparseDiff,
+        old_pos: &[i32],
+        new_pos: &[i32],
+    ) -> Result<KvBuf> {
+        // never faulted: store-restore ops belong to the storage ladder
+        self.inner.fused_restore(model, master_k, diff, old_pos, new_pos)
+    }
+
+    fn rope_recover(
+        &self,
+        model: &str,
+        k: &mut KvBuf,
+        old_pos: &[i32],
+        new_pos: &[i32],
+    ) -> Result<()> {
+        // never faulted: store-restore ops belong to the storage ladder
+        self.inner.rope_recover(model, k, old_pos, new_pos)
+    }
+
+    fn calls(&self) -> u64 {
+        self.inner.calls()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::MockRuntime;
+
+    fn wrapped(plan: RuntimeFaultPlan) -> (Arc<MockRuntime>, FaultyRuntime) {
+        let mock = Arc::new(MockRuntime::new());
+        let rt = FaultyRuntime::new(mock.clone(), plan);
+        (mock, rt)
+    }
+
+    #[test]
+    fn same_seed_same_decision_stream() {
+        let plan = RuntimeFaultPlan {
+            prefill_fail: 0.3,
+            transient: 0.4,
+            slow: 0.2,
+            ..RuntimeFaultPlan::quiet(7)
+        };
+        let mut a = RuntimeFaultInjector::new(plan);
+        let mut b = RuntimeFaultInjector::new(plan);
+        for _ in 0..256 {
+            assert_eq!(a.op_fault(0.3), b.op_fault(0.3));
+        }
+        let mut c = RuntimeFaultInjector::new(RuntimeFaultPlan {
+            seed: 8,
+            ..plan
+        });
+        let diverged = (0..256)
+            .any(|_| a.op_fault(0.3) != c.op_fault(0.3));
+        assert!(diverged, "different seeds diverge");
+    }
+
+    #[test]
+    fn quiet_plan_is_transparent() {
+        let (mock, rt) = wrapped(RuntimeFaultPlan::quiet(1));
+        let out = rt.prefill("sim-7b", &[1, 2, 3, 4], 4).unwrap();
+        let direct = mock.prefill("sim-7b", &[1, 2, 3, 4], 4).unwrap();
+        assert_eq!(out.logits, direct.logits);
+        assert_eq!(rt.injected(), 0);
+        assert_eq!(rt.retries(), 0);
+        assert_eq!(rt.take_virtual_delay(), 0);
+    }
+
+    #[test]
+    fn full_persistent_rate_fails_before_inner_runs() {
+        let (mock, rt) = wrapped(RuntimeFaultPlan {
+            prefill_fail: 1.0,
+            ..RuntimeFaultPlan::quiet(2)
+        });
+        let calls_before = mock.calls();
+        let err = rt.prefill("sim-7b", &[1, 2, 3], 3).unwrap_err();
+        let fault = err.downcast_ref::<EngineFault>().expect("typed fault");
+        assert!(matches!(
+            fault,
+            EngineFault::Op { op: RtOp::Prefill, .. }
+        ));
+        assert_eq!(mock.calls(), calls_before, "inner op never ran");
+        assert_eq!(rt.injected(), 1);
+    }
+
+    #[test]
+    fn full_transient_rate_is_absorbed_by_retry() {
+        let (_, rt) = wrapped(RuntimeFaultPlan {
+            prefill_fail: 1.0,
+            transient: 1.0,
+            ..RuntimeFaultPlan::quiet(3)
+        });
+        for i in 0..4 {
+            rt.prefill("sim-7b", &[1, 2, 3, 4], 4).unwrap();
+            assert_eq!(rt.retries(), i + 1);
+        }
+        assert_eq!(rt.injected(), 0);
+    }
+
+    #[test]
+    fn class_bands_stack_and_respect_rates() {
+        let plan = RuntimeFaultPlan {
+            prefill_fail: 0.3,
+            transient: 0.5,
+            slow: 0.4,
+            slow_steps: 2,
+            ..RuntimeFaultPlan::quiet(11)
+        };
+        let mut inj = RuntimeFaultInjector::new(plan);
+        let n = 4096;
+        let (mut fail, mut slow, mut none) = (0usize, 0usize, 0usize);
+        for _ in 0..n {
+            match inj.op_fault(0.3) {
+                OpFault::Transient | OpFault::Persistent => fail += 1,
+                OpFault::Slow => slow += 1,
+                OpFault::None => none += 1,
+            }
+        }
+        let frac = |c: usize| c as f64 / n as f64;
+        assert!((frac(fail) - 0.3).abs() < 0.05, "fail band ~0.3");
+        assert!((frac(slow) - 0.4).abs() < 0.05, "slow band ~0.4");
+        assert!((frac(none) - 0.3).abs() < 0.05, "quiet band ~0.3");
+    }
+
+    #[test]
+    fn decode_faults_name_per_seq_members() {
+        let (mock, rt) = wrapped(RuntimeFaultPlan {
+            decode_fail: 1.0,
+            ..RuntimeFaultPlan::quiet(4)
+        });
+        let kv = KvBuf::zeroed(4, 16, 16);
+        let seqs: Vec<DecodeSeq> = (0..3)
+            .map(|i| DecodeSeq { token: i as u32, len: 4, kv: &kv })
+            .collect();
+        let calls_before = mock.calls();
+        let err = rt.decode("sim-7b", &seqs).unwrap_err();
+        match err.downcast_ref::<EngineFault>().expect("typed fault") {
+            EngineFault::Group { op: RtOp::Decode, members } => {
+                assert_eq!(members, &[0, 1, 2]);
+            }
+            other => panic!("unexpected fault {other:?}"),
+        }
+        assert_eq!(mock.calls(), calls_before, "inner op never ran");
+        assert_eq!(rt.injected(), 3);
+    }
+
+    #[test]
+    fn targeting_suppresses_out_of_scope_faults() {
+        let (_, rt) = wrapped(RuntimeFaultPlan::torture(0, 5));
+        // out of scope: draws happen but nothing faults
+        rt.set_agent_scope(Some(1));
+        rt.prefill("sim-7b", &[1, 2, 3], 3).unwrap();
+        // in scope: persistent failure
+        rt.set_agent_scope(Some(0));
+        assert!(rt.prefill("sim-7b", &[1, 2, 3], 3).is_err());
+        // decode: only the target's sequence faults
+        let plan = RuntimeFaultPlan {
+            decode_fail: 1.0,
+            target_agent: Some(0),
+            ..RuntimeFaultPlan::quiet(5)
+        };
+        let (_, rt) = wrapped(plan);
+        rt.set_decode_agents(vec![1, 0, 2]);
+        let kv = KvBuf::zeroed(4, 16, 16);
+        let seqs: Vec<DecodeSeq> = (0..3)
+            .map(|i| DecodeSeq { token: i as u32, len: 4, kv: &kv })
+            .collect();
+        match rt
+            .decode("sim-7b", &seqs)
+            .unwrap_err()
+            .downcast_ref::<EngineFault>()
+            .expect("typed fault")
+        {
+            EngineFault::Group { members, .. } => {
+                assert_eq!(members, &[1], "only the targeted agent's seq");
+            }
+            other => panic!("unexpected fault {other:?}"),
+        }
+        // group-class ops never fault under targeting
+        let (_, rt) = wrapped(RuntimeFaultPlan {
+            group_fail: 1.0,
+            target_agent: Some(0),
+            ..RuntimeFaultPlan::quiet(6)
+        });
+        let kv = KvBuf::zeroed(4, 16, 16);
+        let tokens = vec![1u32; 16];
+        let old_pos = vec![0i32; 16];
+        let valid = vec![0u8; 16];
+        let group = vec![RopeDiffSeq {
+            tokens: &tokens,
+            old_pos: &old_pos,
+            valid: &valid,
+            kv: &kv,
+        }];
+        assert!(rt.ropediff("sim-7b", &group).is_ok());
+    }
+
+    #[test]
+    fn slow_ops_accrue_virtual_delay() {
+        let (_, rt) = wrapped(RuntimeFaultPlan {
+            slow: 1.0,
+            slow_steps: 5,
+            ..RuntimeFaultPlan::quiet(9)
+        });
+        rt.prefill("sim-7b", &[1, 2, 3], 3).unwrap();
+        rt.prefill("sim-7b", &[1, 2, 3], 3).unwrap();
+        assert_eq!(rt.slow_ops(), 2);
+        assert_eq!(rt.take_virtual_delay(), 10);
+        assert_eq!(rt.take_virtual_delay(), 0, "drain resets");
+    }
+
+    #[test]
+    fn fault_display_is_stable() {
+        let f = EngineFault::Op {
+            op: RtOp::Prefill,
+            detail: "x".into(),
+        };
+        assert_eq!(format!("{f}"), "injected prefill fault: x");
+        let d = EngineFault::DeadlineExceeded {
+            scope: "request",
+            budget_steps: 40,
+        };
+        assert_eq!(format!("{d}"), "request deadline exceeded (40 steps)");
+    }
+}

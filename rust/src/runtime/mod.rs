@@ -4,6 +4,7 @@
 //! /opt/xla-example/load_hlo for the pattern) and [`mock::MockRuntime`] is
 //! the deterministic stand-in for logic tests.
 
+pub mod fault;
 pub mod kv;
 pub mod mock;
 #[cfg(feature = "pjrt")]
@@ -13,6 +14,7 @@ pub mod pjrt;
 pub mod pjrt;
 pub mod traits;
 
+pub use fault::{EngineFault, FaultyRuntime, RtOp, RuntimeFaultPlan};
 pub use kv::{
     BlockOrigin, BlockProvenance, KvBuf, KvScratch, ScratchCounters, ScratchPool,
 };

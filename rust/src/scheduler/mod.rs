@@ -48,6 +48,14 @@ impl AdmissionQueue {
         self.q.front().map(|r| r.blocks_needed)
     }
 
+    /// Remove a queued request by id (deadline shedding); returns true
+    /// if it was present. FIFO order of the rest is preserved.
+    pub fn remove(&mut self, id: u64) -> bool {
+        let before = self.q.len();
+        self.q.retain(|r| r.id != id);
+        self.q.len() != before
+    }
+
     /// Pop every request (in order) that fits in `free_blocks`, stopping at
     /// the first that does not fit (FIFO admission, no reordering).
     pub fn admit(&mut self, mut free_blocks: usize) -> Vec<QueuedRequest> {
@@ -133,6 +141,21 @@ mod tests {
         let admitted = q.admit(7);
         assert_eq!(admitted.len(), 2);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn remove_preserves_fifo_order() {
+        let mut q = AdmissionQueue::new();
+        q.push(req(1, 4));
+        q.push(req(2, 4));
+        q.push(req(3, 4));
+        assert!(q.remove(2));
+        assert!(!q.remove(2), "already gone");
+        let admitted = q.admit(100);
+        assert_eq!(
+            admitted.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
     }
 
     #[test]

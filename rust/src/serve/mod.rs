@@ -30,7 +30,9 @@ use anyhow::{bail, Context, Result};
 use crate::engine::{AgentRequest, Engine, EngineConfig, Policy};
 use crate::restore::RestoreMode;
 use crate::rounds::DetectorConfig;
-use crate::runtime::{MockRuntime, ModelRuntime, PjrtRuntime};
+use crate::runtime::{
+    MockRuntime, ModelRuntime, PjrtRuntime, RuntimeFaultPlan,
+};
 use crate::store::{FaultPlan, QuantFormat};
 
 // ---------------------------------------------------------------------
@@ -73,6 +75,28 @@ pub enum EngineEvent {
         store_evictions: u64,
         store_promotions: u64,
     },
+    /// The request failed in isolation (injected compute fault or worker
+    /// panic) and was removed from its round; the round closes with the
+    /// survivors. `step` is the deterministic engine step at failure and
+    /// `reason` the rendered [`crate::runtime::EngineFault`]. Emitted
+    /// after `Admitted` (a queued request can only be *shed*, below).
+    Failed {
+        id: u64,
+        agent: usize,
+        round: usize,
+        step: u64,
+        reason: String,
+    },
+    /// The request exceeded its request- or round-deadline budget (in
+    /// engine steps) and was shed — queued or running — so round close
+    /// stays bounded even behind a straggler.
+    Shed {
+        id: u64,
+        agent: usize,
+        round: usize,
+        step: u64,
+        reason: String,
+    },
 }
 
 impl EngineEvent {
@@ -83,7 +107,9 @@ impl EngineEvent {
             | EngineEvent::Admitted { round, .. }
             | EngineEvent::PrefillDone { round, .. }
             | EngineEvent::Finished { round, .. }
-            | EngineEvent::RoundClosed { round, .. } => *round,
+            | EngineEvent::RoundClosed { round, .. }
+            | EngineEvent::Failed { round, .. }
+            | EngineEvent::Shed { round, .. } => *round,
         }
     }
 }
@@ -270,6 +296,9 @@ pub struct EngineBuilder {
     fault_plan: Option<FaultPlan>,
     recover_spills: Option<bool>,
     workers: Option<usize>,
+    runtime_fault_plan: Option<RuntimeFaultPlan>,
+    request_deadline_steps: Option<u64>,
+    round_deadline_steps: Option<u64>,
 }
 
 impl EngineBuilder {
@@ -295,6 +324,9 @@ impl EngineBuilder {
             fault_plan: None,
             recover_spills: None,
             workers: None,
+            runtime_fault_plan: None,
+            request_deadline_steps: None,
+            round_deadline_steps: None,
         }
     }
 
@@ -455,6 +487,34 @@ impl EngineBuilder {
         self
     }
 
+    /// Deterministic *compute* fault injection (default off): wrap the
+    /// runtime in [`crate::runtime::FaultyRuntime`] under this seeded
+    /// plan. Distinct from [`EngineBuilder::fault_plan`], which injects
+    /// *storage* faults into the tiered store. A fault fails only the
+    /// request whose op drew it; the round closes with the survivors.
+    pub fn runtime_fault_plan(mut self, plan: RuntimeFaultPlan) -> Self {
+        self.runtime_fault_plan = Some(plan);
+        self
+    }
+
+    /// Per-request deadline in deterministic engine steps, measured from
+    /// submission (so queue wait counts — a starved queued request is
+    /// shed too). Over-budget requests fail as `DeadlineExceeded` and
+    /// surface as [`EngineEvent::Shed`]. Default: none.
+    pub fn request_deadline_steps(mut self, steps: u64) -> Self {
+        self.request_deadline_steps = Some(steps);
+        self
+    }
+
+    /// Per-round deadline in engine steps, measured from the round's
+    /// first submission; every still-incomplete member of an over-budget
+    /// round is shed, bounding round close under stragglers. Default:
+    /// none.
+    pub fn round_deadline_steps(mut self, steps: u64) -> Self {
+        self.round_deadline_steps = Some(steps);
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let rt: Arc<dyn ModelRuntime> = match (self.runtime, self.artifacts)
         {
@@ -517,6 +577,9 @@ impl EngineBuilder {
         if let Some(r) = self.recover_spills {
             cfg.recover_spills = r;
         }
+        cfg.runtime_fault_plan = self.runtime_fault_plan;
+        cfg.request_deadline_steps = self.request_deadline_steps;
+        cfg.round_deadline_steps = self.round_deadline_steps;
         // builder call > TOKENDANCE_WORKERS env > serial default — the
         // env hook lets CI (and users) run an unmodified binary/test
         // suite at a different worker count
@@ -818,5 +881,99 @@ mod tests {
         assert!(evictions > 0, "a 96 KiB store must evict under 6 agents");
         assert!(eng.store().bytes() <= cap, "capacity honored");
         eng.store().assert_invariants();
+    }
+
+    #[test]
+    fn failed_event_follows_admitted_and_round_still_closes() {
+        // torture arm: agent 0's requests fail persistently every round;
+        // the survivors finish, the round closes, drain never stalls
+        let mut eng = Engine::builder("sim-7b")
+            .policy(Policy::TokenDance)
+            .pool_blocks(512)
+            .runtime_fault_plan(RuntimeFaultPlan::torture(0, 7))
+            .mock()
+            .build()
+            .unwrap();
+        let mut shared: Vec<Vec<u32>> = Vec::new();
+        for rid in 0..2 {
+            let h = eng.submit_round(round(3, rid, &shared)).unwrap();
+            let victim = h.ids()[0]; // agent 0 submits first
+            let done = eng.drain().unwrap();
+            assert_eq!(done.len(), 2, "round {rid}: survivors complete");
+            assert!(done.iter().all(|c| c.agent != 0));
+            let events = eng.poll_events();
+            let admitted = events
+                .iter()
+                .position(|e| {
+                    matches!(e, EngineEvent::Admitted { id, .. }
+                        if *id == victim)
+                })
+                .expect("victim admitted");
+            let failed = events
+                .iter()
+                .position(|e| {
+                    matches!(e, EngineEvent::Failed { id, .. }
+                        if *id == victim)
+                })
+                .expect("victim failed");
+            assert!(failed > admitted, "Failed is causal after Admitted");
+            assert!(
+                !events.iter().any(|e| matches!(
+                    e,
+                    EngineEvent::Finished { id, .. } if *id == victim
+                )),
+                "a failed request never finishes"
+            );
+            let closed = events
+                .iter()
+                .filter(|e| matches!(e, EngineEvent::RoundClosed { .. }))
+                .count();
+            assert_eq!(closed, 1, "the round closes with its survivors");
+            let mut outs: Vec<(usize, Vec<u32>)> = done
+                .iter()
+                .map(|c| (c.agent, c.generated.clone()))
+                .collect();
+            outs.sort_by_key(|(a, _)| *a);
+            shared = outs.into_iter().map(|(_, t)| t).collect();
+        }
+        assert_eq!(eng.metrics.compute_failed, 2, "one failure per round");
+    }
+
+    #[test]
+    fn request_deadline_sheds_and_bounds_round_close() {
+        // a 3-step budget cannot cover prefill + 8 decode steps: every
+        // request sheds mid-decode, yet the round still closes
+        let mut eng = Engine::builder("sim-7b")
+            .policy(Policy::TokenDance)
+            .pool_blocks(512)
+            .request_deadline_steps(3)
+            .mock()
+            .build()
+            .unwrap();
+        eng.submit_round(round(3, 0, &[])).unwrap();
+        let done = eng.drain().unwrap();
+        assert!(done.is_empty(), "no request survives a 3-step budget");
+        let events = eng.poll_events();
+        let shed: Vec<&EngineEvent> = events
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::Shed { .. }))
+            .collect();
+        assert_eq!(shed.len(), 3, "every member shed");
+        for ev in &shed {
+            if let EngineEvent::Shed { reason, step, .. } = ev {
+                assert!(reason.contains("deadline exceeded"), "{reason}");
+                assert!(*step > 3, "stamped with the shedding step");
+            }
+        }
+        assert_eq!(
+            events
+                .iter()
+                .filter(|e| matches!(e, EngineEvent::RoundClosed { .. }))
+                .count(),
+            1,
+            "an all-shed round still closes"
+        );
+        assert_eq!(eng.metrics.compute_shed, 3);
+        assert_eq!(eng.metrics.compute_failed, 0);
     }
 }

@@ -28,6 +28,12 @@ pub struct DriveReport {
     pub rounds: Vec<(usize, usize, f64)>,
     /// Per-subrequest end-to-end latencies (secs) in completion order.
     pub subrequests: Vec<f64>,
+    /// Subrequests that failed in isolation (injected compute fault or
+    /// worker panic); their rounds closed with the survivors and their
+    /// sessions absorbed partial rounds.
+    pub failed: u64,
+    /// Subrequests shed for exceeding a deadline budget.
+    pub shed: u64,
     pub wall_secs: f64,
 }
 
@@ -125,6 +131,11 @@ pub fn drive_sessions(
                         + Duration::from_secs_f64(rng.exp(round_rate)))
                     .max(closed_at);
                 }
+                // a failed/shed member leaves no output: its session
+                // absorbs a partial round at RoundClosed (above) and the
+                // agent is resubmitted next round
+                EngineEvent::Failed { .. } => report.failed += 1,
+                EngineEvent::Shed { .. } => report.shed += 1,
                 _ => {}
             }
         }
@@ -182,8 +193,13 @@ pub fn drive_independent(
         let worked = eng.tick()?;
         eng.take_finished(); // observations come from the event stream
         for ev in eng.poll_events() {
-            if let EngineEvent::Finished { e2e_secs, .. } = ev {
-                report.subrequests.push(e2e_secs);
+            match ev {
+                EngineEvent::Finished { e2e_secs, .. } => {
+                    report.subrequests.push(e2e_secs);
+                }
+                EngineEvent::Failed { .. } => report.failed += 1,
+                EngineEvent::Shed { .. } => report.shed += 1,
+                _ => {}
             }
         }
         if workload.done() && eng.pending_count() == 0 {
@@ -223,6 +239,31 @@ mod tests {
         // 2 x 2 x 3 subrequests
         assert_eq!(report.subrequests.len(), 12);
         assert!(report.round_latencies().iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn driven_sessions_survive_a_torture_fault_plan() {
+        // agent 0 (session 0's first agent) fails persistently every
+        // round: the drive must still run to completion — no stalled
+        // round, partial absorbs all the way down
+        use crate::runtime::RuntimeFaultPlan;
+        let mut eng = Engine::builder("sim-7b")
+            .policy(Policy::TokenDance)
+            .pool_blocks(1024)
+            .runtime_fault_plan(RuntimeFaultPlan::torture(0, 11))
+            .mock()
+            .build()
+            .unwrap();
+        let cfg = WorkloadConfig::generative_agents(1, 3, 2);
+        let report =
+            drive_sessions(&mut eng, &cfg, 1, 1000.0, 7).unwrap();
+        assert_eq!(report.rounds.len(), 2, "every round closes");
+        assert_eq!(report.failed, 2, "one failure per round");
+        assert_eq!(
+            report.subrequests.len(),
+            4,
+            "two survivors per round finish"
+        );
     }
 
     #[test]

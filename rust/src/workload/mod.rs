@@ -277,6 +277,13 @@ impl Session {
     /// Feed the round's completions back: outputs become the next round's
     /// shared blocks and extend each agent's private history.
     ///
+    /// **Partial rounds are first-class**: an agent whose request failed
+    /// or was shed simply has no output here. Its producer slot drops out
+    /// of the next round's shared pool (the visible-producer filter only
+    /// ever offers blocks present in `shared`), its private history gains
+    /// no turn for the lost round, and it is resubmitted next round like
+    /// any other agent — the round, not the session, is the fault domain.
+    ///
     /// Rejects (loudly, instead of silently corrupting the session):
     /// * outputs whose agent id does not belong to this session — these
     ///   used to be remapped by `% 1000` and absorbed into the wrong
@@ -584,6 +591,55 @@ mod tests {
                 assert_eq!(producers.len(), 4);
             }
         }
+    }
+
+    #[test]
+    fn partial_absorb_drops_failed_producers_from_next_round() {
+        // one failed agent per team, every round: absorb only the
+        // survivors. The next round's prompts must not reference the
+        // failed producers, and the session keeps advancing.
+        let cfg = WorkloadConfig::generative_agents(1, 8, 4)
+            .with_topology(Topology::Teams { size: 4 });
+        let mut s = Session::new(cfg, 0);
+        let producers_of = |req: &AgentRequest| -> Vec<usize> {
+            req.prompt
+                .blocks
+                .iter()
+                .filter_map(|b| match b.kind {
+                    BlockKind::SharedOutput { producer, .. } => {
+                        Some(producer)
+                    }
+                    _ => None,
+                })
+                .collect()
+        };
+        let failed = [1usize, 5]; // one per team
+        for round in 0..3u32 {
+            let reqs = s.next_round();
+            assert_eq!(reqs.len(), 8, "failed agents are resubmitted");
+            if round > 0 {
+                for (a, req) in reqs.iter().enumerate() {
+                    let producers = producers_of(req);
+                    for f in failed {
+                        assert!(
+                            !producers.contains(&f),
+                            "agent {a} round {round} still sees \
+                             failed producer {f}"
+                        );
+                    }
+                    // survivors still arrive: team 0 sees {0,2,3};
+                    // team 1 sees {4,6,7} + broadcast agent 0
+                    let want = if a < 4 { 3 } else { 4 };
+                    assert_eq!(producers.len(), want, "agent {a}");
+                }
+            }
+            let outs: Vec<(usize, Vec<u32>)> = (0..8)
+                .filter(|a| !failed.contains(a))
+                .map(|a| (a, vec![30 + round + a as u32; 32]))
+                .collect();
+            s.absorb(&outs).unwrap();
+        }
+        assert_eq!(s.round, 3, "partial rounds still advance the session");
     }
 
     #[test]

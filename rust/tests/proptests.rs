@@ -1327,6 +1327,120 @@ fn prop_worker_pool_is_transparent() {
 }
 
 #[test]
+// The per-request fault-isolation property over *random* fault plans
+// (the chaos experiment pins fixed arms): under any mix of persistent,
+// transient, and straggler compute faults, the surviving agents' token
+// streams must be bitwise identical to a fault-free run restricted to
+// the same survivor set — a fault removes its victim from the round,
+// never perturbs a cohort-mate. Valid for transitively-closed
+// topologies (Full, Teams): a failed request writes nothing (donor
+// extraction happens only at finalize), so survivors see identical
+// store bytes and reuse elections either way. Engine rounds are too
+// slow under miri's interpreter.
+#[cfg_attr(miri, ignore)]
+fn prop_survivors_unperturbed_by_injected_faults() {
+    use std::collections::BTreeSet;
+    use tokendance::runtime::RuntimeFaultPlan;
+    use tokendance::serve::EngineEvent;
+    use tokendance::workload::{Session, Topology, WorkloadConfig};
+
+    type Streams = Vec<(usize, usize, Vec<u32>)>;
+    type FailSet = BTreeSet<(usize, usize)>;
+
+    // Drive one session, skipping `(round, agent)` pairs in `skip` at
+    // submission time (the oracle passes the faulted run's fail set).
+    fn run(
+        agents: usize,
+        rounds: usize,
+        topology: Topology,
+        plan: Option<RuntimeFaultPlan>,
+        skip: &FailSet,
+    ) -> (Streams, FailSet) {
+        let mut b = Engine::builder("sim-7b")
+            .policy(Policy::TokenDance)
+            .pool_blocks(512)
+            .mock();
+        if let Some(p) = plan {
+            b = b.runtime_fault_plan(p);
+        }
+        let mut eng = b.build().unwrap();
+        let mut session = Session::new(
+            WorkloadConfig::generative_agents(1, agents, rounds)
+                .with_topology(topology),
+            0,
+        );
+        let mut streams: Streams = Vec::new();
+        let mut fails = FailSet::new();
+        while !session.done() {
+            let round = session.global_round();
+            let reqs: Vec<_> = session
+                .next_round()
+                .into_iter()
+                .filter(|r| !skip.contains(&(round, r.agent)))
+                .collect();
+            let outs: Vec<(usize, Vec<u32>)> = if reqs.is_empty() {
+                Vec::new()
+            } else {
+                eng.submit_round(
+                    RoundSubmission::new(round).requests(reqs),
+                )
+                .unwrap();
+                eng.drain()
+                    .unwrap()
+                    .iter()
+                    .map(|c| (c.agent, c.generated.clone()))
+                    .collect()
+            };
+            for ev in eng.poll_events() {
+                if let EngineEvent::Failed { round, agent, .. }
+                | EngineEvent::Shed { round, agent, .. } = ev
+                {
+                    fails.insert((round, agent));
+                }
+            }
+            for (agent, toks) in &outs {
+                streams.push((round, *agent, toks.clone()));
+            }
+            session.absorb(&outs).unwrap();
+        }
+        streams.sort();
+        (streams, fails)
+    }
+
+    forall(8, |rng| {
+        let agents = rng.range(3, 6);
+        let rounds = rng.range(2, 4);
+        let topology = if rng.below(2) == 0 {
+            Topology::Full
+        } else {
+            Topology::Teams { size: 2 }
+        };
+        let plan = RuntimeFaultPlan {
+            prefill_fail: rng.f64() * 0.2,
+            decode_fail: rng.f64() * 0.1,
+            group_fail: rng.f64() * 0.2,
+            transient: rng.f64(),
+            slow: rng.f64() * 0.2,
+            slow_steps: rng.below(4) as u64,
+            ..RuntimeFaultPlan::quiet(rng.below(1 << 30) as u64)
+        };
+        let (faulted, fails) =
+            run(agents, rounds, topology, Some(plan), &FailSet::new());
+        let (oracle, oracle_fails) =
+            run(agents, rounds, topology, None, &fails);
+        assert!(
+            oracle_fails.is_empty(),
+            "fault-free oracle reported failures"
+        );
+        assert_eq!(
+            faulted, oracle,
+            "survivor streams perturbed by injected faults \
+             ({topology:?}, {plan:?})"
+        );
+    });
+}
+
+#[test]
 fn prop_buckets_fit_monotone() {
     let b = Buckets::default();
     forall(200, |rng| {

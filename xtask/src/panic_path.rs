@@ -22,9 +22,11 @@ use crate::scan::{is_cfg_test, is_test_fn, SourceFile};
 pub const RULE: &str = "panic_path";
 
 /// Hot-path files/dirs, relative to the scan root.
-const HOT_FILES: [&str; 5] = [
+const HOT_FILES: [&str; 7] = [
     "engine/gather.rs",
     "engine/prefill.rs",
+    "engine/workers.rs",
+    "runtime/fault.rs",
     "store/diff.rs",
     "store/fault.rs",
     "store/tier.rs",
